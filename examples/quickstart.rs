@@ -1,0 +1,37 @@
+//! Quickstart: a 12-round FedDD run on the smoke preset (10 simulated
+//! clients, MLP on the MNIST stand-in), printing the accuracy curve and
+//! the allocator's dropout decisions.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use feddd::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    feddd::util::logging::init();
+    let mut cfg = ExpConfig::smoke();
+    cfg.rounds = 12;
+    cfg.artifacts_dir = feddd::runtime::default_artifacts_dir()
+        .to_string_lossy()
+        .into_owned();
+
+    println!("== FedDD quickstart: {} clients, {} rounds ==", cfg.n_clients, cfg.rounds);
+    let mut run = FedRun::new(cfg)?;
+    println!(
+        "byte budget per round: {} KiB (A_server = {})",
+        run.budget_bytes() / 1024,
+        run.cfg.a_server
+    );
+    let result = run.run()?;
+
+    println!("\nround  v_time(s)  accuracy");
+    for e in &result.evals {
+        println!("{:>5}  {:>9.1}  {:>7.3}", e.round, e.v_time, e.accuracy);
+    }
+    println!(
+        "\nfinal accuracy {:.3}, total uploaded {:.1} MiB, wall {:.1}s",
+        result.final_accuracy().unwrap_or(0.0),
+        result.total_uploaded() as f64 / (1024.0 * 1024.0),
+        result.wall_seconds
+    );
+    Ok(())
+}

@@ -1,0 +1,456 @@
+"""AOT compile path: lower every model's train/eval step and the flat
+Pallas kernels to **HLO text** artifacts + a manifest.json the rust
+runtime consumes.
+
+HLO *text* (not `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the `xla`
+0.1.6 crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts            # default set
+    python -m compile.aot --out-dir ../artifacts --paper    # + paper-width hetero
+    python -m compile.aot --report                          # VMEM/MXU estimates
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import importance_flat, masked_acc, masked_fin, sgd_update
+
+TRAIN_BATCH = 16
+EVAL_BATCH = 64
+KERNEL_CHUNK = 16384
+SCAN_STEPS = 4
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _x_shape(spec, batch):
+    return (batch,) + tuple(spec.input_shape)
+
+
+# --------------------------------------------------------------------------
+# Artifact builders: each returns (lowered, manifest_entry)
+# --------------------------------------------------------------------------
+
+
+def build_train(spec, batch=TRAIN_BATCH):
+    shapes = M.param_shapes(spec)
+    args = [_sds(s) for _, s in shapes]
+    args += [_sds(_x_shape(spec, batch)), _sds((batch,), I32), _sds((1,))]
+
+    def fn(*a):
+        params = list(a[: len(shapes)])
+        x, y, lr = a[len(shapes) :]
+        return M.train_step(spec, params, x, y, lr)
+
+    lowered = jax.jit(fn).lower(*args)
+    entry = {
+        "kind": "train",
+        "model": spec.name,
+        "width": spec.width,
+        "batch": batch,
+        "params": [{"name": n, "shape": list(s)} for n, s in shapes],
+        "inputs": [
+            {"name": "x", "shape": list(_x_shape(spec, batch)), "dtype": "f32"},
+            {"name": "y", "shape": [batch], "dtype": "i32"},
+            {"name": "lr", "shape": [1], "dtype": "f32"},
+        ],
+        "outputs": [n for n, _ in shapes] + ["loss"],
+    }
+    return lowered, entry
+
+
+def build_train_scan(spec, steps=SCAN_STEPS, batch=TRAIN_BATCH):
+    shapes = M.param_shapes(spec)
+    args = [_sds(s) for _, s in shapes]
+    args += [
+        _sds((steps,) + _x_shape(spec, batch)),
+        _sds((steps, batch), I32),
+        _sds((1,)),
+    ]
+
+    def fn(*a):
+        params = list(a[: len(shapes)])
+        xs, ys, lr = a[len(shapes) :]
+        return M.train_scan(spec, params, xs, ys, lr, steps)
+
+    lowered = jax.jit(fn).lower(*args)
+    entry = {
+        "kind": "train_scan",
+        "model": spec.name,
+        "width": spec.width,
+        "batch": batch,
+        "steps": steps,
+        "params": [{"name": n, "shape": list(s)} for n, s in shapes],
+        "inputs": [
+            {
+                "name": "xs",
+                "shape": [steps] + list(_x_shape(spec, batch)),
+                "dtype": "f32",
+            },
+            {"name": "ys", "shape": [steps, batch], "dtype": "i32"},
+            {"name": "lr", "shape": [1], "dtype": "f32"},
+        ],
+        "outputs": [n for n, _ in shapes] + ["loss"],
+    }
+    return lowered, entry
+
+
+def build_eval(spec, batch=EVAL_BATCH):
+    shapes = M.param_shapes(spec)
+    args = [_sds(s) for _, s in shapes]
+    args += [_sds(_x_shape(spec, batch)), _sds((batch,), I32)]
+
+    def fn(*a):
+        params = list(a[: len(shapes)])
+        x, y = a[len(shapes) :]
+        return M.eval_batch(spec, params, x, y)
+
+    lowered = jax.jit(fn).lower(*args)
+    entry = {
+        "kind": "eval",
+        "model": spec.name,
+        "width": spec.width,
+        "batch": batch,
+        "params": [{"name": n, "shape": list(s)} for n, s in shapes],
+        "inputs": [
+            {"name": "x", "shape": list(_x_shape(spec, batch)), "dtype": "f32"},
+            {"name": "y", "shape": [batch], "dtype": "i32"},
+        ],
+        "outputs": ["loss_sum", "per_class_correct", "per_class_count"],
+    }
+    return lowered, entry
+
+
+def build_kernels(chunk=KERNEL_CHUNK):
+    out = []
+    f = _sds((chunk,))
+    s1 = _sds((1,))
+    out.append(
+        (
+            "kern_masked_acc",
+            jax.jit(lambda n, d, w, m, mn: masked_acc(n, d, w, m, mn)).lower(
+                f, f, f, f, s1
+            ),
+            {
+                "kind": "kernel",
+                "op": "masked_acc",
+                "chunk": chunk,
+                "inputs": ["num", "den", "w", "mask", "mn"],
+                "outputs": ["num", "den"],
+            },
+        )
+    )
+    out.append(
+        (
+            "kern_masked_fin",
+            jax.jit(lambda n, d, p: (masked_fin(n, d, p),)).lower(f, f, f),
+            {
+                "kind": "kernel",
+                "op": "masked_fin",
+                "chunk": chunk,
+                "inputs": ["num", "den", "prev"],
+                "outputs": ["out"],
+            },
+        )
+    )
+    out.append(
+        (
+            "kern_importance",
+            jax.jit(lambda w, dw: (importance_flat(w, dw),)).lower(f, f),
+            {
+                "kind": "kernel",
+                "op": "importance",
+                "chunk": chunk,
+                "inputs": ["w", "dw"],
+                "outputs": ["scores"],
+            },
+        )
+    )
+    out.append(
+        (
+            "kern_sgd",
+            jax.jit(lambda w, g, lr: (sgd_update(w, g, lr),)).lower(f, f, s1),
+            {
+                "kind": "kernel",
+                "op": "sgd",
+                "chunk": chunk,
+                "inputs": ["w", "g", "lr"],
+                "outputs": ["w"],
+            },
+        )
+    )
+    return out
+
+
+# --------------------------------------------------------------------------
+# Model geometry export (cross-checked against the rust registry)
+# --------------------------------------------------------------------------
+
+
+def geometry(spec):
+    layers = []
+    for i, layer in enumerate(spec.layers):
+        if isinstance(layer, M.Conv):
+            layers.append(
+                {
+                    "kind": "conv",
+                    "in": layer.in_ch,
+                    "out": layer.out_ch,
+                    "kernel": layer.kernel,
+                    "padding": layer.padding,
+                }
+            )
+        else:
+            layers.append(
+                {"kind": "fc", "in": layer.in_dim, "out": layer.out_dim}
+            )
+    return {
+        "name": spec.name,
+        "width": spec.width,
+        "input_shape": list(spec.input_shape),
+        "layers": layers,
+        "param_count": sum(
+            int(jnp.prod(jnp.array(s))) for _, s in M.param_shapes(spec)
+        ),
+    }
+
+
+# --------------------------------------------------------------------------
+# The default artifact set
+# --------------------------------------------------------------------------
+
+
+def default_jobs(paper: bool, hetero_width: float):
+    """(name, builder) pairs. Default: homogeneous models at paper width,
+    hetero sub-models at `hetero_width` (CPU-tractable); --paper adds the
+    full-width hetero set."""
+    jobs = []
+    for name in ["mlp", "cnn1", "cnn2"]:
+        spec = M.get_spec(name, 1.0)
+        jobs.append((tag(spec) + "_train", lambda s=spec: build_train(s)))
+        jobs.append((tag(spec) + "_eval", lambda s=spec: build_eval(s)))
+    spec = M.get_spec("mlp", 1.0)
+    jobs.append((tag(spec) + "_train_scan", lambda s=spec: build_train_scan(s)))
+    spec = M.get_spec("cnn2", 1.0)
+    jobs.append((tag(spec) + "_train_scan", lambda s=spec: build_train_scan(s)))
+    widths = [hetero_width] + ([1.0] if paper else [])
+    for w in widths:
+        for fam in ["het_a", "het_b"]:
+            for i in range(1, 6):
+                spec = M.get_spec(f"{fam}_{i}", w)
+                jobs.append(
+                    (tag(spec) + "_train", lambda s=spec: build_train(s))
+                )
+                jobs.append((tag(spec) + "_eval", lambda s=spec: build_eval(s)))
+    return jobs
+
+
+def tag(spec) -> str:
+    return f"{spec.name}_w{int(round(spec.width * 100))}"
+
+
+def geometry_models(paper: bool, hetero_width: float):
+    specs = [M.get_spec(n, 1.0) for n in ["mlp", "cnn1", "cnn2"]]
+    widths = [hetero_width] + ([1.0] if paper else [])
+    for w in widths:
+        for fam in ["het_a", "het_b"]:
+            for i in range(1, 6):
+                specs.append(M.get_spec(f"{fam}_{i}", w))
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Goldens: deterministic input/output pairs the rust integration tests
+# replay through the PJRT runtime (little-endian flat .bin + goldens.json).
+# --------------------------------------------------------------------------
+
+
+def _write_bin(path, arr):
+    import numpy as np
+
+    np.asarray(arr).astype(
+        "<i4" if arr.dtype == jnp.int32 else "<f4"
+    ).tofile(path)
+
+
+def emit_goldens(out_dir: str):
+    import numpy as np
+
+    gdir = os.path.join(out_dir, "goldens")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(42)
+    goldens = []
+
+    def record(name, inputs, outputs):
+        entry = {"artifact": name, "inputs": [], "outputs": []}
+        for i, a in enumerate(inputs):
+            f = f"{name}_in{i}.bin"
+            _write_bin(os.path.join(gdir, f), a)
+            entry["inputs"].append(
+                {
+                    "file": f,
+                    "shape": list(a.shape),
+                    "dtype": "i32" if a.dtype == jnp.int32 else "f32",
+                }
+            )
+        for i, a in enumerate(outputs):
+            a = jnp.asarray(a)
+            f = f"{name}_out{i}.bin"
+            _write_bin(os.path.join(gdir, f), a)
+            entry["outputs"].append(
+                {
+                    "file": f,
+                    "shape": list(a.shape),
+                    "dtype": "i32" if a.dtype == jnp.int32 else "f32",
+                }
+            )
+        goldens.append(entry)
+
+    # mlp train step
+    spec = M.get_spec("mlp", 1.0)
+    params = [
+        jnp.asarray(rng.normal(size=s).astype(np.float32) * 0.05)
+        for _, s in M.param_shapes(spec)
+    ]
+    x = jnp.asarray(rng.normal(size=(TRAIN_BATCH, 784)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=TRAIN_BATCH).astype(np.int32))
+    lr = jnp.asarray([0.05], jnp.float32)
+    outs = M.train_step(spec, params, x, y, lr)
+    record("mlp_w100_train", params + [x, y, lr], list(outs))
+
+    # mlp eval
+    xe = jnp.asarray(rng.normal(size=(EVAL_BATCH, 784)).astype(np.float32))
+    ye = jnp.asarray(rng.integers(0, 10, size=EVAL_BATCH).astype(np.int32))
+    outs = M.eval_batch(spec, params, xe, ye)
+    record("mlp_w100_eval", params + [xe, ye], list(outs))
+
+    # kernels
+    f = KERNEL_CHUNK
+    num = jnp.asarray(rng.normal(size=f).astype(np.float32))
+    den = jnp.abs(jnp.asarray(rng.normal(size=f).astype(np.float32)))
+    w = jnp.asarray(rng.normal(size=f).astype(np.float32))
+    mask = jnp.asarray((rng.random(f) < 0.5).astype(np.float32))
+    mn = jnp.asarray([3.5], jnp.float32)
+    record("kern_masked_acc", [num, den, w, mask, mn], list(masked_acc(num, den, w, mask, mn)))
+    den0 = den * mask  # exercise the zero-coverage branch
+    record("kern_masked_fin", [num, den0, w], [masked_fin(num, den0, w)])
+    record("kern_importance", [w, num], [importance_flat(w, num)])
+    record("kern_sgd", [w, num, mn], [sgd_update(w, num, mn)])
+
+    with open(os.path.join(gdir, "goldens.json"), "w") as fp:
+        json.dump(goldens, fp, indent=1)
+    print(f"wrote {len(goldens)} goldens -> {gdir}", file=sys.stderr)
+
+
+# --------------------------------------------------------------------------
+# VMEM / MXU report (DESIGN.md §Hardware-Adaptation)
+# --------------------------------------------------------------------------
+
+
+def report():
+    from .kernels import dense as _dense_mod  # noqa: F401
+    from .kernels.dense import _BK, _BM, _BN
+
+    tile_bytes = (_BM * _BK + _BK * _BN + _BM * _BN) * 4
+    print(f"dense tile ({_BM},{_BK},{_BN}): VMEM/tile = {tile_bytes/1024:.1f} KiB")
+    print("per-model dense-layer MXU occupancy estimate (batch=16):")
+    for name in M.ALL_MODELS:
+        spec = M.get_spec(name, 1.0)
+        flops = 0
+        pad_flops = 0
+        for layer in spec.layers:
+            if isinstance(layer, M.Fc):
+                m, k, n = TRAIN_BATCH, layer.in_dim, layer.out_dim
+                flops += 2 * m * k * n
+
+                def up(v, b):
+                    return -(-v // b) * b
+
+                pad_flops += 2 * up(m, _BM) * up(k, _BK) * up(n, _BN)
+        if pad_flops:
+            print(
+                f"  {name:8s} dense MACs {flops/1e6:8.2f}M "
+                f"padded {pad_flops/1e6:8.2f}M  util {flops/pad_flops:5.1%}"
+            )
+
+
+# --------------------------------------------------------------------------
+# Main
+# --------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--paper", action="store_true", help="also emit paper-width hetero models")
+    ap.add_argument("--hetero-width", type=float, default=0.25)
+    ap.add_argument("--report", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated artifact-name substrings")
+    args = ap.parse_args()
+
+    if args.report:
+        report()
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"train_batch": TRAIN_BATCH, "eval_batch": EVAL_BATCH,
+                "kernel_chunk": KERNEL_CHUNK, "artifacts": [], "models": []}
+
+    jobs = default_jobs(args.paper, args.hetero_width)
+    kernel_jobs = [(n, (lambda l=low, e=ent: (l, e))) for n, low, ent in build_kernels()]
+    only = args.only.split(",") if args.only else None
+
+    t0 = time.time()
+    for name, builder in kernel_jobs + jobs:
+        if only and not any(o in name for o in only):
+            continue
+        t1 = time.time()
+        lowered, entry = builder()
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        entry["name"] = name
+        entry["file"] = fname
+        manifest["artifacts"].append(entry)
+        print(f"  [{time.time()-t1:6.2f}s] {name}  ({len(text)/1024:.0f} KiB)",
+              file=sys.stderr)
+
+    for spec in geometry_models(args.paper, args.hetero_width):
+        manifest["models"].append(geometry(spec))
+
+    if not only:
+        emit_goldens(args.out_dir)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts in "
+          f"{time.time()-t0:.1f}s -> {args.out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+# L1: Pallas kernels (interpret=True — lowered to plain HLO so the rust
+# PJRT CPU client can execute them; real-TPU lowering would emit Mosaic
+# custom-calls the CPU plugin cannot run).
+from .dense import dense, matmul_pallas
+from .agg import masked_acc, masked_fin
+from .importance import importance_flat
+from .update import sgd_update
+
+__all__ = [
+    "dense",
+    "matmul_pallas",
+    "masked_acc",
+    "masked_fin",
+    "importance_flat",
+    "sgd_update",
+]

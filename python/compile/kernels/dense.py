@@ -1,0 +1,106 @@
+"""Pallas tiled matmul + fused-bias dense layer (L1 hot-spot).
+
+The paper's models spend their FLOPs in dense (FC) and conv layers. The FC
+layers are implemented here as a Pallas kernel so they lower into the same
+HLO module as the surrounding jax program (L2) and run from the rust PJRT
+client.
+
+Hardware adaptation (paper targets CUDA GPUs, we target the TPU mental
+model per DESIGN.md §Hardware-Adaptation):
+  * grid = (M/bm, N/bn, K/bk) — the K axis is the innermost, sequential
+    grid dimension; the output block is revisited and accumulated in place,
+    which on a real TPU keeps the accumulator resident in VMEM.
+  * tiles are MXU-aligned (bm,bn,bk multiples of 8/128 after padding);
+    `jnp.dot(..., preferred_element_type=f32)` targets the MXU systolic
+    array rather than the VPU.
+  * bias add is fused into the final K step (epilogue) — one HBM write.
+
+`interpret=True` everywhere: on this CPU-only image the kernel is lowered
+through the pallas interpreter into plain HLO ops; numerics are identical
+to what the Mosaic path would compute.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes. Kept modest so that smoke-scale models (M=16 batch) do not
+# explode padding, while staying MXU-shaped (last dim 128).
+_BM = 32
+_BN = 128
+_BK = 128
+
+
+def _pad_to(x: jax.Array, mult0: int, mult1: int) -> jax.Array:
+    m, n = x.shape
+    pm = (-m) % mult0
+    pn = (-n) % mult1
+    if pm == 0 and pn == 0:
+        return x
+    return jnp.pad(x, ((0, pm), (0, pn)))
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """One (bm, bn) output tile; K-axis accumulated across grid dim 2."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_pallas(x: jax.Array, w: jax.Array) -> jax.Array:
+    """`x @ w` via the tiled Pallas kernel. f32[M,K] @ f32[K,N] -> f32[M,N]."""
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0], (
+        x.shape,
+        w.shape,
+    )
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(_BM, max(8, m))
+    xp = _pad_to(x, bm, _BK)
+    wp = _pad_to(w, _BK, _BN)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    k_steps = kp // _BK
+    grid = (mp // bm, np_ // _BN, k_steps)
+    out = pl.pallas_call(
+        partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, _BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((_BK, _BN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, _BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fully-connected layer `x @ w + b` with both passes on the Pallas
+    matmul (pallas_call has no automatic VJP, so we provide one whose
+    backward matmuls also go through the kernel)."""
+    return matmul_pallas(x, w) + b
+
+
+def _dense_fwd(x, w, b):
+    return dense(x, w, b), (x, w)
+
+
+def _dense_bwd(res, g):
+    x, w = res
+    dx = matmul_pallas(g, w.T)
+    dw = matmul_pallas(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

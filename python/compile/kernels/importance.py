@@ -1,0 +1,44 @@
+"""Pallas kernel for the FedDD importance index (Eq. 20/21), elementwise
+part: |ΔW * (W + ΔW) / W|, with the divide-by-zero guard described in
+DESIGN.md (|W| < eps is clamped to sign(W)*eps).
+
+The per-channel/neuron reduction (‖·‖_(k)) and the coverage-rate division
+(Eq. 21) are group-structured (group sizes vary per layer); the reduction
+is done by the caller — rust-side over the flat scores, or jnp in the
+reference model path — while this kernel owns the elementwise hot loop.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+_SUBLANES = 8
+_TILE = _LANES * _SUBLANES
+
+EPS = 1e-8
+
+
+def _importance_kernel(w_ref, dw_ref, o_ref):
+    w = w_ref[...]
+    dw = dw_ref[...]
+    sign = jnp.where(w >= 0.0, 1.0, -1.0)
+    w_safe = jnp.where(jnp.abs(w) < EPS, sign * EPS, w)
+    o_ref[...] = jnp.abs(dw * (w + dw) / w_safe)
+
+
+def importance_flat(w: jax.Array, dw: jax.Array) -> jax.Array:
+    """Elementwise importance scores over flat f32[F], F % 1024 == 0."""
+    f = w.shape[0]
+    tiles = f // _TILE
+    shape2 = (f // _LANES, _LANES)
+    spec = pl.BlockSpec((_SUBLANES, _LANES), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _importance_kernel,
+        grid=(tiles,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(shape2, jnp.float32),
+        interpret=True,
+    )(w.reshape(shape2), dw.reshape(shape2))
+    return out.reshape(f)

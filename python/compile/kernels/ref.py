@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+pytest compares against; see python/tests/test_kernels.py)."""
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def dense_ref(x, w, b):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+
+
+def masked_acc_ref(num, den, w, mask, mn):
+    mn = mn[0]
+    return num + mn * (w * mask), den + mn * mask
+
+
+def masked_fin_ref(num, den, prev):
+    safe = jnp.where(den > 0.0, den, 1.0)
+    return jnp.where(den > 0.0, num / safe, prev)
+
+
+def importance_ref(w, dw):
+    sign = jnp.where(w >= 0.0, 1.0, -1.0)
+    w_safe = jnp.where(jnp.abs(w) < EPS, sign * EPS, w)
+    return jnp.abs(dw * (w + dw) / w_safe)
+
+
+def sgd_update_ref(w, g, lr):
+    return w - lr[0] * g

@@ -1,0 +1,35 @@
+"""Pallas SGD update kernel: w' = w - lr * g over flat f32 chunks.
+
+Used by the L2 train_step's parameter update epilogue and exported as a
+standalone flat artifact for the rust-side optimizer path tests.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+_SUBLANES = 8
+_TILE = _LANES * _SUBLANES
+
+
+def _sgd_kernel(w_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = w_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def sgd_update(w: jax.Array, g: jax.Array, lr: jax.Array) -> jax.Array:
+    """w, g: flat f32[F] with F % 1024 == 0; lr: f32[1]."""
+    f = w.shape[0]
+    tiles = f // _TILE
+    shape2 = (f // _LANES, _LANES)
+    spec = pl.BlockSpec((_SUBLANES, _LANES), lambda i: (i, 0))
+    lr_spec = pl.BlockSpec((1,), lambda i: (0,))
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(tiles,),
+        in_specs=[spec, spec, lr_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(shape2, jnp.float32),
+        interpret=True,
+    )(w.reshape(shape2), g.reshape(shape2), lr)
+    return out.reshape(f)

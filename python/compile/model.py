@@ -1,0 +1,316 @@
+"""L2: the paper's models (Tables 2, 3, 6) in JAX, calling the L1 Pallas
+kernels for the dense layers, plus train/eval step functions that aot.py
+lowers to HLO text for the rust runtime.
+
+Model registry
+--------------
+* ``mlp``   — MNIST   MLP  FC(784,100)-ReLU-FC(100,64)-ReLU-FC(64,10)
+* ``cnn1``  — FMNIST  Conv(1,10,k5)v-pool-ReLU / Conv(10,20,k5)v-pool-ReLU /
+              FC(320,50)-ReLU / FC(50,10)                     (VALID convs)
+* ``cnn2``  — CIFAR10 Conv(3,16,k3)s-ReLU-pool ×3 (16/32/64) /
+              FC(1024,500)-ReLU / FC(500,100)-ReLU / FC(100,10) (SAME convs)
+* ``het_a_1..5`` / ``het_b_1..5`` — the five heterogeneous VGG-style
+  sub-models of Table 3 / Table 6 (5× conv-pool, 3× FC, SAME convs).
+
+Note on Tables 3/6: the paper lists FC(512, ·) for every sub-model even
+where the final conv stage has ≠512 channels (e.g. het_b_5 ends at 256);
+we compute the FC input from the actual conv output (32→5 pools→1×1
+spatial), which is the only shape-consistent reading. Documented in
+DESIGN.md §6.
+
+``width_mult`` scales every hidden dimension (never the input or the 10
+output classes): ``s = max(4, round4(round(ch*mult)))`` — the rust model
+registry implements the identical formula and an integration test pins
+the two against the artifact manifest.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dense
+
+NUM_CLASSES = 10
+
+
+# --------------------------------------------------------------------------
+# Specs
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Conv:
+    in_ch: int
+    out_ch: int
+    kernel: int
+    padding: str  # "SAME" | "VALID"
+    pool_first: bool  # CNN1 pools before ReLU (per Table 2 row order)
+
+
+@dataclass(frozen=True)
+class Fc:
+    in_dim: int
+    out_dim: int
+    relu: bool
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    width: float
+    input_shape: Tuple[int, ...]  # (784,) for MLP, (C,H,W) for CNNs
+    layers: Tuple  # Conv | Fc
+
+
+def _round4(ch: int, mult: float) -> int:
+    if mult == 1.0:
+        return ch  # paper-exact at full width (Tables 2/3/6)
+    s = max(1, int(round(ch * mult)))
+    return max(4, ((s + 3) // 4) * 4)
+
+
+def _spatial_after(hw: int, kernel: int, padding: str, pools: int) -> int:
+    for _ in range(pools):
+        if padding == "VALID":
+            hw = hw - (kernel - 1)
+        hw = hw // 2
+    return hw
+
+
+def _vgg_spec(
+    name: str,
+    conv_ch: List[int],
+    fc_hidden: List[int],
+    width: float,
+) -> ModelSpec:
+    """5× (conv SAME k3 + pool + relu) then 3× FC, input 3×32×32."""
+    chans = [_round4(c, width) for c in conv_ch]
+    hidden = [_round4(h, width) for h in fc_hidden]
+    layers = []
+    in_ch = 3
+    for c in chans:
+        layers.append(Conv(in_ch, c, 3, "SAME", pool_first=False))
+        in_ch = c
+    # 32 -> 16 -> 8 -> 4 -> 2 -> 1 after five pools
+    fc_in = chans[-1] * 1 * 1
+    dims = [fc_in] + hidden + [NUM_CLASSES]
+    for i in range(len(dims) - 1):
+        layers.append(Fc(dims[i], dims[i + 1], relu=(i < len(dims) - 2)))
+    return ModelSpec(name, width, (3, 32, 32), tuple(layers))
+
+
+# Channel plans straight from Tables 3 and 6.
+_HET_A = {
+    1: ([64, 128, 256, 512, 512], [100, 100]),
+    2: ([64, 128, 256, 256, 512], [100, 100]),
+    3: ([64, 128, 256, 256, 512], [80, 100]),
+    4: ([32, 128, 256, 256, 512], [80, 100]),
+    5: ([32, 128, 128, 256, 512], [80, 100]),
+}
+_HET_B = {
+    1: ([64, 128, 256, 512, 512], [100, 100]),
+    2: ([64, 128, 256, 256, 256], [100, 100]),
+    3: ([64, 128, 256, 256, 256], [80, 80]),
+    4: ([32, 96, 256, 256, 256], [80, 80]),
+    5: ([32, 96, 128, 128, 256], [80, 80]),
+}
+
+
+def get_spec(name: str, width: float = 1.0) -> ModelSpec:
+    if name == "mlp":
+        h1, h2 = _round4(100, width), _round4(64, width)
+        return ModelSpec(
+            name,
+            width,
+            (784,),
+            (
+                Fc(784, h1, True),
+                Fc(h1, h2, True),
+                Fc(h2, NUM_CLASSES, False),
+            ),
+        )
+    if name == "cnn1":
+        c1, c2 = _round4(10, width), _round4(20, width)
+        # 28 -conv5v-> 24 -pool-> 12 -conv5v-> 8 -pool-> 4
+        fc_in = c2 * 4 * 4
+        h = _round4(50, width)
+        return ModelSpec(
+            name,
+            width,
+            (1, 28, 28),
+            (
+                Conv(1, c1, 5, "VALID", pool_first=True),
+                Conv(c1, c2, 5, "VALID", pool_first=True),
+                Fc(fc_in, h, True),
+                Fc(h, NUM_CLASSES, False),
+            ),
+        )
+    if name == "cnn2":
+        c = [_round4(x, width) for x in (16, 32, 64)]
+        # 32 -> 16 -> 8 -> 4 with three SAME conv+pool stages
+        fc_in = c[2] * 4 * 4
+        h1, h2 = _round4(500, width), _round4(100, width)
+        return ModelSpec(
+            name,
+            width,
+            (3, 32, 32),
+            (
+                Conv(3, c[0], 3, "SAME", pool_first=False),
+                Conv(c[0], c[1], 3, "SAME", pool_first=False),
+                Conv(c[1], c[2], 3, "SAME", pool_first=False),
+                Fc(fc_in, h1, True),
+                Fc(h1, h2, True),
+                Fc(h2, NUM_CLASSES, False),
+            ),
+        )
+    if name.startswith("het_a_"):
+        conv, fc = _HET_A[int(name.split("_")[-1])]
+        return _vgg_spec(name, conv, fc, width)
+    if name.startswith("het_b_"):
+        conv, fc = _HET_B[int(name.split("_")[-1])]
+        return _vgg_spec(name, conv, fc, width)
+    raise ValueError(f"unknown model {name!r}")
+
+
+ALL_MODELS = (
+    ["mlp", "cnn1", "cnn2"]
+    + [f"het_a_{i}" for i in range(1, 6)]
+    + [f"het_b_{i}" for i in range(1, 6)]
+)
+
+
+def param_shapes(spec: ModelSpec) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) for every parameter array. Conv weights are
+    OIHW; FC weights are (in, out)."""
+    shapes = []
+    for i, layer in enumerate(spec.layers):
+        if isinstance(layer, Conv):
+            shapes.append(
+                (
+                    f"conv{i}_w",
+                    (layer.out_ch, layer.in_ch, layer.kernel, layer.kernel),
+                )
+            )
+            shapes.append((f"conv{i}_b", (layer.out_ch,)))
+        else:
+            shapes.append((f"fc{i}_w", (layer.in_dim, layer.out_dim)))
+            shapes.append((f"fc{i}_b", (layer.out_dim,)))
+    return shapes
+
+
+def init_params(spec: ModelSpec, key) -> List[jax.Array]:
+    """Init mirroring the rust registry: He-normal convs, damped FC
+    weights (×0.5) with an extra ×0.2 on the classifier layer (keeps the
+    deep VGG sub-models in the plain-SGD stable region; see
+    EXPERIMENTS.md). Only used by python tests — rust owns runtime init.
+    """
+    shapes = param_shapes(spec)
+    last_w = len(shapes) - 2
+    params = []
+    for i, (name, shape) in enumerate(shapes):
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = (
+                shape[1] * shape[2] * shape[3] if len(shape) == 4 else shape[0]
+            )
+            std = jnp.sqrt(2.0 / fan_in)
+            if len(shape) == 2:
+                std = std * 0.5
+            if i == last_w:
+                std = std * 0.2
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward / loss / train / eval
+# --------------------------------------------------------------------------
+
+_DIMNUMS = ("NCHW", "OIHW", "NCHW")
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def forward(spec: ModelSpec, params: List[jax.Array], x: jax.Array):
+    """Logits for a batch. x: [B,784] (MLP) or [B,C,H,W] (CNNs)."""
+    idx = 0
+    flat = False
+    for layer in spec.layers:
+        if isinstance(layer, Conv):
+            w, b = params[idx], params[idx + 1]
+            idx += 2
+            x = jax.lax.conv_general_dilated(
+                x, w, (1, 1), layer.padding, dimension_numbers=_DIMNUMS
+            ) + b[None, :, None, None]
+            if layer.pool_first:
+                x = _maxpool2(x)
+                x = jax.nn.relu(x)
+            else:
+                x = jax.nn.relu(x)
+                x = _maxpool2(x)
+        else:
+            if not flat and x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            flat = True
+            w, b = params[idx], params[idx + 1]
+            idx += 2
+            x = dense(x, w, b)  # L1 Pallas kernel
+            if layer.relu:
+                x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(spec: ModelSpec, params, x, y):
+    """Mean softmax cross-entropy; y: int32[B]."""
+    logits = forward(spec, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=1)
+    return jnp.mean(nll)
+
+
+def train_step(spec: ModelSpec, params, x, y, lr):
+    """One SGD step. lr: f32[1]. Returns (*new_params, loss)."""
+    loss, grads = jax.value_and_grad(partial(loss_fn, spec))(params, x, y)
+    new_params = [p - lr[0] * g for p, g in zip(params, grads)]
+    return tuple(new_params) + (loss,)
+
+
+def train_scan(spec: ModelSpec, params, xs, ys, lr, steps: int):
+    """`steps` SGD steps fused into one executable via lax.scan — the L2
+    perf optimization that removes per-step host<->device round trips.
+    xs: [S,B,...], ys: int32[S,B]. Returns (*new_params, mean_loss)."""
+
+    def body(carry, batch):
+        x, y = batch
+        out = train_step(spec, carry, x, y, lr)
+        return list(out[:-1]), out[-1]
+
+    new_params, losses = jax.lax.scan(body, list(params), (xs, ys), length=steps)
+    return tuple(new_params) + (jnp.mean(losses),)
+
+
+def eval_batch(spec: ModelSpec, params, x, y):
+    """Returns (loss_sum f32[], per_class_correct f32[10], per_class_count
+    f32[10]) so the rust side can stream test batches and compute overall
+    and per-class accuracy (Fig. 21)."""
+    logits = forward(spec, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    y = y.astype(jnp.int32)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(y, NUM_CLASSES, dtype=jnp.float32)
+    correct = onehot * (pred == y)[:, None].astype(jnp.float32)
+    return (
+        jnp.sum(nll),
+        jnp.sum(correct, axis=0),
+        jnp.sum(onehot, axis=0),
+    )

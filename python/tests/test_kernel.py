@@ -1,0 +1,193 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and value distributions; every kernel must match
+ref.py to float32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    dense,
+    importance_flat,
+    masked_acc,
+    masked_fin,
+    matmul_pallas,
+    sgd_update,
+)
+from compile.kernels import ref
+
+RTOL = 1e-4
+ATOL = 1e-5
+
+
+def _arr(rng, shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+# --------------------------------------------------------------------------
+# matmul / dense
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 300),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, (m, k))
+    w = _arr(rng, (k, n))
+    got = matmul_pallas(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-3)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(16, 784, 100), (16, 100, 64), (16, 64, 10), (64, 1024, 500), (1, 1, 1)],
+)
+def test_dense_paper_shapes(m, k, n):
+    rng = np.random.default_rng(0)
+    x, w, b = _arr(rng, (m, k)), _arr(rng, (k, n)), _arr(rng, (n,))
+    np.testing.assert_allclose(
+        dense(x, w, b), ref.dense_ref(x, w, b), rtol=RTOL, atol=1e-3
+    )
+
+
+def test_dense_grad_matches_ref():
+    rng = np.random.default_rng(1)
+    x, w, b = _arr(rng, (8, 33)), _arr(rng, (33, 17)), _arr(rng, (17,))
+
+    def f_pallas(w, b):
+        return jnp.sum(jax.nn.relu(dense(x, w, b)) ** 2)
+
+    def f_ref(w, b):
+        return jnp.sum(jax.nn.relu(ref.dense_ref(x, w, b)) ** 2)
+
+    gw, gb = jax.grad(f_pallas, argnums=(0, 1))(w, b)
+    gw_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(w, b)
+    np.testing.assert_allclose(gw, gw_r, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gb, gb_r, rtol=1e-3, atol=1e-3)
+
+
+def test_dense_jit_compiles():
+    rng = np.random.default_rng(2)
+    x, w, b = _arr(rng, (4, 12)), _arr(rng, (12, 5)), _arr(rng, (5,))
+    got = jax.jit(dense)(x, w, b)
+    np.testing.assert_allclose(got, ref.dense_ref(x, w, b), rtol=RTOL, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# masked aggregation (Eq. 4)
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    chunks=st.integers(1, 4),
+    mn=st.floats(0.01, 100.0),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_acc_matches_ref(chunks, mn, density, seed):
+    rng = np.random.default_rng(seed)
+    f = 1024 * chunks
+    num, den, w = _arr(rng, f), jnp.abs(_arr(rng, f)), _arr(rng, f)
+    mask = jnp.asarray((rng.random(f) < density).astype(np.float32))
+    mn_a = jnp.asarray([mn], jnp.float32)
+    gn, gd = masked_acc(num, den, w, mask, mn_a)
+    wn, wd = ref.masked_acc_ref(num, den, w, mask, mn_a)
+    np.testing.assert_allclose(gn, wn, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(gd, wd, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    chunks=st.integers(1, 3),
+    coverage=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_fin_matches_ref(chunks, coverage, seed):
+    rng = np.random.default_rng(seed)
+    f = 1024 * chunks
+    num, prev = _arr(rng, f), _arr(rng, f)
+    den = jnp.asarray(
+        (rng.random(f) < coverage).astype(np.float32) * rng.random(f).astype(np.float32)
+    )
+    got = masked_fin(num, den, prev)
+    want = ref.masked_fin_ref(num, den, prev)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_masked_fin_zero_coverage_keeps_prev():
+    f = 1024
+    num = jnp.ones(f)
+    den = jnp.zeros(f)
+    prev = jnp.full(f, 7.25)
+    np.testing.assert_array_equal(masked_fin(num, den, prev), prev)
+
+
+def test_masked_acc_full_masks_equal_fedavg():
+    """With all-ones masks accumulated over N clients, finalize must equal
+    the plain weighted average (FedDD degenerates to FedAvg)."""
+    rng = np.random.default_rng(3)
+    f = 2048
+    ws = [_arr(rng, f) for _ in range(5)]
+    mns = [1.0, 2.0, 3.0, 4.0, 5.0]
+    num, den = jnp.zeros(f), jnp.zeros(f)
+    ones = jnp.ones(f)
+    for w, mn in zip(ws, mns):
+        num, den = masked_acc(num, den, w, ones, jnp.asarray([mn], jnp.float32))
+    got = masked_fin(num, den, jnp.zeros(f))
+    want = sum(w * mn for w, mn in zip(ws, mns)) / sum(mns)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# importance (Eq. 20/21) & sgd
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    chunks=st.integers(1, 3),
+    scale=st.floats(1e-6, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_importance_matches_ref(chunks, scale, seed):
+    rng = np.random.default_rng(seed)
+    f = 1024 * chunks
+    w, dw = _arr(rng, f, scale), _arr(rng, f, scale * 0.1)
+    got = importance_flat(w, dw)
+    want = ref.importance_ref(w, dw)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_importance_zero_weight_guard():
+    f = 1024
+    w = jnp.zeros(f)
+    dw = jnp.ones(f)
+    got = importance_flat(w, dw)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(lr=st.floats(0.0, 1.0), seed=st.integers(0, 2**31 - 1))
+def test_sgd_update_matches_ref(lr, seed):
+    rng = np.random.default_rng(seed)
+    f = 1024
+    w, g = _arr(rng, f), _arr(rng, f)
+    lr_a = jnp.asarray([lr], jnp.float32)
+    np.testing.assert_allclose(
+        sgd_update(w, g, lr_a),
+        ref.sgd_update_ref(w, g, lr_a),
+        rtol=1e-5,
+        atol=1e-6,
+    )

@@ -1,0 +1,191 @@
+"""L2 model tests: registry shapes (Tables 2/3/6), forward shapes, gradient
+vs finite differences, training-loss decrease, eval accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _data(spec, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(batch,) + spec.input_shape).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=batch).astype(np.int32))
+    return x, y
+
+
+# --------------------------------------------------------------------------
+# Registry / shapes
+# --------------------------------------------------------------------------
+
+
+def test_mlp_matches_table2():
+    spec = M.get_spec("mlp")
+    shapes = dict(M.param_shapes(spec))
+    assert shapes["fc0_w"] == (784, 100)
+    assert shapes["fc1_w"] == (100, 64)
+    assert shapes["fc2_w"] == (64, 10)
+
+
+def test_cnn1_matches_table2():
+    spec = M.get_spec("cnn1")
+    shapes = dict(M.param_shapes(spec))
+    assert shapes["conv0_w"] == (10, 1, 5, 5)
+    assert shapes["conv1_w"] == (20, 10, 5, 5)
+    assert shapes["fc2_w"] == (320, 50)  # 20 * 4 * 4
+    assert shapes["fc3_w"] == (50, 10)
+
+
+def test_cnn2_matches_table2():
+    spec = M.get_spec("cnn2")
+    shapes = dict(M.param_shapes(spec))
+    assert shapes["conv0_w"] == (16, 3, 3, 3)
+    assert shapes["conv1_w"] == (32, 16, 3, 3)
+    assert shapes["conv2_w"] == (64, 32, 3, 3)
+    assert shapes["fc3_w"] == (1024, 500)  # 64 * 4 * 4 = paper's 1024
+    assert shapes["fc4_w"] == (500, 100)
+    assert shapes["fc5_w"] == (100, 10)
+
+
+@pytest.mark.parametrize("i,ch", [(1, 512), (2, 512), (5, 512)])
+def test_het_a_channels_match_table3(i, ch):
+    spec = M.get_spec(f"het_a_{i}")
+    convs = [l for l in spec.layers if isinstance(l, M.Conv)]
+    assert convs[-1].out_ch == ch
+    expected = M._HET_A[i][0]
+    assert [c.out_ch for c in convs] == expected
+
+
+@pytest.mark.parametrize("i", [1, 2, 3, 4, 5])
+def test_het_b_channels_match_table6(i):
+    spec = M.get_spec(f"het_b_{i}")
+    convs = [l for l in spec.layers if isinstance(l, M.Conv)]
+    assert [c.out_ch for c in convs] == M._HET_B[i][0]
+
+
+def test_submodel_nesting_het_a():
+    """HeteroFL-style: every sub-model's channel counts are <= the full
+    model's, layer by layer (the structural-mask premise)."""
+    full = [c.out_ch for c in M.get_spec("het_a_1").layers if isinstance(c, M.Conv)]
+    for i in range(2, 6):
+        sub = [c.out_ch for c in M.get_spec(f"het_a_{i}").layers if isinstance(c, M.Conv)]
+        assert all(s <= f for s, f in zip(sub, full)), i
+
+
+def test_width_mult_scales_hidden_not_io():
+    spec = M.get_spec("cnn2", 0.25)
+    shapes = dict(M.param_shapes(spec))
+    assert shapes["conv0_w"][1] == 3  # input channels unscaled
+    assert shapes["fc5_w"][1] == 10  # classes unscaled
+    assert shapes["conv0_w"][0] == 4  # 16 * 0.25
+    assert shapes["fc4_w"][1] == 28  # round(100*0.25)=25 -> next mult of 4
+
+
+def test_param_count_decreases_with_submodel_index():
+    def count(name):
+        return sum(
+            int(np.prod(s)) for _, s in M.param_shapes(M.get_spec(name))
+        )
+
+    counts = [count(f"het_b_{i}") for i in range(1, 6)]
+    assert counts == sorted(counts, reverse=True)
+
+
+# --------------------------------------------------------------------------
+# Forward / loss / train
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["mlp", "cnn1", "cnn2"])
+def test_forward_shapes(name):
+    spec = M.get_spec(name, 0.25 if name == "cnn2" else 1.0)
+    params = M.init_params(spec, jax.random.PRNGKey(0))
+    x, _ = _data(spec, 4)
+    logits = M.forward(spec, params, x)
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("fam", ["het_a", "het_b"])
+def test_hetero_forward_shapes(fam):
+    for i in (1, 5):
+        spec = M.get_spec(f"{fam}_{i}", 0.25)
+        params = M.init_params(spec, jax.random.PRNGKey(i))
+        x, _ = _data(spec, 2)
+        assert M.forward(spec, params, x).shape == (2, 10)
+
+
+def test_grad_matches_finite_difference():
+    spec = M.get_spec("mlp", 0.25)
+    params = M.init_params(spec, jax.random.PRNGKey(0))
+    x, y = _data(spec, 8)
+    loss, grads = jax.value_and_grad(lambda p: M.loss_fn(spec, p, x, y))(params)
+    # probe a few coordinates of the first weight matrix
+    rng = np.random.default_rng(0)
+    w = np.asarray(params[0])
+    eps = 1e-3
+    for _ in range(4):
+        i, j = rng.integers(0, w.shape[0]), rng.integers(0, w.shape[1])
+        wp = w.copy()
+        wp[i, j] += eps
+        lp = M.loss_fn(spec, [jnp.asarray(wp)] + params[1:], x, y)
+        wm = w.copy()
+        wm[i, j] -= eps
+        lm = M.loss_fn(spec, [jnp.asarray(wm)] + params[1:], x, y)
+        fd = (lp - lm) / (2 * eps)
+        np.testing.assert_allclose(grads[0][i, j], fd, rtol=0.05, atol=1e-3)
+
+
+def test_train_step_decreases_loss_on_learnable_data():
+    spec = M.get_spec("mlp")
+    params = M.init_params(spec, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    # learnable synthetic data: class prototypes + small noise
+    protos = rng.normal(size=(10, 784)).astype(np.float32)
+    y = np.tile(np.arange(10), 10).astype(np.int32)[:64]
+    x = protos[y] + 0.1 * rng.normal(size=(64, 784)).astype(np.float32)
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    lr = jnp.asarray([0.05], jnp.float32)
+    first = float(M.loss_fn(spec, params, x, y))
+    for _ in range(30):
+        out = M.train_step(spec, params, x, y, lr)
+        params = list(out[:-1])
+    last = float(out[-1])
+    assert last < first * 0.5, (first, last)
+
+
+def test_train_scan_equals_repeated_train_step():
+    spec = M.get_spec("mlp", 0.25)
+    params = M.init_params(spec, jax.random.PRNGKey(1))
+    steps = 3
+    rng = np.random.default_rng(1)
+    xs = jnp.asarray(rng.normal(size=(steps, 8, 784)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, 10, size=(steps, 8)).astype(np.int32))
+    lr = jnp.asarray([0.01], jnp.float32)
+    out_scan = M.train_scan(spec, params, xs, ys, lr, steps)
+    p = params
+    losses = []
+    for s in range(steps):
+        out = M.train_step(spec, p, xs[s], ys[s], lr)
+        p = list(out[:-1])
+        losses.append(out[-1])
+    for a, b in zip(out_scan[:-1], p):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(out_scan[-1], jnp.mean(jnp.stack(losses)), rtol=1e-5)
+
+
+def test_eval_batch_accounting():
+    spec = M.get_spec("mlp", 0.25)
+    params = M.init_params(spec, jax.random.PRNGKey(2))
+    x, y = _data(spec, 32)
+    loss_sum, correct, count = M.eval_batch(spec, params, x, y)
+    assert count.shape == (10,)
+    assert float(jnp.sum(count)) == 32.0
+    assert bool(jnp.all(correct <= count))
+    assert float(loss_sum) > 0.0
+    # cross-check against direct computation
+    logits = M.forward(spec, params, x)
+    acc_direct = float(jnp.mean(jnp.argmax(logits, -1) == y))
+    np.testing.assert_allclose(float(jnp.sum(correct)) / 32.0, acc_direct)

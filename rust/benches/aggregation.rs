@@ -1,0 +1,75 @@
+//! Aggregation benches (paper Eq. 4 hot path): rust vectorized backend vs
+//! the Pallas masked_acc/masked_fin artifacts through PJRT, plus the raw
+//! flat primitives. Regenerates the §Perf aggregation rows.
+
+use feddd::aggregation::{AggBackend, Aggregator};
+use feddd::model::ModelSpec;
+use feddd::runtime::{default_artifacts_dir, Runtime};
+use feddd::selection::ChannelMask;
+use feddd::tensor::{axpy_masked, masked_div};
+use feddd::util::bench::{black_box, Bencher};
+use feddd::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new("aggregation");
+    let mut rng = Rng::new(0);
+
+    // raw primitives on a 1M-element flat buffer
+    let n = 1_000_000;
+    let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mask: Vec<f32> = (0..n).map(|_| if rng.bool(0.5) { 1.0 } else { 0.0 }).collect();
+    let mut num = vec![0.0f32; n];
+    let den = mask.clone();
+    let prev = w.clone();
+    let mut out = vec![0.0f32; n];
+    b.bench_throughput("axpy_masked_1M", n as u64, || {
+        axpy_masked(black_box(&mut num), 2.0, black_box(&w), black_box(&mask));
+    });
+    b.bench_throughput("masked_div_1M", n as u64, || {
+        masked_div(black_box(&mut out), &num, &den, &prev);
+    });
+
+    // full aggregator round: 10 clients, cnn2 (paper-width) masks
+    let spec = ModelSpec::get("cnn2", 1.0).unwrap();
+    let prev_p = spec.init_params(&mut rng);
+    let clients: Vec<_> = (0..10).map(|_| spec.init_params(&mut rng)).collect();
+    let masks: Vec<_> = (0..10)
+        .map(|_| {
+            feddd::selection::select_mask(
+                feddd::selection::Policy::Random,
+                &spec,
+                &prev_p,
+                &clients[0],
+                None,
+                0.4,
+                &mut rng,
+            )
+            .to_elementwise(&spec)
+        })
+        .collect();
+    b.bench("round_rust_cnn2_10clients", || {
+        let mut agg = Aggregator::new(&spec, AggBackend::Rust);
+        for (c, m) in clients.iter().zip(&masks) {
+            agg.add_client(c, m, 1.0, None).unwrap();
+        }
+        black_box(agg.finalize(&prev_p, None).unwrap());
+    });
+
+    // XLA backend (needs artifacts)
+    if let Ok(rt) = Runtime::new(&default_artifacts_dir()) {
+        b.bench("round_xla_cnn2_10clients", || {
+            let mut agg = Aggregator::new(&spec, AggBackend::Xla);
+            for (c, m) in clients.iter().zip(&masks) {
+                agg.add_client(c, m, 1.0, Some(&rt)).unwrap();
+            }
+            black_box(agg.finalize(&prev_p, Some(&rt)).unwrap());
+        });
+    }
+
+    // mask expansion cost
+    let cm = ChannelMask::full(&spec);
+    b.bench("mask_expand_cnn2", || {
+        black_box(cm.to_elementwise(&spec));
+    });
+    b.finish();
+}

@@ -1,0 +1,41 @@
+//! End-to-end round bench: one full synchronous FedDD round (train +
+//! select + aggregate + merge) on the smoke preset vs the FedAvg baseline
+//! — the headline L3 number in EXPERIMENTS.md §Perf.
+
+use feddd::config::ExpConfig;
+use feddd::coordinator::FedRun;
+use feddd::runtime::default_artifacts_dir;
+use feddd::util::bench::{black_box, Bencher};
+
+fn cfg(scheme: &str) -> ExpConfig {
+    let mut cfg = ExpConfig::smoke();
+    cfg.scheme = scheme.into();
+    cfg.rounds = 1000; // stepped manually
+    cfg.n_clients = 10;
+    cfg.test_n = 128;
+    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+    cfg
+}
+
+fn main() {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping round bench");
+        return;
+    }
+    let mut b = Bencher::new("round");
+    for scheme in ["feddd", "fedavg"] {
+        let mut run = FedRun::new(cfg(scheme)).unwrap();
+        // warm the executable cache & pass round 1 (full upload)
+        run.step_round().unwrap();
+        b.bench(&format!("step_round_{scheme}_mlp_10c"), || {
+            black_box(run.step_round().unwrap());
+        });
+    }
+    // evaluation pass
+    let mut run = FedRun::new(cfg("feddd")).unwrap();
+    run.step_round().unwrap();
+    b.bench("evaluate_mlp_128", || {
+        black_box(run.evaluate().unwrap());
+    });
+    b.finish();
+}

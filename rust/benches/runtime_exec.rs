@@ -1,0 +1,70 @@
+//! PJRT runtime benches: train/eval executions and literal marshalling —
+//! the L3<->L2 boundary cost that the train_scan optimization targets.
+
+use feddd::model::ModelSpec;
+use feddd::runtime::{default_artifacts_dir, Runtime};
+use feddd::util::bench::{black_box, Bencher};
+use feddd::util::rng::Rng;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping runtime benches");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let mut b = Bencher::new("runtime_exec");
+    let mut rng = Rng::new(3);
+
+    let spec = ModelSpec::get("mlp", 1.0).unwrap();
+    let mut params = spec.init_params(&mut rng);
+    let x: Vec<f32> = (0..16 * 784).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..16).map(|_| rng.below(10) as i32).collect();
+    b.bench("train_step_mlp_b16", || {
+        black_box(
+            rt.train_step("mlp_w100_train", &mut params, &x, &y, 0.01).unwrap(),
+        );
+    });
+
+    // fused 4-step scan vs 4 single steps
+    let xs: Vec<f32> = (0..4 * 16 * 784).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let ys: Vec<i32> = (0..4 * 16).map(|_| rng.below(10) as i32).collect();
+    b.bench("train_scan4_mlp_b16", || {
+        black_box(
+            rt.train_scan("mlp_w100_train_scan", &mut params, &xs, &ys, 0.01)
+                .unwrap(),
+        );
+    });
+    b.bench("train_4x_step_mlp_b16", || {
+        for s in 0..4 {
+            let xo = &x; // same batch; cost dominated by exec + marshalling
+            let _ = s;
+            black_box(
+                rt.train_step("mlp_w100_train", &mut params, xo, &y, 0.01).unwrap(),
+            );
+        }
+    });
+
+    let xe: Vec<f32> = (0..64 * 784).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let ye: Vec<i32> = (0..64).map(|_| rng.below(10) as i32).collect();
+    b.bench("eval_batch_mlp_b64", || {
+        black_box(rt.eval_batch("mlp_w100_eval", &params, &xe, &ye).unwrap());
+    });
+
+    // literal marshalling cost (1M f32)
+    let big: Vec<f32> = (0..1_000_000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    b.bench_throughput("lit_f32_1M", 1_000_000, || {
+        black_box(rt.lit_f32(black_box(&big), &[1_000_000]).unwrap());
+    });
+    b.finish();
+
+    let stats = rt.stats();
+    eprintln!(
+        "runtime stats: {} execs, {:.3}s exec, {} compiles ({:.2}s), {} MB h2d",
+        stats.executions,
+        stats.exec_seconds,
+        stats.compiled,
+        stats.compile_seconds,
+        stats.h2d_bytes / 1_000_000
+    );
+}

@@ -1,0 +1,35 @@
+//! Uploaded-parameter selection benches (Algorithm 2): per-policy scoring
+//! + top-k masking cost on the paper's CNN2.
+
+use feddd::model::ModelSpec;
+use feddd::selection::{select_mask, Policy};
+use feddd::util::bench::{black_box, Bencher};
+use feddd::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new("selection");
+    let spec = ModelSpec::get("cnn2", 1.0).unwrap();
+    let mut rng = Rng::new(2);
+    let before = spec.init_params(&mut rng);
+    let after = spec.init_params(&mut rng);
+    for (name, policy) in [
+        ("importance", Policy::Importance),
+        ("max", Policy::Max),
+        ("delta", Policy::Delta),
+        ("random", Policy::Random),
+        ("ordered", Policy::Ordered),
+    ] {
+        b.bench(&format!("cnn2_{name}_d0.6"), || {
+            black_box(select_mask(
+                policy,
+                &spec,
+                black_box(&before),
+                black_box(&after),
+                None,
+                0.6,
+                &mut rng,
+            ));
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,35 @@
+//! Dropout-rate allocation benches (Eq. 16/17): the fast structured
+//! solver vs the general simplex across fleet sizes.
+
+use feddd::solver::{allocate_fast, allocate_lp, AllocInput, AllocParams};
+use feddd::util::bench::{black_box, Bencher};
+use feddd::util::rng::Rng;
+
+fn instance(n: usize, rng: &mut Rng) -> Vec<AllocInput> {
+    (0..n)
+        .map(|_| AllocInput {
+            u_bytes: rng.range_f64(1e5, 7e6),
+            t_cmp: rng.range_f64(0.05, 2.0),
+            sec_per_byte: rng.range_f64(1e-6, 1e-3),
+            re: rng.range_f64(0.0, 1.0),
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new("solver");
+    let p = AllocParams { d_max: 0.8, a_server: 0.6, delta: 1.0 };
+    let mut rng = Rng::new(1);
+    for n in [10usize, 100, 1000] {
+        let inputs = instance(n, &mut rng);
+        b.bench(&format!("fast_n{n}"), || {
+            black_box(allocate_fast(black_box(&inputs), &p).unwrap());
+        });
+        if n <= 100 {
+            b.bench(&format!("simplex_n{n}"), || {
+                black_box(allocate_lp(black_box(&inputs), &p).unwrap());
+            });
+        }
+    }
+    b.finish();
+}

@@ -1,0 +1,226 @@
+//! Client-selection baselines (paper §6.2), run through the same round
+//! engine and under the same per-round uploaded-byte budget
+//! `A_server · Σ U_n` as FedDD:
+//!
+//! * **FedAvg** [4] — every client uploads the full model, no budget
+//!   (the paper's reference point for T2A = 1).
+//! * **FedCS** [8] — drops the clients with the longest round time:
+//!   greedily admits the *fastest* clients while their full-model uploads
+//!   fit the byte budget.
+//! * **Oort** [10] — utility-guided selection: statistical utility
+//!   `m_n · loss_n` times a straggler penalty `(T_pref / t_n)^α` when the
+//!   client is slower than the preferred round time (α = 2 per the
+//!   paper's setup), with optimistic values for unexplored clients and
+//!   ε-greedy exploration.
+
+use crate::config::ExpConfig;
+use crate::coordinator::ClientState;
+use crate::util::rng::Rng;
+
+/// Estimated full-model round time for a client (download + train +
+/// upload, Eq. 12 inner term).
+pub fn full_round_time(c: &ClientState, cfg: &ExpConfig) -> f64 {
+    let bytes = c.u_bytes() as f64;
+    c.profile.t_down(bytes)
+        + c.profile.t_cmp(c.samples_per_round(cfg.local_steps, cfg.batch))
+        + c.profile.t_up(bytes)
+}
+
+/// FedCS: fastest clients first while full uploads fit the budget.
+pub fn fedcs_select(
+    clients: &[ClientState],
+    cfg: &ExpConfig,
+    budget_bytes: usize,
+) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..clients.len()).collect();
+    order.sort_by(|&a, &b| {
+        full_round_time(&clients[a], cfg)
+            .partial_cmp(&full_round_time(&clients[b], cfg))
+            .unwrap()
+    });
+    let mut selected = Vec::new();
+    let mut used = 0usize;
+    for n in order {
+        let u = clients[n].u_bytes();
+        if used + u <= budget_bytes {
+            used += u;
+            selected.push(n);
+        }
+    }
+    if selected.is_empty() {
+        // budget smaller than the smallest model: still run one client
+        // (the fastest), as FedCS would extend the deadline.
+        let fastest = (0..clients.len())
+            .min_by(|&a, &b| {
+                full_round_time(&clients[a], cfg)
+                    .partial_cmp(&full_round_time(&clients[b], cfg))
+                    .unwrap()
+            })
+            .unwrap();
+        selected.push(fastest);
+    }
+    selected.sort_unstable();
+    selected
+}
+
+/// Oort: top statistical×system utility under the byte budget.
+pub fn oort_select(
+    clients: &[ClientState],
+    cfg: &ExpConfig,
+    budget_bytes: usize,
+    round: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    // Preferred round duration: median full-round time.
+    let mut times: Vec<f64> = clients.iter().map(|c| full_round_time(c, cfg)).collect();
+    let mut sorted = times.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let t_pref = sorted[sorted.len() / 2];
+
+    // Statistical utility m_n · loss_n; unexplored clients get the current
+    // max (optimistic prior), so everyone is tried early.
+    let mut utils: Vec<f64> = clients
+        .iter()
+        .map(|c| c.m_n() as f64 * c.last_loss.max(0.0))
+        .collect();
+    let max_util = utils.iter().cloned().fold(f64::MIN, f64::max).max(1e-9);
+    for (u, c) in utils.iter_mut().zip(clients) {
+        if c.participations == 0 {
+            *u = max_util;
+        }
+    }
+    // System penalty.
+    for (u, t) in utils.iter_mut().zip(&mut times) {
+        if *t > t_pref {
+            *u *= (t_pref / *t).powf(cfg.oort_alpha);
+        }
+    }
+    // ε-greedy exploration: a decaying fraction of the budget goes to
+    // random clients (Oort §5; ε0=0.2, ×0.98 per round).
+    let eps = 0.2 * 0.98f64.powi(round as i32 - 1);
+
+    let mut order: Vec<usize> = (0..clients.len()).collect();
+    order.sort_by(|&a, &b| utils[b].partial_cmp(&utils[a]).unwrap());
+
+    let mut selected = Vec::new();
+    let mut used = 0usize;
+    // exploration picks first
+    let explore_budget = (budget_bytes as f64 * eps) as usize;
+    let mut perm: Vec<usize> = rng.permutation(clients.len());
+    perm.retain(|&n| clients[n].participations == 0);
+    for &n in &perm {
+        let u = clients[n].u_bytes();
+        if used + u <= explore_budget {
+            used += u;
+            selected.push(n);
+        }
+    }
+    for n in order {
+        if selected.contains(&n) {
+            continue;
+        }
+        let u = clients[n].u_bytes();
+        if used + u <= budget_bytes {
+            used += u;
+            selected.push(n);
+        }
+    }
+    if selected.is_empty() {
+        selected.push(order_first_by_util(&utils));
+    }
+    selected.sort_unstable();
+    selected
+}
+
+fn order_first_by_util(utils: &[f64]) -> usize {
+    utils
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{extract_params, ModelId, ModelSpec};
+    use crate::simnet::DeviceProfile;
+
+    fn clients(n: usize) -> (Vec<ClientState>, ExpConfig) {
+        let cfg = ExpConfig::smoke();
+        let spec = ModelSpec::get("mlp", 1.0).unwrap();
+        let mut rng = Rng::new(0);
+        let global = spec.init_params(&mut rng);
+        let v = (0..n)
+            .map(|i| ClientState {
+                id: i,
+                model_id: ModelId::new("mlp", 100),
+                spec: spec.clone(),
+                params: extract_params(&global, &spec),
+                data: (0..100).collect(),
+                profile: DeviceProfile {
+                    cycles_per_sample: 2e6,
+                    cpu_hz: 2e9,
+                    up_bps: 5e4 / (i as f64 + 1.0),
+                    down_bps: 20e4,
+                },
+                dis_score: 5.0,
+                last_loss: 1.0 + i as f64 * 0.1,
+                participations: 0,
+                rng: Rng::new(i as u64),
+                train_artifact: "mlp_w100_train".into(),
+                scan_artifact: None,
+            })
+            .collect();
+        (v, cfg)
+    }
+
+    #[test]
+    fn fedcs_prefers_fast_clients_within_budget() {
+        let (cs, cfg) = clients(10);
+        let u = cs[0].u_bytes();
+        // budget for exactly 4 full models
+        let sel = fedcs_select(&cs, &cfg, 4 * u);
+        assert_eq!(sel.len(), 4);
+        // fastest = lowest index (uplink degrades with index)
+        assert_eq!(sel, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn fedcs_never_empty() {
+        let (cs, cfg) = clients(5);
+        let sel = fedcs_select(&cs, &cfg, 10); // tiny budget
+        assert_eq!(sel.len(), 1);
+    }
+
+    #[test]
+    fn oort_respects_budget_and_explores() {
+        let (mut cs, cfg) = clients(10);
+        let u = cs[0].u_bytes();
+        let mut rng = Rng::new(7);
+        let sel = oort_select(&cs, &cfg, 5 * u, 1, &mut rng);
+        assert!(sel.len() <= 5 && !sel.is_empty());
+        // mark some as explored with low loss; high-loss clients preferred
+        for c in cs.iter_mut() {
+            c.participations = 1;
+        }
+        cs[2].last_loss = 100.0; // huge statistical utility, fast-ish client
+        let sel2 = oort_select(&cs, &cfg, 3 * u, 5, &mut rng);
+        assert!(sel2.contains(&2), "{sel2:?}");
+    }
+
+    #[test]
+    fn oort_penalizes_stragglers() {
+        let (mut cs, cfg) = clients(6);
+        for c in cs.iter_mut() {
+            c.participations = 1;
+            c.last_loss = 1.0;
+        }
+        // client 5 is by construction the slowest (up_bps lowest)
+        let u = cs[0].u_bytes();
+        let mut rng = Rng::new(9);
+        let sel = oort_select(&cs, &cfg, 3 * u, 10, &mut rng);
+        assert!(!sel.contains(&5), "straggler selected: {sel:?}");
+    }
+}

@@ -1,0 +1,147 @@
+//! CLI argument-parsing substrate (clap is unavailable offline).
+//!
+//! Grammar: `feddd <command> [positional...] [--key value | --flag]`.
+//! `--key=value` is also accepted. Unknown keys are the caller's problem
+//! (most of them are forwarded to `ExpConfig::set`).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    anyhow::bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str) -> anyhow::Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Apply all `--key value` options to an ExpConfig, starting from a
+    /// `--preset` if given. Keys that the config doesn't know are left to
+    /// the caller via the returned leftover list.
+    pub fn to_config(&self) -> anyhow::Result<(crate::config::ExpConfig, Vec<String>)> {
+        let mut cfg = match self.get("preset") {
+            Some(p) => crate::config::ExpConfig::preset(p)?,
+            None => crate::config::ExpConfig::smoke(),
+        };
+        if let Some(path) = self.get("config") {
+            cfg = crate::config::ExpConfig::load(std::path::Path::new(path))?;
+        }
+        let mut leftover = Vec::new();
+        for (k, v) in &self.options {
+            if k == "preset" || k == "config" || k == "out" {
+                continue;
+            }
+            if cfg.set(k, v).is_err() {
+                leftover.push(k.clone());
+            }
+        }
+        Ok((cfg, leftover))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse("figure fig7 --rounds 20");
+        assert_eq!(a.command, "figure");
+        assert_eq!(a.positionals, vec!["fig7"]);
+        assert_eq!(a.get("rounds"), Some("20"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("train --lr=0.1 --verbose --n_clients 5");
+        assert_eq!(a.get("lr"), Some("0.1"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_usize("n_clients").unwrap(), Some(5));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("train --quick");
+        assert!(a.has_flag("quick"));
+    }
+
+    #[test]
+    fn to_config_applies_overrides() {
+        let a = parse("train --preset smoke --rounds 3 --scheme fedavg --notakey 1");
+        let (cfg, leftover) = a.to_config().unwrap();
+        assert_eq!(cfg.rounds, 3);
+        assert_eq!(cfg.scheme, "fedavg");
+        assert_eq!(leftover, vec!["notakey".to_string()]);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("x --rounds abc");
+        assert!(a.get_usize("rounds").is_err());
+    }
+}

@@ -1,0 +1,413 @@
+//! Typed experiment configuration with JSON round-trip and the paper's
+//! presets (Table 4 simulation defaults, Table 5 testbed, plus a
+//! CPU-tractable smoke preset used by the default figure harness).
+
+use crate::util::json::{self, Json};
+
+/// Everything one experiment run needs. Field defaults follow Table 4.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExpConfig {
+    pub seed: u64,
+    /// Dataset stand-in: "mnist" | "fmnist" | "cifar10".
+    pub dataset: String,
+    /// "iid" | "noniid_a" | "noniid_b".
+    pub partition: String,
+    /// Model family: "mlp" | "cnn1" | "cnn2" | "het_a" | "het_b".
+    /// `het_*` assigns sub-models 1..5 round-robin over clients
+    /// (model-heterogeneous setting).
+    pub model: String,
+    /// Width percent of the compiled artifacts (100 = paper-exact).
+    pub width_pct: u32,
+    pub n_clients: usize,
+    pub rounds: usize,
+    /// SGD minibatch steps per client per round (paper: local epochs 1/3/5
+    /// for MNIST/FMNIST/CIFAR10 over each client's shard).
+    pub local_steps: usize,
+    /// Train batch (must equal the artifact's compiled batch).
+    pub batch: usize,
+    pub lr: f32,
+    /// "feddd" | "fedavg" | "fedcs" | "oort".
+    pub scheme: String,
+    /// Upload-parameter selection for FedDD: "importance" | "random" |
+    /// "max" | "delta" | "ordered".
+    pub selection: String,
+    /// D_max (Table 4: 0.8).
+    pub d_max: f64,
+    /// A_server (Table 4: 0.6) — also the byte budget for the baselines.
+    pub a_server: f64,
+    /// Penalty factor δ.
+    pub delta: f64,
+    /// Full-model broadcast period h (Table 4: 5; testbed: 1).
+    pub h: usize,
+    /// Training samples per client.
+    pub train_per_client: usize,
+    /// Test set size.
+    pub test_n: usize,
+    /// "simulated" | "testbed".
+    pub fleet: String,
+    /// Evaluate the global model every k rounds.
+    pub eval_every: usize,
+    /// Aggregation backend: "rust" (vectorized loops) | "xla" (the Pallas
+    /// masked_acc/masked_fin artifacts).
+    pub agg_backend: String,
+    /// Class-imbalance (§6.7): rare classes and their sample ratio.
+    pub rare_classes: Vec<usize>,
+    pub rare_ratio: f64,
+    /// Artifact directory (manifest.json + *.hlo.txt).
+    pub artifacts_dir: String,
+    /// Oort straggler penalty α (paper: 2).
+    pub oort_alpha: f64,
+    /// Dropout-rate allocation policy for FedDD: "optimal" (Eq. 16/17)
+    /// or "uniform" (ablation: every client gets D_n = 1 − A_server).
+    pub alloc: String,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            seed: 17,
+            dataset: "mnist".into(),
+            partition: "iid".into(),
+            model: "mlp".into(),
+            width_pct: 100,
+            n_clients: 100,
+            rounds: 100,
+            local_steps: 2,
+            batch: 16,
+            lr: 0.05,
+            scheme: "feddd".into(),
+            selection: "importance".into(),
+            d_max: 0.8,
+            a_server: 0.6,
+            delta: 1.0,
+            h: 5,
+            train_per_client: 200,
+            test_n: 1000,
+            fleet: "simulated".into(),
+            eval_every: 1,
+            agg_backend: "rust".into(),
+            rare_classes: Vec::new(),
+            rare_ratio: 1.0,
+            artifacts_dir: "artifacts".into(),
+            oort_alpha: 2.0,
+            alloc: "optimal".into(),
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Table 4 lab-simulation preset (100 clients).
+    pub fn table4() -> ExpConfig {
+        ExpConfig::default()
+    }
+
+    /// CPU-tractable smoke preset (the figure harness default).
+    pub fn smoke() -> ExpConfig {
+        ExpConfig {
+            n_clients: 10,
+            rounds: 30,
+            local_steps: 4,
+            train_per_client: 120,
+            test_n: 400,
+            ..ExpConfig::default()
+        }
+    }
+
+    /// Table 5 geo-testbed preset: 10 clients, h=1, CNN2/CIFAR10.
+    pub fn testbed() -> ExpConfig {
+        ExpConfig {
+            n_clients: 10,
+            fleet: "testbed".into(),
+            dataset: "cifar10".into(),
+            model: "cnn2".into(),
+            h: 1,
+            rounds: 40,
+            local_steps: 3,
+            lr: 0.02,
+            train_per_client: 150,
+            test_n: 400,
+            ..ExpConfig::default()
+        }
+    }
+
+    pub fn preset(name: &str) -> anyhow::Result<ExpConfig> {
+        match name {
+            "table4" | "paper" => Ok(Self::table4()),
+            "smoke" => Ok(Self::smoke()),
+            "testbed" => Ok(Self::testbed()),
+            _ => anyhow::bail!("unknown preset {name:?} (table4|smoke|testbed)"),
+        }
+    }
+
+    /// The model family is heterogeneous (sub-models 1..5 over clients)?
+    pub fn is_hetero(&self) -> bool {
+        self.model == "het_a" || self.model == "het_b"
+    }
+
+    /// Model name for client `n` under this config.
+    pub fn client_model_name(&self, n: usize) -> String {
+        if self.is_hetero() {
+            format!("{}_{}", self.model, n % 5 + 1)
+        } else {
+            self.model.clone()
+        }
+    }
+
+    /// Sanity checks (bounds, known enum strings, LP feasibility).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_clients > 0, "n_clients must be > 0");
+        anyhow::ensure!(self.rounds > 0, "rounds must be > 0");
+        anyhow::ensure!((0.0..1.0).contains(&self.d_max), "d_max in [0,1)");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.a_server),
+            "a_server in (0,1]"
+        );
+        anyhow::ensure!(
+            self.a_server >= 1.0 - self.d_max - 1e-9,
+            "infeasible: a_server {} < 1 - d_max {}",
+            self.a_server,
+            1.0 - self.d_max
+        );
+        anyhow::ensure!(self.h >= 1, "h >= 1");
+        anyhow::ensure!(
+            ["mnist", "fmnist", "cifar10"].contains(&self.dataset.as_str()),
+            "unknown dataset {:?}",
+            self.dataset
+        );
+        anyhow::ensure!(
+            ["iid", "noniid_a", "noniid_b"].contains(&self.partition.as_str()),
+            "unknown partition {:?}",
+            self.partition
+        );
+        anyhow::ensure!(
+            ["feddd", "fedavg", "fedcs", "oort"].contains(&self.scheme.as_str()),
+            "unknown scheme {:?}",
+            self.scheme
+        );
+        anyhow::ensure!(
+            ["importance", "random", "max", "delta", "ordered"]
+                .contains(&self.selection.as_str()),
+            "unknown selection {:?}",
+            self.selection
+        );
+        anyhow::ensure!(
+            ["rust", "xla"].contains(&self.agg_backend.as_str()),
+            "unknown agg_backend {:?}",
+            self.agg_backend
+        );
+        anyhow::ensure!(
+            ["optimal", "uniform"].contains(&self.alloc.as_str()),
+            "unknown alloc policy {:?}",
+            self.alloc
+        );
+        let known_family =
+            ["mlp", "cnn1", "cnn2", "het_a", "het_b"].contains(&self.model.as_str());
+        // Specific sub-models (e.g. "het_a_3") run homogeneously (Fig. 3).
+        let known_specific = crate::model::ModelSpec::get(&self.model, 1.0).is_ok();
+        anyhow::ensure!(
+            known_family || known_specific,
+            "unknown model family {:?}",
+            self.model
+        );
+        Ok(())
+    }
+
+    // ---------------- JSON ----------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("dataset", Json::s(&self.dataset)),
+            ("partition", Json::s(&self.partition)),
+            ("model", Json::s(&self.model)),
+            ("width_pct", Json::Num(self.width_pct as f64)),
+            ("n_clients", Json::Num(self.n_clients as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("local_steps", Json::Num(self.local_steps as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("lr", Json::Num(self.lr as f64)),
+            ("scheme", Json::s(&self.scheme)),
+            ("selection", Json::s(&self.selection)),
+            ("d_max", Json::Num(self.d_max)),
+            ("a_server", Json::Num(self.a_server)),
+            ("delta", Json::Num(self.delta)),
+            ("h", Json::Num(self.h as f64)),
+            ("train_per_client", Json::Num(self.train_per_client as f64)),
+            ("test_n", Json::Num(self.test_n as f64)),
+            ("fleet", Json::s(&self.fleet)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("agg_backend", Json::s(&self.agg_backend)),
+            ("rare_classes", Json::arr_usize(&self.rare_classes)),
+            ("rare_ratio", Json::Num(self.rare_ratio)),
+            ("artifacts_dir", Json::s(&self.artifacts_dir)),
+            ("oort_alpha", Json::Num(self.oort_alpha)),
+            ("alloc", Json::s(&self.alloc)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ExpConfig> {
+        let d = ExpConfig::default();
+        let gs = |k: &str, dv: &str| -> String {
+            j.get(k).and_then(|v| v.as_str()).unwrap_or(dv).to_string()
+        };
+        let gn = |k: &str, dv: f64| -> f64 {
+            j.get(k).and_then(|v| v.as_f64()).unwrap_or(dv)
+        };
+        let cfg = ExpConfig {
+            seed: gn("seed", d.seed as f64) as u64,
+            dataset: gs("dataset", &d.dataset),
+            partition: gs("partition", &d.partition),
+            model: gs("model", &d.model),
+            width_pct: gn("width_pct", d.width_pct as f64) as u32,
+            n_clients: gn("n_clients", d.n_clients as f64) as usize,
+            rounds: gn("rounds", d.rounds as f64) as usize,
+            local_steps: gn("local_steps", d.local_steps as f64) as usize,
+            batch: gn("batch", d.batch as f64) as usize,
+            lr: gn("lr", d.lr as f64) as f32,
+            scheme: gs("scheme", &d.scheme),
+            selection: gs("selection", &d.selection),
+            d_max: gn("d_max", d.d_max),
+            a_server: gn("a_server", d.a_server),
+            delta: gn("delta", d.delta),
+            h: gn("h", d.h as f64) as usize,
+            train_per_client: gn("train_per_client", d.train_per_client as f64)
+                as usize,
+            test_n: gn("test_n", d.test_n as f64) as usize,
+            fleet: gs("fleet", &d.fleet),
+            eval_every: gn("eval_every", d.eval_every as f64) as usize,
+            agg_backend: gs("agg_backend", &d.agg_backend),
+            rare_classes: j
+                .get("rare_classes")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            rare_ratio: gn("rare_ratio", d.rare_ratio),
+            artifacts_dir: gs("artifacts_dir", &d.artifacts_dir),
+            oort_alpha: gn("oort_alpha", d.oort_alpha),
+            alloc: gs("alloc", &d.alloc),
+        };
+        Ok(cfg)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        json::to_file(path, &self.to_json())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<ExpConfig> {
+        Self::from_json(&json::from_file(path)?)
+    }
+
+    /// Apply a `--key value` style override (used by the CLI).
+    pub fn set(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        match key {
+            "seed" => self.seed = value.parse()?,
+            "dataset" => self.dataset = value.into(),
+            "partition" => self.partition = value.into(),
+            "model" => self.model = value.into(),
+            "width_pct" => self.width_pct = value.parse()?,
+            "n_clients" => self.n_clients = value.parse()?,
+            "rounds" => self.rounds = value.parse()?,
+            "local_steps" => self.local_steps = value.parse()?,
+            "batch" => self.batch = value.parse()?,
+            "lr" => self.lr = value.parse()?,
+            "scheme" => self.scheme = value.into(),
+            "selection" => self.selection = value.into(),
+            "d_max" => self.d_max = value.parse()?,
+            "a_server" => self.a_server = value.parse()?,
+            "delta" => self.delta = value.parse()?,
+            "h" => self.h = value.parse()?,
+            "train_per_client" => self.train_per_client = value.parse()?,
+            "test_n" => self.test_n = value.parse()?,
+            "fleet" => self.fleet = value.into(),
+            "eval_every" => self.eval_every = value.parse()?,
+            "agg_backend" => self.agg_backend = value.into(),
+            "rare_ratio" => self.rare_ratio = value.parse()?,
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            "oort_alpha" => self.oort_alpha = value.parse()?,
+            "alloc" => self.alloc = value.into(),
+            "rare_classes" => {
+                self.rare_classes = value
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.parse())
+                    .collect::<Result<_, _>>()?;
+            }
+            _ => anyhow::bail!("unknown config key {key:?}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table4() {
+        let c = ExpConfig::table4();
+        assert_eq!(c.n_clients, 100);
+        assert_eq!(c.d_max, 0.8);
+        assert_eq!(c.a_server, 0.6);
+        assert_eq!(c.h, 5);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn testbed_matches_table5_text() {
+        let c = ExpConfig::testbed();
+        assert_eq!(c.n_clients, 10);
+        assert_eq!(c.h, 1);
+        assert_eq!(c.model, "cnn2");
+        assert_eq!(c.dataset, "cifar10");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ExpConfig::smoke();
+        c.rare_classes = vec![0, 1, 2];
+        c.rare_ratio = 0.4;
+        c.scheme = "oort".into();
+        let j = c.to_json();
+        let back = ExpConfig::from_json(&j).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn validate_rejects_infeasible_budget() {
+        let c = ExpConfig { d_max: 0.2, a_server: 0.5, ..ExpConfig::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_strings() {
+        let c = ExpConfig { scheme: "sgd".into(), ..ExpConfig::default() };
+        assert!(c.validate().is_err());
+        let c = ExpConfig { partition: "dirichlet".into(), ..ExpConfig::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = ExpConfig::default();
+        c.set("rounds", "7").unwrap();
+        c.set("scheme", "fedcs").unwrap();
+        c.set("rare_classes", "0,3,5").unwrap();
+        assert_eq!(c.rounds, 7);
+        assert_eq!(c.scheme, "fedcs");
+        assert_eq!(c.rare_classes, vec![0, 3, 5]);
+        assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn hetero_client_model_assignment() {
+        let mut c = ExpConfig::default();
+        c.model = "het_a".into();
+        assert!(c.is_hetero());
+        assert_eq!(c.client_model_name(0), "het_a_1");
+        assert_eq!(c.client_model_name(4), "het_a_5");
+        assert_eq!(c.client_model_name(5), "het_a_1");
+        c.model = "mlp".into();
+        assert_eq!(c.client_model_name(3), "mlp");
+    }
+}

@@ -1,0 +1,113 @@
+//! Per-client state and the local-training step (the client side of
+//! Algorithm 1 steps 1–3 and 7).
+
+use crate::data::FedDataset;
+use crate::model::{ModelId, ModelSpec};
+use crate::runtime::Runtime;
+use crate::simnet::DeviceProfile;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One simulated client.
+pub struct ClientState {
+    pub id: usize,
+    pub model_id: ModelId,
+    pub spec: ModelSpec,
+    /// Current local model W_n^t (client shapes).
+    pub params: Vec<Tensor>,
+    /// Indices into the shared train set.
+    pub data: Vec<usize>,
+    pub profile: DeviceProfile,
+    /// Σ_c min(C·dis_n^c, 1) — the data-distribution contribution term.
+    pub dis_score: f64,
+    /// Last reported training loss (drives re_n and Oort utility).
+    pub last_loss: f64,
+    /// Rounds this client has participated in (exploration accounting).
+    pub participations: usize,
+    pub rng: Rng,
+    /// Name of this client's train artifact.
+    pub train_artifact: String,
+    /// Fused multi-step artifact (name, steps) when compiled — the L2
+    /// `lax.scan` perf path that removes per-step host<->device round
+    /// trips (EXPERIMENTS.md §Perf).
+    pub scan_artifact: Option<(String, usize)>,
+}
+
+impl ClientState {
+    /// m_n — the client's sample count (aggregation weight).
+    pub fn m_n(&self) -> usize {
+        self.data.len()
+    }
+
+    /// U_n in bytes.
+    pub fn u_bytes(&self) -> usize {
+        self.spec.size_bytes()
+    }
+
+    /// Samples processed in one round (local_steps minibatches).
+    pub fn samples_per_round(&self, local_steps: usize, batch: usize) -> usize {
+        local_steps * batch
+    }
+
+    /// Run `local_steps` SGD steps on this client's shard; returns the
+    /// mean loss. `scratch_x/y` are reusable batch buffers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_local(
+        &mut self,
+        runtime: &Runtime,
+        ds: &FedDataset,
+        local_steps: usize,
+        batch: usize,
+        lr: f32,
+        scratch_x: &mut Vec<f32>,
+        scratch_y: &mut Vec<i32>,
+    ) -> anyhow::Result<f64> {
+        anyhow::ensure!(!self.data.is_empty(), "client {} has no data", self.id);
+        let mut loss_sum = 0.0f64;
+        let mut losses = 0usize;
+        let mut idxs = Vec::with_capacity(batch);
+        let mut remaining = local_steps;
+        // Fused path: consume steps in scan-sized groups.
+        if let Some((scan_name, steps)) = self.scan_artifact.clone() {
+            while remaining >= steps {
+                idxs.clear();
+                for _ in 0..steps * batch {
+                    let j = self.rng.below(self.data.len());
+                    idxs.push(self.data[j]);
+                }
+                ds.gather_train(&idxs, scratch_x, scratch_y);
+                let loss = runtime.train_scan(
+                    &scan_name,
+                    &mut self.params,
+                    scratch_x,
+                    scratch_y,
+                    lr,
+                )?;
+                loss_sum += loss as f64 * steps as f64;
+                losses += steps;
+                remaining -= steps;
+            }
+        }
+        for _ in 0..remaining {
+            idxs.clear();
+            for _ in 0..batch {
+                let j = self.rng.below(self.data.len());
+                idxs.push(self.data[j]);
+            }
+            ds.gather_train(&idxs, scratch_x, scratch_y);
+            let loss = runtime.train_step(
+                &self.train_artifact,
+                &mut self.params,
+                scratch_x,
+                scratch_y,
+                lr,
+            )?;
+            loss_sum += loss as f64;
+            losses += 1;
+        }
+        let mean = loss_sum / losses.max(1) as f64;
+        self.last_loss = mean;
+        self.participations += 1;
+        Ok(mean)
+    }
+}

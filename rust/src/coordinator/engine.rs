@@ -1,0 +1,432 @@
+//! The synchronous round engine (Algorithm 1) with scheme dispatch.
+//!
+//! One [`FedRun`] owns the fleet, the datasets, the PJRT runtime and the
+//! global model; [`FedRun::run`] executes the configured number of rounds
+//! and returns a [`RunResult`] with the full round/eval history.
+
+use std::time::Instant;
+
+use crate::aggregation::{sparse_merge, AggBackend, Aggregator};
+use crate::baselines;
+use crate::config::ExpConfig;
+use crate::data::{FedDataset, Partition, PartitionKind, SynthSpec};
+use crate::metrics::{EvalAccumulator, EvalRecord, RoundRecord, RunResult};
+use crate::model::{coverage_rates, extract_params, ModelId, ModelSpec};
+use crate::runtime::Runtime;
+use crate::selection::{select_mask, ChannelMask, Policy};
+use crate::simnet::{Fleet, RoundTiming, VirtualClock};
+use crate::solver::{allocate_fast, AllocInput, AllocParams};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::client::ClientState;
+
+/// Outcome of a single round (for tests / tracing).
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    pub duration: f64,
+    pub mean_loss: f64,
+    pub uploaded_bytes: usize,
+    pub participants: usize,
+}
+
+pub struct FedRun {
+    pub cfg: ExpConfig,
+    pub runtime: Runtime,
+    pub ds: FedDataset,
+    pub clients: Vec<ClientState>,
+    pub global_spec: ModelSpec,
+    pub global_params: Vec<Tensor>,
+    pub clock: VirtualClock,
+    /// Coverage rates CR(k) per (layer, unit) of the global model.
+    pub cr: Vec<Vec<f32>>,
+    pub eval_artifact: String,
+    rng: Rng,
+    round: usize,
+    /// Masks used in the current round (for the Eq. 5 sparse download).
+    last_masks: Vec<Option<ChannelMask>>,
+    policy: Policy,
+    backend: AggBackend,
+}
+
+impl FedRun {
+    /// Build the full experiment from a config: dataset, partition, fleet,
+    /// clients, global model, runtime.
+    pub fn new(cfg: ExpConfig) -> anyhow::Result<FedRun> {
+        cfg.validate()?;
+        let mut rng = Rng::new(cfg.seed);
+        // Dataset (with optional §6.7 class imbalance).
+        let mut synth = SynthSpec::by_name(&cfg.dataset)?;
+        if !cfg.rare_classes.is_empty() {
+            synth = synth.imbalanced(&cfg.rare_classes, cfg.rare_ratio);
+        }
+        let test_n = (cfg.test_n / 64).max(1) * 64; // eval batch alignment
+        let mut data_rng = rng.split(1);
+        let ds = synth.generate(cfg.train_per_client * cfg.n_clients, test_n, &mut data_rng);
+        // Partition.
+        let kind = PartitionKind::by_name(&cfg.partition)?;
+        let mut part_rng = rng.split(2);
+        let part = Partition::build(kind, &ds, cfg.n_clients, &mut part_rng);
+        let dis_scores = part.distribution_scores(&ds);
+        // Fleet.
+        let mut fleet_rng = rng.split(3);
+        let fleet = match cfg.fleet.as_str() {
+            "testbed" => Fleet::testbed(&mut fleet_rng),
+            _ => Fleet::simulated(cfg.n_clients, &mut fleet_rng),
+        };
+        anyhow::ensure!(
+            fleet.len() >= cfg.n_clients,
+            "fleet {} smaller than n_clients {}",
+            fleet.len(),
+            cfg.n_clients
+        );
+        // Runtime + global model.
+        let runtime = Runtime::new(std::path::Path::new(&cfg.artifacts_dir))?;
+        let global_name = if cfg.is_hetero() {
+            format!("{}_1", cfg.model)
+        } else {
+            cfg.model.clone()
+        };
+        let global_spec = ModelSpec::get(&global_name, cfg.width_pct as f64 / 100.0)?;
+        let mut init_rng = rng.split(4);
+        let global_params = global_spec.init_params(&mut init_rng);
+        // Clients: local model = global restricted to their sub-model.
+        let mut clients = Vec::with_capacity(cfg.n_clients);
+        for n in 0..cfg.n_clients {
+            let name = cfg.client_model_name(n);
+            let model_id = ModelId::new(&name, cfg.width_pct);
+            let spec = ModelSpec::get(&name, cfg.width_pct as f64 / 100.0)?;
+            let params = extract_params(&global_params, &spec);
+            let train_artifact = format!("{}_train", model_id.tag());
+            runtime.manifest().get(&train_artifact)?; // fail fast
+            let scan_name = format!("{}_train_scan", model_id.tag());
+            let scan_artifact = runtime
+                .manifest()
+                .get(&scan_name)
+                .ok()
+                .map(|m| (scan_name, m.steps));
+            clients.push(ClientState {
+                id: n,
+                spec,
+                params,
+                data: part.client_indices[n].clone(),
+                profile: fleet.profiles[n].clone(),
+                dis_score: dis_scores[n],
+                last_loss: 1.0,
+                participations: 0,
+                rng: rng.split(100 + n as u64),
+                train_artifact,
+                scan_artifact,
+                model_id,
+            });
+        }
+        let cr = {
+            let specs: Vec<&ModelSpec> = clients.iter().map(|c| &c.spec).collect();
+            coverage_rates(&specs, &global_spec)
+        };
+        let eval_artifact = format!(
+            "{}_eval",
+            ModelId::new(&global_name, cfg.width_pct).tag()
+        );
+        runtime.manifest().get(&eval_artifact)?;
+        let policy = Policy::by_name(&cfg.selection)?;
+        let backend = AggBackend::by_name(&cfg.agg_backend)?;
+        let n = clients.len();
+        Ok(FedRun {
+            cfg,
+            runtime,
+            ds,
+            clients,
+            global_spec,
+            global_params,
+            clock: VirtualClock::new(),
+            cr,
+            eval_artifact,
+            rng,
+            round: 0,
+            last_masks: vec![None; n],
+            policy,
+            backend,
+        })
+    }
+
+    /// Per-round byte budget A_server · Σ U_n.
+    pub fn budget_bytes(&self) -> usize {
+        let total: usize = self.clients.iter().map(|c| c.u_bytes()).sum();
+        (self.cfg.a_server * total as f64).round() as usize
+    }
+
+    /// Evaluate the global model on the test set.
+    pub fn evaluate(&self) -> anyhow::Result<(f64, f64, Vec<f64>)> {
+        let eb = self.runtime.manifest().eval_batch;
+        let dim = self.ds.sample_dim();
+        let mut acc = EvalAccumulator::new(self.ds.num_classes);
+        let mut x = vec![0.0f32; eb * dim];
+        let mut y = vec![0i32; eb];
+        let nb = self.ds.test_len() / eb;
+        for b in 0..nb {
+            for i in 0..eb {
+                let s = b * eb + i;
+                x[i * dim..(i + 1) * dim].copy_from_slice(self.ds.test_sample(s));
+                y[i] = self.ds.test_y[s];
+            }
+            let (loss, correct, count) =
+                self.runtime
+                    .eval_batch(&self.eval_artifact, &self.global_params, &x, &y)?;
+            acc.add_batch(loss, &correct, &count);
+        }
+        Ok((acc.accuracy(), acc.mean_loss(), acc.per_class_accuracy()))
+    }
+
+    /// Execute one synchronous round (Algorithm 1 body).
+    pub fn step_round(&mut self) -> anyhow::Result<RoundOutcome> {
+        self.round += 1;
+        let t = self.round;
+        let cfg = self.cfg.clone();
+        let full_broadcast = t % cfg.h == 0 || cfg.scheme != "feddd";
+
+        // ---- 0. participants + dropout rates ----
+        let (participants, dropout): (Vec<usize>, Vec<f64>) = match cfg.scheme.as_str() {
+            "feddd" => {
+                let all: Vec<usize> = (0..self.clients.len()).collect();
+                let d = if t == 1 {
+                    vec![0.0; self.clients.len()] // Algorithm 1: D^1 = 0
+                } else {
+                    self.allocate_dropout()?
+                };
+                (all, d)
+            }
+            "fedavg" => {
+                let all: Vec<usize> = (0..self.clients.len()).collect();
+                let d = vec![0.0; self.clients.len()];
+                (all, d)
+            }
+            "fedcs" => {
+                let sel = baselines::fedcs_select(
+                    &self.clients,
+                    &cfg,
+                    self.budget_bytes(),
+                );
+                let d = vec![0.0; self.clients.len()];
+                (sel, d)
+            }
+            "oort" => {
+                let sel = baselines::oort_select(
+                    &self.clients,
+                    &cfg,
+                    self.budget_bytes(),
+                    t,
+                    &mut self.rng,
+                );
+                let d = vec![0.0; self.clients.len()];
+                (sel, d)
+            }
+            s => anyhow::bail!("unknown scheme {s:?}"),
+        };
+
+        // ---- 1. download phase (server -> clients) ----
+        // FedDD round t>1, t-1 not broadcast: clients already merged the
+        // sparse download at the end of the previous round. Baselines and
+        // broadcast rounds: participants sync to the full global model.
+        for &n in &participants {
+            if cfg.scheme != "feddd" {
+                let c = &mut self.clients[n];
+                c.params = extract_params(&self.global_params, &c.spec);
+            }
+        }
+
+        // ---- 2. local training ----
+        let mut scratch_x = Vec::new();
+        let mut scratch_y = Vec::new();
+        let mut before: Vec<Option<Vec<Tensor>>> = vec![None; self.clients.len()];
+        let mut loss_sum = 0.0;
+        for &n in &participants {
+            before[n] = Some(self.clients[n].params.clone());
+            let loss = self.clients[n].train_local(
+                &self.runtime,
+                &self.ds,
+                cfg.local_steps,
+                cfg.batch,
+                cfg.lr,
+                &mut scratch_x,
+                &mut scratch_y,
+            )?;
+            loss_sum += loss;
+        }
+        let mean_loss = loss_sum / participants.len().max(1) as f64;
+
+        // ---- 3. selection + upload + aggregation ----
+        let mut agg = Aggregator::new(&self.global_spec, self.backend);
+        let rt = &self.runtime;
+        let mut uploaded = 0usize;
+        for &n in &participants {
+            let mask = if cfg.scheme == "feddd" {
+                let mut sel_rng = self.clients[n].rng.split(t as u64);
+                let c = &self.clients[n];
+                let w_before = before[n].as_ref().unwrap();
+                select_mask(
+                    self.policy,
+                    &c.spec,
+                    w_before,
+                    &c.params,
+                    if cfg.is_hetero() { Some(&self.cr) } else { None },
+                    dropout[n],
+                    &mut sel_rng,
+                )
+            } else {
+                ChannelMask::full(&self.clients[n].spec)
+            };
+            let c = &self.clients[n];
+            uploaded += mask.upload_bytes(&c.spec);
+            let elems = mask.to_elementwise(&c.spec);
+            agg.add_client(
+                &c.params,
+                &elems,
+                c.m_n() as f32,
+                Some(rt),
+            )?;
+            self.last_masks[n] = Some(mask);
+        }
+        self.global_params = agg.finalize(&self.global_params, Some(rt))?;
+
+        // ---- 4. download merge (Eq. 5 / Eq. 6) ----
+        if cfg.scheme == "feddd" {
+            for &n in &participants {
+                let c = &mut self.clients[n];
+                if full_broadcast {
+                    c.params = extract_params(&self.global_params, &c.spec);
+                } else if let Some(mask) = &self.last_masks[n] {
+                    let slice = extract_params(&self.global_params, &c.spec);
+                    let elems = mask.to_elementwise(&c.spec);
+                    sparse_merge(&mut c.params, &slice, &elems);
+                }
+            }
+        }
+
+        // ---- 5. virtual-time accounting (Eq. 7–12) ----
+        let timings: Vec<RoundTiming> = participants
+            .iter()
+            .map(|&n| {
+                let c = &self.clients[n];
+                let up_bytes = self.last_masks[n]
+                    .as_ref()
+                    .map(|m| m.upload_bytes(&c.spec))
+                    .unwrap_or_else(|| c.u_bytes()) as f64;
+                let down_bytes = if full_broadcast {
+                    c.u_bytes() as f64
+                } else {
+                    up_bytes // sparse download W^t ⊙ M_n^t
+                };
+                RoundTiming {
+                    t_down: c.profile.t_down(down_bytes),
+                    t_cmp: c
+                        .profile
+                        .t_cmp(c.samples_per_round(cfg.local_steps, cfg.batch)),
+                    t_up: c.profile.t_up(up_bytes),
+                }
+            })
+            .collect();
+        let duration = self.clock.advance_round(&timings);
+
+        Ok(RoundOutcome {
+            duration,
+            mean_loss,
+            uploaded_bytes: uploaded,
+            participants: participants.len(),
+        })
+    }
+
+    /// Dropout rates for this round: the Eq. 16/17 optimum, or the
+    /// uniform ablation (D_n = 1 − A_server for everyone).
+    fn allocate_dropout(&self) -> anyhow::Result<Vec<f64>> {
+        if self.cfg.alloc == "uniform" {
+            let d = (1.0 - self.cfg.a_server).min(self.cfg.d_max);
+            return Ok(vec![d; self.clients.len()]);
+        }
+        let m_total: f64 = self.clients.iter().map(|c| c.m_n() as f64).sum();
+        let u_global = self.global_spec.size_bytes() as f64;
+        let inputs: Vec<AllocInput> = self
+            .clients
+            .iter()
+            .map(|c| AllocInput {
+                u_bytes: c.u_bytes() as f64,
+                t_cmp: c
+                    .profile
+                    .t_cmp(c.samples_per_round(self.cfg.local_steps, self.cfg.batch)),
+                sec_per_byte: c.profile.sec_per_byte(),
+                // re_n = (m_n/m)(Σ_c min(C·dis,1))(U_n/U)·loss_n  (Eq. 13)
+                re: (c.m_n() as f64 / m_total)
+                    * c.dis_score
+                    * (c.u_bytes() as f64 / u_global)
+                    * c.last_loss,
+            })
+            .collect();
+        let params = AllocParams {
+            d_max: self.cfg.d_max,
+            a_server: self.cfg.a_server,
+            delta: self.cfg.delta,
+        };
+        Ok(allocate_fast(&inputs, &params)?.d)
+    }
+
+    /// Run the full experiment.
+    pub fn run(&mut self) -> anyhow::Result<RunResult> {
+        let label = format!(
+            "{}-{}-{}-{}",
+            self.cfg.scheme, self.cfg.dataset, self.cfg.partition, self.cfg.model
+        );
+        let mut result = RunResult::new(&self.cfg.scheme, &label);
+        let wall0 = Instant::now();
+        let budget = self.budget_bytes();
+        for t in 1..=self.cfg.rounds {
+            let out = self.step_round()?;
+            let mean_dropout = if self.cfg.scheme == "feddd" && t > 1 {
+                1.0 - out.uploaded_bytes as f64
+                    / self.clients.iter().map(|c| c.u_bytes()).sum::<usize>() as f64
+            } else {
+                0.0
+            };
+            result.rounds.push(RoundRecord {
+                round: t,
+                v_time: self.clock.now(),
+                duration: out.duration,
+                train_loss: out.mean_loss,
+                uploaded_bytes: out.uploaded_bytes,
+                budget_bytes: budget,
+                participants: out.participants,
+                mean_dropout,
+                full_broadcast: t % self.cfg.h == 0 || self.cfg.scheme != "feddd",
+            });
+            if t % self.cfg.eval_every == 0 || t == self.cfg.rounds {
+                let (acc, loss, pca) = self.evaluate()?;
+                log::info!(
+                    "[{}] round {t:3}/{} vt={:8.1}s loss={:.3} acc={:.3} up={}KB x{}",
+                    label,
+                    self.cfg.rounds,
+                    self.clock.now(),
+                    out.mean_loss,
+                    acc,
+                    out.uploaded_bytes / 1024,
+                    out.participants,
+                );
+                result.evals.push(EvalRecord {
+                    round: t,
+                    v_time: self.clock.now(),
+                    accuracy: acc,
+                    loss,
+                    per_class_accuracy: pca,
+                });
+            }
+        }
+        result.wall_seconds = wall0.elapsed().as_secs_f64();
+        Ok(result)
+    }
+}
+
+/// Convenience: build + run in one call.
+pub fn run_experiment(cfg: ExpConfig) -> anyhow::Result<RunResult> {
+    FedRun::new(cfg)?.run()
+}
+
+/// Re-exported server type name used in docs/prelude.
+pub type FedDdServer = FedRun;

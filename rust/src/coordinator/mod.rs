@@ -1,0 +1,14 @@
+//! The FedDD coordinator (L3): the synchronous FL round engine of
+//! Algorithm 1, with the dropout-rate allocation (solver), uploaded-
+//! parameter selection (selection), mask-weighted aggregation
+//! (aggregation) and virtual-time accounting (simnet) wired together.
+//!
+//! The same engine runs the client-selection baselines (FedAvg / FedCS /
+//! Oort) under an identical byte budget so every comparison in the paper's
+//! evaluation section is apples-to-apples — see `baselines`.
+
+mod client;
+mod engine;
+
+pub use client::*;
+pub use engine::*;

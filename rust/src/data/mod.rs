@@ -1,0 +1,85 @@
+//! Data substrate: synthetic class-conditional datasets standing in for
+//! MNIST / FMNIST / CIFAR10 (offline image — see DESIGN.md §3), plus the
+//! paper's three heterogeneity partitions (IID, Non-IID-a, Non-IID-b) and
+//! the class-imbalanced global dataset of §6.7.
+
+mod partition;
+mod synth;
+
+pub use partition::*;
+pub use synth::*;
+
+/// A federated dataset: flattened train/test tensors plus labels.
+#[derive(Clone, Debug)]
+pub struct FedDataset {
+    /// Per-sample input shape (e.g. `[784]` or `[3, 32, 32]`).
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<i32>,
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+}
+
+impl FedDataset {
+    pub fn sample_dim(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn test_len(&self) -> usize {
+        self.test_y.len()
+    }
+
+    pub fn train_sample(&self, i: usize) -> &[f32] {
+        let d = self.sample_dim();
+        &self.train_x[i * d..(i + 1) * d]
+    }
+
+    pub fn test_sample(&self, i: usize) -> &[f32] {
+        let d = self.sample_dim();
+        &self.test_x[i * d..(i + 1) * d]
+    }
+
+    /// Gather a training batch into a contiguous buffer.
+    pub fn gather_train(&self, idxs: &[usize], x_out: &mut Vec<f32>, y_out: &mut Vec<i32>) {
+        let d = self.sample_dim();
+        x_out.clear();
+        y_out.clear();
+        x_out.reserve(idxs.len() * d);
+        for &i in idxs {
+            x_out.extend_from_slice(self.train_sample(i));
+            y_out.push(self.train_y[i]);
+        }
+    }
+
+    /// Label histogram of the full training set.
+    pub fn train_class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.num_classes];
+        for &y in &self.train_y {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gather_train_layout() {
+        let mut rng = Rng::new(0);
+        let ds = SynthSpec::mnist_like().generate(100, 20, &mut rng);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        ds.gather_train(&[3, 7], &mut x, &mut y);
+        assert_eq!(x.len(), 2 * 784);
+        assert_eq!(&x[..784], ds.train_sample(3));
+        assert_eq!(y, vec![ds.train_y[3], ds.train_y[7]]);
+    }
+}

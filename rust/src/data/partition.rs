@@ -1,0 +1,240 @@
+//! Client data partitioners — the paper's three heterogeneity settings
+//! (§6.1): IID, Non-IID-a (2–10 random classes per client), Non-IID-b
+//! (exactly 3 random classes per client).
+
+use super::FedDataset;
+use crate::util::rng::Rng;
+
+/// Which samples each client owns (indices into the train set).
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub client_indices: Vec<Vec<usize>>,
+    pub num_classes: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionKind {
+    Iid,
+    NonIidA,
+    NonIidB,
+}
+
+impl PartitionKind {
+    pub fn by_name(name: &str) -> anyhow::Result<PartitionKind> {
+        match name {
+            "iid" => Ok(PartitionKind::Iid),
+            "noniid_a" | "noniid-a" => Ok(PartitionKind::NonIidA),
+            "noniid_b" | "noniid-b" => Ok(PartitionKind::NonIidB),
+            _ => anyhow::bail!("unknown partition {name:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionKind::Iid => "iid",
+            PartitionKind::NonIidA => "noniid_a",
+            PartitionKind::NonIidB => "noniid_b",
+        }
+    }
+}
+
+impl Partition {
+    pub fn build(
+        kind: PartitionKind,
+        ds: &FedDataset,
+        n_clients: usize,
+        rng: &mut Rng,
+    ) -> Partition {
+        match kind {
+            PartitionKind::Iid => Self::iid(ds, n_clients, rng),
+            PartitionKind::NonIidA => Self::by_class_counts(ds, n_clients, rng, |rng| {
+                rng.int_range(2, 10)
+            }),
+            PartitionKind::NonIidB => {
+                Self::by_class_counts(ds, n_clients, rng, |_| 3)
+            }
+        }
+    }
+
+    /// Uniform shuffle-and-deal.
+    pub fn iid(ds: &FedDataset, n_clients: usize, rng: &mut Rng) -> Partition {
+        let mut idx = rng.permutation(ds.train_len());
+        let mut client_indices = vec![Vec::new(); n_clients];
+        for (i, sample) in idx.drain(..).enumerate() {
+            client_indices[i % n_clients].push(sample);
+        }
+        Partition { client_indices, num_classes: ds.num_classes }
+    }
+
+    /// Label-restricted partition: each client claims `k = pick(rng)`
+    /// classes; each class's samples are split evenly among its claimants.
+    fn by_class_counts(
+        ds: &FedDataset,
+        n_clients: usize,
+        rng: &mut Rng,
+        pick: impl Fn(&mut Rng) -> usize,
+    ) -> Partition {
+        let c = ds.num_classes;
+        // class -> shuffled sample indices
+        let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); c];
+        for i in 0..ds.train_len() {
+            by_class[ds.train_y[i] as usize].push(i);
+        }
+        for v in &mut by_class {
+            rng.shuffle(v);
+        }
+        // client -> claimed classes
+        let claims: Vec<Vec<usize>> = (0..n_clients)
+            .map(|_| {
+                let k = pick(rng).min(c);
+                rng.choose_k(c, k)
+            })
+            .collect();
+        // class -> claimants
+        let mut claimants: Vec<Vec<usize>> = vec![Vec::new(); c];
+        for (client, classes) in claims.iter().enumerate() {
+            for &cls in classes {
+                claimants[cls].push(client);
+            }
+        }
+        let mut client_indices = vec![Vec::new(); n_clients];
+        for cls in 0..c {
+            let owners = &claimants[cls];
+            if owners.is_empty() {
+                continue; // class unseen by everyone (rare; small n_clients)
+            }
+            for (i, &sample) in by_class[cls].iter().enumerate() {
+                client_indices[owners[i % owners.len()]].push(sample);
+            }
+        }
+        Partition { client_indices, num_classes: ds.num_classes }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.client_indices.len()
+    }
+
+    /// m_n — samples per client.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.client_indices.iter().map(|v| v.len()).collect()
+    }
+
+    /// dis_n^c — per-client label distribution (fractions summing to 1).
+    pub fn label_distribution(&self, ds: &FedDataset) -> Vec<Vec<f64>> {
+        self.client_indices
+            .iter()
+            .map(|idxs| {
+                let mut counts = vec![0usize; self.num_classes];
+                for &i in idxs {
+                    counts[ds.train_y[i] as usize] += 1;
+                }
+                let total = idxs.len().max(1) as f64;
+                counts.iter().map(|&k| k as f64 / total).collect()
+            })
+            .collect()
+    }
+
+    /// The paper's data-distribution contribution term
+    /// `Σ_c min(C · dis_n^c, 1)` (§4.1-2).
+    pub fn distribution_scores(&self, ds: &FedDataset) -> Vec<f64> {
+        let c = self.num_classes as f64;
+        self.label_distribution(ds)
+            .iter()
+            .map(|dis| dis.iter().map(|&d| (c * d).min(1.0)).sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthSpec;
+    use crate::util::proptest::check;
+
+    fn dataset(rng: &mut Rng) -> FedDataset {
+        SynthSpec::mnist_like().generate(2000, 100, rng)
+    }
+
+    #[test]
+    fn partitions_are_disjoint_and_complete_iid() {
+        let mut rng = Rng::new(0);
+        let ds = dataset(&mut rng);
+        let p = Partition::iid(&ds, 10, &mut rng);
+        let mut all: Vec<usize> = p.client_indices.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..2000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn noniid_b_three_classes_each() {
+        let mut rng = Rng::new(1);
+        let ds = dataset(&mut rng);
+        let p = Partition::build(PartitionKind::NonIidB, &ds, 20, &mut rng);
+        for (n, idxs) in p.client_indices.iter().enumerate() {
+            let mut classes: Vec<i32> = idxs.iter().map(|&i| ds.train_y[i]).collect();
+            classes.sort_unstable();
+            classes.dedup();
+            assert!(classes.len() <= 3, "client {n} has {} classes", classes.len());
+        }
+    }
+
+    #[test]
+    fn noniid_a_class_counts_in_range() {
+        let mut rng = Rng::new(2);
+        let ds = dataset(&mut rng);
+        let p = Partition::build(PartitionKind::NonIidA, &ds, 20, &mut rng);
+        for idxs in &p.client_indices {
+            let mut classes: Vec<i32> = idxs.iter().map(|&i| ds.train_y[i]).collect();
+            classes.sort_unstable();
+            classes.dedup();
+            assert!((1..=10).contains(&classes.len()));
+        }
+    }
+
+    #[test]
+    fn partition_property_disjointness() {
+        check("partitions never share samples", 10, |rng| {
+            let ds = SynthSpec::fmnist_like().generate(500, 10, rng);
+            for kind in [PartitionKind::Iid, PartitionKind::NonIidA, PartitionKind::NonIidB] {
+                let p = Partition::build(kind, &ds, rng.int_range(2, 15), rng);
+                let mut all: Vec<usize> =
+                    p.client_indices.iter().flatten().copied().collect();
+                let total = all.len();
+                all.sort_unstable();
+                all.dedup();
+                if all.len() != total {
+                    return Err(format!("{kind:?}: duplicated samples"));
+                }
+                if total > ds.train_len() {
+                    return Err("more samples than dataset".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn label_distribution_sums_to_one() {
+        let mut rng = Rng::new(3);
+        let ds = dataset(&mut rng);
+        let p = Partition::build(PartitionKind::NonIidB, &ds, 10, &mut rng);
+        for dis in p.label_distribution(&ds) {
+            let s: f64 = dis.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn distribution_score_favors_uniform() {
+        let mut rng = Rng::new(4);
+        let ds = dataset(&mut rng);
+        let iid = Partition::iid(&ds, 5, &mut rng);
+        let nb = Partition::build(PartitionKind::NonIidB, &ds, 5, &mut rng);
+        let s_iid = iid.distribution_scores(&ds);
+        let s_nb = nb.distribution_scores(&ds);
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(avg(&s_iid) > avg(&s_nb), "{s_iid:?} vs {s_nb:?}");
+        // IID with plenty of data per class ≈ C * min(C * 1/C, 1) = 10
+        assert!(avg(&s_iid) > 9.0);
+    }
+}

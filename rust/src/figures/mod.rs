@@ -1,0 +1,655 @@
+//! Figure/table regeneration harness — one entry per figure of the
+//! paper's evaluation section (see DESIGN.md §5 for the full index).
+//!
+//! `feddd figure <id> [--preset smoke|table4] [--out results/] [...]`
+//! runs the experiment matrix behind that figure and writes
+//! `results/<id>.json` plus a human-readable summary to stdout. Absolute
+//! numbers come from the synthetic substrate (DESIGN.md §3); the *shape*
+//! of each comparison (who wins, by what factor, where crossovers fall)
+//! is the reproduction target.
+
+use std::path::Path;
+
+use crate::config::ExpConfig;
+use crate::coordinator::run_experiment;
+use crate::metrics::RunResult;
+use crate::util::json::{self, Json};
+
+/// All known figure ids.
+pub const FIGURES: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+    "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "fig17", "fig18",
+    "fig19", "fig20", "fig21", "ablation_alloc",
+];
+
+/// The paper's dataset → model pairing (Table 2).
+pub fn model_for_dataset(ds: &str) -> &'static str {
+    match ds {
+        "mnist" => "mlp",
+        "fmnist" => "cnn1",
+        _ => "cnn2",
+    }
+}
+
+/// Stable learning rate per dataset (deeper models need smaller steps on
+/// the synthetic substrate; divergence shows as NaN losses).
+pub fn lr_for_dataset(ds: &str) -> f32 {
+    match ds {
+        "mnist" => 0.05,
+        "fmnist" => 0.05,
+        _ => 0.02,
+    }
+}
+
+fn series_json(label: &str, r: &RunResult) -> Json {
+    Json::obj(vec![
+        ("label", Json::s(label)),
+        ("result", r.to_json()),
+        (
+            "final_accuracy",
+            Json::Num(r.final_accuracy().unwrap_or(0.0)),
+        ),
+    ])
+}
+
+fn write_out(out_dir: &Path, id: &str, body: Json) -> anyhow::Result<()> {
+    let path = out_dir.join(format!("{id}.json"));
+    json::to_file(&path, &body)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn schemes() -> [&'static str; 4] {
+    ["fedavg", "fedcs", "oort", "feddd"]
+}
+
+/// Run one figure. `base` carries the preset + CLI overrides.
+pub fn run_figure(id: &str, base: &ExpConfig, out_dir: &Path) -> anyhow::Result<()> {
+    match id {
+        "fig2" => fig2(base, out_dir),
+        "fig3" => fig3(base, out_dir),
+        "fig4" => accuracy_grid("fig4", base, "iid", false, out_dir),
+        "fig5" => accuracy_grid("fig5", base, "noniid_a", false, out_dir),
+        "fig6" => accuracy_grid("fig6", base, "noniid_b", false, out_dir),
+        "fig7" => t2a_grid("fig7", base, false, out_dir),
+        "fig8" => fig8(base, out_dir),
+        "fig9" => accuracy_hetero("fig9", base, out_dir),
+        "fig10" => t2a_grid("fig10", base, true, out_dir),
+        "fig11" => selection_grid("fig11", base, "mnist", out_dir),
+        "fig12" => selection_grid("fig12", base, "fmnist", out_dir),
+        "fig13" => selection_grid("fig13", base, "cifar10", out_dir),
+        "fig14" => fig14(base, out_dir),
+        "fig15" => fig15(base, out_dir),
+        "fig16" => budget_sweep("fig16", base, false, out_dir),
+        "fig17" => budget_sweep("fig17", base, true, out_dir),
+        "fig18" => fig18(base, out_dir),
+        "fig19" => h_sweep("fig19", base, false, out_dir),
+        "fig20" => h_sweep("fig20", base, true, out_dir),
+        "fig21" => fig21(base, out_dir),
+        "ablation_alloc" => ablation_alloc(base, out_dir),
+        _ => anyhow::bail!("unknown figure {id:?} (known: {FIGURES:?})"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fig. 2 — test accuracy of a class vs its proportion in the train set
+// (motivates the min(C·dis, 1) shape of the contribution term).
+// ---------------------------------------------------------------------
+fn fig2(base: &ExpConfig, out_dir: &Path) -> anyhow::Result<()> {
+    let proportions = [0.01, 0.02, 0.05, 0.08, 0.1, 0.15, 0.2, 0.3, 0.5];
+    let mut series = Vec::new();
+    for ds_name in ["mnist", "fmnist", "cifar10"] {
+        let mut points = Vec::new();
+        for &p in &proportions {
+            // single "client" trained centrally; class 0 has proportion p.
+            let mut cfg = base.clone();
+            cfg.dataset = ds_name.into();
+            cfg.model = model_for_dataset(ds_name).into();
+            cfg.lr = lr_for_dataset(ds_name);
+            cfg.scheme = "fedavg".into();
+            cfg.partition = "iid".into();
+            cfg.n_clients = 1;
+            cfg.rounds = base.rounds.min(20);
+            cfg.local_steps = 8;
+            cfg.train_per_client = base.train_per_client * 4;
+            cfg.h = 1;
+            // class 0 scaled so its share is ~p of the total.
+            let others = 9.0f64;
+            cfg.rare_classes = vec![0];
+            cfg.rare_ratio = (p * others / (1.0 - p)).min(1.0_f64);
+            let r = run_experiment(cfg)?;
+            let class0 = r
+                .evals
+                .last()
+                .map(|e| e.per_class_accuracy[0])
+                .unwrap_or(0.0);
+            println!("fig2 {ds_name} p={p:.2} class0_acc={class0:.3}");
+            points.push(Json::obj(vec![
+                ("proportion", Json::Num(p)),
+                ("class0_accuracy", Json::Num(class0)),
+            ]));
+        }
+        series.push(Json::obj(vec![
+            ("dataset", Json::s(ds_name)),
+            ("points", Json::Arr(points)),
+        ]));
+    }
+    write_out(
+        out_dir,
+        "fig2",
+        Json::obj(vec![("figure", Json::s("fig2")), ("series", Json::Arr(series))]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig. 3 — training loss vs model size (5 hetero-a models, IID).
+// ---------------------------------------------------------------------
+fn fig3(base: &ExpConfig, out_dir: &Path) -> anyhow::Result<()> {
+    let mut series = Vec::new();
+    for i in 1..=5 {
+        let mut cfg = base.clone();
+        cfg.dataset = "cifar10".into();
+        cfg.model = "het_a".into();
+        cfg.lr = lr_for_dataset("cifar10");
+        cfg.width_pct = 25;
+        cfg.partition = "iid".into();
+        cfg.scheme = "fedavg".into();
+        cfg.n_clients = 5;
+        // every client runs sub-model i: override via a homogeneous run of
+        // the specific sub-model family member.
+        // Run the specific sub-model homogeneously (validate() accepts
+        // concrete sub-model names for exactly this use).
+        cfg.model = format!("het_a_{i}");
+        cfg.rounds = base.rounds * 2;
+        cfg.local_steps = base.local_steps.max(4);
+        let r = run_experiment(cfg)?;
+        let losses: Vec<f64> = r.rounds.iter().map(|x| x.train_loss).collect();
+        println!(
+            "fig3 het_a_{i}: first loss {:.3} last loss {:.3}",
+            losses.first().unwrap_or(&0.0),
+            losses.last().unwrap_or(&0.0)
+        );
+        series.push(Json::obj(vec![
+            ("model", Json::s(&format!("het_a_{i}"))),
+            ("train_loss", Json::arr_f64(&losses)),
+        ]));
+    }
+    write_out(
+        out_dir,
+        "fig3",
+        Json::obj(vec![("figure", Json::s("fig3")), ("series", Json::Arr(series))]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Figs. 4–6 — accuracy curves, model-homogeneous, one per partition.
+// ---------------------------------------------------------------------
+fn accuracy_grid(
+    id: &str,
+    base: &ExpConfig,
+    partition: &str,
+    _hetero: bool,
+    out_dir: &Path,
+) -> anyhow::Result<()> {
+    let mut series = Vec::new();
+    for ds in ["mnist", "fmnist", "cifar10"] {
+        for scheme in schemes() {
+            let mut cfg = base.clone();
+            cfg.dataset = ds.into();
+            cfg.model = model_for_dataset(ds).into();
+            cfg.lr = lr_for_dataset(ds);
+            cfg.partition = partition.into();
+            cfg.scheme = scheme.into();
+            let r = run_experiment(cfg)?;
+            println!(
+                "{id} {ds} {scheme}: final acc {:.3} (vt {:.0}s)",
+                r.final_accuracy().unwrap_or(0.0),
+                r.evals.last().map(|e| e.v_time).unwrap_or(0.0)
+            );
+            series.push(series_json(&format!("{ds}/{scheme}"), &r));
+        }
+    }
+    write_out(
+        out_dir,
+        id,
+        Json::obj(vec![
+            ("figure", Json::s(id)),
+            ("partition", Json::s(partition)),
+            ("series", Json::Arr(series)),
+        ]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig. 7 / Fig. 10 — time-to-accuracy, normalized to FedAvg.
+// ---------------------------------------------------------------------
+fn t2a_grid(id: &str, base: &ExpConfig, hetero: bool, out_dir: &Path) -> anyhow::Result<()> {
+    let datasets: Vec<(&str, &str)> = if hetero {
+        vec![("cifar10", "het_a"), ("cifar10", "het_b")]
+    } else {
+        vec![("mnist", "mlp"), ("fmnist", "cnn1"), ("cifar10", "cnn2")]
+    };
+    let mut rows = Vec::new();
+    for (ds, model) in datasets {
+        for partition in ["iid", "noniid_b"] {
+            // Reference: FedAvg reaches its best accuracy; targets are
+            // fractions of that.
+            let mut runs = Vec::new();
+            for scheme in schemes() {
+                let mut cfg = base.clone();
+                cfg.dataset = ds.into();
+                cfg.model = model.into();
+                cfg.lr = lr_for_dataset(ds);
+                if hetero {
+                    cfg.width_pct = 25;
+                    cfg.rounds = base.rounds * 2;
+                    cfg.local_steps = base.local_steps.max(4);
+                }
+                cfg.partition = partition.into();
+                cfg.scheme = scheme.into();
+                runs.push((scheme, run_experiment(cfg)?));
+            }
+            let fedavg_best = runs
+                .iter()
+                .find(|(s, _)| *s == "fedavg")
+                .map(|(_, r)| r.best_accuracy())
+                .unwrap_or(0.0);
+            for frac in [0.8, 0.9, 0.95] {
+                let target = fedavg_best * frac;
+                let t_ref = runs
+                    .iter()
+                    .find(|(s, _)| *s == "fedavg")
+                    .and_then(|(_, r)| r.time_to_accuracy(target));
+                let mut row = vec![
+                    ("dataset", Json::s(ds)),
+                    ("model", Json::s(model)),
+                    ("partition", Json::s(partition)),
+                    ("target", Json::Num(target)),
+                ];
+                for (scheme, r) in &runs {
+                    let t2a = r.time_to_accuracy(target);
+                    let norm = match (t2a, t_ref) {
+                        (Some(t), Some(tr)) if tr > 0.0 => Json::Num(t / tr),
+                        (Some(_), None) => Json::Num(0.0),
+                        _ => Json::Null,
+                    };
+                    row.push((*scheme, norm));
+                }
+                println!(
+                    "{id} {ds}/{model}/{partition} target={target:.3}: {}",
+                    runs.iter()
+                        .map(|(s, r)| format!(
+                            "{s}={:?}",
+                            r.time_to_accuracy(target).map(|t| (t * 10.0).round() / 10.0)
+                        ))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                );
+                rows.push(Json::obj(row));
+            }
+        }
+    }
+    write_out(
+        out_dir,
+        id,
+        Json::obj(vec![("figure", Json::s(id)), ("rows", Json::Arr(rows))]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig. 8 — testbed (Table 5 fleet), CNN2/CIFAR10, three partitions.
+// ---------------------------------------------------------------------
+fn fig8(base: &ExpConfig, out_dir: &Path) -> anyhow::Result<()> {
+    let mut series = Vec::new();
+    for partition in ["iid", "noniid_a", "noniid_b"] {
+        for scheme in schemes() {
+            let mut cfg = ExpConfig::testbed();
+            cfg.seed = base.seed;
+            cfg.rounds = base.rounds;
+            cfg.train_per_client = base.train_per_client;
+            cfg.test_n = base.test_n;
+            cfg.partition = partition.into();
+            cfg.scheme = scheme.into();
+            let r = run_experiment(cfg)?;
+            println!(
+                "fig8 {partition} {scheme}: final acc {:.3}",
+                r.final_accuracy().unwrap_or(0.0)
+            );
+            series.push(series_json(&format!("{partition}/{scheme}"), &r));
+        }
+    }
+    write_out(
+        out_dir,
+        "fig8",
+        Json::obj(vec![("figure", Json::s("fig8")), ("series", Json::Arr(series))]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig. 9 — accuracy curves under model-heterogeneous a/b settings.
+// ---------------------------------------------------------------------
+fn accuracy_hetero(id: &str, base: &ExpConfig, out_dir: &Path) -> anyhow::Result<()> {
+    let mut series = Vec::new();
+    for fam in ["het_a", "het_b"] {
+        for partition in ["iid", "noniid_a", "noniid_b"] {
+            for scheme in schemes() {
+                let mut cfg = base.clone();
+                cfg.dataset = "cifar10".into();
+                cfg.model = fam.into();
+                cfg.lr = lr_for_dataset("cifar10");
+                cfg.width_pct = 25;
+                cfg.rounds = base.rounds * 2;
+                cfg.local_steps = base.local_steps.max(4);
+                cfg.partition = partition.into();
+                cfg.scheme = scheme.into();
+                let r = run_experiment(cfg)?;
+                println!(
+                    "{id} {fam}/{partition}/{scheme}: final acc {:.3}",
+                    r.final_accuracy().unwrap_or(0.0)
+                );
+                series.push(series_json(&format!("{fam}/{partition}/{scheme}"), &r));
+            }
+        }
+    }
+    write_out(
+        out_dir,
+        id,
+        Json::obj(vec![("figure", Json::s(id)), ("series", Json::Arr(series))]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Figs. 11–13 — FedDD selection-policy variants per dataset.
+// ---------------------------------------------------------------------
+fn selection_grid(id: &str, base: &ExpConfig, ds: &str, out_dir: &Path) -> anyhow::Result<()> {
+    let mut series = Vec::new();
+    for partition in ["iid", "noniid_a", "noniid_b"] {
+        for sel in ["importance", "random", "max", "delta", "ordered"] {
+            let mut cfg = base.clone();
+            cfg.dataset = ds.into();
+            cfg.model = model_for_dataset(ds).into();
+            cfg.lr = lr_for_dataset(ds);
+            cfg.partition = partition.into();
+            cfg.scheme = "feddd".into();
+            cfg.selection = sel.into();
+            let r = run_experiment(cfg)?;
+            println!(
+                "{id} {partition} {sel}: final acc {:.3}",
+                r.final_accuracy().unwrap_or(0.0)
+            );
+            series.push(series_json(&format!("{partition}/{sel}"), &r));
+        }
+    }
+    write_out(
+        out_dir,
+        id,
+        Json::obj(vec![
+            ("figure", Json::s(id)),
+            ("dataset", Json::s(ds)),
+            ("series", Json::Arr(series)),
+        ]),
+    )
+}
+
+// Fig. 14 — selection variants on the testbed fleet.
+fn fig14(base: &ExpConfig, out_dir: &Path) -> anyhow::Result<()> {
+    let mut series = Vec::new();
+    for partition in ["iid", "noniid_a", "noniid_b"] {
+        for sel in ["importance", "random", "max", "delta", "ordered"] {
+            let mut cfg = ExpConfig::testbed();
+            cfg.seed = base.seed;
+            cfg.rounds = base.rounds;
+            cfg.train_per_client = base.train_per_client;
+            cfg.test_n = base.test_n;
+            cfg.partition = partition.into();
+            cfg.scheme = "feddd".into();
+            cfg.selection = sel.into();
+            let r = run_experiment(cfg)?;
+            println!(
+                "fig14 {partition} {sel}: final acc {:.3}",
+                r.final_accuracy().unwrap_or(0.0)
+            );
+            series.push(series_json(&format!("{partition}/{sel}"), &r));
+        }
+    }
+    write_out(
+        out_dir,
+        "fig14",
+        Json::obj(vec![("figure", Json::s("fig14")), ("series", Json::Arr(series))]),
+    )
+}
+
+// Fig. 15 — selection variants, hetero-a/b.
+fn fig15(base: &ExpConfig, out_dir: &Path) -> anyhow::Result<()> {
+    let mut series = Vec::new();
+    for fam in ["het_a", "het_b"] {
+        for partition in ["iid", "noniid_a", "noniid_b"] {
+            for sel in ["importance", "random", "max", "delta", "ordered"] {
+                let mut cfg = base.clone();
+                cfg.dataset = "cifar10".into();
+                cfg.model = fam.into();
+                cfg.lr = lr_for_dataset("cifar10");
+                cfg.width_pct = 25;
+                cfg.rounds = base.rounds * 2;
+                cfg.local_steps = base.local_steps.max(4);
+                cfg.partition = partition.into();
+                cfg.scheme = "feddd".into();
+                cfg.selection = sel.into();
+                let r = run_experiment(cfg)?;
+                println!(
+                    "fig15 {fam}/{partition}/{sel}: final acc {:.3}",
+                    r.final_accuracy().unwrap_or(0.0)
+                );
+                series.push(series_json(&format!("{fam}/{partition}/{sel}"), &r));
+            }
+        }
+    }
+    write_out(
+        out_dir,
+        "fig15",
+        Json::obj(vec![("figure", Json::s("fig15")), ("series", Json::Arr(series))]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Figs. 16/17 — robustness to the communication budget A_server.
+// ---------------------------------------------------------------------
+fn budget_sweep(id: &str, base: &ExpConfig, hetero: bool, out_dir: &Path) -> anyhow::Result<()> {
+    let budgets = [0.8, 0.6, 0.4, 0.2];
+    let mut rows = Vec::new();
+    let combos: Vec<(&str, &str, &str)> = if hetero {
+        vec![
+            ("cifar10", "het_a", "noniid_a"),
+            ("cifar10", "het_b", "noniid_a"),
+        ]
+    } else {
+        vec![
+            ("mnist", "mlp", "noniid_a"),
+            ("cifar10", "cnn2", "noniid_a"),
+        ]
+    };
+    for (ds, model, partition) in combos {
+        for scheme in ["feddd", "fedcs", "oort"] {
+            let mut accs = Vec::new();
+            for &a in &budgets {
+                let mut cfg = base.clone();
+                cfg.dataset = ds.into();
+                cfg.model = model.into();
+                cfg.lr = lr_for_dataset(ds);
+                if hetero {
+                    cfg.width_pct = 25;
+                    cfg.rounds = base.rounds * 2;
+                    cfg.local_steps = base.local_steps.max(4);
+                }
+                cfg.partition = partition.into();
+                cfg.scheme = scheme.into();
+                cfg.a_server = a;
+                cfg.d_max = cfg.d_max.max(1.0 - a + 0.05).min(0.95);
+                let r = run_experiment(cfg)?;
+                accs.push(r.final_accuracy().unwrap_or(0.0));
+            }
+            println!("{id} {ds}/{model} {scheme}: acc@budgets {budgets:?} = {accs:?}");
+            rows.push(Json::obj(vec![
+                ("dataset", Json::s(ds)),
+                ("model", Json::s(model)),
+                ("scheme", Json::s(scheme)),
+                ("budgets", Json::arr_f64(&budgets)),
+                ("final_accuracy", Json::arr_f64(&accs)),
+            ]));
+        }
+    }
+    write_out(
+        out_dir,
+        id,
+        Json::obj(vec![("figure", Json::s(id)), ("rows", Json::Arr(rows))]),
+    )
+}
+
+// Fig. 18 — penalty factor δ sweep (Non-IID-a, hetero).
+fn fig18(base: &ExpConfig, out_dir: &Path) -> anyhow::Result<()> {
+    let deltas = [0.0, 0.1, 1.0, 10.0];
+    let mut rows = Vec::new();
+    for &delta in &deltas {
+        let mut cfg = base.clone();
+        cfg.dataset = "cifar10".into();
+        cfg.model = "het_a".into();
+        cfg.lr = lr_for_dataset("cifar10");
+        cfg.width_pct = 25;
+        cfg.rounds = base.rounds * 2;
+        cfg.local_steps = base.local_steps.max(4);
+        cfg.partition = "noniid_a".into();
+        cfg.scheme = "feddd".into();
+        cfg.delta = delta;
+        let r = run_experiment(cfg)?;
+        let acc = r.final_accuracy().unwrap_or(0.0);
+        let vt = r.evals.last().map(|e| e.v_time).unwrap_or(0.0);
+        println!("fig18 delta={delta}: final acc {acc:.3} vtime {vt:.0}s");
+        rows.push(Json::obj(vec![
+            ("delta", Json::Num(delta)),
+            ("final_accuracy", Json::Num(acc)),
+            ("virtual_time", Json::Num(vt)),
+            ("result", r.to_json()),
+        ]));
+    }
+    write_out(
+        out_dir,
+        "fig18",
+        Json::obj(vec![("figure", Json::s("fig18")), ("rows", Json::Arr(rows))]),
+    )
+}
+
+// Figs. 19/20 — broadcast period h sweep.
+fn h_sweep(id: &str, base: &ExpConfig, hetero: bool, out_dir: &Path) -> anyhow::Result<()> {
+    let hs = [1usize, 5, 10, 20];
+    let mut rows = Vec::new();
+    for &h in &hs {
+        let mut cfg = base.clone();
+        cfg.dataset = "cifar10".into();
+        cfg.lr = lr_for_dataset("cifar10");
+        if hetero {
+            cfg.model = "het_a".into();
+            cfg.width_pct = 25;
+            cfg.rounds = base.rounds * 2;
+            cfg.local_steps = base.local_steps.max(4);
+            cfg.partition = "noniid_a".into();
+        } else {
+            cfg.model = "cnn2".into();
+            cfg.partition = "iid".into();
+        }
+        cfg.scheme = "feddd".into();
+        cfg.h = h;
+        let r = run_experiment(cfg)?;
+        let acc = r.final_accuracy().unwrap_or(0.0);
+        println!("{id} h={h}: final acc {acc:.3}");
+        rows.push(Json::obj(vec![
+            ("h", Json::Num(h as f64)),
+            ("final_accuracy", Json::Num(acc)),
+            ("result", r.to_json()),
+        ]));
+    }
+    write_out(
+        out_dir,
+        id,
+        Json::obj(vec![("figure", Json::s(id)), ("rows", Json::Arr(rows))]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Ablation (DESIGN.md §5): Eq. 16/17 optimized allocation vs uniform
+// dropout D_n = 1 − A_server. Isolates the value of the allocator under
+// system heterogeneity: uniform dropout leaves the straggler at full
+// delay penalty, so its T2A should be strictly worse.
+// ---------------------------------------------------------------------
+fn ablation_alloc(base: &ExpConfig, out_dir: &Path) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    for alloc in ["optimal", "uniform"] {
+        let mut cfg = base.clone();
+        cfg.scheme = "feddd".into();
+        cfg.alloc = alloc.into();
+        cfg.partition = "noniid_a".into();
+        let r = run_experiment(cfg)?;
+        let acc = r.final_accuracy().unwrap_or(0.0);
+        let vt = r.evals.last().map(|e| e.v_time).unwrap_or(0.0);
+        println!("ablation_alloc {alloc}: final acc {acc:.3} vtime {vt:.0}s");
+        rows.push(Json::obj(vec![
+            ("alloc", Json::s(alloc)),
+            ("final_accuracy", Json::Num(acc)),
+            ("virtual_time", Json::Num(vt)),
+            ("result", r.to_json()),
+        ]));
+    }
+    write_out(
+        out_dir,
+        "ablation_alloc",
+        Json::obj(vec![
+            ("figure", Json::s("ablation_alloc")),
+            ("rows", Json::Arr(rows)),
+        ]),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Fig. 21 — per-class accuracy on the class-imbalanced dataset, A=20%.
+// ---------------------------------------------------------------------
+fn fig21(base: &ExpConfig, out_dir: &Path) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    for ds in ["mnist", "fmnist", "cifar10"] {
+        for scheme in schemes() {
+            let mut cfg = base.clone();
+            cfg.dataset = ds.into();
+            cfg.model = model_for_dataset(ds).into();
+            cfg.partition = "noniid_b".into();
+            cfg.scheme = scheme.into();
+            cfg.rare_classes = vec![0, 1, 2];
+            cfg.rare_ratio = 0.4;
+            cfg.a_server = 0.2;
+            cfg.d_max = 0.85;
+            let r = run_experiment(cfg)?;
+            let pca = r
+                .evals
+                .last()
+                .map(|e| e.per_class_accuracy.clone())
+                .unwrap_or_default();
+            let rare_mean = pca.iter().take(3).sum::<f64>() / 3.0;
+            println!(
+                "fig21 {ds} {scheme}: rare-class acc {rare_mean:.3}, overall {:.3}",
+                r.final_accuracy().unwrap_or(0.0)
+            );
+            rows.push(Json::obj(vec![
+                ("dataset", Json::s(ds)),
+                ("scheme", Json::s(scheme)),
+                ("per_class_accuracy", Json::arr_f64(&pca)),
+                ("rare_mean", Json::Num(rare_mean)),
+                (
+                    "overall",
+                    Json::Num(r.final_accuracy().unwrap_or(0.0)),
+                ),
+            ]));
+        }
+    }
+    write_out(
+        out_dir,
+        "fig21",
+        Json::obj(vec![("figure", Json::s("fig21")), ("rows", Json::Arr(rows))]),
+    )
+}

@@ -1,0 +1,52 @@
+//! # feddd
+//!
+//! Full-system reproduction of **FedDD: Toward Communication-efficient
+//! Federated Learning with Differential Parameter Dropout** (IEEE TMC 2023)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the FL coordinator: the dropout-rate allocation
+//!   LP (Eq. 16/17), uploaded-parameter selection (Eq. 21), mask-weighted
+//!   aggregation (Eq. 4), the synchronous round engine with virtual-time
+//!   accounting (Eq. 7–12), plus the FedAvg / FedCS / Oort baselines and
+//!   the complete simulation substrate (synthetic datasets, partitioners,
+//!   device/network simulator).
+//! * **L2** — JAX model fwd/bwd (`python/compile/model.py`), AOT-lowered to
+//!   HLO text once at build time (`make artifacts`).
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for the dense
+//!   layers, masked aggregation and importance scoring, lowered into the
+//!   same HLO modules (`interpret=True`).
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts through the PJRT C API (`xla` crate) and the coordinator
+//! drives them from Rust.
+//!
+//! See `DESIGN.md` for the experiment index mapping every paper figure and
+//! table to a module and a `feddd figure <id>` command.
+
+pub mod aggregation;
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod selection;
+pub mod simnet;
+pub mod solver;
+pub mod tensor;
+pub mod util;
+
+/// Commonly used items.
+pub mod prelude {
+    pub use crate::config::ExpConfig;
+    pub use crate::coordinator::{run_experiment, FedDdServer, FedRun, RoundOutcome};
+    pub use crate::data::{FedDataset, Partition};
+    pub use crate::metrics::RunResult;
+    pub use crate::model::{ModelId, ModelRegistry};
+    pub use crate::simnet::Fleet;
+    pub use crate::tensor::Tensor;
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,164 @@
+//! `feddd` — the FedDD coordinator CLI.
+//!
+//! Subcommands:
+//! * `train  [--preset smoke|table4|testbed] [--<cfg-key> v ...]` — run one
+//!   experiment and write results JSON.
+//! * `figure <figN|all> [--preset ...] [--out results/]` — regenerate a
+//!   paper figure's experiment matrix (DESIGN.md §5).
+//! * `inspect models|config|manifest` — print registry/config/manifest.
+//! * `help`
+
+use std::path::Path;
+
+use feddd::cli::Args;
+use feddd::config::ExpConfig;
+use feddd::coordinator::run_experiment;
+use feddd::figures;
+use feddd::model::{all_model_names, ModelSpec};
+use feddd::util::json;
+use feddd::util::logging;
+
+const HELP: &str = "\
+feddd — FedDD (differential parameter dropout FL) coordinator
+
+USAGE:
+  feddd train   [--preset smoke|table4|testbed] [--key value ...] [--out results/]
+  feddd figure  <fig2..fig21|all> [--preset ...] [--key value ...] [--out results/]
+  feddd inspect models|config|manifest [--preset ...]
+  feddd help
+
+Config keys (see `feddd inspect config`): seed dataset partition model
+width_pct n_clients rounds local_steps batch lr scheme selection d_max
+a_server delta h train_per_client test_n fleet eval_every agg_backend
+rare_classes rare_ratio artifacts_dir oort_alpha.
+
+Artifacts must be built first: `make artifacts`.
+";
+
+fn main() {
+    logging::init();
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "" | "help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "train" => cmd_train(&args),
+        "figure" => cmd_figure(&args),
+        "inspect" => cmd_inspect(&args),
+        other => anyhow::bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+fn artifacts_default(cfg: &mut ExpConfig) {
+    if cfg.artifacts_dir == "artifacts" {
+        cfg.artifacts_dir = feddd::runtime::default_artifacts_dir()
+            .to_string_lossy()
+            .into_owned();
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let (mut cfg, leftover) = args.to_config()?;
+    anyhow::ensure!(leftover.is_empty(), "unknown options: {leftover:?}");
+    artifacts_default(&mut cfg);
+    cfg.validate()?;
+    let out_dir = Path::new(args.get_or("out", "results"));
+    std::fs::create_dir_all(out_dir)?;
+    log::info!("config: {}", cfg.to_json().to_string_compact());
+    let result = run_experiment(cfg.clone())?;
+    println!(
+        "final accuracy: {:.4}  (virtual time {:.1}s, wall {:.1}s)",
+        result.final_accuracy().unwrap_or(0.0),
+        result.evals.last().map(|e| e.v_time).unwrap_or(0.0),
+        result.wall_seconds
+    );
+    let body = feddd::util::json::Json::obj(vec![
+        ("config", cfg.to_json()),
+        ("result", result.to_json()),
+    ]);
+    let path = out_dir.join("train.json");
+    json::to_file(&path, &body)?;
+    std::fs::write(out_dir.join("train_curve.csv"), result.eval_csv())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positionals
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: feddd figure <figN|all>"))?
+        .clone();
+    let (mut cfg, leftover) = args.to_config()?;
+    anyhow::ensure!(leftover.is_empty(), "unknown options: {leftover:?}");
+    artifacts_default(&mut cfg);
+    let out_dir = Path::new(args.get_or("out", "results")).to_path_buf();
+    std::fs::create_dir_all(&out_dir)?;
+    if id == "all" {
+        for f in figures::FIGURES {
+            log::info!("=== running {f} ===");
+            figures::run_figure(f, &cfg, &out_dir)?;
+        }
+        Ok(())
+    } else {
+        figures::run_figure(&id, &cfg, &out_dir)
+    }
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let what = args.positionals.first().map(|s| s.as_str()).unwrap_or("models");
+    match what {
+        "models" => {
+            println!(
+                "{:<10} {:>6} {:>12} {:>10}  layers",
+                "model", "width", "params", "bytes"
+            );
+            for name in all_model_names() {
+                for width in [1.0, 0.25] {
+                    let s = ModelSpec::get(&name, width)?;
+                    println!(
+                        "{:<10} {:>5}% {:>12} {:>10}  {:?}",
+                        name,
+                        (width * 100.0) as u32,
+                        s.param_count(),
+                        s.size_bytes(),
+                        s.unit_counts()
+                    );
+                }
+            }
+            Ok(())
+        }
+        "config" => {
+            let (cfg, _) = args.to_config()?;
+            println!("{}", cfg.to_json().to_string_pretty());
+            Ok(())
+        }
+        "manifest" => {
+            let dir = feddd::runtime::default_artifacts_dir();
+            let m = feddd::runtime::Manifest::load(&dir)?;
+            println!(
+                "{} artifacts in {} (train_batch={}, eval_batch={}, chunk={})",
+                m.artifacts.len(),
+                dir.display(),
+                m.train_batch,
+                m.eval_batch,
+                m.kernel_chunk
+            );
+            let mut names: Vec<&String> = m.artifacts.keys().collect();
+            names.sort();
+            for n in names {
+                println!("  {n}");
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown inspect target {other:?}"),
+    }
+}

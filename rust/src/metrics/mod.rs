@@ -1,0 +1,271 @@
+//! Run metrics: per-round records, accuracy / time-to-accuracy (T2A)
+//! tracking, per-class accuracy (Fig. 21), JSON + CSV writers.
+
+use crate::util::json::Json;
+
+/// One synchronous round's accounting.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Virtual time at the *end* of the round (seconds).
+    pub v_time: f64,
+    /// Duration of this round.
+    pub duration: f64,
+    /// Mean training loss over participants.
+    pub train_loss: f64,
+    /// Total bytes uploaded by all participants this round.
+    pub uploaded_bytes: usize,
+    /// The byte budget the scheme was allowed (A_server · Σ U_n).
+    pub budget_bytes: usize,
+    /// Participating clients.
+    pub participants: usize,
+    /// Mean assigned dropout rate (0 for baselines).
+    pub mean_dropout: f64,
+    /// Whether this round broadcast the full model.
+    pub full_broadcast: bool,
+}
+
+/// One evaluation of the global model.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    pub round: usize,
+    pub v_time: f64,
+    pub accuracy: f64,
+    pub loss: f64,
+    pub per_class_accuracy: Vec<f64>,
+}
+
+/// Full result of a run.
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub scheme: String,
+    pub label: String,
+    pub rounds: Vec<RoundRecord>,
+    pub evals: Vec<EvalRecord>,
+    /// Wall-clock seconds the run took (host time, not virtual).
+    pub wall_seconds: f64,
+}
+
+impl RunResult {
+    pub fn new(scheme: &str, label: &str) -> RunResult {
+        RunResult {
+            scheme: scheme.to_string(),
+            label: label.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.evals.last().map(|e| e.accuracy)
+    }
+
+    /// Best accuracy seen at any evaluation.
+    pub fn best_accuracy(&self) -> f64 {
+        self.evals.iter().map(|e| e.accuracy).fold(0.0, f64::max)
+    }
+
+    /// Virtual time to first reach `target` accuracy (T2A; None if never).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.evals
+            .iter()
+            .find(|e| e.accuracy >= target)
+            .map(|e| e.v_time)
+    }
+
+    /// Total uploaded bytes across the run.
+    pub fn total_uploaded(&self) -> usize {
+        self.rounds.iter().map(|r| r.uploaded_bytes).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scheme", Json::s(&self.scheme)),
+            ("label", Json::s(&self.label)),
+            ("wall_seconds", Json::Num(self.wall_seconds)),
+            (
+                "rounds",
+                Json::Arr(
+                    self.rounds
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("round", Json::Num(r.round as f64)),
+                                ("v_time", Json::Num(r.v_time)),
+                                ("duration", Json::Num(r.duration)),
+                                ("train_loss", Json::Num(r.train_loss)),
+                                ("uploaded_bytes", Json::Num(r.uploaded_bytes as f64)),
+                                ("budget_bytes", Json::Num(r.budget_bytes as f64)),
+                                ("participants", Json::Num(r.participants as f64)),
+                                ("mean_dropout", Json::Num(r.mean_dropout)),
+                                ("full_broadcast", Json::Bool(r.full_broadcast)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "evals",
+                Json::Arr(
+                    self.evals
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("round", Json::Num(e.round as f64)),
+                                ("v_time", Json::Num(e.v_time)),
+                                ("accuracy", Json::Num(e.accuracy)),
+                                ("loss", Json::Num(e.loss)),
+                                (
+                                    "per_class_accuracy",
+                                    Json::arr_f64(&e.per_class_accuracy),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// CSV of the eval curve: round,v_time,accuracy,loss.
+    pub fn eval_csv(&self) -> String {
+        let mut out = String::from("round,v_time,accuracy,loss\n");
+        for e in &self.evals {
+            out.push_str(&format!(
+                "{},{:.4},{:.4},{:.4}\n",
+                e.round, e.v_time, e.accuracy, e.loss
+            ));
+        }
+        out
+    }
+}
+
+/// Accumulates per-class eval counts streamed over test batches.
+#[derive(Clone, Debug, Default)]
+pub struct EvalAccumulator {
+    pub loss_sum: f64,
+    pub correct: Vec<f64>,
+    pub count: Vec<f64>,
+}
+
+impl EvalAccumulator {
+    pub fn new(num_classes: usize) -> Self {
+        EvalAccumulator {
+            loss_sum: 0.0,
+            correct: vec![0.0; num_classes],
+            count: vec![0.0; num_classes],
+        }
+    }
+
+    pub fn add_batch(&mut self, loss_sum: f32, correct: &[f32], count: &[f32]) {
+        self.loss_sum += loss_sum as f64;
+        for (a, &b) in self.correct.iter_mut().zip(correct) {
+            *a += b as f64;
+        }
+        for (a, &b) in self.count.iter_mut().zip(count) {
+            *a += b as f64;
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.count.iter().sum()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.correct.iter().sum::<f64>() / t
+        }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.loss_sum / t
+        }
+    }
+
+    pub fn per_class_accuracy(&self) -> Vec<f64> {
+        self.correct
+            .iter()
+            .zip(&self.count)
+            .map(|(&c, &n)| if n == 0.0 { 0.0 } else { c / n })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_run() -> RunResult {
+        let mut r = RunResult::new("feddd", "test");
+        for i in 0..5 {
+            r.rounds.push(RoundRecord {
+                round: i,
+                v_time: (i + 1) as f64 * 10.0,
+                duration: 10.0,
+                train_loss: 1.0 / (i + 1) as f64,
+                uploaded_bytes: 1000,
+                budget_bytes: 1200,
+                participants: 10,
+                mean_dropout: 0.4,
+                full_broadcast: i % 5 == 0,
+            });
+            r.evals.push(EvalRecord {
+                round: i,
+                v_time: (i + 1) as f64 * 10.0,
+                accuracy: 0.2 * (i + 1) as f64,
+                loss: 1.0 / (i + 1) as f64,
+                per_class_accuracy: vec![0.5; 10],
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn t2a_finds_first_crossing() {
+        let r = sample_run();
+        assert_eq!(r.time_to_accuracy(0.4), Some(20.0));
+        assert_eq!(r.time_to_accuracy(1.01), None);
+        assert_eq!(r.final_accuracy(), Some(1.0));
+        assert_eq!(r.best_accuracy(), 1.0);
+        assert_eq!(r.total_uploaded(), 5000);
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = sample_run().to_json();
+        assert_eq!(j.req_str("scheme").unwrap(), "feddd");
+        assert_eq!(j.req_arr("rounds").unwrap().len(), 5);
+        assert_eq!(j.req_arr("evals").unwrap().len(), 5);
+        // round-trips through the parser
+        let text = j.to_string_pretty();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.req_arr("evals").unwrap().len(), 5);
+    }
+
+    #[test]
+    fn eval_accumulator_accounting() {
+        let mut acc = EvalAccumulator::new(3);
+        acc.add_batch(3.0, &[1.0, 0.0, 2.0], &[2.0, 1.0, 2.0]);
+        acc.add_batch(2.0, &[1.0, 1.0, 0.0], &[1.0, 2.0, 2.0]);
+        assert_eq!(acc.total(), 10.0);
+        assert!((acc.accuracy() - 0.5).abs() < 1e-12);
+        assert!((acc.mean_loss() - 0.5).abs() < 1e-12);
+        let pca = acc.per_class_accuracy();
+        assert!((pca[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!((pca[1] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((pca[2] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = sample_run().eval_csv();
+        assert!(csv.starts_with("round,v_time"));
+        assert_eq!(csv.lines().count(), 6);
+    }
+}

@@ -1,0 +1,277 @@
+//! Structured-mask geometry: the mapping between channel/neuron units and
+//! elementwise parameter positions, plus HeteroFL-style alignment of
+//! sub-model parameters inside the global (full) model.
+//!
+//! Conventions (matching `python/compile/model.py`):
+//! * conv weight OIHW `[out, in, kh, kw]` — unit `k` owns the contiguous
+//!   block `k*(in*kh*kw) .. (k+1)*(in*kh*kw)` plus `bias[k]`;
+//! * fc weight `(in, out)` — unit `k` owns the strided column `[:, k]`
+//!   plus `bias[k]`;
+//! * a sub-model occupies the *leading corner* of every global tensor
+//!   (channel `c` of the sub-model is channel `c` of the global model),
+//!   the standard HeteroFL alignment the paper builds on [18].
+
+use super::{LayerKind, ModelSpec};
+use crate::tensor::Tensor;
+
+/// For layer `l` of `spec`, expand a per-unit 0/1 selection into
+/// elementwise masks `(w_mask, b_mask)` shaped like that layer's params.
+pub fn expand_unit_mask(spec: &ModelSpec, l: usize, selected: &[bool]) -> (Tensor, Tensor) {
+    let layer = &spec.layers[l];
+    assert_eq!(selected.len(), layer.out_dim);
+    match layer.kind {
+        LayerKind::Conv { kernel, .. } => {
+            let row = layer.in_dim * kernel * kernel;
+            let mut w = vec![0.0f32; layer.out_dim * row];
+            for (k, &sel) in selected.iter().enumerate() {
+                if sel {
+                    w[k * row..(k + 1) * row].fill(1.0);
+                }
+            }
+            let b: Vec<f32> =
+                selected.iter().map(|&s| if s { 1.0 } else { 0.0 }).collect();
+            (
+                Tensor::new(vec![layer.out_dim, layer.in_dim, kernel, kernel], w),
+                Tensor::new(vec![layer.out_dim], b),
+            )
+        }
+        LayerKind::Fc => {
+            let (n_in, n_out) = (layer.in_dim, layer.out_dim);
+            let mut w = vec![0.0f32; n_in * n_out];
+            for j in 0..n_in {
+                let row = &mut w[j * n_out..(j + 1) * n_out];
+                for (k, &sel) in selected.iter().enumerate() {
+                    if sel {
+                        row[k] = 1.0;
+                    }
+                }
+            }
+            let b: Vec<f32> =
+                selected.iter().map(|&s| if s { 1.0 } else { 0.0 }).collect();
+            (
+                Tensor::new(vec![n_in, n_out], w),
+                Tensor::new(vec![n_out], b),
+            )
+        }
+    }
+}
+
+/// Embed a client-shaped tensor into a global-shaped zero tensor at the
+/// leading corner. Supports 1-D, 2-D (in,out) and 4-D OIHW.
+pub fn embed(client: &Tensor, global_shape: &[usize]) -> Tensor {
+    let cs = client.shape();
+    assert_eq!(cs.len(), global_shape.len());
+    assert!(cs.iter().zip(global_shape).all(|(c, g)| c <= g), "{cs:?} !<= {global_shape:?}");
+    let mut out = Tensor::zeros(global_shape.to_vec());
+    copy_corner(client.data(), cs, out.data_mut(), global_shape);
+    out
+}
+
+/// Extract the leading corner of a global-shaped tensor into client shape.
+pub fn extract(global: &Tensor, client_shape: &[usize]) -> Tensor {
+    let gs = global.shape();
+    assert_eq!(gs.len(), client_shape.len());
+    assert!(client_shape.iter().zip(gs).all(|(c, g)| c <= g));
+    let mut data = vec![0.0f32; client_shape.iter().product()];
+    gather_corner(global.data(), gs, &mut data, client_shape);
+    Tensor::new(client_shape.to_vec(), data)
+}
+
+/// scatter (small -> leading corner of big).
+fn copy_corner(small: &[f32], ss: &[usize], big: &mut [f32], bs: &[usize]) {
+    match ss.len() {
+        1 => big[..ss[0]].copy_from_slice(&small[..ss[0]]),
+        2 => {
+            let (si, so) = (ss[0], ss[1]);
+            let bo = bs[1];
+            for j in 0..si {
+                big[j * bo..j * bo + so].copy_from_slice(&small[j * so..(j + 1) * so]);
+            }
+        }
+        4 => {
+            let (so, si) = (ss[0], ss[1]);
+            let (bi, k2) = (bs[1], ss[2] * ss[3]);
+            for o in 0..so {
+                for i in 0..si {
+                    let brow = (o * bi + i) * k2;
+                    let srow = (o * si + i) * k2;
+                    big[brow..brow + k2].copy_from_slice(&small[srow..srow + k2]);
+                }
+            }
+        }
+        d => panic!("embed: unsupported rank {d}"),
+    }
+}
+
+/// gather (corner of big -> small).
+fn gather_corner(big: &[f32], bs: &[usize], small: &mut [f32], ss: &[usize]) {
+    match ss.len() {
+        1 => small[..ss[0]].copy_from_slice(&big[..ss[0]]),
+        2 => {
+            let (si, so) = (ss[0], ss[1]);
+            let bo = bs[1];
+            for j in 0..si {
+                small[j * so..(j + 1) * so].copy_from_slice(&big[j * bo..j * bo + so]);
+            }
+        }
+        4 => {
+            let (so, si) = (ss[0], ss[1]);
+            let (bi, k2) = (bs[1], ss[2] * ss[3]);
+            for o in 0..so {
+                for i in 0..si {
+                    let brow = (o * bi + i) * k2;
+                    let srow = (o * si + i) * k2;
+                    small[srow..srow + k2].copy_from_slice(&big[brow..brow + k2]);
+                }
+            }
+        }
+        d => panic!("extract: unsupported rank {d}"),
+    }
+}
+
+/// Embed a whole parameter set into global shapes.
+pub fn embed_params(client: &[Tensor], global: &ModelSpec) -> Vec<Tensor> {
+    global
+        .param_shapes()
+        .iter()
+        .zip(client)
+        .map(|((_, gshape), ct)| embed(ct, gshape))
+        .collect()
+}
+
+/// Extract a client's parameter set from global parameters.
+pub fn extract_params(global_params: &[Tensor], client: &ModelSpec) -> Vec<Tensor> {
+    client
+        .param_shapes()
+        .iter()
+        .zip(global_params)
+        .map(|((_, cshape), gt)| extract(gt, cshape))
+        .collect()
+}
+
+/// Elementwise structural-presence masks (1 where the client's sub-model
+/// has a parameter) on global shapes.
+pub fn structural_presence(client: &ModelSpec, global: &ModelSpec) -> Vec<Tensor> {
+    client
+        .param_shapes()
+        .iter()
+        .map(|(_, cshape)| Tensor::full(cshape.clone(), 1.0))
+        .zip(global.param_shapes())
+        .map(|(ones, (_, gshape))| embed(&ones, &gshape))
+        .collect()
+}
+
+/// Coverage rate CR(k) per (layer, global unit): the fraction of clients
+/// whose sub-model possesses unit `k` (Eq. 21). Computed by the server
+/// after round 1, then broadcast.
+pub fn coverage_rates(client_specs: &[&ModelSpec], global: &ModelSpec) -> Vec<Vec<f32>> {
+    let n = client_specs.len() as f32;
+    global
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(l, layer)| {
+            (0..layer.out_dim)
+                .map(|k| {
+                    let covering = client_specs
+                        .iter()
+                        .filter(|s| s.layers[l].out_dim > k)
+                        .count();
+                    covering as f32 / n
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+
+    #[test]
+    fn expand_fc_mask_columns() {
+        let spec = ModelSpec::get("mlp", 1.0).unwrap();
+        let mut sel = vec![false; 100];
+        sel[3] = true;
+        let (w, b) = expand_unit_mask(&spec, 0, &sel);
+        assert_eq!(w.shape(), &[784, 100]);
+        // column 3 set for every input row
+        assert_eq!(w.data()[3], 1.0);
+        assert_eq!(w.data()[100 + 3], 1.0);
+        assert_eq!(w.data()[0], 0.0);
+        assert_eq!(w.data().iter().sum::<f32>(), 784.0);
+        assert_eq!(b.data().iter().sum::<f32>(), 1.0);
+    }
+
+    #[test]
+    fn expand_conv_mask_rows() {
+        let spec = ModelSpec::get("cnn1", 1.0).unwrap();
+        let mut sel = vec![false; 10];
+        sel[0] = true;
+        sel[9] = true;
+        let (w, b) = expand_unit_mask(&spec, 0, &sel);
+        assert_eq!(w.shape(), &[10, 1, 5, 5]);
+        assert_eq!(w.data().iter().sum::<f32>(), 50.0); // 2 units × 25
+        assert_eq!(b.data(), &[1., 0., 0., 0., 0., 0., 0., 0., 0., 1.]);
+    }
+
+    #[test]
+    fn embed_extract_roundtrip_2d() {
+        let small = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let big = embed(&small, &[4, 5]);
+        assert_eq!(big.data()[0..3], [1., 2., 3.]);
+        assert_eq!(big.data()[5..8], [4., 5., 6.]);
+        assert_eq!(big.data().iter().sum::<f32>(), 21.0);
+        let back = extract(&big, &[2, 3]);
+        assert_eq!(back.data(), small.data());
+    }
+
+    #[test]
+    fn embed_extract_roundtrip_4d() {
+        let small = Tensor::new(vec![2, 2, 1, 1], vec![1., 2., 3., 4.]);
+        let big = embed(&small, &[3, 3, 1, 1]);
+        let back = extract(&big, &[2, 2, 1, 1]);
+        assert_eq!(back.data(), small.data());
+        assert_eq!(big.data().iter().sum::<f32>(), 10.0);
+    }
+
+    #[test]
+    fn hetero_embed_full_roundtrip() {
+        let global = ModelSpec::get("het_a_1", 0.25).unwrap();
+        let sub = ModelSpec::get("het_a_5", 0.25).unwrap();
+        let mut rng = crate::util::rng::Rng::new(1);
+        let cp = sub.init_params(&mut rng);
+        let gp = embed_params(&cp, &global);
+        assert_eq!(gp.len(), cp.len());
+        for (g, (_, gs)) in gp.iter().zip(global.param_shapes()) {
+            assert_eq!(g.shape(), &gs[..]);
+        }
+        let back = extract_params(&gp, &sub);
+        for (a, b) in back.iter().zip(&cp) {
+            assert_eq!(a.data(), b.data());
+        }
+    }
+
+    #[test]
+    fn presence_mask_counts() {
+        let global = ModelSpec::get("het_a_1", 0.25).unwrap();
+        let sub = ModelSpec::get("het_a_4", 0.25).unwrap();
+        let pres = structural_presence(&sub, &global);
+        let total: f32 = pres.iter().map(|t| t.data().iter().sum::<f32>()).sum();
+        assert_eq!(total as usize, sub.param_count());
+    }
+
+    #[test]
+    fn coverage_rates_full_and_partial() {
+        let g = ModelSpec::get("het_a_1", 0.25).unwrap();
+        let s5 = ModelSpec::get("het_a_5", 0.25).unwrap();
+        let specs = vec![&g, &s5];
+        let cr = coverage_rates(&specs, &g);
+        // layer 0: het_a_1 has 16 units (64*0.25), het_a_5 has 8 (32*0.25)
+        assert_eq!(cr[0][0], 1.0);
+        assert_eq!(cr[0][g.layers[0].out_dim - 1], 0.5);
+        // last fc layer (classes) covered by everyone
+        assert!(cr.last().unwrap().iter().all(|&x| x == 1.0));
+    }
+}

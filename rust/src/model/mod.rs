@@ -1,0 +1,392 @@
+//! Model registry — the rust mirror of `python/compile/model.py`
+//! (Tables 2, 3, 6 of the paper). The two registries must agree exactly;
+//! `rust/tests/integration.rs` pins both against the artifact manifest.
+//!
+//! Besides shapes, this module owns the *channel/neuron geometry* that
+//! FedDD's structured masks operate on: each layer has `out_dim` units
+//! (conv channels or FC neurons), and unit `k` owns its incoming weights
+//! plus its bias (structured-pruning style grouping, §4.2 of the paper).
+
+mod geometry;
+
+pub use geometry::*;
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv { kernel: usize, padding: Padding },
+    Fc,
+}
+
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub kind: LayerKind,
+    /// Conv: input channels (or, for FC, the input dimension).
+    pub in_dim: usize,
+    /// Units of this layer: conv output channels / FC output neurons.
+    pub out_dim: usize,
+}
+
+/// Identifies a model variant: family name + width percent (e.g.
+/// `("cnn2", 100)` ⇔ artifact tag `cnn2_w100`).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ModelId {
+    pub name: String,
+    pub width_pct: u32,
+}
+
+impl ModelId {
+    pub fn new(name: &str, width_pct: u32) -> ModelId {
+        ModelId { name: name.to_string(), width_pct }
+    }
+
+    pub fn tag(&self) -> String {
+        format!("{}_w{}", self.name, self.width_pct)
+    }
+
+    pub fn width(&self) -> f64 {
+        self.width_pct as f64 / 100.0
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub id: ModelId,
+    /// `[784]` for the MLP, `[C, H, W]` for CNNs.
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<Layer>,
+}
+
+fn round4(ch: usize, mult: f64) -> usize {
+    if mult == 1.0 {
+        return ch; // paper-exact at full width
+    }
+    let s = ((ch as f64 * mult).round() as usize).max(1);
+    (s.div_ceil(4) * 4).max(4)
+}
+
+const NUM_CLASSES: usize = 10;
+
+// Channel plans from Tables 3 and 6.
+const HET_A: [(&[usize], &[usize]); 5] = [
+    (&[64, 128, 256, 512, 512], &[100, 100]),
+    (&[64, 128, 256, 256, 512], &[100, 100]),
+    (&[64, 128, 256, 256, 512], &[80, 100]),
+    (&[32, 128, 256, 256, 512], &[80, 100]),
+    (&[32, 128, 128, 256, 512], &[80, 100]),
+];
+const HET_B: [(&[usize], &[usize]); 5] = [
+    (&[64, 128, 256, 512, 512], &[100, 100]),
+    (&[64, 128, 256, 256, 256], &[100, 100]),
+    (&[64, 128, 256, 256, 256], &[80, 80]),
+    (&[32, 96, 256, 256, 256], &[80, 80]),
+    (&[32, 96, 128, 128, 256], &[80, 80]),
+];
+
+impl ModelSpec {
+    /// Build a spec by family name ("mlp", "cnn1", "cnn2", "het_a_3", …)
+    /// and width multiplier.
+    pub fn get(name: &str, width: f64) -> anyhow::Result<ModelSpec> {
+        let id = ModelId::new(name, (width * 100.0).round() as u32);
+        let spec = match name {
+            "mlp" => {
+                let h1 = round4(100, width);
+                let h2 = round4(64, width);
+                ModelSpec {
+                    id,
+                    input_shape: vec![784],
+                    layers: vec![
+                        fc(784, h1),
+                        fc(h1, h2),
+                        fc(h2, NUM_CLASSES),
+                    ],
+                }
+            }
+            "cnn1" => {
+                let c1 = round4(10, width);
+                let c2 = round4(20, width);
+                // 28 -conv5(VALID)-> 24 -pool-> 12 -conv5-> 8 -pool-> 4
+                let fc_in = c2 * 4 * 4;
+                let h = round4(50, width);
+                ModelSpec {
+                    id,
+                    input_shape: vec![1, 28, 28],
+                    layers: vec![
+                        conv(1, c1, 5, Padding::Valid),
+                        conv(c1, c2, 5, Padding::Valid),
+                        fc(fc_in, h),
+                        fc(h, NUM_CLASSES),
+                    ],
+                }
+            }
+            "cnn2" => {
+                let c: Vec<usize> =
+                    [16, 32, 64].iter().map(|&x| round4(x, width)).collect();
+                let fc_in = c[2] * 4 * 4; // 32 -> 16 -> 8 -> 4
+                let h1 = round4(500, width);
+                let h2 = round4(100, width);
+                ModelSpec {
+                    id,
+                    input_shape: vec![3, 32, 32],
+                    layers: vec![
+                        conv(3, c[0], 3, Padding::Same),
+                        conv(c[0], c[1], 3, Padding::Same),
+                        conv(c[1], c[2], 3, Padding::Same),
+                        fc(fc_in, h1),
+                        fc(h1, h2),
+                        fc(h2, NUM_CLASSES),
+                    ],
+                }
+            }
+            _ => {
+                let (fam, idx) = name
+                    .rsplit_once('_')
+                    .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))?;
+                let i: usize = idx.parse()?;
+                anyhow::ensure!((1..=5).contains(&i), "sub-model index {i}");
+                let (convs, fcs) = match fam {
+                    "het_a" => HET_A[i - 1],
+                    "het_b" => HET_B[i - 1],
+                    _ => anyhow::bail!("unknown model {name:?}"),
+                };
+                let chans: Vec<usize> =
+                    convs.iter().map(|&c| round4(c, width)).collect();
+                let hidden: Vec<usize> =
+                    fcs.iter().map(|&h| round4(h, width)).collect();
+                let mut layers = Vec::new();
+                let mut in_ch = 3;
+                for &c in &chans {
+                    layers.push(conv(in_ch, c, 3, Padding::Same));
+                    in_ch = c;
+                }
+                // 32 -> 16 -> 8 -> 4 -> 2 -> 1 spatial after five pools
+                let mut dims = vec![chans[chans.len() - 1]];
+                dims.extend(&hidden);
+                dims.push(NUM_CLASSES);
+                for w in dims.windows(2) {
+                    layers.push(fc(w[0], w[1]));
+                }
+                ModelSpec { id, input_shape: vec![3, 32, 32], layers }
+            }
+        };
+        Ok(spec)
+    }
+
+    /// Ordered (name, shape) for every parameter tensor — conv weights
+    /// OIHW, FC weights (in, out) — identical to the python registry.
+    pub fn param_shapes(&self) -> Vec<(String, Vec<usize>)> {
+        let mut out = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            match layer.kind {
+                LayerKind::Conv { kernel, .. } => {
+                    out.push((
+                        format!("conv{i}_w"),
+                        vec![layer.out_dim, layer.in_dim, kernel, kernel],
+                    ));
+                    out.push((format!("conv{i}_b"), vec![layer.out_dim]));
+                }
+                LayerKind::Fc => {
+                    out.push((format!("fc{i}_w"), vec![layer.in_dim, layer.out_dim]));
+                    out.push((format!("fc{i}_b"), vec![layer.out_dim]));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_shapes()
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Bytes of the full model at f32 (the paper's `U_n`).
+    pub fn size_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    /// Units (channels / neurons) per layer — `N_l` in Algorithm 2.
+    pub fn unit_counts(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.out_dim).collect()
+    }
+
+    /// Initialization, deterministic from `rng`: He-normal convs, damped
+    /// FC weights (×0.5) and an extra ×0.2 on the classifier layer. The
+    /// damping keeps deep stacks (the 8-layer VGG sub-models) inside the
+    /// plain-SGD stable region — validated by an init×lr sweep recorded
+    /// in EXPERIMENTS.md; with pure He init the paper's hetero models
+    /// start at exploded logits and oscillate at chance.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<Tensor> {
+        let shapes = self.param_shapes();
+        let last_w = shapes.len() - 2; // [..., fcN_w, fcN_b]
+        shapes
+            .into_iter()
+            .enumerate()
+            .map(|(i, (name, shape))| {
+                let n: usize = shape.iter().product();
+                if name.ends_with("_b") {
+                    Tensor::zeros(shape)
+                } else {
+                    let fan_in: usize = if shape.len() == 4 {
+                        shape[1] * shape[2] * shape[3]
+                    } else {
+                        shape[0]
+                    };
+                    let mut std = (2.0 / fan_in as f64).sqrt() as f32;
+                    if shape.len() == 2 {
+                        std *= 0.5; // FC damping
+                    }
+                    if i == last_w {
+                        std *= 0.2; // classifier damping
+                    }
+                    let data =
+                        (0..n).map(|_| rng.normal_f32(0.0, std)).collect();
+                    Tensor::new(shape, data)
+                }
+            })
+            .collect()
+    }
+}
+
+fn conv(in_dim: usize, out_dim: usize, kernel: usize, padding: Padding) -> Layer {
+    Layer { kind: LayerKind::Conv { kernel, padding }, in_dim, out_dim }
+}
+
+fn fc(in_dim: usize, out_dim: usize) -> Layer {
+    Layer { kind: LayerKind::Fc, in_dim, out_dim }
+}
+
+/// All model family names.
+pub fn all_model_names() -> Vec<String> {
+    let mut v = vec!["mlp".to_string(), "cnn1".to_string(), "cnn2".to_string()];
+    for fam in ["het_a", "het_b"] {
+        for i in 1..=5 {
+            v.push(format!("{fam}_{i}"));
+        }
+    }
+    v
+}
+
+/// Registry caching specs by id.
+#[derive(Default)]
+pub struct ModelRegistry {
+    cache: std::collections::HashMap<ModelId, ModelSpec>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn spec(&mut self, id: &ModelId) -> anyhow::Result<&ModelSpec> {
+        if !self.cache.contains_key(id) {
+            let spec = ModelSpec::get(&id.name, id.width())?;
+            self.cache.insert(id.clone(), spec);
+        }
+        Ok(&self.cache[id])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_matches_table2() {
+        let s = ModelSpec::get("mlp", 1.0).unwrap();
+        let shapes = s.param_shapes();
+        assert_eq!(shapes[0].1, vec![784, 100]);
+        assert_eq!(shapes[2].1, vec![100, 64]);
+        assert_eq!(shapes[4].1, vec![64, 10]);
+        assert_eq!(s.param_count(), 784 * 100 + 100 + 100 * 64 + 64 + 64 * 10 + 10);
+    }
+
+    #[test]
+    fn cnn1_matches_table2() {
+        let s = ModelSpec::get("cnn1", 1.0).unwrap();
+        let shapes: Vec<_> = s.param_shapes();
+        assert_eq!(shapes[0].1, vec![10, 1, 5, 5]);
+        assert_eq!(shapes[2].1, vec![20, 10, 5, 5]);
+        assert_eq!(shapes[4].1, vec![320, 50]);
+    }
+
+    #[test]
+    fn cnn2_matches_table2() {
+        let s = ModelSpec::get("cnn2", 1.0).unwrap();
+        let shapes = s.param_shapes();
+        assert_eq!(shapes[0].1, vec![16, 3, 3, 3]);
+        assert_eq!(shapes[6].1, vec![1024, 500]);
+        assert_eq!(shapes[10].1, vec![100, 10]);
+    }
+
+    #[test]
+    fn het_a_full_model_channels() {
+        let s = ModelSpec::get("het_a_1", 1.0).unwrap();
+        let convs: Vec<usize> = s
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .map(|l| l.out_dim)
+            .collect();
+        assert_eq!(convs, vec![64, 128, 256, 512, 512]);
+    }
+
+    #[test]
+    fn het_b_submodels_shrink() {
+        let counts: Vec<usize> = (1..=5)
+            .map(|i| ModelSpec::get(&format!("het_b_{i}"), 1.0).unwrap().param_count())
+            .collect();
+        let mut sorted = counts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(counts, sorted, "{counts:?}");
+    }
+
+    #[test]
+    fn submodel_nesting_layerwise() {
+        let full = ModelSpec::get("het_a_1", 1.0).unwrap();
+        for i in 2..=5 {
+            let sub = ModelSpec::get(&format!("het_a_{i}"), 1.0).unwrap();
+            for (a, b) in sub.layers.iter().zip(&full.layers) {
+                assert!(a.out_dim <= b.out_dim);
+                assert!(a.in_dim <= b.in_dim);
+            }
+        }
+    }
+
+    #[test]
+    fn width_scaling_matches_python_formula() {
+        let s = ModelSpec::get("cnn2", 0.25).unwrap();
+        assert_eq!(s.layers[0].out_dim, 4); // 16*0.25
+        assert_eq!(s.layers[3].out_dim, 128); // round(500*.25)=125 -> 128
+        assert_eq!(s.layers[4].out_dim, 28); // round(100*.25)=25 -> 28
+        let shapes = s.param_shapes();
+        // round(500*0.25)=125 -> 128; round(100*0.25)=25 -> 28
+        assert_eq!(shapes[6].1[1], 128);
+        assert_eq!(shapes[8].1[1], 28);
+    }
+
+    #[test]
+    fn init_params_finite_and_shaped() {
+        let s = ModelSpec::get("mlp", 1.0).unwrap();
+        let mut rng = Rng::new(0);
+        let p = s.init_params(&mut rng);
+        assert_eq!(p.len(), 6);
+        assert!(p.iter().all(|t| t.is_finite()));
+        assert_eq!(p[1].data().iter().filter(|&&x| x != 0.0).count(), 0); // bias zero
+    }
+
+    #[test]
+    fn model_id_tags() {
+        assert_eq!(ModelId::new("cnn2", 100).tag(), "cnn2_w100");
+        assert_eq!(ModelId::new("het_a_3", 25).tag(), "het_a_3_w25");
+    }
+}

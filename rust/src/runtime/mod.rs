@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts (`make artifacts`) and
+//! executes them from the coordinator hot path. Python is never invoked —
+//! this is the only bridge between L3 and the L2/L1 computations.
+//!
+//! * [`registry`] — parses `artifacts/manifest.json` into typed metadata.
+//! * [`pjrt`] — the `xla`-crate client wrapper: lazy compile cache,
+//!   literal marshalling, and typed entry points for train / eval / the
+//!   Pallas kernel artifacts (masked aggregation, importance, sgd).
+
+mod pjrt;
+mod registry;
+
+pub use pjrt::*;
+pub use registry::*;

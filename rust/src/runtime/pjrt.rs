@@ -1,0 +1,386 @@
+//! The `xla`-crate PJRT CPU wrapper: compile-once executable cache plus
+//! typed entry points for the train/eval artifacts and the flat Pallas
+//! kernels.
+//!
+//! Interchange notes (see /opt/xla-example/README.md): artifacts are HLO
+//! *text*; `HloModuleProto::from_text_file` reassigns instruction ids, so
+//! text round-trips where serialized jax≥0.5 protos do not. Executables
+//! were lowered with `return_tuple=True`, so every output is a tuple.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+use super::registry::{ArtifactMeta, Dtype, Manifest};
+use crate::tensor::Tensor;
+
+/// Cumulative execution counters (perf accounting; see EXPERIMENTS §Perf).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub exec_seconds: f64,
+    pub compile_seconds: f64,
+    pub compiled: u64,
+    pub h2d_bytes: u64,
+    pub d2h_bytes: u64,
+}
+
+/// PJRT runtime with a lazy executable cache.
+pub struct Runtime {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &std::path::Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+        log::info!(
+            "PJRT client up: platform={} devices={} ({} artifacts)",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn executable(&self, name: &str) -> anyhow::Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let meta = self.manifest.get(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("loading {:?}: {e}", meta.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compile_seconds += dt;
+            s.compiled += 1;
+        }
+        log::debug!("compiled {name} in {dt:.2}s");
+        let rc = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&rc));
+        Ok(rc)
+    }
+
+    /// Raw execute: literals in, tuple-decomposed literals out.
+    pub fn execute(&self, name: &str, args: &[Literal]) -> anyhow::Result<Vec<Literal>> {
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e}"))?;
+        let outs = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name}: {e}"))?;
+        let mut s = self.stats.borrow_mut();
+        s.executions += 1;
+        s.exec_seconds += t0.elapsed().as_secs_f64();
+        Ok(outs)
+    }
+
+    // ---------------- literal marshalling ----------------
+
+    pub fn lit_f32(&self, data: &[f32], shape: &[usize]) -> anyhow::Result<Literal> {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        self.stats.borrow_mut().h2d_bytes += (data.len() * 4) as u64;
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            shape,
+            bytes,
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+
+    pub fn lit_i32(&self, data: &[i32], shape: &[usize]) -> anyhow::Result<Literal> {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        self.stats.borrow_mut().h2d_bytes += (data.len() * 4) as u64;
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        Ok(Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            shape,
+            bytes,
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+
+    pub fn lit_tensor(&self, t: &Tensor) -> anyhow::Result<Literal> {
+        self.lit_f32(t.data(), t.shape())
+    }
+
+    pub fn tensor_from(&self, lit: &Literal, shape: Vec<usize>) -> anyhow::Result<Tensor> {
+        let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.stats.borrow_mut().d2h_bytes += (v.len() * 4) as u64;
+        Ok(Tensor::new(shape, v))
+    }
+
+    // ---------------- typed entry points ----------------
+
+    /// One local SGD step: params are updated in place; returns the loss.
+    /// `x` is the flattened batch (artifact shape), `y` the labels.
+    pub fn train_step(
+        &self,
+        artifact: &str,
+        params: &mut Vec<Tensor>,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        let meta = self.manifest.get(artifact)?.clone();
+        anyhow::ensure!(meta.kind == "train", "{artifact} is not a train artifact");
+        self.exec_train(&meta, artifact, params, x, y, lr)
+    }
+
+    /// Fused multi-step (lax.scan) variant: `xs`/`ys` hold `steps` batches.
+    pub fn train_scan(
+        &self,
+        artifact: &str,
+        params: &mut Vec<Tensor>,
+        xs: &[f32],
+        ys: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        let meta = self.manifest.get(artifact)?.clone();
+        anyhow::ensure!(
+            meta.kind == "train_scan",
+            "{artifact} is not a train_scan artifact"
+        );
+        self.exec_train(&meta, artifact, params, xs, ys, lr)
+    }
+
+    fn exec_train(
+        &self,
+        meta: &ArtifactMeta,
+        artifact: &str,
+        params: &mut Vec<Tensor>,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        anyhow::ensure!(
+            params.len() == meta.params.len(),
+            "param count mismatch for {artifact}"
+        );
+        let mut args = Vec::with_capacity(params.len() + 3);
+        for (t, (pname, pshape)) in params.iter().zip(&meta.params) {
+            anyhow::ensure!(
+                t.shape() == &pshape[..],
+                "shape mismatch for {artifact}:{pname}: {:?} vs {:?}",
+                t.shape(),
+                pshape
+            );
+            args.push(self.lit_tensor(t)?);
+        }
+        let x_meta = &meta.inputs[0];
+        let y_meta = &meta.inputs[1];
+        args.push(self.lit_f32(x, &x_meta.shape)?);
+        debug_assert_eq!(y_meta.dtype, Dtype::I32);
+        args.push(self.lit_i32(y, &y_meta.shape)?);
+        args.push(self.lit_f32(&[lr], &[1])?);
+        let outs = self.execute(artifact, &args)?;
+        anyhow::ensure!(
+            outs.len() == params.len() + 1,
+            "unexpected output arity {} for {artifact}",
+            outs.len()
+        );
+        for (i, t) in params.iter_mut().enumerate() {
+            *t = self.tensor_from(&outs[i], t.shape().to_vec())?;
+        }
+        let loss: Vec<f32> = outs[params.len()]
+            .to_vec()
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(loss[0])
+    }
+
+    /// Evaluate one batch: returns (loss_sum, per-class correct, per-class
+    /// count).
+    pub fn eval_batch(
+        &self,
+        artifact: &str,
+        params: &[Tensor],
+        x: &[f32],
+        y: &[i32],
+    ) -> anyhow::Result<(f32, Vec<f32>, Vec<f32>)> {
+        let meta = self.manifest.get(artifact)?.clone();
+        anyhow::ensure!(meta.kind == "eval", "{artifact} is not an eval artifact");
+        let mut args = Vec::with_capacity(params.len() + 2);
+        for t in params {
+            args.push(self.lit_tensor(t)?);
+        }
+        args.push(self.lit_f32(x, &meta.inputs[0].shape)?);
+        args.push(self.lit_i32(y, &meta.inputs[1].shape)?);
+        let outs = self.execute(artifact, &args)?;
+        let loss: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let correct: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let count: Vec<f32> = outs[2].to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok((loss[0], correct, count))
+    }
+
+    // ---------------- flat Pallas kernels ----------------
+    //
+    // The kernel artifacts operate on fixed-size chunks
+    // (manifest.kernel_chunk); these helpers stream arbitrary-length flat
+    // buffers through them with zero-padding on the tail chunk.
+
+    fn kernel_name(&self, op: &str) -> anyhow::Result<String> {
+        Ok(self.manifest.kernel(op)?.name.clone())
+    }
+
+    /// num/den += masked contribution of one client (Pallas masked_acc).
+    pub fn k_masked_acc(
+        &self,
+        num: &mut [f32],
+        den: &mut [f32],
+        w: &[f32],
+        mask: &[f32],
+        mn: f32,
+    ) -> anyhow::Result<()> {
+        let chunk = self.manifest.kernel_chunk;
+        let name = self.kernel_name("masked_acc")?;
+        let mn_lit = self.lit_f32(&[mn], &[1])?;
+        let n = num.len();
+        let mut buf_n = vec![0.0f32; chunk];
+        let mut buf_d = vec![0.0f32; chunk];
+        let mut buf_w = vec![0.0f32; chunk];
+        let mut buf_m = vec![0.0f32; chunk];
+        let mut start = 0;
+        while start < n {
+            let len = chunk.min(n - start);
+            buf_n[..len].copy_from_slice(&num[start..start + len]);
+            buf_d[..len].copy_from_slice(&den[start..start + len]);
+            buf_w[..len].copy_from_slice(&w[start..start + len]);
+            buf_m[..len].copy_from_slice(&mask[start..start + len]);
+            if len < chunk {
+                buf_n[len..].fill(0.0);
+                buf_d[len..].fill(0.0);
+                buf_w[len..].fill(0.0);
+                buf_m[len..].fill(0.0);
+            }
+            let args = vec![
+                self.lit_f32(&buf_n, &[chunk])?,
+                self.lit_f32(&buf_d, &[chunk])?,
+                self.lit_f32(&buf_w, &[chunk])?,
+                self.lit_f32(&buf_m, &[chunk])?,
+                mn_lit.clone(),
+            ];
+            let outs = self.execute(&name, &args)?;
+            let on: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let od: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
+            num[start..start + len].copy_from_slice(&on[..len]);
+            den[start..start + len].copy_from_slice(&od[..len]);
+            start += len;
+        }
+        Ok(())
+    }
+
+    /// Finalize Eq. 4 with the zero-coverage rule (Pallas masked_fin).
+    pub fn k_masked_fin(
+        &self,
+        num: &[f32],
+        den: &[f32],
+        prev: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let chunk = self.manifest.kernel_chunk;
+        let name = self.kernel_name("masked_fin")?;
+        let n = num.len();
+        let mut bn = vec![0.0f32; chunk];
+        let mut bd = vec![0.0f32; chunk];
+        let mut bp = vec![0.0f32; chunk];
+        let mut start = 0;
+        while start < n {
+            let len = chunk.min(n - start);
+            bn[..len].copy_from_slice(&num[start..start + len]);
+            bd[..len].copy_from_slice(&den[start..start + len]);
+            bp[..len].copy_from_slice(&prev[start..start + len]);
+            if len < chunk {
+                bn[len..].fill(0.0);
+                bd[len..].fill(0.0);
+                bp[len..].fill(0.0);
+            }
+            let args = vec![
+                self.lit_f32(&bn, &[chunk])?,
+                self.lit_f32(&bd, &[chunk])?,
+                self.lit_f32(&bp, &[chunk])?,
+            ];
+            let outs = self.execute(&name, &args)?;
+            let o: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
+            out[start..start + len].copy_from_slice(&o[..len]);
+            start += len;
+        }
+        Ok(())
+    }
+
+    /// Importance elementwise scores (Pallas importance kernel).
+    pub fn k_importance(&self, w: &[f32], dw: &[f32], out: &mut [f32]) -> anyhow::Result<()> {
+        let chunk = self.manifest.kernel_chunk;
+        let name = self.kernel_name("importance")?;
+        let n = w.len();
+        let mut bw = vec![0.0f32; chunk];
+        let mut bd = vec![0.0f32; chunk];
+        let mut start = 0;
+        while start < n {
+            let len = chunk.min(n - start);
+            bw[..len].copy_from_slice(&w[start..start + len]);
+            bd[..len].copy_from_slice(&dw[start..start + len]);
+            if len < chunk {
+                bw[len..].fill(1.0); // avoid 0/0 in padding
+                bd[len..].fill(0.0);
+            }
+            let args = vec![self.lit_f32(&bw, &[chunk])?, self.lit_f32(&bd, &[chunk])?];
+            let outs = self.execute(&name, &args)?;
+            let o: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
+            out[start..start + len].copy_from_slice(&o[..len]);
+            start += len;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime execution is covered by rust/tests/runtime_goldens.rs (it
+    // needs built artifacts); here we only test pure helpers.
+    use super::super::registry::default_artifacts_dir;
+
+    #[test]
+    fn artifacts_dir_resolution_does_not_panic() {
+        let _ = default_artifacts_dir();
+    }
+}

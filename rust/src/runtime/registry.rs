@@ -1,0 +1,272 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => anyhow::bail!("unknown dtype {s:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct InputMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// "train" | "train_scan" | "eval" | "kernel".
+    pub kind: String,
+    /// For kernels: "masked_acc" | "masked_fin" | "importance" | "sgd".
+    pub op: Option<String>,
+    pub model: Option<String>,
+    pub width: f64,
+    pub batch: usize,
+    pub steps: usize,
+    pub chunk: usize,
+    /// Ordered parameter tensors (name, shape).
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Non-parameter inputs, in call order after the params.
+    pub inputs: Vec<InputMeta>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelGeom {
+    pub name: String,
+    pub width: f64,
+    pub param_count: usize,
+    /// (kind, in, out) per layer.
+    pub layers: Vec<(String, usize, usize)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub kernel_chunk: usize,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub models: Vec<ModelGeom>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = json::from_file(&dir.join("manifest.json"))?;
+        let mut artifacts = HashMap::new();
+        for a in j.req_arr("artifacts")? {
+            let name = a.req_str("name")?.to_string();
+            let params = match a.get("params") {
+                Some(Json::Arr(ps)) => ps
+                    .iter()
+                    .map(|p| {
+                        Ok((
+                            p.req_str("name")?.to_string(),
+                            p.req_arr("shape")?
+                                .iter()
+                                .filter_map(|x| x.as_usize())
+                                .collect(),
+                        ))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                _ => Vec::new(),
+            };
+            let inputs = match a.get("inputs") {
+                Some(Json::Arr(is_)) => is_
+                    .iter()
+                    .filter_map(|i| {
+                        // kernels list inputs as plain strings
+                        i.as_str().map(|s| InputMeta {
+                            name: s.to_string(),
+                            shape: vec![],
+                            dtype: Dtype::F32,
+                        })
+                    })
+                    .chain(is_.iter().filter_map(|i| {
+                        if i.as_str().is_some() {
+                            return None;
+                        }
+                        Some(InputMeta {
+                            name: i.req_str("name").ok()?.to_string(),
+                            shape: i
+                                .req_arr("shape")
+                                .ok()?
+                                .iter()
+                                .filter_map(|x| x.as_usize())
+                                .collect(),
+                            dtype: Dtype::parse(
+                                i.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32"),
+                            )
+                            .ok()?,
+                        })
+                    }))
+                    .collect(),
+                _ => Vec::new(),
+            };
+            let outputs = match a.get("outputs") {
+                Some(Json::Arr(os)) => os
+                    .iter()
+                    .filter_map(|o| o.as_str().map(String::from))
+                    .collect(),
+                _ => Vec::new(),
+            };
+            let meta = ArtifactMeta {
+                file: dir.join(a.req_str("file")?),
+                kind: a.req_str("kind")?.to_string(),
+                op: a.get("op").and_then(|x| x.as_str()).map(String::from),
+                model: a.get("model").and_then(|x| x.as_str()).map(String::from),
+                width: a.get("width").and_then(|x| x.as_f64()).unwrap_or(1.0),
+                batch: a.get("batch").and_then(|x| x.as_usize()).unwrap_or(0),
+                steps: a.get("steps").and_then(|x| x.as_usize()).unwrap_or(1),
+                chunk: a.get("chunk").and_then(|x| x.as_usize()).unwrap_or(0),
+                params,
+                inputs,
+                outputs,
+                name: name.clone(),
+            };
+            artifacts.insert(name, meta);
+        }
+        let models = match j.get("models") {
+            Some(Json::Arr(ms)) => ms
+                .iter()
+                .map(|m| {
+                    Ok(ModelGeom {
+                        name: m.req_str("name")?.to_string(),
+                        width: m.req_f64("width")?,
+                        param_count: m.req_usize("param_count")?,
+                        layers: m
+                            .req_arr("layers")?
+                            .iter()
+                            .map(|l| {
+                                Ok((
+                                    l.req_str("kind")?.to_string(),
+                                    l.req_usize("in")?,
+                                    l.req_usize("out")?,
+                                ))
+                            })
+                            .collect::<anyhow::Result<Vec<_>>>()?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            train_batch: j.req_usize("train_batch")?,
+            eval_batch: j.req_usize("eval_batch")?,
+            kernel_chunk: j.req_usize("kernel_chunk")?,
+            artifacts,
+            models,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    /// Find the kernel artifact for an op name.
+    pub fn kernel(&self, op: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts
+            .values()
+            .find(|a| a.kind == "kernel" && a.op.as_deref() == Some(op))
+            .ok_or_else(|| anyhow::anyhow!("kernel op {op:?} not in manifest"))
+    }
+}
+
+/// Default artifacts dir (repo-root relative), honoring FEDDD_ARTIFACTS.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("FEDDD_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    // Walk up from cwd looking for artifacts/manifest.json (tests run from
+    // target subdirs).
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    for _ in 0..5 {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = default_artifacts_dir();
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_manifest_when_built() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(m.artifacts.len() >= 30);
+        assert_eq!(m.kernel_chunk, 16384);
+        let t = m.get("mlp_w100_train").unwrap();
+        assert_eq!(t.kind, "train");
+        assert_eq!(t.params.len(), 6);
+        assert_eq!(t.params[0].1, vec![784, 100]);
+        assert_eq!(t.inputs.len(), 3);
+        assert_eq!(t.inputs[1].dtype, Dtype::I32);
+        assert!(t.file.exists());
+    }
+
+    #[test]
+    fn kernel_lookup() {
+        let Some(m) = manifest() else { return };
+        for op in ["masked_acc", "masked_fin", "importance", "sgd"] {
+            let k = m.kernel(op).unwrap();
+            assert_eq!(k.chunk, 16384);
+        }
+        assert!(m.kernel("nope").is_err());
+    }
+
+    #[test]
+    fn geometry_matches_rust_registry() {
+        let Some(m) = manifest() else { return };
+        for g in &m.models {
+            let spec =
+                crate::model::ModelSpec::get(&g.name, g.width).unwrap();
+            assert_eq!(
+                spec.param_count(),
+                g.param_count,
+                "param count drift for {} w={}",
+                g.name,
+                g.width
+            );
+            assert_eq!(spec.layers.len(), g.layers.len());
+            for (a, b) in spec.layers.iter().zip(&g.layers) {
+                assert_eq!(a.in_dim, b.1, "{}", g.name);
+                assert_eq!(a.out_dim, b.2, "{}", g.name);
+            }
+        }
+    }
+}

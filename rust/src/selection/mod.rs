@@ -1,0 +1,369 @@
+//! Uploaded-parameter selection (paper §4.2, Algorithm 2).
+//!
+//! Given a client's assigned dropout rate `D_n`, every layer keeps its top
+//! `round(N_l · (1 − D_n))` channels/neurons (at least one — an empty
+//! layer would upload nothing and stall that layer's aggregation) ranked
+//! by a per-unit score:
+//!
+//! * `importance` — the paper's index `Ĩ_n^k = ‖ΔW·(W+ΔW)/W‖_(k) / CR(k)`
+//!   (Eq. 21; the elementwise part mirrors the Pallas `importance` kernel,
+//!   the group norm is an L2 over the unit's parameter group);
+//! * `max`     — ‖Ŵ‖_(k): largest post-update amplitude (baseline);
+//! * `delta`   — ‖ΔW‖_(k): largest change (Aji & Heafield [24]);
+//! * `random`  — uniform random units (baseline);
+//! * `ordered` — the first units in index order (FjORD-style ordered
+//!   dropout [25]).
+
+use crate::model::{expand_unit_mask, LayerKind, ModelSpec};
+use crate::tensor::{importance_scores, Tensor};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    Importance,
+    Random,
+    Max,
+    Delta,
+    Ordered,
+}
+
+impl Policy {
+    pub fn by_name(name: &str) -> anyhow::Result<Policy> {
+        Ok(match name {
+            "importance" => Policy::Importance,
+            "random" => Policy::Random,
+            "max" => Policy::Max,
+            "delta" => Policy::Delta,
+            "ordered" => Policy::Ordered,
+            _ => anyhow::bail!("unknown selection policy {name:?}"),
+        })
+    }
+}
+
+/// Per-layer unit selection for one client/round (`M_n^t` in channel
+/// space; expand to elementwise with [`ChannelMask::to_elementwise`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChannelMask {
+    pub per_layer: Vec<Vec<bool>>,
+}
+
+impl ChannelMask {
+    pub fn full(spec: &ModelSpec) -> ChannelMask {
+        ChannelMask {
+            per_layer: spec.layers.iter().map(|l| vec![true; l.out_dim]).collect(),
+        }
+    }
+
+    pub fn selected_per_layer(&self) -> Vec<usize> {
+        self.per_layer
+            .iter()
+            .map(|l| l.iter().filter(|&&b| b).count())
+            .collect()
+    }
+
+    /// Expand to elementwise 0/1 masks shaped like the client's params.
+    pub fn to_elementwise(&self, spec: &ModelSpec) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(spec.layers.len() * 2);
+        for (l, sel) in self.per_layer.iter().enumerate() {
+            let (w, b) = expand_unit_mask(spec, l, sel);
+            out.push(w);
+            out.push(b);
+        }
+        out
+    }
+
+    /// Uploaded payload in bytes (f32 elements under the mask).
+    pub fn upload_bytes(&self, spec: &ModelSpec) -> usize {
+        let mut total = 0usize;
+        for (layer, sel) in spec.layers.iter().zip(&self.per_layer) {
+            let group = match layer.kind {
+                LayerKind::Conv { kernel, .. } => layer.in_dim * kernel * kernel,
+                LayerKind::Fc => layer.in_dim,
+            };
+            let n_sel = sel.iter().filter(|&&b| b).count();
+            total += n_sel * (group + 1); // + bias element
+        }
+        total * 4
+    }
+}
+
+/// Per-unit scores for one layer.
+fn layer_unit_scores(
+    spec: &ModelSpec,
+    l: usize,
+    policy: Policy,
+    w_before: &[Tensor],
+    w_after: &[Tensor],
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let layer = &spec.layers[l];
+    let n = layer.out_dim;
+    let wi = 2 * l; // weight tensor index (params are [w,b] per layer)
+    let bi = 2 * l + 1;
+    match policy {
+        Policy::Random => (0..n).map(|_| rng.f64()).collect(),
+        Policy::Ordered => (0..n).map(|k| (n - k) as f64).collect(),
+        Policy::Max => group_norms(layer, w_after[wi].data(), w_after[bi].data()),
+        Policy::Delta => {
+            let dw: Vec<f32> = w_after[wi]
+                .data()
+                .iter()
+                .zip(w_before[wi].data())
+                .map(|(a, b)| a - b)
+                .collect();
+            let db: Vec<f32> = w_after[bi]
+                .data()
+                .iter()
+                .zip(w_before[bi].data())
+                .map(|(a, b)| a - b)
+                .collect();
+            group_norms(layer, &dw, &db)
+        }
+        Policy::Importance => {
+            // elementwise |dw * (w+dw) / w| on both tensors, then group L2.
+            let score_of = |after: &Tensor, before: &Tensor| -> Vec<f32> {
+                let dw: Vec<f32> = after
+                    .data()
+                    .iter()
+                    .zip(before.data())
+                    .map(|(a, b)| a - b)
+                    .collect();
+                let mut s = vec![0.0f32; dw.len()];
+                importance_scores(&mut s, before.data(), &dw);
+                s
+            };
+            let sw = score_of(&w_after[wi], &w_before[wi]);
+            let sb = score_of(&w_after[bi], &w_before[bi]);
+            group_norms(layer, &sw, &sb)
+        }
+    }
+}
+
+/// L2 norm per unit group over (weight tensor, bias tensor) values.
+fn group_norms(layer: &crate::model::Layer, w: &[f32], b: &[f32]) -> Vec<f64> {
+    let n = layer.out_dim;
+    let mut acc = vec![0.0f64; n];
+    match layer.kind {
+        LayerKind::Conv { kernel, .. } => {
+            let group = layer.in_dim * kernel * kernel;
+            for k in 0..n {
+                let s: f64 = w[k * group..(k + 1) * group]
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum();
+                acc[k] = s;
+            }
+        }
+        LayerKind::Fc => {
+            for (j, row) in w.chunks_exact(n).enumerate() {
+                let _ = j;
+                for k in 0..n {
+                    acc[k] += (row[k] as f64) * (row[k] as f64);
+                }
+            }
+        }
+    }
+    for k in 0..n {
+        acc[k] += (b[k] as f64) * (b[k] as f64);
+        acc[k] = acc[k].sqrt();
+    }
+    acc
+}
+
+/// Number of units layer `l` keeps under dropout rate `d`.
+pub fn keep_count(n_units: usize, d: f64) -> usize {
+    ((n_units as f64) * (1.0 - d)).round().max(1.0) as usize
+}
+
+/// Select the uploaded channel mask for one client (Algorithm 2).
+///
+/// `cr` — coverage rates per (layer, global unit), indexed by the client's
+/// own unit indices (leading-corner alignment); pass `None` under
+/// model-homogeneous settings (CR ≡ 1).
+pub fn select_mask(
+    policy: Policy,
+    spec: &ModelSpec,
+    w_before: &[Tensor],
+    w_after: &[Tensor],
+    cr: Option<&[Vec<f32>]>,
+    d: f64,
+    rng: &mut Rng,
+) -> ChannelMask {
+    assert!((0.0..=1.0).contains(&d), "dropout rate {d}");
+    let mut per_layer = Vec::with_capacity(spec.layers.len());
+    for (l, layer) in spec.layers.iter().enumerate() {
+        let mut scores = layer_unit_scores(spec, l, policy, w_before, w_after, rng);
+        if policy == Policy::Importance {
+            if let Some(cr) = cr {
+                for (k, s) in scores.iter_mut().enumerate() {
+                    let c = cr[l][k].max(1e-6) as f64;
+                    *s /= c;
+                }
+            }
+        }
+        let keep = keep_count(layer.out_dim, d);
+        // NaN-safe: a diverged update (NaN/inf scores) must not panic the
+        // coordinator; treat non-finite scores as lowest priority.
+        for s in scores.iter_mut() {
+            if !s.is_finite() {
+                *s = f64::MIN;
+            }
+        }
+        let mut order: Vec<usize> = (0..layer.out_dim).collect();
+        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        let mut sel = vec![false; layer.out_dim];
+        for &k in order.iter().take(keep) {
+            sel[k] = true;
+        }
+        per_layer.push(sel);
+    }
+    ChannelMask { per_layer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+    use crate::util::proptest::check;
+
+    fn mlp_params(seed: u64) -> (ModelSpec, Vec<Tensor>, Vec<Tensor>) {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(seed);
+        let before = spec.init_params(&mut rng);
+        let after: Vec<Tensor> = before
+            .iter()
+            .map(|t| {
+                let d: Vec<f32> =
+                    t.data().iter().map(|&x| x + rng.normal_f32(0.0, 0.01)).collect();
+                Tensor::new(t.shape().to_vec(), d)
+            })
+            .collect();
+        (spec, before, after)
+    }
+
+    #[test]
+    fn keep_count_rounds_and_floors() {
+        assert_eq!(keep_count(10, 0.6), 4);
+        assert_eq!(keep_count(10, 0.0), 10);
+        assert_eq!(keep_count(10, 0.99), 1); // at least one unit
+        assert_eq!(keep_count(3, 0.5), 2);
+    }
+
+    #[test]
+    fn mask_counts_match_keep() {
+        let (spec, before, after) = mlp_params(0);
+        let mut rng = Rng::new(1);
+        for policy in [
+            Policy::Importance,
+            Policy::Random,
+            Policy::Max,
+            Policy::Delta,
+            Policy::Ordered,
+        ] {
+            let m = select_mask(policy, &spec, &before, &after, None, 0.6, &mut rng);
+            let counts = m.selected_per_layer();
+            let want: Vec<usize> = spec
+                .unit_counts()
+                .iter()
+                .map(|&n| keep_count(n, 0.6))
+                .collect();
+            assert_eq!(counts, want, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn zero_dropout_selects_everything() {
+        let (spec, before, after) = mlp_params(1);
+        let mut rng = Rng::new(2);
+        let m = select_mask(Policy::Importance, &spec, &before, &after, None, 0.0, &mut rng);
+        assert_eq!(m, ChannelMask::full(&spec));
+        assert_eq!(m.upload_bytes(&spec), spec.size_bytes());
+    }
+
+    #[test]
+    fn ordered_takes_prefix() {
+        let (spec, before, after) = mlp_params(2);
+        let mut rng = Rng::new(3);
+        let m = select_mask(Policy::Ordered, &spec, &before, &after, None, 0.5, &mut rng);
+        for (l, sel) in m.per_layer.iter().enumerate() {
+            let keep = keep_count(spec.layers[l].out_dim, 0.5);
+            assert!(sel[..keep].iter().all(|&b| b), "layer {l}");
+            assert!(sel[keep..].iter().all(|&b| !b), "layer {l}");
+        }
+    }
+
+    #[test]
+    fn elementwise_mask_matches_upload_bytes() {
+        check("mask expansion counts", 10, |rng| {
+            let spec = ModelSpec::get("cnn1", 1.0).unwrap();
+            let before = spec.init_params(rng);
+            let after = spec.init_params(rng);
+            let d = rng.range_f64(0.0, 0.9);
+            let m = select_mask(Policy::Random, &spec, &before, &after, None, d, rng);
+            let elems = m.to_elementwise(&spec);
+            let ones: usize = elems
+                .iter()
+                .map(|t| t.data().iter().filter(|&&x| x == 1.0).count())
+                .sum();
+            if ones * 4 != m.upload_bytes(&spec) {
+                return Err(format!("{} != {}", ones * 4, m.upload_bytes(&spec)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn importance_prefers_changed_units() {
+        // Unit 5 of layer 0 gets a huge update; it must be selected.
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(4);
+        let before = spec.init_params(&mut rng);
+        let mut after = before.clone();
+        {
+            let (in_dim, out_dim) = (784, spec.layers[0].out_dim);
+            let w = after[0].data_mut();
+            for j in 0..in_dim {
+                w[j * out_dim + 5] += 10.0;
+            }
+        }
+        let m = select_mask(Policy::Importance, &spec, &before, &after, None, 0.9, &mut rng);
+        assert!(m.per_layer[0][5], "heavily-updated unit must be kept");
+    }
+
+    #[test]
+    fn coverage_rate_boosts_rare_units() {
+        // Equal scores; CR low on the tail units -> tail preferred.
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let n0 = spec.layers[0].out_dim;
+        let mut rng = Rng::new(5);
+        let before = spec.init_params(&mut rng);
+        // after == before + uniform small change => near-equal importances
+        let after: Vec<Tensor> = before
+            .iter()
+            .map(|t| {
+                let d: Vec<f32> = t.data().iter().map(|&x| x + 0.01).collect();
+                Tensor::new(t.shape().to_vec(), d)
+            })
+            .collect();
+        let mut cr = vec![
+            vec![1.0f32; n0],
+            vec![1.0f32; spec.layers[1].out_dim],
+            vec![1.0f32; spec.layers[2].out_dim],
+        ];
+        for k in n0 / 2..n0 {
+            cr[0][k] = 0.2; // rare among clients
+        }
+        let m = select_mask(
+            Policy::Importance,
+            &spec,
+            &before,
+            &after,
+            Some(&cr),
+            0.5,
+            &mut rng,
+        );
+        let rare_kept = m.per_layer[0][n0 / 2..].iter().filter(|&&b| b).count();
+        let common_kept = m.per_layer[0][..n0 / 2].iter().filter(|&&b| b).count();
+        assert!(rare_kept > common_kept, "rare {rare_kept} vs common {common_kept}");
+    }
+}

@@ -1,0 +1,217 @@
+//! System-heterogeneity simulator: client device + channel models and the
+//! virtual-time accounting of Eq. 7–12.
+//!
+//! The paper's time axis is fully analytic (CPU cycles/sample over CPU
+//! frequency; Shannon-capacity up/down links), so a virtual clock driven
+//! by these formulas reproduces the T2A comparisons without the physical
+//! testbed (DESIGN.md §3 substitution table).
+
+use crate::util::rng::Rng;
+
+/// Per-client device + channel profile.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    /// CPU cycles to process one sample (paper: [1,10] Megacycles).
+    pub cycles_per_sample: f64,
+    /// CPU frequency in Hz (paper: [1,10] GHz).
+    pub cpu_hz: f64,
+    /// Uplink rate r_n^u in bits/s (paper Table 4: [1,5]×10^4).
+    pub up_bps: f64,
+    /// Downlink rate r_n^d in bits/s (paper Table 4: [4,20]×10^4).
+    pub down_bps: f64,
+}
+
+impl DeviceProfile {
+    /// Computation latency for `samples` local samples (Eq. 7 generalized
+    /// over the samples actually processed in the round).
+    pub fn t_cmp(&self, samples: usize) -> f64 {
+        self.cycles_per_sample * samples as f64 / self.cpu_hz
+    }
+
+    /// Upload time for `bytes` (Eq. 9).
+    pub fn t_up(&self, bytes: f64) -> f64 {
+        bytes * 8.0 / self.up_bps
+    }
+
+    /// Download time for `bytes` (Eq. 11).
+    pub fn t_down(&self, bytes: f64) -> f64 {
+        bytes * 8.0 / self.down_bps
+    }
+
+    /// Seconds per uploaded+downloaded byte (the allocator's `1/r_u+1/r_d`
+    /// folded to bytes).
+    pub fn sec_per_byte(&self) -> f64 {
+        8.0 / self.up_bps + 8.0 / self.down_bps
+    }
+}
+
+/// Shannon-capacity channel (Eq. 8/10): r = B log2(1 + p·h/N0).
+pub fn shannon_rate_bps(bandwidth_hz: f64, tx_power: f64, gain: f64, noise: f64) -> f64 {
+    bandwidth_hz * (1.0 + tx_power * gain / noise).log2()
+}
+
+/// A fleet of client profiles.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub profiles: Vec<DeviceProfile>,
+}
+
+impl Fleet {
+    /// Table 4 simulation distribution: uniform draws per client.
+    pub fn simulated(n: usize, rng: &mut Rng) -> Fleet {
+        let profiles = (0..n)
+            .map(|_| DeviceProfile {
+                cycles_per_sample: rng.range_f64(1e6, 10e6),
+                cpu_hz: rng.range_f64(1e9, 10e9),
+                up_bps: rng.range_f64(1e4, 5e4),
+                down_bps: rng.range_f64(4e4, 20e4),
+            })
+            .collect();
+        Fleet { profiles }
+    }
+
+    /// Table 5 geo-distributed testbed: 10 clients whose compute/network
+    /// spread mirrors the paper's VM fleet (GPU class → compute speed;
+    /// distance from the Ulanqab parameter server → link rate).
+    pub fn testbed(rng: &mut Rng) -> Fleet {
+        // (relative compute speed, relative link quality)
+        // P100 ≈ 1.6× T4; 8-vCPU ≈ 1.3× 4-vCPU; farther city → slower link.
+        let spec: [(f64, f64); 10] = [
+            (1.6 * 1.3, 0.55), // c0 P100, Guangzhou (far)
+            (1.3, 0.80),       // c1 T4 8v, Nanjing
+            (1.3, 0.80),       // c2 T4 8v, Nanjing
+            (1.0, 0.95),       // c3 T4 4v, Beijing (near)
+            (1.0, 0.95),       // c4
+            (1.0, 1.00),       // c5 Zhangjiakou (nearest)
+            (1.0, 1.00),       // c6
+            (1.0, 0.55),       // c7 Guangzhou
+            (1.0, 0.55),       // c8
+            (1.6 * 1.3, 0.70), // c9 P100, Shanghai
+        ];
+        let profiles = spec
+            .iter()
+            .map(|&(speed, link)| DeviceProfile {
+                cycles_per_sample: 3e6 * rng.range_f64(0.95, 1.05),
+                cpu_hz: 3e9 * speed,
+                up_bps: 3e4 * link * rng.range_f64(0.95, 1.05),
+                down_bps: 12e4 * link * rng.range_f64(0.95, 1.05),
+            })
+            .collect();
+        Fleet { profiles }
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+}
+
+/// One client's round timing (Eq. 12 inner term).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundTiming {
+    pub t_down: f64,
+    pub t_cmp: f64,
+    pub t_up: f64,
+}
+
+impl RoundTiming {
+    pub fn total(&self) -> f64 {
+        self.t_down + self.t_cmp + self.t_up
+    }
+}
+
+/// The synchronous-round virtual clock: t_server = max_n(total_n).
+#[derive(Clone, Debug, Default)]
+pub struct VirtualClock {
+    now: f64,
+    rounds: usize,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance by one synchronous round; returns the round's duration.
+    pub fn advance_round(&mut self, timings: &[RoundTiming]) -> f64 {
+        let dur = timings.iter().map(|t| t.total()).fold(0.0, f64::max);
+        self.now += dur;
+        self.rounds += 1;
+        dur
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_formulas() {
+        let p = DeviceProfile {
+            cycles_per_sample: 2e6,
+            cpu_hz: 1e9,
+            up_bps: 1e4,
+            down_bps: 4e4,
+        };
+        assert!((p.t_cmp(100) - 0.2).abs() < 1e-12); // 2e8 cycles / 1e9 Hz
+        assert!((p.t_up(1e4) - 8.0).abs() < 1e-12); // 8e4 bits / 1e4 bps
+        assert!((p.t_down(1e4) - 2.0).abs() < 1e-12);
+        assert!((p.sec_per_byte() - (8e-4 + 2e-4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shannon_rate_monotone_in_power() {
+        let r1 = shannon_rate_bps(1e4, 0.1, 1.0, 1e-3);
+        let r2 = shannon_rate_bps(1e4, 0.2, 1.0, 1e-3);
+        assert!(r2 > r1);
+    }
+
+    #[test]
+    fn fleet_within_table4_ranges() {
+        let mut rng = Rng::new(0);
+        let fleet = Fleet::simulated(100, &mut rng);
+        assert_eq!(fleet.len(), 100);
+        for p in &fleet.profiles {
+            assert!((1e4..=5e4).contains(&p.up_bps));
+            assert!((4e4..=20e4).contains(&p.down_bps));
+            assert!((1e9..=10e9).contains(&p.cpu_hz));
+            assert!((1e6..=10e6).contains(&p.cycles_per_sample));
+        }
+    }
+
+    #[test]
+    fn testbed_has_ten_heterogeneous_clients() {
+        let mut rng = Rng::new(1);
+        let fleet = Fleet::testbed(&mut rng);
+        assert_eq!(fleet.len(), 10);
+        let ups: Vec<f64> = fleet.profiles.iter().map(|p| p.up_bps).collect();
+        let spread = ups.iter().cloned().fold(f64::MIN, f64::max)
+            / ups.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 1.5, "geo spread too small: {spread}");
+    }
+
+    #[test]
+    fn clock_takes_round_max() {
+        let mut clk = VirtualClock::new();
+        let dur = clk.advance_round(&[
+            RoundTiming { t_down: 1.0, t_cmp: 1.0, t_up: 1.0 },
+            RoundTiming { t_down: 0.0, t_cmp: 5.0, t_up: 0.0 },
+        ]);
+        assert_eq!(dur, 5.0);
+        assert_eq!(clk.now(), 5.0);
+        clk.advance_round(&[RoundTiming { t_down: 0.5, t_cmp: 0.0, t_up: 0.0 }]);
+        assert_eq!(clk.now(), 5.5);
+        assert_eq!(clk.rounds(), 2);
+    }
+}

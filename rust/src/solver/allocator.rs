@@ -1,0 +1,362 @@
+//! Dropout-rate allocation (paper Eq. 14–17).
+//!
+//! Problem (per round, solved by the server):
+//!
+//! ```text
+//! min_{D, t}  t + δ Σ_n re_n D_n
+//! s.t.        0 ≤ D_n ≤ D_max
+//!             Σ_n U_n (1 - D_n) = A_server Σ_n U_n      (byte budget)
+//!             t ≥ t_n^cmp + U_n (1 - D_n) (1/r_u + 1/r_d)  ∀n
+//! ```
+//!
+//! Two solvers:
+//! * [`allocate_lp`] — builds the LP and calls the simplex (reference).
+//! * [`allocate_fast`] — ternary search over the deadline `t`; for fixed
+//!   `t` each client has a dropout lower bound `L_n(t)`, and the byte
+//!   budget is filled greedily in increasing penalty-density order
+//!   (δ·re_n/U_n). O(N log N) per probe; exact for this LP structure.
+//!
+//! Property tests assert both agree in objective across random instances.
+
+use super::lp::{Cmp, Lp};
+
+/// Per-client inputs (all in consistent units; we use bytes and seconds).
+#[derive(Clone, Debug)]
+pub struct AllocInput {
+    /// U_n — full local model size in bytes.
+    pub u_bytes: f64,
+    /// t_n^cmp — local training time for the round (Eq. 7).
+    pub t_cmp: f64,
+    /// 1/r_u + 1/r_d — seconds per byte over both links (Eq. 9/11).
+    pub sec_per_byte: f64,
+    /// re_n — data/model-heterogeneity regularizer (Eq. 13).
+    pub re: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct AllocParams {
+    /// D_max — maximal dropout rate (e.g. 0.8).
+    pub d_max: f64,
+    /// A_server — required fraction of total parameter bytes (e.g. 0.6).
+    pub a_server: f64,
+    /// δ — penalty factor trading round time against heterogeneity terms.
+    pub delta: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// D_n per client.
+    pub d: Vec<f64>,
+    /// Achieved round deadline max_n(t_cmp + upload/download time).
+    pub t_server: f64,
+    /// Objective value t + δ Σ re_n D_n.
+    pub objective: f64,
+}
+
+/// The actual round time induced by a dropout vector.
+pub fn round_time(inputs: &[AllocInput], d: &[f64]) -> f64 {
+    inputs
+        .iter()
+        .zip(d)
+        .map(|(c, &dn)| c.t_cmp + c.u_bytes * (1.0 - dn) * c.sec_per_byte)
+        .fold(0.0, f64::max)
+}
+
+fn objective(inputs: &[AllocInput], p: &AllocParams, d: &[f64]) -> f64 {
+    round_time(inputs, d)
+        + p.delta
+            * inputs
+                .iter()
+                .zip(d)
+                .map(|(c, &dn)| c.re * dn)
+                .sum::<f64>()
+}
+
+/// Feasibility: the budget must be reachable with D ∈ [0, D_max].
+pub fn feasible(inputs: &[AllocInput], p: &AllocParams) -> bool {
+    let total: f64 = inputs.iter().map(|c| c.u_bytes).sum();
+    let dropped = (1.0 - p.a_server) * total;
+    dropped >= -1e-9 && dropped <= p.d_max * total + 1e-9
+}
+
+/// Reference solver via the general simplex.
+pub fn allocate_lp(inputs: &[AllocInput], p: &AllocParams) -> anyhow::Result<Allocation> {
+    anyhow::ensure!(feasible(inputs, p), "infeasible: A_server={} D_max={}", p.a_server, p.d_max);
+    let n = inputs.len();
+    // variables: x[0..n] = D_n, x[n] = t
+    let mut c = vec![0.0f64; n + 1];
+    for (i, inp) in inputs.iter().enumerate() {
+        c[i] = p.delta * inp.re;
+    }
+    c[n] = 1.0;
+    let mut lp = Lp::new(n + 1, c);
+    // D_n <= d_max
+    for i in 0..n {
+        let mut row = vec![0.0; n + 1];
+        row[i] = 1.0;
+        lp.add_row(row, Cmp::Le, p.d_max);
+    }
+    // budget equality: Σ U_n D_n = (1 - A) Σ U_n
+    let total: f64 = inputs.iter().map(|x| x.u_bytes).sum();
+    let mut row = vec![0.0; n + 1];
+    for (i, inp) in inputs.iter().enumerate() {
+        row[i] = inp.u_bytes;
+    }
+    lp.add_row(row, Cmp::Eq, (1.0 - p.a_server) * total);
+    // deadline rows: a_n D_n + t >= t_cmp_n + a_n  with a_n = U_n * spb
+    for (i, inp) in inputs.iter().enumerate() {
+        let a = inp.u_bytes * inp.sec_per_byte;
+        let mut row = vec![0.0; n + 1];
+        row[i] = a;
+        row[n] = 1.0;
+        lp.add_row(row, Cmp::Ge, inp.t_cmp + a);
+    }
+    let sol = lp.solve().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let d = sol.x[..n].to_vec();
+    Ok(Allocation {
+        t_server: round_time(inputs, &d),
+        objective: objective(inputs, p, &d),
+        d,
+    })
+}
+
+/// Fast structured solver (the production path).
+pub fn allocate_fast(inputs: &[AllocInput], p: &AllocParams) -> anyhow::Result<Allocation> {
+    anyhow::ensure!(feasible(inputs, p), "infeasible: A_server={} D_max={}", p.a_server, p.d_max);
+    let n = inputs.len();
+    let budget_drop: f64 =
+        (1.0 - p.a_server) * inputs.iter().map(|x| x.u_bytes).sum::<f64>();
+
+    // Order clients by penalty density (cheapest dropout first).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| {
+        let di = inputs[i].re / inputs[i].u_bytes;
+        let dj = inputs[j].re / inputs[j].u_bytes;
+        di.partial_cmp(&dj).unwrap()
+    });
+
+    // For a candidate deadline t, the minimal-dropout profile.
+    let lower = |t: f64| -> Option<Vec<f64>> {
+        let mut l = Vec::with_capacity(n);
+        for inp in inputs {
+            let a = inp.u_bytes * inp.sec_per_byte;
+            let lb = if a <= 0.0 { 0.0 } else { (1.0 - (t - inp.t_cmp) / a).max(0.0) };
+            if lb > p.d_max + 1e-12 {
+                return None; // this deadline is unreachable even at D_max
+            }
+            l.push(lb.min(p.d_max));
+        }
+        Some(l)
+    };
+
+    // Given t: start at the lower bounds, greedily add dropout to the
+    // cheapest clients until the budget equality holds.
+    let profile = |t: f64| -> Option<Vec<f64>> {
+        let mut d = lower(t)?;
+        let mut dropped: f64 =
+            d.iter().zip(inputs).map(|(dn, c)| dn * c.u_bytes).sum();
+        if dropped > budget_drop + 1e-6 {
+            return None; // deadline too tight: lower bounds exceed budget
+        }
+        for &i in &order {
+            if dropped >= budget_drop - 1e-12 {
+                break;
+            }
+            let room = (p.d_max - d[i]) * inputs[i].u_bytes;
+            let take = room.min(budget_drop - dropped);
+            d[i] += take / inputs[i].u_bytes;
+            dropped += take;
+        }
+        Some(d)
+    };
+
+    // Search range for t.
+    let t_lo = inputs
+        .iter()
+        .map(|c| c.t_cmp + c.u_bytes * (1.0 - p.d_max) * c.sec_per_byte)
+        .fold(0.0, f64::max);
+    let t_hi = inputs
+        .iter()
+        .map(|c| c.t_cmp + c.u_bytes * c.sec_per_byte)
+        .fold(0.0, f64::max);
+
+    let eval = |t: f64| -> Option<(f64, Vec<f64>)> {
+        let d = profile(t)?;
+        Some((objective(inputs, p, &d), d))
+    };
+
+    // Find the smallest feasible t by bisection (profile() is monotone in
+    // feasibility), then ternary-search the convex objective on
+    // [t_feas, t_hi].
+    let mut lo = t_lo;
+    let mut hi = t_hi;
+    if eval(lo).is_none() {
+        for _ in 0..100 {
+            let mid = 0.5 * (lo + hi);
+            if eval(mid).is_some() {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        lo = hi;
+    }
+    let mut a = lo;
+    let mut b = t_hi.max(lo);
+    for _ in 0..200 {
+        let m1 = a + (b - a) / 3.0;
+        let m2 = b - (b - a) / 3.0;
+        let f1 = eval(m1).map(|x| x.0).unwrap_or(f64::INFINITY);
+        let f2 = eval(m2).map(|x| x.0).unwrap_or(f64::INFINITY);
+        if f1 <= f2 {
+            b = m2;
+        } else {
+            a = m1;
+        }
+    }
+    // Probe the endpoints too (piecewise-linear kinks).
+    let mut best: Option<(f64, Vec<f64>)> = None;
+    for t in [a, 0.5 * (a + b), b, lo, t_hi] {
+        if let Some((obj, d)) = eval(t) {
+            if best.as_ref().map(|(o, _)| obj < *o - 1e-12).unwrap_or(true) {
+                best = Some((obj, d));
+            }
+        }
+    }
+    let (obj, d) = best.ok_or_else(|| anyhow::anyhow!("no feasible deadline"))?;
+    Ok(Allocation { t_server: round_time(inputs, &d), objective: obj, d })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, close};
+    use crate::util::rng::Rng;
+
+    fn random_instance(rng: &mut Rng, n: usize) -> (Vec<AllocInput>, AllocParams) {
+        let inputs: Vec<AllocInput> = (0..n)
+            .map(|_| AllocInput {
+                u_bytes: rng.range_f64(1e4, 1e6),
+                t_cmp: rng.range_f64(0.1, 5.0),
+                sec_per_byte: rng.range_f64(1e-6, 1e-4),
+                re: rng.range_f64(0.0, 1.0),
+            })
+            .collect();
+        let d_max = rng.range_f64(0.5, 0.9);
+        let a_server = rng.range_f64(1.0 - d_max + 0.05, 0.95);
+        let p = AllocParams { d_max, a_server, delta: rng.range_f64(0.0, 5.0) };
+        (inputs, p)
+    }
+
+    #[test]
+    fn budget_equality_holds() {
+        check("fast allocator meets byte budget", 40, |rng| {
+            let n = rng.int_range(2, 30);
+            let (inputs, p) = random_instance(rng, n);
+            let alloc = allocate_fast(&inputs, &p).map_err(|e| e.to_string())?;
+            let total: f64 = inputs.iter().map(|c| c.u_bytes).sum();
+            let uploaded: f64 = inputs
+                .iter()
+                .zip(&alloc.d)
+                .map(|(c, &d)| c.u_bytes * (1.0 - d))
+                .sum();
+            close(uploaded, p.a_server * total, 1e-6)?;
+            if alloc.d.iter().any(|&d| !(-1e-9..=p.d_max + 1e-9).contains(&d)) {
+                return Err(format!("bounds violated: {:?}", alloc.d));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fast_matches_simplex_objective() {
+        check("fast == simplex", 25, |rng| {
+            let n = rng.int_range(2, 12);
+            let (inputs, p) = random_instance(rng, n);
+            let f = allocate_fast(&inputs, &p).map_err(|e| e.to_string())?;
+            let l = allocate_lp(&inputs, &p).map_err(|e| e.to_string())?;
+            close(f.objective, l.objective, 1e-4)
+        });
+    }
+
+    #[test]
+    fn stragglers_get_higher_dropout() {
+        // Identical clients except client 0 is much slower -> D_0 highest.
+        let mut inputs: Vec<AllocInput> = (0..5)
+            .map(|_| AllocInput {
+                u_bytes: 1e5,
+                t_cmp: 1.0,
+                sec_per_byte: 1e-5,
+                re: 0.5,
+            })
+            .collect();
+        inputs[0].sec_per_byte = 1e-4;
+        let p = AllocParams { d_max: 0.8, a_server: 0.6, delta: 0.1 };
+        let alloc = allocate_fast(&inputs, &p).unwrap();
+        let d0 = alloc.d[0];
+        assert!(
+            alloc.d[1..].iter().all(|&d| d <= d0 + 1e-9),
+            "{:?}",
+            alloc.d
+        );
+    }
+
+    #[test]
+    fn high_re_clients_get_lower_dropout() {
+        // All same speed; client 0 has much higher regularizer.
+        let inputs: Vec<AllocInput> = (0..4)
+            .map(|i| AllocInput {
+                u_bytes: 1e5,
+                t_cmp: 1.0,
+                sec_per_byte: 1e-5,
+                re: if i == 0 { 10.0 } else { 0.1 },
+            })
+            .collect();
+        let p = AllocParams { d_max: 0.8, a_server: 0.6, delta: 1.0 };
+        let alloc = allocate_fast(&inputs, &p).unwrap();
+        assert!(
+            alloc.d[0] <= alloc.d[1..].iter().fold(1.0f64, |a, &b| a.min(b)) + 1e-9,
+            "{:?}",
+            alloc.d
+        );
+    }
+
+    #[test]
+    fn a_server_one_means_no_dropout() {
+        let (inputs, _) = random_instance(&mut Rng::new(5), 6);
+        let p = AllocParams { d_max: 0.8, a_server: 1.0, delta: 1.0 };
+        let alloc = allocate_fast(&inputs, &p).unwrap();
+        assert!(alloc.d.iter().all(|&d| d.abs() < 1e-9));
+    }
+
+    #[test]
+    fn infeasible_budget_rejected() {
+        let (inputs, _) = random_instance(&mut Rng::new(6), 4);
+        let p = AllocParams { d_max: 0.2, a_server: 0.5, delta: 1.0 };
+        assert!(allocate_fast(&inputs, &p).is_err());
+        assert!(allocate_lp(&inputs, &p).is_err());
+    }
+
+    #[test]
+    fn deadline_reported_matches_profile() {
+        let (inputs, p) = random_instance(&mut Rng::new(7), 10);
+        let alloc = allocate_fast(&inputs, &p).unwrap();
+        close(alloc.t_server, round_time(&inputs, &alloc.d), 1e-12).unwrap();
+    }
+
+    #[test]
+    fn delta_zero_minimizes_pure_time() {
+        check("delta=0 -> time no worse than delta>0", 20, |rng| {
+            let (inputs, mut p) = random_instance(rng, 8);
+            p.delta = 0.0;
+            let t0 = allocate_fast(&inputs, &p).map_err(|e| e.to_string())?.t_server;
+            p.delta = 5.0;
+            let t5 = allocate_fast(&inputs, &p).map_err(|e| e.to_string())?.t_server;
+            if t0 <= t5 + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("t(δ=0)={t0} > t(δ=5)={t5}"))
+            }
+        });
+    }
+}

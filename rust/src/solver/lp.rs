@@ -1,0 +1,394 @@
+//! Dense two-phase primal simplex with Bland's rule.
+//!
+//! General enough for the Eq. 16/17 LP (≤ / ≥ / = rows, non-negative
+//! variables; upper bounds are rows). Problem sizes here are ~100×300, far
+//! below anything needing a revised/sparse implementation.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmp {
+    Le,
+    Ge,
+    Eq,
+}
+
+#[derive(Clone, Debug)]
+pub struct Lp {
+    /// Number of structural variables (all constrained x >= 0).
+    pub n: usize,
+    /// Objective coefficients (minimized).
+    pub c: Vec<f64>,
+    /// Rows: (coefficients over structural vars, comparator, rhs).
+    pub rows: Vec<(Vec<f64>, Cmp, f64)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub x: Vec<f64>,
+    pub objective: f64,
+}
+
+#[derive(Debug)]
+pub enum LpError {
+    Infeasible,
+    Unbounded,
+    NumericFailure(&'static str),
+}
+
+impl std::fmt::Display for LpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LpError::Infeasible => write!(f, "LP infeasible"),
+            LpError::Unbounded => write!(f, "LP unbounded"),
+            LpError::NumericFailure(m) => write!(f, "LP numeric failure: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for LpError {}
+
+const EPS: f64 = 1e-9;
+const MAX_PIVOTS: usize = 200_000;
+
+impl Lp {
+    pub fn new(n: usize, c: Vec<f64>) -> Lp {
+        assert_eq!(c.len(), n);
+        Lp { n, c, rows: Vec::new() }
+    }
+
+    pub fn add_row(&mut self, coeffs: Vec<f64>, cmp: Cmp, rhs: f64) {
+        assert_eq!(coeffs.len(), self.n);
+        self.rows.push((coeffs, cmp, rhs));
+    }
+
+    /// Solve min cᵀx s.t. rows, x ≥ 0.
+    pub fn solve(&self) -> Result<LpSolution, LpError> {
+        let m = self.rows.len();
+        if m == 0 {
+            // Unconstrained over x >= 0: optimum at 0 unless some cost is
+            // negative (then the LP is unbounded below).
+            if self.c.iter().any(|&c| c < 0.0) {
+                return Err(LpError::Unbounded);
+            }
+            return Ok(LpSolution { x: vec![0.0; self.n], objective: 0.0 });
+        }
+        // Normalize rows to b >= 0.
+        let mut rows: Vec<(Vec<f64>, Cmp, f64)> = self
+            .rows
+            .iter()
+            .map(|(a, cmp, b)| {
+                if *b < 0.0 {
+                    let flipped = match cmp {
+                        Cmp::Le => Cmp::Ge,
+                        Cmp::Ge => Cmp::Le,
+                        Cmp::Eq => Cmp::Eq,
+                    };
+                    (a.iter().map(|x| -x).collect(), flipped, -b)
+                } else {
+                    (a.clone(), *cmp, *b)
+                }
+            })
+            .collect();
+
+        // Column layout: [structural | slacks/surplus | artificials | rhs]
+        let mut n_slack = 0;
+        let mut n_art = 0;
+        for (_, cmp, _) in &rows {
+            match cmp {
+                Cmp::Le => n_slack += 1,
+                Cmp::Ge => {
+                    n_slack += 1;
+                    n_art += 1;
+                }
+                Cmp::Eq => n_art += 1,
+            }
+        }
+        let ncols = self.n + n_slack + n_art + 1;
+        let rhs_col = ncols - 1;
+        let mut tab = vec![vec![0.0f64; ncols]; m];
+        let mut basis = vec![usize::MAX; m];
+        let mut slack_i = self.n;
+        let mut art_i = self.n + n_slack;
+        let mut art_cols = Vec::new();
+        for (r, (a, cmp, b)) in rows.drain(..).enumerate() {
+            tab[r][..self.n].copy_from_slice(&a);
+            tab[r][rhs_col] = b;
+            match cmp {
+                Cmp::Le => {
+                    tab[r][slack_i] = 1.0;
+                    basis[r] = slack_i;
+                    slack_i += 1;
+                }
+                Cmp::Ge => {
+                    tab[r][slack_i] = -1.0;
+                    slack_i += 1;
+                    tab[r][art_i] = 1.0;
+                    basis[r] = art_i;
+                    art_cols.push(art_i);
+                    art_i += 1;
+                }
+                Cmp::Eq => {
+                    tab[r][art_i] = 1.0;
+                    basis[r] = art_i;
+                    art_cols.push(art_i);
+                    art_i += 1;
+                }
+            }
+        }
+
+        // ---- Phase 1: minimize sum of artificials ----
+        if n_art > 0 {
+            let mut z = vec![0.0f64; ncols];
+            for r in 0..m {
+                if art_cols.contains(&basis[r]) {
+                    for c in 0..ncols {
+                        z[c] += tab[r][c];
+                    }
+                }
+            }
+            // reduced costs: for artificial objective, cost=1 on artificials
+            // z currently holds sum of basic artificial rows.
+            simplex_iterate(&mut tab, &mut basis, &mut z, |col| {
+                if art_cols.contains(&col) {
+                    1.0
+                } else {
+                    0.0
+                }
+            })?;
+            if z[rhs_col] > 1e-7 {
+                return Err(LpError::Infeasible);
+            }
+            // Drive any artificial still in the basis out (degenerate).
+            for r in 0..m {
+                if art_cols.contains(&basis[r]) {
+                    if let Some(col) = (0..self.n + n_slack)
+                        .find(|&c| tab[r][c].abs() > EPS)
+                    {
+                        pivot(&mut tab, &mut basis, r, col);
+                    }
+                }
+            }
+        }
+
+        // ---- Phase 2: original objective ----
+        let cost = |col: usize| -> f64 {
+            if col < self.n {
+                self.c[col]
+            } else {
+                0.0
+            }
+        };
+        // z row: z[c] = c_B^T B^-1 A_c - c_c form; build from basis.
+        let mut z = vec![0.0f64; ncols];
+        for r in 0..m {
+            let cb = cost(basis[r]);
+            if cb != 0.0 {
+                for c in 0..ncols {
+                    z[c] += cb * tab[r][c];
+                }
+            }
+        }
+        // forbid artificial columns re-entering by treating them as +inf cost:
+        for &a in &art_cols {
+            z[a] = f64::NEG_INFINITY; // reduced cost z[a]-cost(a) very negative -> never entering
+        }
+        simplex_iterate(&mut tab, &mut basis, &mut z, cost)?;
+
+        let mut x = vec![0.0f64; self.n];
+        for r in 0..m {
+            if basis[r] < self.n {
+                x[basis[r]] = tab[r][rhs_col];
+            }
+        }
+        let objective = x.iter().zip(&self.c).map(|(a, b)| a * b).sum();
+        Ok(LpSolution { x, objective })
+    }
+}
+
+/// Pivot-until-optimal. `z` is maintained as c_B^T B^-1 A (so the reduced
+/// cost of column j is z[j] - cost(j); entering columns have positive
+/// reduced cost for a minimization tableau in this orientation).
+fn simplex_iterate(
+    tab: &mut [Vec<f64>],
+    basis: &mut [usize],
+    z: &mut [f64],
+    cost: impl Fn(usize) -> f64,
+) -> Result<(), LpError> {
+    let m = tab.len();
+    let ncols = tab[0].len();
+    let rhs_col = ncols - 1;
+    for _ in 0..MAX_PIVOTS {
+        // Bland: smallest-index column with positive reduced cost.
+        let mut entering = None;
+        for c in 0..rhs_col {
+            let rc = z[c] - cost(c);
+            if rc > 1e-9 && z[c].is_finite() {
+                entering = Some(c);
+                break;
+            }
+        }
+        let Some(col) = entering else { return Ok(()) };
+        // Ratio test (Bland tie-break on basis index).
+        let mut leave: Option<(usize, f64)> = None;
+        for r in 0..m {
+            if tab[r][col] > EPS {
+                let ratio = tab[r][rhs_col] / tab[r][col];
+                match leave {
+                    None => leave = Some((r, ratio)),
+                    Some((lr, lratio)) => {
+                        if ratio < lratio - EPS
+                            || (ratio < lratio + EPS && basis[r] < basis[lr])
+                        {
+                            leave = Some((r, ratio));
+                        }
+                    }
+                }
+            }
+        }
+        let Some((row, _)) = leave else {
+            return Err(LpError::Unbounded);
+        };
+        pivot_with_z(tab, basis, z, row, col, &cost);
+    }
+    Err(LpError::NumericFailure("pivot limit"))
+}
+
+fn pivot(tab: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize) {
+    let ncols = tab[0].len();
+    let piv = tab[row][col];
+    for c in 0..ncols {
+        tab[row][c] /= piv;
+    }
+    for r in 0..tab.len() {
+        if r != row && tab[r][col].abs() > 0.0 {
+            let f = tab[r][col];
+            for c in 0..ncols {
+                tab[r][c] -= f * tab[row][c];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+fn pivot_with_z(
+    tab: &mut [Vec<f64>],
+    basis: &mut [usize],
+    z: &mut [f64],
+    row: usize,
+    col: usize,
+    cost: &impl Fn(usize) -> f64,
+) {
+    pivot(tab, basis, row, col);
+    // Rebuild z from scratch (m is small; keeps numerics clean).
+    let ncols = tab[0].len();
+    let frozen: Vec<bool> = z.iter().map(|v| v.is_infinite()).collect();
+    for zc in z.iter_mut() {
+        if zc.is_finite() {
+            *zc = 0.0;
+        } else {
+            *zc = f64::NEG_INFINITY;
+        }
+    }
+    for r in 0..tab.len() {
+        let cb = cost(basis[r]);
+        if cb != 0.0 {
+            for c in 0..ncols {
+                if !frozen[c] {
+                    z[c] += cb * tab[r][c];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} != {b}");
+    }
+
+    #[test]
+    fn simple_min_le() {
+        // min -x - y s.t. x + y <= 4, x <= 2  -> x=2, y=2, obj=-4
+        let mut lp = Lp::new(2, vec![-1.0, -1.0]);
+        lp.add_row(vec![1.0, 1.0], Cmp::Le, 4.0);
+        lp.add_row(vec![1.0, 0.0], Cmp::Le, 2.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.objective, -4.0);
+        assert_close(s.x[0] + s.x[1], 4.0);
+    }
+
+    #[test]
+    fn equality_and_ge() {
+        // min x + 2y s.t. x + y = 3, x >= 1  -> x=3,y=0 obj=3
+        let mut lp = Lp::new(2, vec![1.0, 2.0]);
+        lp.add_row(vec![1.0, 1.0], Cmp::Eq, 3.0);
+        lp.add_row(vec![1.0, 0.0], Cmp::Ge, 1.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.objective, 3.0);
+        assert_close(s.x[0], 3.0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut lp = Lp::new(1, vec![1.0]);
+        lp.add_row(vec![1.0], Cmp::Le, 1.0);
+        lp.add_row(vec![1.0], Cmp::Ge, 2.0);
+        assert!(matches!(lp.solve(), Err(LpError::Infeasible)));
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x, x >= 0, no upper bound
+        let lp = Lp::new(1, vec![-1.0]);
+        assert!(matches!(lp.solve(), Err(LpError::Unbounded)));
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // min x s.t. -x <= -2  (i.e. x >= 2)
+        let mut lp = Lp::new(1, vec![1.0]);
+        lp.add_row(vec![-1.0], Cmp::Le, -2.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.x[0], 2.0);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Beale-like degeneracy smoke: solved without hitting pivot limit.
+        let mut lp = Lp::new(4, vec![-0.75, 150.0, -0.02, 6.0]);
+        lp.add_row(vec![0.25, -60.0, -0.04, 9.0], Cmp::Le, 0.0);
+        lp.add_row(vec![0.5, -90.0, -0.02, 3.0], Cmp::Le, 0.0);
+        lp.add_row(vec![0.0, 0.0, 1.0, 0.0], Cmp::Le, 1.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.objective, -0.05);
+    }
+
+    #[test]
+    fn random_lps_satisfy_kkt_feasibility() {
+        use crate::util::proptest::check;
+        use crate::util::rng::Rng;
+        check("lp solutions are feasible", 40, |rng: &mut Rng| {
+            let n = rng.int_range(2, 6);
+            let m = rng.int_range(1, 5);
+            let c: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 2.0)).collect();
+            let mut lp = Lp::new(n, c);
+            for _ in 0..m {
+                let a: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 1.0)).collect();
+                lp.add_row(a, Cmp::Ge, rng.range_f64(0.5, 3.0));
+            }
+            let s = lp.solve().map_err(|e| format!("{e}"))?;
+            for (a, _, b) in &lp.rows {
+                let lhs: f64 = a.iter().zip(&s.x).map(|(x, y)| x * y).sum();
+                if lhs < b - 1e-6 {
+                    return Err(format!("row violated: {lhs} < {b}"));
+                }
+            }
+            if s.x.iter().any(|&x| x < -1e-9) {
+                return Err("negative variable".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! The dropout-rate allocation solver (paper §4.1, Eq. 14–17).
+//!
+//! Two independent implementations, cross-validated by property tests:
+//!
+//! * [`lp`] — a general dense **two-phase simplex** (the offline stand-in
+//!   for the paper's CVXOPT/GUROBI call); exact for this LP class.
+//! * [`allocator`] — a **specialized O(N log N)** solver exploiting the
+//!   problem structure (ternary search over the round deadline `t`, greedy
+//!   budget fill by penalty density) — the production hot path.
+
+pub mod allocator;
+pub mod lp;
+
+pub use allocator::{allocate_fast, allocate_lp, AllocInput, AllocParams, Allocation};
+pub use lp::{Cmp, Lp, LpError, LpSolution};

@@ -1,0 +1,134 @@
+//! Dense f32 tensor substrate for the coordinator-side hot paths
+//! (aggregation, masking, importance reductions) and for test oracles.
+//!
+//! Model *training* math runs in the AOT XLA executables; this module owns
+//! the server-side parameter manipulation where the FedDD contribution
+//! lives. The layout is always a flat `Vec<f32>` plus a shape, and model
+//! parameter sets are `Vec<Tensor>` ordered exactly like the artifact
+//! manifest's `params` list.
+
+mod ops;
+
+pub use ops::*;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn from_scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![1], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Rows of a 2-D (or flattened-leading) tensor: number of elements in
+    /// dims 1.. — used to slice per-unit parameter groups.
+    pub fn row_size(&self) -> usize {
+        if self.shape.len() <= 1 {
+            1
+        } else {
+            self.shape[1..].iter().product()
+        }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+/// A full model parameter set (ordered like the manifest).
+pub type Params = Vec<Tensor>;
+
+/// Total element count of a parameter set.
+pub fn params_numel(params: &[Tensor]) -> usize {
+    params.iter().map(|t| t.numel()).sum()
+}
+
+/// Deep elementwise binary op over parameter sets.
+pub fn params_zip_mut(a: &mut [Tensor], b: &[Tensor], f: impl Fn(&mut f32, f32)) {
+    assert_eq!(a.len(), b.len());
+    for (ta, tb) in a.iter_mut().zip(b) {
+        assert_eq!(ta.shape(), tb.shape());
+        for (x, &y) in ta.data_mut().iter_mut().zip(tb.data()) {
+            f(x, y);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_shape() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.row_size(), 3);
+        assert_eq!(Tensor::zeros(vec![4]).data(), &[0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn params_zip() {
+        let mut a = vec![Tensor::full(vec![3], 1.0)];
+        let b = vec![Tensor::full(vec![3], 2.0)];
+        params_zip_mut(&mut a, &b, |x, y| *x += y);
+        assert_eq!(a[0].data(), &[3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn l2_norm() {
+        let t = Tensor::new(vec![2], vec![3.0, 4.0]);
+        assert!((t.l2_norm() - 5.0).abs() < 1e-6);
+    }
+}

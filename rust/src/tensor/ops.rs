@@ -1,0 +1,138 @@
+//! Elementwise / linear-algebra kernels on flat f32 slices. Written as
+//! straight loops over exact-length slices so LLVM auto-vectorizes them
+//! (the aggregation path is the L3 byte-moving hot loop — see
+//! EXPERIMENTS.md §Perf).
+
+use super::Tensor;
+
+/// y += alpha * x
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y += alpha * (x ⊙ m)  — masked accumulate (Eq. 4 numerator).
+pub fn axpy_masked(y: &mut [f32], alpha: f32, x: &[f32], m: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    assert_eq!(y.len(), m.len());
+    for ((yi, xi), mi) in y.iter_mut().zip(x).zip(m) {
+        *yi += alpha * xi * mi;
+    }
+}
+
+/// out[i] = if den[i] > 0 { num[i]/den[i] } else { prev[i] }  (Eq. 4).
+pub fn masked_div(out: &mut [f32], num: &[f32], den: &[f32], prev: &[f32]) {
+    assert!(out.len() == num.len() && num.len() == den.len() && den.len() == prev.len());
+    for i in 0..out.len() {
+        out[i] = if den[i] > 0.0 { num[i] / den[i] } else { prev[i] };
+    }
+}
+
+/// w = w ⊙ m + v ⊙ (1 - m)   (Eq. 5 local merge; m is 0/1).
+pub fn merge_masked(w: &mut [f32], v: &[f32], m: &[f32]) {
+    assert!(w.len() == v.len() && v.len() == m.len());
+    for i in 0..w.len() {
+        w[i] = w[i] * m[i] + v[i] * (1.0 - m[i]);
+    }
+}
+
+/// Importance elementwise scores |dw * (w+dw) / w_safe| (Eq. 20), the rust
+/// mirror of the Pallas `importance_flat` kernel (cross-checked in the
+/// runtime integration tests).
+pub const IMPORTANCE_EPS: f32 = 1e-8;
+
+pub fn importance_scores(out: &mut [f32], w: &[f32], dw: &[f32]) {
+    assert!(out.len() == w.len() && w.len() == dw.len());
+    for i in 0..out.len() {
+        let wi = w[i];
+        let sign = if wi >= 0.0 { 1.0 } else { -1.0 };
+        let w_safe = if wi.abs() < IMPORTANCE_EPS { sign * IMPORTANCE_EPS } else { wi };
+        out[i] = (dw[i] * (wi + dw[i]) / w_safe).abs();
+    }
+}
+
+/// Naive-but-blocked matmul used only by test oracles and the synthetic
+/// data generator (runtime matmuls run inside the XLA executables).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2);
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = ad[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Sum of x ⊙ m (used by upload-size accounting invariants).
+pub fn masked_count(m: &[f32]) -> usize {
+    m.iter().filter(|&&x| x != 0.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = vec![1.0, 2.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0]);
+        assert_eq!(y, vec![21.0, 42.0]);
+    }
+
+    #[test]
+    fn axpy_masked_skips_masked_out() {
+        let mut y = vec![0.0, 0.0];
+        axpy_masked(&mut y, 3.0, &[5.0, 7.0], &[1.0, 0.0]);
+        assert_eq!(y, vec![15.0, 0.0]);
+    }
+
+    #[test]
+    fn masked_div_zero_coverage_keeps_prev() {
+        let mut out = vec![0.0; 3];
+        masked_div(&mut out, &[6.0, 1.0, 9.0], &[2.0, 0.0, 3.0], &[9.9, 7.7, 9.9]);
+        assert_eq!(out, vec![3.0, 7.7, 3.0]);
+    }
+
+    #[test]
+    fn merge_masked_eq5() {
+        // w = global⊙M + local⊙(1-M)
+        let mut w = vec![10.0, 20.0]; // global values
+        merge_masked(&mut w, &[1.0, 2.0], &[1.0, 0.0]);
+        assert_eq!(w, vec![10.0, 2.0]);
+    }
+
+    #[test]
+    fn importance_matches_formula() {
+        let mut out = vec![0.0; 2];
+        importance_scores(&mut out, &[2.0, 0.0], &[1.0, 1.0]);
+        assert!((out[0] - (1.0f32 * 3.0 / 2.0)).abs() < 1e-6);
+        assert!(out[1].is_finite()); // guarded division
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2], vec![1., 1., 1., 1.]);
+        assert_eq!(matmul(&a, &b).data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn masked_count_counts() {
+        assert_eq!(masked_count(&[0.0, 1.0, 2.0, 0.0]), 2);
+    }
+}

@@ -1,0 +1,142 @@
+//! Criterion-free benchmark harness used by `rust/benches/*` (criterion
+//! is unavailable offline). Warms up, runs timed iterations until a time
+//! or count budget is reached, and prints a one-line summary per case
+//! plus machine-readable JSON when `FEDDD_BENCH_JSON` is set.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+pub use std::hint::black_box;
+
+pub struct Bencher {
+    name: String,
+    results: Vec<(String, Summary, f64)>, // (case, per-iter seconds, iters/sec)
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Self {
+        let quick = std::env::var("FEDDD_BENCH_QUICK").is_ok();
+        Bencher {
+            name: name.to_string(),
+            results: Vec::new(),
+            warmup: if quick { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            budget: if quick { Duration::from_millis(300) } else { Duration::from_secs(2) },
+            min_iters: 5,
+        }
+    }
+
+    /// Time `f` (one logical iteration per call).
+    pub fn bench<F: FnMut()>(&mut self, case: &str, mut f: F) {
+        // Warmup.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup || warm_iters < 1 {
+            bb(&mut f)();
+            warm_iters += 1;
+        }
+        // Timed.
+        let mut samples = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget || samples.len() < self.min_iters {
+            let s = Instant::now();
+            bb(&mut f)();
+            samples.push(s.elapsed().as_secs_f64());
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        let summary = Summary::of(&samples);
+        let ips = 1.0 / summary.mean;
+        println!(
+            "{:<44} {:>12} /iter   (p50 {:>10}, n={})  {:>12.1} it/s",
+            format!("{}::{}", self.name, case),
+            fmt_time(summary.mean),
+            fmt_time(summary.p50),
+            summary.n,
+            ips
+        );
+        self.results.push((case.to_string(), summary, ips));
+    }
+
+    /// Report throughput in items/sec for a case processing `items` per iter.
+    pub fn bench_throughput<F: FnMut()>(&mut self, case: &str, items: u64, mut f: F) {
+        self.bench(case, &mut f);
+        if let Some((_, s, _)) = self.results.last() {
+            println!(
+                "{:<44} {:>12.2} M items/s",
+                format!("{}::{} throughput", self.name, case),
+                items as f64 / s.mean / 1e6
+            );
+        }
+    }
+
+    /// Write JSON results if FEDDD_BENCH_JSON names a directory.
+    pub fn finish(self) {
+        if let Ok(dir) = std::env::var("FEDDD_BENCH_JSON") {
+            let cases: Vec<Json> = self
+                .results
+                .iter()
+                .map(|(c, s, ips)| {
+                    Json::obj(vec![
+                        ("case", Json::s(c)),
+                        ("mean_s", Json::Num(s.mean)),
+                        ("p50_s", Json::Num(s.p50)),
+                        ("p90_s", Json::Num(s.p90)),
+                        ("std_s", Json::Num(s.std)),
+                        ("n", Json::Num(s.n as f64)),
+                        ("iters_per_s", Json::Num(*ips)),
+                    ])
+                })
+                .collect();
+            let out = Json::obj(vec![
+                ("bench", Json::s(&self.name)),
+                ("cases", Json::Arr(cases)),
+            ]);
+            let path = std::path::Path::new(&dir).join(format!("{}.json", self.name));
+            let _ = crate::util::json::to_file(&path, &out);
+        }
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_summarizes() {
+        std::env::set_var("FEDDD_BENCH_QUICK", "1");
+        let mut b = Bencher::new("selftest");
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = acc.wrapping_add(black_box(1));
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].1.mean >= 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Tiny `log`-facade backend: leveled stderr logger with wall-clock
+//! timestamps relative to process start (no chrono offline).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static INIT: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    start: Instant,
+    level: Level,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        eprintln!(
+            "[{t:9.3}s {:5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; level from `FEDDD_LOG` (error/warn/info/debug/
+/// trace), default `info`. Safe to call multiple times.
+pub fn init() {
+    if INIT.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("FEDDD_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    let logger = Box::leak(Box::new(StderrLogger { start: Instant::now(), level }));
+    let _ = log::set_logger(logger);
+    log::set_max_level(match level {
+        Level::Error => LevelFilter::Error,
+        Level::Warn => LevelFilter::Warn,
+        Level::Info => LevelFilter::Info,
+        Level::Debug => LevelFilter::Debug,
+        Level::Trace => LevelFilter::Trace,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke");
+    }
+}

@@ -1,0 +1,11 @@
+//! Hand-rolled substrates (the offline image ships no crates.io access
+//! beyond the `xla` closure — see DESIGN.md §3): PRNG, JSON, CLI-free
+//! stats, logging, threadpool, bench harness and a property-test driver.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

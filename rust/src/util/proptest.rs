@@ -1,0 +1,89 @@
+//! Tiny property-testing driver (proptest/quickcheck unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs the closure `cases` times with
+//! independent deterministic RNG streams; on failure it reports the case
+//! seed so the exact instance can be replayed with `replay(seed, ...)`.
+//! Set `FEDDD_PROPTEST_CASES` to scale case counts globally.
+
+use crate::util::rng::Rng;
+
+/// Run `body` over `cases` random cases. `body` returns `Err(msg)` to fail.
+pub fn check<F>(name: &str, cases: usize, mut body: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let cases = std::env::var("FEDDD_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(cases);
+    let base = 0xFEDD_D000u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = body(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn replay<F>(seed: u64, mut body: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = body(&mut rng) {
+        panic!("replay {seed:#x} failed: {msg}");
+    }
+}
+
+/// Assert two f64 are close (absolute + relative tolerance).
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+/// Assert slices are elementwise close.
+pub fn close_slice(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        if (x - y).abs() > tol * scale {
+            return Err(format!("at [{i}]: {x} !~ {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("addition commutes", 50, |rng| {
+            let (a, b) = (rng.f64(), rng.f64());
+            close(a + b, b + a, 1e-12)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_slice_catches_mismatch() {
+        assert!(close_slice(&[1.0, 2.0], &[1.0, 2.5], 1e-3).is_err());
+        assert!(close_slice(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-3).is_ok());
+    }
+}

@@ -1,0 +1,115 @@
+//! Minimal scoped threadpool (tokio is unavailable offline; the FL
+//! round's per-client work is CPU-bound and synchronous anyway).
+//!
+//! `ThreadPool::scoped_map` fans a job per item out to worker threads and
+//! collects results in input order. On the 1-core CI image this degrades
+//! gracefully to near-sequential execution; the coordinator's structure
+//! (one logical task per client) is what we are encoding.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// `workers = 0` ⇒ available_parallelism.
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        ThreadPool { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Apply `f` to every item (in parallel across up to `workers`
+    /// threads), returning outputs in input order. Panics in jobs are
+    /// propagated.
+    pub fn scoped_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let nworkers = self.workers.min(n);
+        if nworkers <= 1 {
+            return items.into_iter().map(f).collect();
+        }
+        let queue = Arc::new(Mutex::new(
+            items.into_iter().enumerate().collect::<Vec<_>>(),
+        ));
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        let fref = &f;
+        thread::scope(|scope| {
+            for _ in 0..nworkers {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                scope.spawn(move || loop {
+                    let item = queue.lock().unwrap().pop();
+                    match item {
+                        Some((i, x)) => {
+                            let r = fref(x);
+                            if tx.send((i, r)).is_err() {
+                                return;
+                            }
+                        }
+                        None => return,
+                    }
+                });
+            }
+            drop(tx);
+            let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+            for (i, r) in rx {
+                out[i] = Some(r);
+            }
+            out.into_iter()
+                .map(|o| o.expect("worker died before producing result"))
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.scoped_map((0..100).collect(), |x: usize| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_fallback() {
+        let pool = ThreadPool::new(1);
+        let out = pool.scoped_map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let pool = ThreadPool::new(4);
+        let out: Vec<i32> = pool.scoped_map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn borrows_environment() {
+        let pool = ThreadPool::new(3);
+        let offset = 10usize;
+        let out = pool.scoped_map(vec![1usize, 2, 3], |x| x + offset);
+        assert_eq!(out, vec![11, 12, 13]);
+    }
+}

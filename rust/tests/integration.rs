@@ -1,0 +1,201 @@
+//! Cross-module integration tests that don't need the training loop:
+//! config -> engine construction, solver parity at fleet scale, manifest
+//! vs registry pinning, selection + aggregation composition.
+
+use feddd::config::ExpConfig;
+use feddd::data::{Partition, PartitionKind, SynthSpec};
+use feddd::model::ModelSpec;
+use feddd::runtime::default_artifacts_dir;
+use feddd::simnet::Fleet;
+use feddd::solver::{allocate_fast, allocate_lp, AllocInput, AllocParams};
+use feddd::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn solver_parity_at_table4_scale() {
+    // 100 clients drawn from the Table 4 distributions; fast == simplex.
+    let mut rng = Rng::new(42);
+    let fleet = Fleet::simulated(100, &mut rng);
+    let spec = ModelSpec::get("cnn2", 1.0).unwrap();
+    let inputs: Vec<AllocInput> = fleet
+        .profiles
+        .iter()
+        .map(|p| AllocInput {
+            u_bytes: spec.size_bytes() as f64,
+            t_cmp: p.t_cmp(64),
+            sec_per_byte: p.sec_per_byte(),
+            re: rng.range_f64(0.0, 0.2),
+        })
+        .collect();
+    let params = AllocParams { d_max: 0.8, a_server: 0.6, delta: 1.0 };
+    let fast = allocate_fast(&inputs, &params).unwrap();
+    let lp = allocate_lp(&inputs, &params).unwrap();
+    assert!(
+        (fast.objective - lp.objective).abs() / lp.objective.max(1.0) < 1e-4,
+        "fast {} vs simplex {}",
+        fast.objective,
+        lp.objective
+    );
+    // budget equality
+    let total: f64 = inputs.iter().map(|i| i.u_bytes).sum();
+    let up: f64 = inputs
+        .iter()
+        .zip(&fast.d)
+        .map(|(i, &d)| i.u_bytes * (1.0 - d))
+        .sum();
+    assert!((up - 0.6 * total).abs() / total < 1e-6);
+}
+
+#[test]
+fn partition_scores_feed_allocator() {
+    let mut rng = Rng::new(7);
+    let ds = SynthSpec::mnist_like().generate(3000, 100, &mut rng);
+    let part = Partition::build(PartitionKind::NonIidB, &ds, 15, &mut rng);
+    let scores = part.distribution_scores(&ds);
+    assert_eq!(scores.len(), 15);
+    // Non-IID-b clients hold <=3 classes => score <= 3 + epsilon
+    assert!(scores.iter().all(|&s| s <= 3.0 + 1e-9), "{scores:?}");
+}
+
+#[test]
+fn engine_builds_all_scheme_and_model_combos() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for (model, ds) in [("mlp", "mnist"), ("het_b", "cifar10")] {
+        for scheme in ["feddd", "fedavg", "fedcs", "oort"] {
+            let mut cfg = ExpConfig::smoke();
+            cfg.n_clients = 5;
+            cfg.test_n = 64;
+            cfg.train_per_client = 40;
+            cfg.model = model.into();
+            cfg.dataset = ds.into();
+            if model == "het_b" {
+                cfg.width_pct = 25;
+            }
+            cfg.scheme = scheme.into();
+            cfg.artifacts_dir =
+                default_artifacts_dir().to_string_lossy().into_owned();
+            let run = feddd::coordinator::FedRun::new(cfg).unwrap();
+            assert_eq!(run.clients.len(), 5);
+            // hetero: coverage rates drop off for the wider layers
+            if model == "het_b" {
+                let first_layer = &run.cr[0];
+                assert!(first_layer.iter().any(|&c| c < 1.0));
+            }
+        }
+    }
+}
+
+#[test]
+fn testbed_fleet_has_table5_shape() {
+    let mut rng = Rng::new(1);
+    let fleet = Fleet::testbed(&mut rng);
+    assert_eq!(fleet.len(), 10);
+}
+
+#[test]
+fn manifest_covers_every_config_combination() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let m = feddd::runtime::Manifest::load(&default_artifacts_dir()).unwrap();
+    // every client model the config system can produce must have train+eval
+    for fam in ["mlp", "cnn1", "cnn2"] {
+        for kind in ["train", "eval"] {
+            m.get(&format!("{fam}_w100_{kind}")).unwrap();
+        }
+    }
+    for fam in ["het_a", "het_b"] {
+        for i in 1..=5 {
+            for kind in ["train", "eval"] {
+                m.get(&format!("{fam}_{i}_w25_{kind}")).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn config_presets_are_runnable() {
+    for preset in ["smoke", "table4", "testbed"] {
+        ExpConfig::preset(preset).unwrap().validate().unwrap();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Failure injection: wrong configs, missing artifacts, empty shards.
+// ---------------------------------------------------------------------
+
+#[test]
+fn runtime_missing_artifact_dir_is_clean_error() {
+    let err = feddd::runtime::Runtime::new(std::path::Path::new("/nonexistent-xyz"));
+    assert!(err.is_err());
+}
+
+#[test]
+fn engine_rejects_unknown_width_artifacts() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = ExpConfig::smoke();
+    cfg.width_pct = 73; // never compiled
+    cfg.n_clients = 2;
+    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+    assert!(feddd::coordinator::FedRun::new(cfg).is_err());
+}
+
+#[test]
+fn infeasible_budget_rejected_by_validate() {
+    let mut cfg = ExpConfig::smoke();
+    cfg.a_server = 0.1;
+    cfg.d_max = 0.5; // cannot drop 90% when max dropout is 50%
+    assert!(cfg.validate().is_err());
+}
+
+#[test]
+fn uniform_alloc_ablation_runs_and_reports_uniform_rates() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = ExpConfig::smoke();
+    cfg.alloc = "uniform".into();
+    cfg.n_clients = 4;
+    cfg.rounds = 2;
+    cfg.test_n = 64;
+    cfg.train_per_client = 40;
+    cfg.eval_every = 2;
+    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+    let mut run = feddd::coordinator::FedRun::new(cfg).unwrap();
+    let res = run.run().unwrap();
+    // uniform D = 1 - A = 0.4 -> uploaded ≈ 60% of full after round 1
+    let full: usize = run.clients.iter().map(|c| c.u_bytes()).sum();
+    let r2 = &res.rounds[1];
+    let ratio = r2.uploaded_bytes as f64 / full as f64;
+    assert!((ratio - 0.6).abs() < 0.05, "ratio {ratio}");
+}
+
+#[test]
+fn solver_handles_degenerate_single_client() {
+    let inputs = vec![AllocInput {
+        u_bytes: 1e6,
+        t_cmp: 1.0,
+        sec_per_byte: 1e-5,
+        re: 0.5,
+    }];
+    let p = AllocParams { d_max: 0.8, a_server: 0.6, delta: 1.0 };
+    let a = allocate_fast(&inputs, &p).unwrap();
+    assert!((a.d[0] - 0.4).abs() < 1e-6); // only way to meet the budget
+}
+
+#[test]
+fn selection_policy_names_roundtrip() {
+    for name in ["importance", "random", "max", "delta", "ordered"] {
+        feddd::selection::Policy::by_name(name).unwrap();
+    }
+    assert!(feddd::selection::Policy::by_name("topk").is_err());
+}

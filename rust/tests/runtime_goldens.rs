@@ -1,0 +1,205 @@
+//! Golden-replay integration tests: the python build path (aot.py) wrote
+//! deterministic input/output pairs under artifacts/goldens/; here the
+//! rust PJRT runtime executes the same artifacts on the same inputs and
+//! must reproduce the outputs bit-for-bit (up to f32 accumulation order).
+//!
+//! This is THE cross-language correctness seal: L2/L1 (jax+pallas) vs the
+//! L3 runtime executing the AOT HLO text.
+
+use std::path::PathBuf;
+
+use feddd::runtime::{default_artifacts_dir, Runtime};
+use feddd::tensor::Tensor;
+use feddd::util::json;
+
+struct Golden {
+    artifact: String,
+    inputs: Vec<(Vec<usize>, String, String)>, // (shape, dtype, file)
+    outputs: Vec<(Vec<usize>, String, String)>,
+}
+
+fn load_goldens() -> Option<(PathBuf, Vec<Golden>)> {
+    let dir = default_artifacts_dir().join("goldens");
+    let j = json::from_file(&dir.join("goldens.json")).ok()?;
+    let mut out = Vec::new();
+    for g in j.as_arr()? {
+        let parse_io = |key: &str| -> Vec<(Vec<usize>, String, String)> {
+            g.req_arr(key)
+                .unwrap()
+                .iter()
+                .map(|i| {
+                    (
+                        i.req_arr("shape")
+                            .unwrap()
+                            .iter()
+                            .filter_map(|x| x.as_usize())
+                            .collect(),
+                        i.req_str("dtype").unwrap().to_string(),
+                        i.req_str("file").unwrap().to_string(),
+                    )
+                })
+                .collect()
+        };
+        out.push(Golden {
+            artifact: g.req_str("artifact").unwrap().to_string(),
+            inputs: parse_io("inputs"),
+            outputs: parse_io("outputs"),
+        });
+    }
+    Some((dir, out))
+}
+
+fn read_f32(path: &PathBuf) -> Vec<f32> {
+    let bytes = std::fs::read(path).unwrap();
+    bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
+}
+
+fn read_i32(path: &PathBuf) -> Vec<i32> {
+    let bytes = std::fs::read(path).unwrap();
+    bytes
+        .chunks_exact(4)
+        .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let scale = g.abs().max(w.abs()).max(1.0);
+        assert!(
+            (g - w).abs() <= tol * scale,
+            "{ctx}[{i}]: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn goldens_replay_through_pjrt() {
+    let Some((dir, goldens)) = load_goldens() else {
+        eprintln!("skipping: goldens not built (run `make artifacts`)");
+        return;
+    };
+    let rt = Runtime::new(&default_artifacts_dir()).unwrap();
+    assert!(!goldens.is_empty());
+    for g in &goldens {
+        // Build literal args in order.
+        let mut args = Vec::new();
+        for (shape, dtype, file) in &g.inputs {
+            let path = dir.join(file);
+            let lit = if dtype == "i32" {
+                rt.lit_i32(&read_i32(&path), shape).unwrap()
+            } else {
+                rt.lit_f32(&read_f32(&path), shape).unwrap()
+            };
+            args.push(lit);
+        }
+        let outs = rt.execute(&g.artifact, &args).unwrap();
+        assert_eq!(outs.len(), g.outputs.len(), "{}: output arity", g.artifact);
+        for (i, (shape, _dtype, file)) in g.outputs.iter().enumerate() {
+            let want = read_f32(&dir.join(file));
+            let got: Vec<f32> = outs[i].to_vec().unwrap();
+            assert_eq!(got.len(), shape.iter().product::<usize>());
+            assert_close(&got, &want, 1e-4, &format!("{} out{}", g.artifact, i));
+        }
+    }
+}
+
+#[test]
+fn kernel_artifacts_match_rust_mirrors() {
+    // The rust tensor ops must agree with the Pallas kernels (both are
+    // "the same math"); stream random data through both paths.
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = feddd::util::rng::Rng::new(99);
+    let n = 20_000; // forces chunking (chunk = 16384)
+    let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let dw: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+    let mask: Vec<f32> = (0..n).map(|_| if rng.bool(0.5) { 1.0 } else { 0.0 }).collect();
+    let prev: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+
+    // masked_acc
+    let mut num_x = vec![0.0f32; n];
+    let mut den_x = vec![0.0f32; n];
+    rt.k_masked_acc(&mut num_x, &mut den_x, &w, &mask, 3.5).unwrap();
+    let mut num_r = vec![0.0f32; n];
+    let mut den_r = vec![0.0f32; n];
+    feddd::tensor::axpy_masked(&mut num_r, 3.5, &w, &mask);
+    feddd::tensor::axpy(&mut den_r, 3.5, &mask);
+    assert_close(&num_x, &num_r, 1e-5, "masked_acc num");
+    assert_close(&den_x, &den_r, 1e-5, "masked_acc den");
+
+    // masked_fin
+    let mut fin_x = vec![0.0f32; n];
+    rt.k_masked_fin(&num_x, &den_x, &prev, &mut fin_x).unwrap();
+    let mut fin_r = vec![0.0f32; n];
+    feddd::tensor::masked_div(&mut fin_r, &num_r, &den_r, &prev);
+    assert_close(&fin_x, &fin_r, 1e-5, "masked_fin");
+
+    // importance
+    let mut imp_x = vec![0.0f32; n];
+    rt.k_importance(&w, &dw, &mut imp_x).unwrap();
+    let mut imp_r = vec![0.0f32; n];
+    feddd::tensor::importance_scores(&mut imp_r, &w, &dw);
+    assert_close(&imp_x, &imp_r, 1e-4, "importance");
+}
+
+#[test]
+fn xla_aggregator_matches_rust_aggregator() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::new(&dir).unwrap();
+    let spec = feddd::model::ModelSpec::get("mlp", 0.25).unwrap();
+    let mut rng = feddd::util::rng::Rng::new(5);
+    let prev = spec.init_params(&mut rng);
+    let clients: Vec<Vec<Tensor>> = (0..3)
+        .map(|_| {
+            prev.iter()
+                .map(|t| {
+                    let d: Vec<f32> = t
+                        .data()
+                        .iter()
+                        .map(|&x| x + rng.normal_f32(0.0, 0.05))
+                        .collect();
+                    Tensor::new(t.shape().to_vec(), d)
+                })
+                .collect()
+        })
+        .collect();
+    let masks: Vec<Vec<Tensor>> = (0..3)
+        .map(|i| {
+            feddd::selection::select_mask(
+                feddd::selection::Policy::Random,
+                &spec,
+                &prev,
+                &clients[i],
+                None,
+                0.5,
+                &mut rng,
+            )
+            .to_elementwise(&spec)
+        })
+        .collect();
+
+    let run = |backend: feddd::aggregation::AggBackend| -> Vec<Tensor> {
+        let mut agg = feddd::aggregation::Aggregator::new(&spec, backend);
+        for (i, c) in clients.iter().enumerate() {
+            agg.add_client(c, &masks[i], (i + 1) as f32, Some(&rt)).unwrap();
+        }
+        agg.finalize(&prev, Some(&rt)).unwrap()
+    };
+    let a = run(feddd::aggregation::AggBackend::Rust);
+    let b = run(feddd::aggregation::AggBackend::Xla);
+    for (x, y) in a.iter().zip(&b) {
+        assert_close(x.data(), y.data(), 1e-5, "agg backend parity");
+    }
+}
