@@ -14,6 +14,7 @@ fn base(scheme: &str) -> ExpConfig {
     cfg.d_max = 0.85;
     cfg.rounds = 25;
     cfg.eval_every = 25;
+    cfg.workers = 0; // parallel round engine: one worker per core
     cfg.artifacts_dir = feddd::runtime::default_artifacts_dir()
         .to_string_lossy()
         .into_owned();

@@ -16,6 +16,7 @@ fn base() -> ExpConfig {
     cfg.local_steps = 4;
     cfg.n_clients = 10;
     cfg.eval_every = 4;
+    cfg.workers = 0; // parallel round engine: one worker per core
     cfg.artifacts_dir = feddd::runtime::default_artifacts_dir()
         .to_string_lossy()
         .into_owned();

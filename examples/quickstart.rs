@@ -10,6 +10,7 @@ fn main() -> anyhow::Result<()> {
     feddd::util::logging::init();
     let mut cfg = ExpConfig::smoke();
     cfg.rounds = 12;
+    cfg.workers = 0; // fan client training/aggregation over all cores
     cfg.artifacts_dir = feddd::runtime::default_artifacts_dir()
         .to_string_lossy()
         .into_owned();

@@ -13,6 +13,7 @@ fn main() -> anyhow::Result<()> {
         cfg.scheme = scheme.into();
         cfg.rounds = 30;
         cfg.eval_every = 2;
+        cfg.workers = 0; // parallel round engine: one worker per core
         cfg.artifacts_dir = feddd::runtime::default_artifacts_dir()
             .to_string_lossy()
             .into_owned();

@@ -55,6 +55,21 @@ fn main() {
         black_box(agg.finalize(&prev_p, None).unwrap());
     });
 
+    // sharded accumulation (the parallel round engine's layout): four
+    // shards of ≤3 clients each, merged pairwise, then finalized
+    b.bench("round_rust_cnn2_10clients_4shards", || {
+        let mut shards = Vec::with_capacity(4);
+        for chunk in clients.chunks(3).zip(masks.chunks(3)) {
+            let mut shard = Aggregator::new(&spec, AggBackend::Rust);
+            for (c, m) in chunk.0.iter().zip(chunk.1) {
+                shard.add_client(c, m, 1.0, None).unwrap();
+            }
+            shards.push(shard);
+        }
+        let merged = Aggregator::merge(shards).unwrap();
+        black_box(merged.finalize(&prev_p, None).unwrap());
+    });
+
     // XLA backend (needs artifacts)
     if let Ok(rt) = Runtime::new(&default_artifacts_dir()) {
         b.bench("round_xla_cnn2_10clients", || {

@@ -1,38 +1,67 @@
 //! End-to-end round bench: one full synchronous FedDD round (train +
-//! select + aggregate + merge) on the smoke preset vs the FedAvg baseline
-//! — the headline L3 number in EXPERIMENTS.md §Perf.
+//! select + shard-aggregate + merge) on the smoke preset at several
+//! worker counts, vs the FedAvg baseline — the headline L3 number in
+//! EXPERIMENTS.md §Perf. With prebuilt HLO artifacts it drives PJRT;
+//! otherwise it writes a native-exec manifest and drives the pure-Rust
+//! FC executor, so the workers scaling is measurable on any host.
+
+use std::path::PathBuf;
 
 use feddd::config::ExpConfig;
 use feddd::coordinator::FedRun;
-use feddd::runtime::default_artifacts_dir;
+use feddd::runtime::{default_artifacts_dir, write_native_manifest, Runtime};
 use feddd::util::bench::{black_box, Bencher};
 
-fn cfg(scheme: &str) -> ExpConfig {
+fn artifacts_dir() -> PathBuf {
+    // Use the prebuilt artifacts only when the runtime can actually open
+    // them (with the vendored xla stub, a PJRT manifest errors at
+    // Runtime::new); otherwise bench the native-exec runtime.
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() && Runtime::new(&dir).is_ok() {
+        return dir;
+    }
+    // Fixed name (not pid-suffixed): repeated bench runs reuse the same
+    // directory instead of leaking one per invocation.
+    let tmp = std::env::temp_dir().join("feddd_round_bench_native");
+    write_native_manifest(&tmp, &[("mlp", 1.0)], 16, 64).expect("native manifest");
+    eprintln!(
+        "prebuilt artifacts unavailable; benching the native-exec runtime ({})",
+        tmp.display()
+    );
+    tmp
+}
+
+fn cfg(scheme: &str, workers: usize, dir: &PathBuf) -> ExpConfig {
     let mut cfg = ExpConfig::smoke();
     cfg.scheme = scheme.into();
     cfg.rounds = 1000; // stepped manually
     cfg.n_clients = 10;
     cfg.test_n = 128;
-    cfg.artifacts_dir = default_artifacts_dir().to_string_lossy().into_owned();
+    cfg.workers = workers;
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
     cfg
 }
 
 fn main() {
-    if !default_artifacts_dir().join("manifest.json").exists() {
-        eprintln!("artifacts not built; skipping round bench");
-        return;
-    }
+    let dir = artifacts_dir();
     let mut b = Bencher::new("round");
-    for scheme in ["feddd", "fedavg"] {
-        let mut run = FedRun::new(cfg(scheme)).unwrap();
-        // warm the executable cache & pass round 1 (full upload)
+    // headline: FedDD round vs worker count (1 = sequential baseline)
+    for workers in [1usize, 2, 4] {
+        let mut run = FedRun::new(cfg("feddd", workers, &dir)).unwrap();
+        // warm caches & pass round 1 (full upload)
         run.step_round().unwrap();
-        b.bench(&format!("step_round_{scheme}_mlp_10c"), || {
+        b.bench(&format!("step_round_feddd_mlp_10c_w{workers}"), || {
             black_box(run.step_round().unwrap());
         });
     }
+    // FedAvg baseline (full uploads, no selection) at workers=1.
+    let mut run = FedRun::new(cfg("fedavg", 1, &dir)).unwrap();
+    run.step_round().unwrap();
+    b.bench("step_round_fedavg_mlp_10c_w1", || {
+        black_box(run.step_round().unwrap());
+    });
     // evaluation pass
-    let mut run = FedRun::new(cfg("feddd")).unwrap();
+    let mut run = FedRun::new(cfg("feddd", 1, &dir)).unwrap();
     run.step_round().unwrap();
     b.bench("evaluate_mlp_128", || {
         black_box(run.evaluate().unwrap());

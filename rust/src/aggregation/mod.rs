@@ -124,6 +124,45 @@ impl Aggregator {
         self.clients_added
     }
 
+    /// Fold another aggregator's partial sums into this one (elementwise
+    /// `num += num`, `den += den`). Both must target the same global
+    /// geometry. This is the shard-merge primitive of the parallel round
+    /// engine: each worker accumulates a disjoint client range into its
+    /// own `Aggregator`, and the partials are merged afterwards.
+    pub fn absorb(&mut self, other: &Aggregator) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.global_shapes == other.global_shapes,
+            "shard geometry mismatch"
+        );
+        for i in 0..self.num.len() {
+            axpy(self.num[i].data_mut(), 1.0, other.num[i].data());
+            axpy(self.den[i].data_mut(), 1.0, other.den[i].data());
+        }
+        self.clients_added += other.clients_added;
+        Ok(())
+    }
+
+    /// Merge ordered shard partials into one aggregator by pairwise
+    /// (tree) reduction: `[s0 s1 s2 s3] → [s0+s1, s2+s3] → …`. The merge
+    /// order is a pure function of the shard list, so for a fixed shard
+    /// partition the result is bitwise-deterministic regardless of how
+    /// many workers produced the shards.
+    pub fn merge(mut shards: Vec<Aggregator>) -> anyhow::Result<Aggregator> {
+        anyhow::ensure!(!shards.is_empty(), "merge of zero shards");
+        while shards.len() > 1 {
+            let mut next = Vec::with_capacity(shards.len().div_ceil(2));
+            let mut it = shards.into_iter();
+            while let Some(mut left) = it.next() {
+                if let Some(right) = it.next() {
+                    left.absorb(&right)?;
+                }
+                next.push(left);
+            }
+            shards = next;
+        }
+        Ok(shards.pop().unwrap())
+    }
+
     /// Finalize Eq. 4; `prev` supplies values for zero-coverage positions.
     pub fn finalize(
         &self,
@@ -320,6 +359,90 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn shard_merge_matches_single_aggregator() {
+        // Random clients/masks/weights, random shard partition: the
+        // merged shards must equal one sequential aggregator up to f32
+        // reassociation, and be bitwise-identical across repeated merges
+        // of the same partition.
+        check("shard merge equivalence", 20, |rng| {
+            let spec = ModelSpec::get("mlp", 0.25).unwrap();
+            let prev = spec.init_params(rng);
+            let n_clients = rng.int_range(1, 9);
+            let clients: Vec<Vec<Tensor>> =
+                (0..n_clients).map(|_| perturbed(&prev, rng, 0.05)).collect();
+            let masks: Vec<Vec<Tensor>> = (0..n_clients)
+                .map(|_| {
+                    crate::selection::select_mask(
+                        crate::selection::Policy::Random,
+                        &spec,
+                        &prev,
+                        &clients[0],
+                        None,
+                        rng.range_f64(0.0, 0.8),
+                        rng,
+                    )
+                    .to_elementwise(&spec)
+                })
+                .collect();
+            let weights: Vec<f32> =
+                (0..n_clients).map(|_| rng.range_f64(0.5, 5.0) as f32).collect();
+
+            let sequential = {
+                let mut agg = Aggregator::new(&spec, AggBackend::Rust);
+                for i in 0..n_clients {
+                    agg.add_client(&clients[i], &masks[i], weights[i], None).unwrap();
+                }
+                agg.finalize(&prev, None).unwrap()
+            };
+
+            let shard_len = rng.int_range(1, n_clients);
+            let sharded_run = || -> (usize, Vec<Tensor>) {
+                let mut shards = Vec::new();
+                let mut i = 0;
+                while i < n_clients {
+                    let end = (i + shard_len).min(n_clients);
+                    let mut shard = Aggregator::new(&spec, AggBackend::Rust);
+                    for j in i..end {
+                        shard.add_client(&clients[j], &masks[j], weights[j], None).unwrap();
+                    }
+                    shards.push(shard);
+                    i = end;
+                }
+                let merged = Aggregator::merge(shards).unwrap();
+                (merged.clients_added(), merged.finalize(&prev, None).unwrap())
+            };
+            let (added_a, out_a) = sharded_run();
+            let (added_b, out_b) = sharded_run();
+            if added_a != n_clients {
+                return Err(format!("clients_added {added_a} != {n_clients}"));
+            }
+            if added_b != added_a {
+                return Err("clients_added not deterministic".into());
+            }
+            for (x, y) in out_a.iter().zip(&sequential) {
+                close_slice(x.data(), y.data(), 1e-4)?;
+            }
+            // same partition twice -> bitwise equal
+            for (x, y) in out_a.iter().zip(&out_b) {
+                if x.data() != y.data() {
+                    return Err("shard merge not bitwise-deterministic".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn absorb_rejects_geometry_mismatch() {
+        let a = ModelSpec::get("mlp", 0.25).unwrap();
+        let b = ModelSpec::get("mlp", 1.0).unwrap();
+        let mut agg_a = Aggregator::new(&a, AggBackend::Rust);
+        let agg_b = Aggregator::new(&b, AggBackend::Rust);
+        assert!(agg_a.absorb(&agg_b).is_err());
+        assert!(Aggregator::merge(Vec::new()).is_err());
     }
 
     #[test]

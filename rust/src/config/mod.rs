@@ -60,6 +60,11 @@ pub struct ExpConfig {
     /// Dropout-rate allocation policy for FedDD: "optimal" (Eq. 16/17)
     /// or "uniform" (ablation: every client gets D_n = 1 − A_server).
     pub alloc: String,
+    /// Worker threads for the per-client round phases (local training,
+    /// mask selection, sharded aggregation). `1` = sequential (default),
+    /// `0` = one per available core. Results are bitwise-identical for
+    /// every worker count (see `coordinator::engine`).
+    pub workers: usize,
 }
 
 impl Default for ExpConfig {
@@ -91,6 +96,7 @@ impl Default for ExpConfig {
             artifacts_dir: "artifacts".into(),
             oort_alpha: 2.0,
             alloc: "optimal".into(),
+            workers: 1,
         }
     }
 }
@@ -200,6 +206,11 @@ impl ExpConfig {
             "unknown alloc policy {:?}",
             self.alloc
         );
+        anyhow::ensure!(
+            self.workers <= 1024,
+            "workers {} out of range (0 = auto, else ≤ 1024)",
+            self.workers
+        );
         let known_family =
             ["mlp", "cnn1", "cnn2", "het_a", "het_b"].contains(&self.model.as_str());
         // Specific sub-models (e.g. "het_a_3") run homogeneously (Fig. 3).
@@ -242,6 +253,7 @@ impl ExpConfig {
             ("artifacts_dir", Json::s(&self.artifacts_dir)),
             ("oort_alpha", Json::Num(self.oort_alpha)),
             ("alloc", Json::s(&self.alloc)),
+            ("workers", Json::Num(self.workers as f64)),
         ])
     }
 
@@ -285,6 +297,7 @@ impl ExpConfig {
             artifacts_dir: gs("artifacts_dir", &d.artifacts_dir),
             oort_alpha: gn("oort_alpha", d.oort_alpha),
             alloc: gs("alloc", &d.alloc),
+            workers: gn("workers", d.workers as f64) as usize,
         };
         Ok(cfg)
     }
@@ -325,6 +338,7 @@ impl ExpConfig {
             "artifacts_dir" => self.artifacts_dir = value.into(),
             "oort_alpha" => self.oort_alpha = value.parse()?,
             "alloc" => self.alloc = value.into(),
+            "workers" => self.workers = value.parse()?,
             "rare_classes" => {
                 self.rare_classes = value
                     .split(',')
@@ -393,10 +407,25 @@ mod tests {
         c.set("rounds", "7").unwrap();
         c.set("scheme", "fedcs").unwrap();
         c.set("rare_classes", "0,3,5").unwrap();
+        c.set("workers", "4").unwrap();
         assert_eq!(c.rounds, 7);
         assert_eq!(c.scheme, "fedcs");
         assert_eq!(c.rare_classes, vec![0, 3, 5]);
+        assert_eq!(c.workers, 4);
         assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn workers_roundtrips_and_validates() {
+        let mut c = ExpConfig::smoke();
+        c.workers = 8;
+        let back = ExpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.workers, 8);
+        c.validate().unwrap();
+        c.workers = 0; // auto
+        c.validate().unwrap();
+        c.workers = 100_000;
+        assert!(c.validate().is_err());
     }
 
     #[test]

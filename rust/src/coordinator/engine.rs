@@ -1,8 +1,31 @@
 //! The synchronous round engine (Algorithm 1) with scheme dispatch.
 //!
-//! One [`FedRun`] owns the fleet, the datasets, the PJRT runtime and the
+//! One [`FedRun`] owns the fleet, the datasets, the runtime and the
 //! global model; [`FedRun::run`] executes the configured number of rounds
 //! and returns a [`RunResult`] with the full round/eval history.
+//!
+//! # Parallel round execution
+//!
+//! FedDD's round body is embarrassingly parallel across clients: local
+//! training, Algorithm-2 mask selection and the Eq. 4 masked contribution
+//! are all per-client. [`FedRun::step_round`] fans these phases out over
+//! `cfg.workers` threads ([`ThreadPool::scoped_map`]) in two stages:
+//!
+//! 1. **per-client stage** — each participant (a disjoint `&mut
+//!    ClientState`) trains, selects its upload mask with its own RNG
+//!    stream, and expands the mask; outputs are collected in ascending
+//!    client order.
+//! 2. **sharded aggregation** — participants are chunked into at most
+//!    [`AGG_SHARDS`] contiguous shards; each shard accumulates its
+//!    clients (in order) into a private [`Aggregator`], and the shard
+//!    partials are merged pairwise in fixed shard order
+//!    ([`Aggregator::merge`]) before `finalize`.
+//!
+//! Because the shard partition depends only on the participant list —
+//! never on the worker count or thread schedule — and every f32/f64
+//! accumulation happens in a fixed order, a round is **bitwise identical
+//! for every `workers` value** (asserted by `rust/tests/parallel_round.rs`
+//! and benchmarked by `rust/benches/round.rs`).
 
 use std::time::Instant;
 
@@ -18,8 +41,26 @@ use crate::simnet::{Fleet, RoundTiming, VirtualClock};
 use crate::solver::{allocate_fast, AllocInput, AllocParams};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 
 use super::client::ClientState;
+
+/// Upper bound on aggregation shards per round. Fixed (worker-independent)
+/// so the merge tree — and therefore the f32 summation order — is a pure
+/// function of the participant list.
+pub const AGG_SHARDS: usize = 8;
+
+/// Per-participant output of the parallel stage (client order). Holds the
+/// compact channel mask only; the model-sized elementwise expansion is
+/// recomputed per client inside the aggregation stage so at most one
+/// expansion per worker is alive at a time.
+struct ClientRoundOutput {
+    /// Client index.
+    slot: usize,
+    loss: f64,
+    uploaded: usize,
+    mask: ChannelMask,
+}
 
 /// Outcome of a single round (for tests / tracing).
 #[derive(Clone, Debug)]
@@ -47,6 +88,8 @@ pub struct FedRun {
     last_masks: Vec<Option<ChannelMask>>,
     policy: Policy,
     backend: AggBackend,
+    /// Worker pool for the per-client round phases (`cfg.workers`).
+    pool: ThreadPool,
 }
 
 impl FedRun {
@@ -131,6 +174,7 @@ impl FedRun {
         runtime.manifest().get(&eval_artifact)?;
         let policy = Policy::by_name(&cfg.selection)?;
         let backend = AggBackend::by_name(&cfg.agg_backend)?;
+        let pool = ThreadPool::new(cfg.workers);
         let n = clients.len();
         Ok(FedRun {
             cfg,
@@ -147,6 +191,7 @@ impl FedRun {
             last_masks: vec![None; n],
             policy,
             backend,
+            pool,
         })
     }
 
@@ -235,59 +280,113 @@ impl FedRun {
             }
         }
 
-        // ---- 2. local training ----
-        let mut scratch_x = Vec::new();
-        let mut scratch_y = Vec::new();
-        let mut before: Vec<Option<Vec<Tensor>>> = vec![None; self.clients.len()];
-        let mut loss_sum = 0.0;
-        for &n in &participants {
-            before[n] = Some(self.clients[n].params.clone());
-            let loss = self.clients[n].train_local(
-                &self.runtime,
-                &self.ds,
-                cfg.local_steps,
-                cfg.batch,
-                cfg.lr,
-                &mut scratch_x,
-                &mut scratch_y,
-            )?;
-            loss_sum += loss;
-        }
-        let mean_loss = loss_sum / participants.len().max(1) as f64;
-
-        // ---- 3. selection + upload + aggregation ----
-        let mut agg = Aggregator::new(&self.global_spec, self.backend);
+        // ---- 2. local training + selection (parallel per client) ----
+        //
+        // Every participant is an independent work item: it owns a
+        // disjoint `&mut ClientState` (its params, RNG stream, loss
+        // bookkeeping), trains against the shared thread-safe runtime,
+        // then selects + expands its upload mask. `scoped_map` returns
+        // outputs in input (= ascending client) order, so the f64 loss
+        // sum below accumulates in the same order for every worker count.
+        let is_feddd = cfg.scheme == "feddd";
+        let hetero = cfg.is_hetero();
+        let round_label = t as u64;
         let rt = &self.runtime;
-        let mut uploaded = 0usize;
+        let ds = &self.ds;
+        let cr = &self.cr;
+        let policy = self.policy;
+        let cfg_ref = &cfg;
+        let dropout_ref = &dropout;
+        let mut in_round = vec![false; self.clients.len()];
         for &n in &participants {
-            let mask = if cfg.scheme == "feddd" {
-                let mut sel_rng = self.clients[n].rng.split(t as u64);
-                let c = &self.clients[n];
-                let w_before = before[n].as_ref().unwrap();
-                select_mask(
-                    self.policy,
-                    &c.spec,
-                    w_before,
-                    &c.params,
-                    if cfg.is_hetero() { Some(&self.cr) } else { None },
-                    dropout[n],
-                    &mut sel_rng,
-                )
-            } else {
-                ChannelMask::full(&self.clients[n].spec)
-            };
-            let c = &self.clients[n];
-            uploaded += mask.upload_bytes(&c.spec);
-            let elems = mask.to_elementwise(&c.spec);
-            agg.add_client(
-                &c.params,
-                &elems,
-                c.m_n() as f32,
-                Some(rt),
-            )?;
-            self.last_masks[n] = Some(mask);
+            in_round[n] = true;
         }
+        let items: Vec<(usize, &mut ClientState)> = self
+            .clients
+            .iter_mut()
+            .enumerate()
+            .filter(|(n, _)| in_round[*n])
+            .collect();
+        let outs: Vec<ClientRoundOutput> = self.pool.scoped_try_map(
+            items,
+            |(n, c): (usize, &mut ClientState)| -> anyhow::Result<ClientRoundOutput> {
+                // Per-item batch buffers: one ~batch×dim alloc per client
+                // per round, dwarfed by the training matmuls. True
+                // per-worker reuse needs a persistent worker pool
+                // (scoped_map spawns per call) — noted follow-up.
+                let mut scratch_x = Vec::new();
+                let mut scratch_y = Vec::new();
+                let before = if is_feddd { Some(c.params.clone()) } else { None };
+                let loss = c.train_local(
+                    rt,
+                    ds,
+                    cfg_ref.local_steps,
+                    cfg_ref.batch,
+                    cfg_ref.lr,
+                    &mut scratch_x,
+                    &mut scratch_y,
+                )?;
+                let mask = match &before {
+                    Some(w_before) => {
+                        let mut sel_rng = c.rng.split(round_label);
+                        select_mask(
+                            policy,
+                            &c.spec,
+                            w_before,
+                            &c.params,
+                            if hetero { Some(cr.as_slice()) } else { None },
+                            dropout_ref[n],
+                            &mut sel_rng,
+                        )
+                    }
+                    None => ChannelMask::full(&c.spec),
+                };
+                let uploaded = mask.upload_bytes(&c.spec);
+                Ok(ClientRoundOutput { slot: n, loss, uploaded, mask })
+            },
+        )?;
+        let mut loss_sum = 0.0;
+        let mut uploaded = 0usize;
+        for o in &outs {
+            loss_sum += o.loss;
+            uploaded += o.uploaded;
+        }
+        let mean_loss = loss_sum / outs.len().max(1) as f64;
+
+        // ---- 3. sharded aggregation (Eq. 4) ----
+        //
+        // Participants are chunked into ≤ AGG_SHARDS contiguous shards;
+        // each shard accumulates its clients in order into a private
+        // num/den pair, and shards merge pairwise in fixed order. The
+        // partition depends only on the participant count, so the
+        // summation order — hence the result, bit for bit — is the same
+        // for every worker count.
+        let agg = if outs.is_empty() {
+            Aggregator::new(&self.global_spec, self.backend)
+        } else {
+            let global_spec = &self.global_spec;
+            let backend = self.backend;
+            let clients = &self.clients;
+            let shard_len = outs.len().div_ceil(AGG_SHARDS.min(outs.len()));
+            let shards: Vec<&[ClientRoundOutput]> = outs.chunks(shard_len).collect();
+            let partials = self.pool.scoped_try_map(
+                shards,
+                |chunk: &[ClientRoundOutput]| -> anyhow::Result<Aggregator> {
+                    let mut shard = Aggregator::new(global_spec, backend);
+                    for o in chunk {
+                        let c = &clients[o.slot];
+                        let elems = o.mask.to_elementwise(&c.spec);
+                        shard.add_client(&c.params, &elems, c.m_n() as f32, Some(rt))?;
+                    }
+                    Ok(shard)
+                },
+            )?;
+            Aggregator::merge(partials)?
+        };
         self.global_params = agg.finalize(&self.global_params, Some(rt))?;
+        for o in outs {
+            self.last_masks[o.slot] = Some(o.mask);
+        }
 
         // ---- 4. download merge (Eq. 5 / Eq. 6) ----
         if cfg.scheme == "feddd" {

@@ -18,7 +18,20 @@
 //!
 //! Python never runs on the request path: the [`runtime`] module loads the
 //! AOT artifacts through the PJRT C API (`xla` crate) and the coordinator
-//! drives them from Rust.
+//! drives them from Rust. Manifests with `"exec": "native"` instead route
+//! through a pure-Rust FC executor (`runtime::native`), which needs no
+//! libxla and powers tests/benches on plain CPU hosts.
+//!
+//! # Parallel round execution (`workers`)
+//!
+//! FedDD's round body is per-client independent, so the engine fans local
+//! training, Algorithm-2 mask selection and the Eq. 4 masked accumulation
+//! out over `ExpConfig::workers` threads. Aggregation is *sharded*: each
+//! worker task accumulates a contiguous, worker-count-independent chunk
+//! of participants into private `num`/`den` partials which are merged
+//! pairwise in fixed order, so every run is bitwise-identical to the
+//! sequential (`workers = 1`) run — see `coordinator::engine` and
+//! `rust/tests/parallel_round.rs`.
 //!
 //! See `DESIGN.md` for the experiment index mapping every paper figure and
 //! table to a module and a `feddd figure <id>` command.

@@ -30,9 +30,14 @@ USAGE:
 Config keys (see `feddd inspect config`): seed dataset partition model
 width_pct n_clients rounds local_steps batch lr scheme selection d_max
 a_server delta h train_per_client test_n fleet eval_every agg_backend
-rare_classes rare_ratio artifacts_dir oort_alpha.
+rare_classes rare_ratio artifacts_dir oort_alpha alloc workers.
 
-Artifacts must be built first: `make artifacts`.
+`--workers N` fans the per-client round phases (training, mask selection,
+sharded aggregation) over N threads (0 = one per core); results are
+bitwise-identical for every worker count.
+
+Artifacts must be built first (`make artifacts`), or use a native-exec
+manifest (runtime::write_native_manifest) for FC models without XLA.
 ";
 
 fn main() {

@@ -1,12 +1,17 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts (`make artifacts`) and
-//! executes them from the coordinator hot path. Python is never invoked —
-//! this is the only bridge between L3 and the L2/L1 computations.
+//! Artifact runtime: loads AOT artifacts and executes them from the
+//! coordinator hot path. Python is never invoked — this is the only
+//! bridge between L3 and the L2/L1 computations.
 //!
-//! * [`registry`] — parses `artifacts/manifest.json` into typed metadata.
-//! * [`pjrt`] — the `xla`-crate client wrapper: lazy compile cache,
-//!   literal marshalling, and typed entry points for train / eval / the
-//!   Pallas kernel artifacts (masked aggregation, importance, sgd).
+//! * [`registry`] — parses `artifacts/manifest.json` into typed metadata
+//!   and writes native-exec manifests (`write_native_manifest`).
+//! * [`pjrt`] — the thread-safe runtime front-end: lazy compile cache,
+//!   literal marshalling, typed entry points for train / eval / the
+//!   Pallas kernel artifacts, and backend dispatch.
+//! * [`native`] — pure-Rust executor for FC models (manifests with
+//!   `"exec": "native"`); lets the threaded round engine run end-to-end
+//!   on hosts without a libxla build.
 
+mod native;
 mod pjrt;
 mod registry;
 

@@ -1,19 +1,28 @@
-//! The `xla`-crate PJRT CPU wrapper: compile-once executable cache plus
-//! typed entry points for the train/eval artifacts and the flat Pallas
-//! kernels.
+//! Runtime front-end: compile-once executable cache plus typed entry
+//! points for the train/eval artifacts and the flat Pallas kernels, with
+//! two execution backends selected by the artifact manifest:
 //!
-//! Interchange notes (see /opt/xla-example/README.md): artifacts are HLO
-//! *text*; `HloModuleProto::from_text_file` reassigns instruction ids, so
-//! text round-trips where serialized jax≥0.5 protos do not. Executables
-//! were lowered with `return_tuple=True`, so every output is a tuple.
+//! * **pjrt** — the `xla`-crate PJRT CPU client executing AOT HLO text
+//!   (interchange notes: see /opt/xla-example/README.md; artifacts are HLO
+//!   *text* because `HloModuleProto::from_text_file` reassigns instruction
+//!   ids, so text round-trips where serialized jax≥0.5 protos do not;
+//!   executables were lowered with `return_tuple=True`).
+//! * **native** — `"exec": "native"` manifests route the typed entry
+//!   points to the pure-Rust FC executor in [`super::native`] (no libxla).
+//!
+//! The runtime is `Send + Sync`: the executable cache and the stats
+//! counters sit behind mutexes so the threaded round engine can train
+//! clients concurrently against one shared `Runtime`. PJRT executions
+//! serialize on the cache only during compile misses; steady-state calls
+//! take the lock for a map lookup.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
 
+use super::native::NativeExec;
 use super::registry::{ArtifactMeta, Dtype, Manifest};
 use crate::tensor::Tensor;
 
@@ -28,29 +37,45 @@ pub struct RuntimeStats {
     pub d2h_bytes: u64,
 }
 
-/// PJRT runtime with a lazy executable cache.
+enum ExecBackend {
+    Pjrt {
+        client: PjRtClient,
+        cache: Mutex<HashMap<String, Arc<PjRtLoadedExecutable>>>,
+    },
+    Native(NativeExec),
+}
+
+/// Artifact runtime with a lazy executable cache (PJRT) or the native
+/// executor, chosen by `manifest.exec`.
 pub struct Runtime {
-    client: PjRtClient,
+    backend: ExecBackend,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
-    stats: RefCell<RuntimeStats>,
+    stats: Mutex<RuntimeStats>,
 }
 
 impl Runtime {
     pub fn new(artifacts_dir: &std::path::Path) -> anyhow::Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
-        log::info!(
-            "PJRT client up: platform={} devices={} ({} artifacts)",
-            client.platform_name(),
-            client.device_count(),
-            manifest.artifacts.len()
-        );
+        let backend = if manifest.exec == "native" {
+            log::info!(
+                "native runtime up ({} artifacts, FC models)",
+                manifest.artifacts.len()
+            );
+            ExecBackend::Native(NativeExec)
+        } else {
+            let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e}"))?;
+            log::info!(
+                "PJRT client up: platform={} devices={} ({} artifacts)",
+                client.platform_name(),
+                client.device_count(),
+                manifest.artifacts.len()
+            );
+            ExecBackend::Pjrt { client, cache: Mutex::new(HashMap::new()) }
+        };
         Ok(Runtime {
-            client,
+            backend,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
@@ -58,15 +83,33 @@ impl Runtime {
         &self.manifest
     }
 
-    pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+    /// Whether this runtime executes natively (no PJRT client).
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, ExecBackend::Native(_))
     }
 
-    /// Compile (or fetch cached) an artifact by name.
-    pub fn executable(&self, name: &str) -> anyhow::Result<Rc<PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(Rc::clone(e));
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    fn count_exec(&self, t0: Instant) {
+        let mut s = self.stats.lock().unwrap();
+        s.executions += 1;
+        s.exec_seconds += t0.elapsed().as_secs_f64();
+    }
+
+    /// Compile (or fetch cached) a PJRT artifact by name. Errors on the
+    /// native backend — native execution goes through the typed entry
+    /// points, which need no compiled handle.
+    pub fn executable(&self, name: &str) -> anyhow::Result<Arc<PjRtLoadedExecutable>> {
+        let ExecBackend::Pjrt { client, cache } = &self.backend else {
+            anyhow::bail!("artifact {name:?}: native runtime has no PJRT executables");
+        };
+        if let Some(e) = cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
         }
+        // Compile outside the cache lock; a racing duplicate compile is
+        // benign and the first insert wins.
         let meta = self.manifest.get(name)?;
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(
@@ -76,23 +119,27 @@ impl Runtime {
         )
         .map_err(|e| anyhow::anyhow!("loading {:?}: {e}", meta.file))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
+        let exe = client
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
         let dt = t0.elapsed().as_secs_f64();
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().unwrap();
             s.compile_seconds += dt;
             s.compiled += 1;
         }
         log::debug!("compiled {name} in {dt:.2}s");
-        let rc = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&rc));
-        Ok(rc)
+        let rc = Arc::new(exe);
+        Ok(Arc::clone(
+            cache
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_insert(rc),
+        ))
     }
 
-    /// Raw execute: literals in, tuple-decomposed literals out.
+    /// Raw PJRT execute: literals in, tuple-decomposed literals out.
     pub fn execute(&self, name: &str, args: &[Literal]) -> anyhow::Result<Vec<Literal>> {
         let exe = self.executable(name)?;
         let t0 = Instant::now();
@@ -104,9 +151,7 @@ impl Runtime {
         let outs = result
             .to_tuple()
             .map_err(|e| anyhow::anyhow!("untupling {name}: {e}"))?;
-        let mut s = self.stats.borrow_mut();
-        s.executions += 1;
-        s.exec_seconds += t0.elapsed().as_secs_f64();
+        self.count_exec(t0);
         Ok(outs)
     }
 
@@ -114,30 +159,22 @@ impl Runtime {
 
     pub fn lit_f32(&self, data: &[f32], shape: &[usize]) -> anyhow::Result<Literal> {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
-        self.stats.borrow_mut().h2d_bytes += (data.len() * 4) as u64;
+        self.stats.lock().unwrap().h2d_bytes += (data.len() * 4) as u64;
         let bytes: &[u8] = unsafe {
             std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
         };
-        Ok(Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32,
-            shape,
-            bytes,
-        )
-        .map_err(|e| anyhow::anyhow!("{e}"))?)
+        Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+            .map_err(|e| anyhow::anyhow!("{e}"))
     }
 
     pub fn lit_i32(&self, data: &[i32], shape: &[usize]) -> anyhow::Result<Literal> {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>());
-        self.stats.borrow_mut().h2d_bytes += (data.len() * 4) as u64;
+        self.stats.lock().unwrap().h2d_bytes += (data.len() * 4) as u64;
         let bytes: &[u8] = unsafe {
             std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
         };
-        Ok(Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::S32,
-            shape,
-            bytes,
-        )
-        .map_err(|e| anyhow::anyhow!("{e}"))?)
+        Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+            .map_err(|e| anyhow::anyhow!("{e}"))
     }
 
     pub fn lit_tensor(&self, t: &Tensor) -> anyhow::Result<Literal> {
@@ -146,7 +183,7 @@ impl Runtime {
 
     pub fn tensor_from(&self, lit: &Literal, shape: Vec<usize>) -> anyhow::Result<Tensor> {
         let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow::anyhow!("{e}"))?;
-        self.stats.borrow_mut().d2h_bytes += (v.len() * 4) as u64;
+        self.stats.lock().unwrap().d2h_bytes += (v.len() * 4) as u64;
         Ok(Tensor::new(shape, v))
     }
 
@@ -164,7 +201,15 @@ impl Runtime {
     ) -> anyhow::Result<f32> {
         let meta = self.manifest.get(artifact)?.clone();
         anyhow::ensure!(meta.kind == "train", "{artifact} is not a train artifact");
-        self.exec_train(&meta, artifact, params, x, y, lr)
+        match &self.backend {
+            ExecBackend::Native(nx) => {
+                let t0 = Instant::now();
+                let loss = nx.train_step(&meta, params, x, y, lr)?;
+                self.count_exec(t0);
+                Ok(loss)
+            }
+            ExecBackend::Pjrt { .. } => self.exec_train_pjrt(&meta, artifact, params, x, y, lr),
+        }
     }
 
     /// Fused multi-step (lax.scan) variant: `xs`/`ys` hold `steps` batches.
@@ -181,10 +226,18 @@ impl Runtime {
             meta.kind == "train_scan",
             "{artifact} is not a train_scan artifact"
         );
-        self.exec_train(&meta, artifact, params, xs, ys, lr)
+        match &self.backend {
+            ExecBackend::Native(nx) => {
+                let t0 = Instant::now();
+                let loss = nx.train_scan(&meta, params, xs, ys, lr)?;
+                self.count_exec(t0);
+                Ok(loss)
+            }
+            ExecBackend::Pjrt { .. } => self.exec_train_pjrt(&meta, artifact, params, xs, ys, lr),
+        }
     }
 
-    fn exec_train(
+    fn exec_train_pjrt(
         &self,
         meta: &ArtifactMeta,
         artifact: &str,
@@ -239,6 +292,12 @@ impl Runtime {
     ) -> anyhow::Result<(f32, Vec<f32>, Vec<f32>)> {
         let meta = self.manifest.get(artifact)?.clone();
         anyhow::ensure!(meta.kind == "eval", "{artifact} is not an eval artifact");
+        if let ExecBackend::Native(nx) = &self.backend {
+            let t0 = Instant::now();
+            let out = nx.eval_batch(&meta, params, x, y)?;
+            self.count_exec(t0);
+            return Ok(out);
+        }
         let mut args = Vec::with_capacity(params.len() + 2);
         for t in params {
             args.push(self.lit_tensor(t)?);
@@ -256,7 +315,9 @@ impl Runtime {
     //
     // The kernel artifacts operate on fixed-size chunks
     // (manifest.kernel_chunk); these helpers stream arbitrary-length flat
-    // buffers through them with zero-padding on the tail chunk.
+    // buffers through them with zero-padding on the tail chunk. On the
+    // native backend they dispatch straight to the rust tensor-op mirrors
+    // (the same math the Pallas kernels implement).
 
     fn kernel_name(&self, op: &str) -> anyhow::Result<String> {
         Ok(self.manifest.kernel(op)?.name.clone())
@@ -271,6 +332,13 @@ impl Runtime {
         mask: &[f32],
         mn: f32,
     ) -> anyhow::Result<()> {
+        if let ExecBackend::Native(_) = &self.backend {
+            let t0 = Instant::now();
+            crate::tensor::axpy_masked(num, mn, w, mask);
+            crate::tensor::axpy(den, mn, mask);
+            self.count_exec(t0);
+            return Ok(());
+        }
         let chunk = self.manifest.kernel_chunk;
         let name = self.kernel_name("masked_acc")?;
         let mn_lit = self.lit_f32(&[mn], &[1])?;
@@ -317,6 +385,12 @@ impl Runtime {
         prev: &[f32],
         out: &mut [f32],
     ) -> anyhow::Result<()> {
+        if let ExecBackend::Native(_) = &self.backend {
+            let t0 = Instant::now();
+            crate::tensor::masked_div(out, num, den, prev);
+            self.count_exec(t0);
+            return Ok(());
+        }
         let chunk = self.manifest.kernel_chunk;
         let name = self.kernel_name("masked_fin")?;
         let n = num.len();
@@ -349,6 +423,12 @@ impl Runtime {
 
     /// Importance elementwise scores (Pallas importance kernel).
     pub fn k_importance(&self, w: &[f32], dw: &[f32], out: &mut [f32]) -> anyhow::Result<()> {
+        if let ExecBackend::Native(_) = &self.backend {
+            let t0 = Instant::now();
+            crate::tensor::importance_scores(out, w, dw);
+            self.count_exec(t0);
+            return Ok(());
+        }
         let chunk = self.manifest.kernel_chunk;
         let name = self.kernel_name("importance")?;
         let n = w.len();
@@ -375,12 +455,45 @@ impl Runtime {
 
 #[cfg(test)]
 mod tests {
-    // Runtime execution is covered by rust/tests/runtime_goldens.rs (it
-    // needs built artifacts); here we only test pure helpers.
-    use super::super::registry::default_artifacts_dir;
+    // PJRT execution is covered by rust/tests/runtime_goldens.rs (it needs
+    // built artifacts); native execution by runtime/native.rs and
+    // rust/tests/parallel_round.rs. Here: pure helpers + thread-safety.
+    use super::super::registry::{default_artifacts_dir, write_native_manifest};
+    use super::Runtime;
 
     #[test]
     fn artifacts_dir_resolution_does_not_panic() {
         let _ = default_artifacts_dir();
+    }
+
+    #[test]
+    fn runtime_is_send_and_sync() {
+        // The threaded round engine shares one Runtime across workers.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Runtime>();
+    }
+
+    #[test]
+    fn native_runtime_constructs_and_runs_kernels() {
+        let dir = std::env::temp_dir().join(format!(
+            "feddd_native_manifest_{}_pjrt",
+            std::process::id()
+        ));
+        write_native_manifest(&dir, &[("mlp", 1.0)], 16, 64).unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        assert!(rt.is_native());
+        let w = [1.0f32, 2.0, 3.0];
+        let mask = [1.0f32, 0.0, 1.0];
+        let mut num = [0.0f32; 3];
+        let mut den = [0.0f32; 3];
+        rt.k_masked_acc(&mut num, &mut den, &w, &mask, 2.0).unwrap();
+        assert_eq!(num, [2.0, 0.0, 6.0]);
+        assert_eq!(den, [2.0, 0.0, 2.0]);
+        let mut out = [0.0f32; 3];
+        rt.k_masked_fin(&num, &den, &[9.0, 9.0, 9.0], &mut out).unwrap();
+        assert_eq!(out, [1.0, 9.0, 3.0]);
+        assert!(rt.stats().executions >= 2);
+        assert!(rt.executable("mlp_w100_train").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -61,6 +61,10 @@ pub struct ModelGeom {
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
+    /// Execution backend the artifacts were built for: "pjrt" (AOT HLO
+    /// text through the xla crate, the default) or "native" (pure-Rust
+    /// executor in `runtime::native` — FC models only, no libxla needed).
+    pub exec: String,
     pub train_batch: usize,
     pub eval_batch: usize,
     pub kernel_chunk: usize,
@@ -170,6 +174,11 @@ impl Manifest {
         };
         Ok(Manifest {
             dir: dir.to_path_buf(),
+            exec: j
+                .get("exec")
+                .and_then(|x| x.as_str())
+                .unwrap_or("pjrt")
+                .to_string(),
             train_batch: j.req_usize("train_batch")?,
             eval_batch: j.req_usize("eval_batch")?,
             kernel_chunk: j.req_usize("kernel_chunk")?,
@@ -191,6 +200,127 @@ impl Manifest {
             .find(|a| a.kind == "kernel" && a.op.as_deref() == Some(op))
             .ok_or_else(|| anyhow::anyhow!("kernel op {op:?} not in manifest"))
     }
+}
+
+/// Write a `"exec": "native"` manifest (plus marker files) into `dir` for
+/// the given `(model, width)` pairs — train + eval artifacts per model and
+/// the four flat kernels. This replaces `make artifacts` on hosts without
+/// a JAX/XLA toolchain: the resulting manifest drives the pure-Rust
+/// executor in [`super::native`], which supports FC models (the `mlp`
+/// family). Used by the parallel-round tests and the round bench.
+pub fn write_native_manifest(
+    dir: &Path,
+    models: &[(&str, f64)],
+    train_batch: usize,
+    eval_batch: usize,
+) -> anyhow::Result<()> {
+    use crate::model::{LayerKind, ModelSpec};
+
+    std::fs::create_dir_all(dir)?;
+    let mut artifacts: Vec<Json> = Vec::new();
+    let mut geoms: Vec<Json> = Vec::new();
+    for &(name, width) in models {
+        let spec = ModelSpec::get(name, width)?;
+        let tag = spec.id.tag();
+        let params_json: Vec<Json> = spec
+            .param_shapes()
+            .into_iter()
+            .map(|(pname, shape)| {
+                Json::obj(vec![
+                    ("name", Json::s(&pname)),
+                    ("shape", Json::arr_usize(&shape)),
+                ])
+            })
+            .collect();
+        for (kind, batch) in [("train", train_batch), ("eval", eval_batch)] {
+            let aname = format!("{tag}_{kind}");
+            let fname = format!("{aname}.native.txt");
+            std::fs::write(
+                dir.join(&fname),
+                format!("native-exec artifact {aname}: no HLO; executed by rust/src/runtime/native.rs\n"),
+            )?;
+            let mut x_shape = vec![batch];
+            x_shape.extend(&spec.input_shape);
+            let mut inputs = vec![
+                Json::obj(vec![
+                    ("name", Json::s("x")),
+                    ("shape", Json::arr_usize(&x_shape)),
+                    ("dtype", Json::s("f32")),
+                ]),
+                Json::obj(vec![
+                    ("name", Json::s("y")),
+                    ("shape", Json::arr_usize(&[batch])),
+                    ("dtype", Json::s("i32")),
+                ]),
+            ];
+            if kind == "train" {
+                inputs.push(Json::obj(vec![
+                    ("name", Json::s("lr")),
+                    ("shape", Json::arr_usize(&[1])),
+                    ("dtype", Json::s("f32")),
+                ]));
+            }
+            artifacts.push(Json::obj(vec![
+                ("name", Json::s(&aname)),
+                ("file", Json::s(&fname)),
+                ("kind", Json::s(kind)),
+                ("model", Json::s(name)),
+                ("width", Json::Num(width)),
+                ("batch", Json::Num(batch as f64)),
+                ("params", Json::Arr(params_json.clone())),
+                ("inputs", Json::Arr(inputs)),
+                ("outputs", Json::Arr(Vec::new())),
+            ]));
+        }
+        geoms.push(Json::obj(vec![
+            ("name", Json::s(name)),
+            ("width", Json::Num(width)),
+            ("param_count", Json::Num(spec.param_count() as f64)),
+            (
+                "layers",
+                Json::Arr(
+                    spec.layers
+                        .iter()
+                        .map(|l| {
+                            let kind = match l.kind {
+                                LayerKind::Conv { .. } => "conv",
+                                LayerKind::Fc => "fc",
+                            };
+                            Json::obj(vec![
+                                ("kind", Json::s(kind)),
+                                ("in", Json::Num(l.in_dim as f64)),
+                                ("out", Json::Num(l.out_dim as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    for op in ["masked_acc", "masked_fin", "importance", "sgd"] {
+        let aname = format!("kernel_{op}");
+        let fname = format!("{aname}.native.txt");
+        std::fs::write(
+            dir.join(&fname),
+            format!("native-exec kernel {op}: mirrored by rust tensor ops\n"),
+        )?;
+        artifacts.push(Json::obj(vec![
+            ("name", Json::s(&aname)),
+            ("file", Json::s(&fname)),
+            ("kind", Json::s("kernel")),
+            ("op", Json::s(op)),
+            ("chunk", Json::Num(16384.0)),
+        ]));
+    }
+    let manifest = Json::obj(vec![
+        ("exec", Json::s("native")),
+        ("train_batch", Json::Num(train_batch as f64)),
+        ("eval_batch", Json::Num(eval_batch as f64)),
+        ("kernel_chunk", Json::Num(16384.0)),
+        ("artifacts", Json::Arr(artifacts)),
+        ("models", Json::Arr(geoms)),
+    ]);
+    json::to_file(&dir.join("manifest.json"), &manifest)
 }
 
 /// Default artifacts dir (repo-root relative), honoring FEDDD_ARTIFACTS.
@@ -237,6 +367,36 @@ mod tests {
         assert_eq!(t.inputs.len(), 3);
         assert_eq!(t.inputs[1].dtype, Dtype::I32);
         assert!(t.file.exists());
+    }
+
+    #[test]
+    fn native_manifest_roundtrips() {
+        let dir = std::env::temp_dir().join(format!(
+            "feddd_native_manifest_{}_registry",
+            std::process::id()
+        ));
+        write_native_manifest(&dir, &[("mlp", 1.0), ("mlp", 0.25)], 16, 64).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.exec, "native");
+        assert_eq!(m.train_batch, 16);
+        assert_eq!(m.eval_batch, 64);
+        assert_eq!(m.kernel_chunk, 16384);
+        let t = m.get("mlp_w100_train").unwrap();
+        assert_eq!(t.kind, "train");
+        assert_eq!(t.model.as_deref(), Some("mlp"));
+        assert_eq!(t.batch, 16);
+        assert_eq!(t.params.len(), 6);
+        assert_eq!(t.params[0].1, vec![784, 100]);
+        assert_eq!(t.inputs.len(), 3);
+        assert_eq!(t.inputs[1].dtype, Dtype::I32);
+        assert!(t.file.exists());
+        let e = m.get("mlp_w25_eval").unwrap();
+        assert_eq!(e.batch, 64);
+        for op in ["masked_acc", "masked_fin", "importance", "sgd"] {
+            assert_eq!(m.kernel(op).unwrap().chunk, 16384);
+        }
+        assert_eq!(m.models.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -170,9 +170,14 @@ fn group_norms(layer: &crate::model::Layer, w: &[f32], b: &[f32]) -> Vec<f64> {
     acc
 }
 
-/// Number of units layer `l` keeps under dropout rate `d`.
+/// Number of units layer `l` keeps under dropout rate `d`, clamped to
+/// `[1, n_units]` (f64 rounding must never select more units than exist).
 pub fn keep_count(n_units: usize, d: f64) -> usize {
-    ((n_units as f64) * (1.0 - d)).round().max(1.0) as usize
+    if n_units == 0 {
+        return 0;
+    }
+    let kept = ((n_units as f64) * (1.0 - d)).round().max(1.0) as usize;
+    kept.min(n_units)
 }
 
 /// Select the uploaded channel mask for one client (Algorithm 2).
@@ -209,8 +214,14 @@ pub fn select_mask(
                 *s = f64::MIN;
             }
         }
+        // Total order: score descending (f64::total_cmp, so the
+        // comparator is total even for values the sanitization above
+        // might miss), ties broken by ascending unit index. Explicit
+        // tie-breaking (rather than relying on sort stability) keeps
+        // masks reproducible across platforms, sort implementations and
+        // worker counts.
         let mut order: Vec<usize> = (0..layer.out_dim).collect();
-        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
         let mut sel = vec![false; layer.out_dim];
         for &k in order.iter().take(keep) {
             sel[k] = true;
@@ -247,6 +258,37 @@ mod tests {
         assert_eq!(keep_count(10, 0.0), 10);
         assert_eq!(keep_count(10, 0.99), 1); // at least one unit
         assert_eq!(keep_count(3, 0.5), 2);
+        assert_eq!(keep_count(0, 0.5), 0); // degenerate layer stays empty
+        // clamped to the unit count even at d = 0
+        for n in 1..50 {
+            assert!(keep_count(n, 0.0) == n);
+        }
+    }
+
+    #[test]
+    fn equal_scores_break_ties_by_unit_index() {
+        // after == before ⇒ every Delta score is exactly 0 ⇒ pure ties:
+        // the kept set must be the lowest-indexed units.
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(11);
+        let before = spec.init_params(&mut rng);
+        let after = before.clone();
+        let m = select_mask(Policy::Delta, &spec, &before, &after, None, 0.5, &mut rng);
+        for (l, sel) in m.per_layer.iter().enumerate() {
+            let keep = keep_count(spec.layers[l].out_dim, 0.5);
+            assert!(sel[..keep].iter().all(|&b| b), "layer {l}: {sel:?}");
+            assert!(sel[keep..].iter().all(|&b| !b), "layer {l}: {sel:?}");
+        }
+    }
+
+    #[test]
+    fn selection_is_reproducible_for_fixed_inputs() {
+        let (spec, before, after) = mlp_params(7);
+        for policy in [Policy::Importance, Policy::Max, Policy::Delta, Policy::Ordered] {
+            let a = select_mask(policy, &spec, &before, &after, None, 0.4, &mut Rng::new(1));
+            let b = select_mask(policy, &spec, &before, &after, None, 0.4, &mut Rng::new(1));
+            assert_eq!(a, b, "{policy:?}");
+        }
     }
 
     #[test]

@@ -46,6 +46,9 @@ impl ThreadPool {
         if nworkers <= 1 {
             return items.into_iter().map(f).collect();
         }
+        // Dynamic work queue: scheduling order is nondeterministic, but
+        // outputs are index-ordered and each job is a pure function of its
+        // item, so results never depend on the schedule.
         let queue = Arc::new(Mutex::new(
             items.into_iter().enumerate().collect::<Vec<_>>(),
         ));
@@ -77,6 +80,19 @@ impl ThreadPool {
                 .map(|o| o.expect("worker died before producing result"))
                 .collect()
         })
+    }
+
+    /// [`Self::scoped_map`] over fallible jobs: runs every job, then
+    /// returns the outputs or the first error *in input order* (not in
+    /// completion order), keeping error reporting deterministic under
+    /// parallelism.
+    pub fn scoped_try_map<T, R, F>(&self, items: Vec<T>, f: F) -> anyhow::Result<Vec<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> anyhow::Result<R> + Sync,
+    {
+        self.scoped_map(items, f).into_iter().collect()
     }
 }
 
@@ -111,5 +127,35 @@ mod tests {
         let offset = 10usize;
         let out = pool.scoped_map(vec![1usize, 2, 3], |x| x + offset);
         assert_eq!(out, vec![11, 12, 13]);
+    }
+
+    #[test]
+    fn try_map_reports_first_error_by_input_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.scoped_try_map((0..100).collect::<Vec<usize>>(), |x| {
+            if x % 7 == 3 {
+                Err(anyhow::anyhow!("bad item {x}"))
+            } else {
+                Ok(x * 2)
+            }
+        });
+        // First failing input is 3 regardless of which worker hit it first.
+        assert_eq!(out.unwrap_err().to_string(), "bad item 3");
+        let ok = pool.scoped_try_map(vec![1usize, 2], |x| Ok(x + 1)).unwrap();
+        assert_eq!(ok, vec![2, 3]);
+    }
+
+    #[test]
+    fn mutable_items_fan_out() {
+        // The round engine hands each worker a disjoint `&mut` client.
+        let pool = ThreadPool::new(4);
+        let mut state = vec![0u64; 16];
+        let items: Vec<(usize, &mut u64)> = state.iter_mut().enumerate().collect();
+        pool.scoped_map(items, |(i, slot)| {
+            *slot = (i as u64) * 3;
+        });
+        for (i, v) in state.iter().enumerate() {
+            assert_eq!(*v, (i as u64) * 3);
+        }
     }
 }

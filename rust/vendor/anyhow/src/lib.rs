@@ -1,0 +1,97 @@
+//! Minimal offline shim of the `anyhow` API surface this repository uses:
+//! [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The build environment has no crates.io access, so the real crate is
+//! replaced by this message-carrying error type. Any `std::error::Error`
+//! converts into [`Error`] via `?` exactly like upstream anyhow; context
+//! chaining and backtraces are intentionally out of scope.
+
+use std::fmt;
+
+/// A message-carrying error type, convertible from any std error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`, which keeps
+// this blanket conversion coherent (same trick as upstream anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    fn io_fail() -> crate::Result<()> {
+        std::fs::read("/definitely/not/a/path/xyz")?;
+        Ok(())
+    }
+
+    fn checked(x: i32) -> crate::Result<i32> {
+        crate::ensure!(x > 0, "x must be positive, got {x}");
+        if x > 100 {
+            crate::bail!("x too large: {}", x);
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        assert!(io_fail().is_err());
+        assert_eq!(checked(5).unwrap(), 5);
+        assert!(checked(-1).unwrap_err().to_string().contains("positive"));
+        assert!(checked(200).unwrap_err().to_string().contains("too large"));
+        let e = crate::anyhow!("plain {}", 7);
+        assert_eq!(format!("{e}"), "plain 7");
+        assert_eq!(format!("{e:?}"), "plain 7");
+    }
+}
