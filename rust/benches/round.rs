@@ -1,9 +1,16 @@
-//! End-to-end round bench: one full synchronous FedDD round (train +
-//! select + shard-aggregate + merge) on the smoke preset at several
-//! worker counts, vs the FedAvg baseline — the headline L3 number in
-//! EXPERIMENTS.md §Perf. With prebuilt HLO artifacts it drives PJRT;
-//! otherwise it writes a native-exec manifest and drives the pure-Rust
-//! FC executor, so the workers scaling is measurable on any host.
+//! End-to-end round bench: one full FedDD round (train + select +
+//! shard-aggregate + merge) on the smoke preset, swept over
+//! scheme × workers × round_mode, vs the FedAvg baseline — the headline
+//! L3 number in EXPERIMENTS.md §Perf. With prebuilt HLO artifacts it
+//! drives PJRT; otherwise it writes a native-exec manifest and drives the
+//! pure-Rust FC executor, so the sweep is measurable on any host.
+//!
+//! With `FEDDD_BENCH_JSON=<dir>` the harness writes `BENCH_<name>.json`
+//! (per case: ns/round + uploaded bytes; run level: the sync vs
+//! semi-async virtual-time comparison). The bench also **gates**: on the
+//! skewed Table-4 fleet, semi-async quorum rounds must finish the same
+//! round count in strictly less virtual time than the synchronous
+//! barrier, or the process exits non-zero (CI fails).
 
 use std::path::PathBuf;
 
@@ -11,6 +18,7 @@ use feddd::config::ExpConfig;
 use feddd::coordinator::FedRun;
 use feddd::runtime::{default_artifacts_dir, write_native_manifest, Runtime};
 use feddd::util::bench::{black_box, Bencher};
+use feddd::util::json::Json;
 
 fn artifacts_dir() -> PathBuf {
     // Use the prebuilt artifacts only when the runtime can actually open
@@ -31,40 +39,90 @@ fn artifacts_dir() -> PathBuf {
     tmp
 }
 
-fn cfg(scheme: &str, workers: usize, dir: &PathBuf) -> ExpConfig {
+fn cfg(scheme: &str, workers: usize, round_mode: &str, dir: &PathBuf) -> ExpConfig {
     let mut cfg = ExpConfig::smoke();
     cfg.scheme = scheme.into();
     cfg.rounds = 1000; // stepped manually
     cfg.n_clients = 10;
     cfg.test_n = 128;
     cfg.workers = workers;
+    cfg.round_mode = round_mode.into();
+    cfg.quorum = 0.7;
+    cfg.staleness_beta = 0.5;
     cfg.artifacts_dir = dir.to_string_lossy().into_owned();
     cfg
+}
+
+/// Virtual time after `rounds` rounds under the given round mode — the
+/// analytic quantity the semi-async scheduler exists to shrink.
+fn virtual_time(round_mode: &str, rounds: usize, dir: &PathBuf) -> f64 {
+    let mut run = FedRun::new(cfg("feddd", 1, round_mode, dir)).unwrap();
+    for _ in 0..rounds {
+        run.step_round().unwrap();
+    }
+    run.clock.now()
 }
 
 fn main() {
     let dir = artifacts_dir();
     let mut b = Bencher::new("round");
-    // headline: FedDD round vs worker count (1 = sequential baseline)
-    for workers in [1usize, 2, 4] {
-        let mut run = FedRun::new(cfg("feddd", workers, &dir)).unwrap();
-        // warm caches & pass round 1 (full upload)
-        run.step_round().unwrap();
-        b.bench(&format!("step_round_feddd_mlp_10c_w{workers}"), || {
-            black_box(run.step_round().unwrap());
-        });
+    // headline sweep: FedDD round wall-clock at scheme × workers ×
+    // round_mode (workers=1 sync is the sequential baseline).
+    for round_mode in ["sync", "semi_async"] {
+        for workers in [1usize, 2, 4] {
+            let mut run = FedRun::new(cfg("feddd", workers, round_mode, &dir)).unwrap();
+            // warm caches & pass round 1 (full upload)
+            run.step_round().unwrap();
+            let mut last_uploaded = 0usize;
+            b.bench(&format!("step_round_feddd_mlp_10c_w{workers}_{round_mode}"), || {
+                last_uploaded = black_box(run.step_round().unwrap()).uploaded_bytes;
+            });
+            b.annotate("scheme", Json::s("feddd"));
+            b.annotate("workers", Json::Num(workers as f64));
+            b.annotate("round_mode", Json::s(round_mode));
+            b.annotate("uploaded_bytes", Json::Num(last_uploaded as f64));
+        }
     }
     // FedAvg baseline (full uploads, no selection) at workers=1.
-    let mut run = FedRun::new(cfg("fedavg", 1, &dir)).unwrap();
+    let mut run = FedRun::new(cfg("fedavg", 1, "sync", &dir)).unwrap();
     run.step_round().unwrap();
-    b.bench("step_round_fedavg_mlp_10c_w1", || {
-        black_box(run.step_round().unwrap());
+    let mut last_uploaded = 0usize;
+    b.bench("step_round_fedavg_mlp_10c_w1_sync", || {
+        last_uploaded = black_box(run.step_round().unwrap()).uploaded_bytes;
     });
+    b.annotate("scheme", Json::s("fedavg"));
+    b.annotate("workers", Json::Num(1.0));
+    b.annotate("round_mode", Json::s("sync"));
+    b.annotate("uploaded_bytes", Json::Num(last_uploaded as f64));
     // evaluation pass
-    let mut run = FedRun::new(cfg("feddd", 1, &dir)).unwrap();
+    let mut run = FedRun::new(cfg("feddd", 1, "sync", &dir)).unwrap();
     run.step_round().unwrap();
     b.bench("evaluate_mlp_128", || {
         black_box(run.evaluate().unwrap());
     });
+
+    // ---- virtual-time gate (CI fails on regression) ----
+    // On the skewed Table-4 fleet the quorum scheduler must close the
+    // same number of rounds in strictly less virtual time than the
+    // barrier. This is deterministic (seeded), so a violation is a real
+    // scheduler regression, not noise.
+    let rounds = 8;
+    let vt_sync = virtual_time("sync", rounds, &dir);
+    let vt_semi = virtual_time("semi_async", rounds, &dir);
+    let speedup = vt_sync / vt_semi;
+    println!(
+        "round::virtual_time_{rounds}r  sync {vt_sync:.1}s  \
+         semi_async {vt_semi:.1}s  speedup {speedup:.2}x"
+    );
+    b.annotate_run("v_time_sync_s", Json::Num(vt_sync));
+    b.annotate_run("v_time_semi_async_s", Json::Num(vt_semi));
+    b.annotate_run("semi_async_speedup", Json::Num(speedup));
     b.finish();
+    if vt_semi >= vt_sync {
+        eprintln!(
+            "GATE FAILED: semi_async virtual time {vt_semi:.1}s is not \
+             faster than sync {vt_sync:.1}s on the skewed fleet"
+        );
+        std::process::exit(1);
+    }
 }

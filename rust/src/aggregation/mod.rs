@@ -124,19 +124,29 @@ impl Aggregator {
         self.clients_added
     }
 
-    /// Fold another aggregator's partial sums into this one (elementwise
-    /// `num += num`, `den += den`). Both must target the same global
-    /// geometry. This is the shard-merge primitive of the parallel round
-    /// engine: each worker accumulates a disjoint client range into its
-    /// own `Aggregator`, and the partials are merged afterwards.
-    pub fn absorb(&mut self, other: &Aggregator) -> anyhow::Result<()> {
+    /// Fold another aggregator's partial sums into this one, scaled by
+    /// `staleness_weight` (elementwise `num += w·num`, `den += w·den`).
+    /// Both must target the same global geometry.
+    ///
+    /// This is both the shard-merge primitive of the parallel round engine
+    /// (each worker accumulates a disjoint client range; partials merge
+    /// with weight 1) and the staleness fold of the semi-asynchronous
+    /// engine: a buffered late arrival's partial is absorbed with
+    /// `m_n ← m_n · (1+s_n)^{-β}` ([`staleness_weight`]) applied to Eq. 4's
+    /// mask-weighted numerator *and* denominator, so the discount rescales
+    /// the client's vote without biasing the quotient (DESIGN.md §7).
+    pub fn absorb(&mut self, other: &Aggregator, staleness_weight: f32) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.global_shapes == other.global_shapes,
             "shard geometry mismatch"
         );
+        anyhow::ensure!(
+            staleness_weight.is_finite() && staleness_weight >= 0.0,
+            "staleness weight {staleness_weight} must be finite and >= 0"
+        );
         for i in 0..self.num.len() {
-            axpy(self.num[i].data_mut(), 1.0, other.num[i].data());
-            axpy(self.den[i].data_mut(), 1.0, other.den[i].data());
+            axpy(self.num[i].data_mut(), staleness_weight, other.num[i].data());
+            axpy(self.den[i].data_mut(), staleness_weight, other.den[i].data());
         }
         self.clients_added += other.clients_added;
         Ok(())
@@ -154,7 +164,7 @@ impl Aggregator {
             let mut it = shards.into_iter();
             while let Some(mut left) = it.next() {
                 if let Some(right) = it.next() {
-                    left.absorb(&right)?;
+                    left.absorb(&right, 1.0)?;
                 }
                 next.push(left);
             }
@@ -196,6 +206,25 @@ impl Aggregator {
             out.push(Tensor::new(self.global_shapes[i].clone(), data));
         }
         Ok(out)
+    }
+}
+
+/// Staleness discount `(1 + s)^{-β}` for a late arrival folded `s` rounds
+/// after dispatch (semi-asynchronous mode; DESIGN.md §7).
+///
+/// Guarantees: exactly `1.0` for fresh updates (`s = 0`) or `β = 0`, so
+/// the quorum==N semi-async path reproduces the synchronous aggregation
+/// bit for bit; always finite and within `[0, 1]` for any `s` and any
+/// finite `β ≥ 0`, so Eq. 4's denominator can never go NaN or negative.
+pub fn staleness_weight(staleness: usize, beta: f64) -> f32 {
+    if staleness == 0 || beta == 0.0 {
+        return 1.0;
+    }
+    let w = (1.0 + staleness as f64).powf(-beta);
+    if w.is_finite() {
+        w.clamp(0.0, 1.0) as f32
+    } else {
+        0.0
     }
 }
 
@@ -441,8 +470,140 @@ mod tests {
         let b = ModelSpec::get("mlp", 1.0).unwrap();
         let mut agg_a = Aggregator::new(&a, AggBackend::Rust);
         let agg_b = Aggregator::new(&b, AggBackend::Rust);
-        assert!(agg_a.absorb(&agg_b).is_err());
+        assert!(agg_a.absorb(&agg_b, 1.0).is_err());
         assert!(Aggregator::merge(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn absorb_rejects_bad_staleness_weight() {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut a = Aggregator::new(&spec, AggBackend::Rust);
+        let b = Aggregator::new(&spec, AggBackend::Rust);
+        assert!(a.absorb(&b, f32::NAN).is_err());
+        assert!(a.absorb(&b, -0.5).is_err());
+        assert!(a.absorb(&b, f32::INFINITY).is_err());
+        assert!(a.absorb(&b, 0.0).is_ok());
+    }
+
+    #[test]
+    fn staleness_weight_bounds() {
+        // Fresh or β=0 must be exactly 1 (bitwise sync equivalence).
+        assert_eq!(staleness_weight(0, 2.0), 1.0);
+        assert_eq!(staleness_weight(5, 0.0), 1.0);
+        // Monotone decreasing in staleness.
+        assert!(staleness_weight(1, 0.5) > staleness_weight(2, 0.5));
+        assert!(staleness_weight(2, 0.5) > staleness_weight(10, 0.5));
+        // Extreme inputs stay in [0, 1] and finite.
+        for &(s, b) in &[(1usize, 1e6), (usize::MAX / 2, 8.0), (3, 1e-9), (1, f64::MAX)] {
+            let w = staleness_weight(s, b);
+            assert!(w.is_finite() && (0.0..=1.0).contains(&w), "({s},{b}) -> {w}");
+        }
+    }
+
+    #[test]
+    fn absorb_weight_equals_discounted_m_n() {
+        // Absorbing a late client's partial with weight w must equal
+        // adding that client directly with m_n·w: the discount acts on
+        // num and den alike, exactly as Eq. 4 with m_n ← m_n·(1+s)^-β.
+        check("absorb weight = discounted m_n", 10, |rng| {
+            let spec = ModelSpec::get("mlp", 0.25).unwrap();
+            let prev = spec.init_params(rng);
+            let fresh = perturbed(&prev, rng, 0.05);
+            let late = perturbed(&prev, rng, 0.05);
+            let mask = crate::selection::select_mask(
+                crate::selection::Policy::Random,
+                &spec,
+                &prev,
+                &late,
+                None,
+                rng.range_f64(0.0, 0.8),
+                rng,
+            )
+            .to_elementwise(&spec);
+            let full = ChannelMask::full(&spec).to_elementwise(&spec);
+            let s = rng.int_range(1, 6);
+            let beta = rng.range_f64(0.1, 3.0);
+            let w = staleness_weight(s, beta);
+
+            let via_absorb = {
+                let mut agg = Aggregator::new(&spec, AggBackend::Rust);
+                agg.add_client(&fresh, &full, 3.0, None).unwrap();
+                let mut part = Aggregator::new(&spec, AggBackend::Rust);
+                part.add_client(&late, &mask, 2.0, None).unwrap();
+                agg.absorb(&part, w).unwrap();
+                agg.finalize(&prev, None).unwrap()
+            };
+            let via_m_n = {
+                let mut agg = Aggregator::new(&spec, AggBackend::Rust);
+                agg.add_client(&fresh, &full, 3.0, None).unwrap();
+                agg.add_client(&late, &mask, 2.0 * w, None).unwrap();
+                agg.finalize(&prev, None).unwrap()
+            };
+            for (a, b) in via_absorb.iter().zip(&via_m_n) {
+                close_slice(a.data(), b.data(), 1e-5)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn staleness_fold_never_corrupts_eq4() {
+        // Property (semi-async safety): folding any mix of fresh and
+        // arbitrarily stale clients under any β ≥ 0 never produces NaN or
+        // a negative denominator — every finalized position is finite and
+        // uncovered positions still fall back to prev.
+        check("staleness fold finite", 15, |rng| {
+            let spec = ModelSpec::get("mlp", 0.25).unwrap();
+            let prev = spec.init_params(rng);
+            let beta = rng.range_f64(0.0, 6.0);
+            let mut agg = Aggregator::new(&spec, AggBackend::Rust);
+            let n_fresh = rng.int_range(0, 4);
+            for _ in 0..n_fresh {
+                let c = perturbed(&prev, rng, 0.1);
+                let mask = crate::selection::select_mask(
+                    crate::selection::Policy::Random,
+                    &spec,
+                    &prev,
+                    &c,
+                    None,
+                    rng.range_f64(0.0, 0.9),
+                    rng,
+                )
+                .to_elementwise(&spec);
+                let m_n = rng.range_f64(0.5, 200.0) as f32;
+                agg.add_client(&c, &mask, m_n, None).unwrap();
+            }
+            for _ in 0..rng.int_range(1, 5) {
+                let s = rng.int_range(1, 50);
+                let c = perturbed(&prev, rng, 0.1);
+                let mask = crate::selection::select_mask(
+                    crate::selection::Policy::Random,
+                    &spec,
+                    &prev,
+                    &c,
+                    None,
+                    rng.range_f64(0.0, 0.9),
+                    rng,
+                )
+                .to_elementwise(&spec);
+                let mut part = Aggregator::new(&spec, AggBackend::Rust);
+                part.add_client(&c, &mask, rng.range_f64(0.5, 200.0) as f32, None).unwrap();
+                let w = staleness_weight(s, beta);
+                if !(w.is_finite() && (0.0..=1.0).contains(&w)) {
+                    return Err(format!("weight out of range: s={s} beta={beta} w={w}"));
+                }
+                agg.absorb(&part, w).unwrap();
+            }
+            let out = agg.finalize(&prev, None).unwrap();
+            for (i, t) in out.iter().enumerate() {
+                for (j, &x) in t.data().iter().enumerate() {
+                    if !x.is_finite() {
+                        return Err(format!("non-finite output at [{i}][{j}]: {x}"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

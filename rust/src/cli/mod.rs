@@ -140,6 +140,20 @@ mod tests {
     }
 
     #[test]
+    fn to_config_knows_round_mode_knobs() {
+        let a = parse(
+            "train --round_mode semi_async --quorum 0.7 --deadline_s 45 --staleness_beta 1.5",
+        );
+        let (cfg, leftover) = a.to_config().unwrap();
+        assert!(leftover.is_empty());
+        assert_eq!(cfg.round_mode, "semi_async");
+        assert_eq!(cfg.quorum, 0.7);
+        assert_eq!(cfg.deadline_s, 45.0);
+        assert_eq!(cfg.staleness_beta, 1.5);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn bad_number_errors() {
         let a = parse("x --rounds abc");
         assert!(a.get_usize("rounds").is_err());

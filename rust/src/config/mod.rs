@@ -65,6 +65,22 @@ pub struct ExpConfig {
     /// `0` = one per available core. Results are bitwise-identical for
     /// every worker count (see `coordinator::engine`).
     pub workers: usize,
+    /// Round engine: "sync" (Algorithm 1's barrier, the default — bitwise
+    /// identical to the classic engine) | "semi_async" (event-driven
+    /// quorum/deadline rounds with staleness-discounted late folds,
+    /// DESIGN.md §7).
+    pub round_mode: String,
+    /// Semi-async arrival quorum as a fraction of in-flight uploads in
+    /// (0, 1]: the round closes once `ceil(quorum · in_flight)` arrivals
+    /// are in. `1.0` waits for everyone (reduces to sync output).
+    pub quorum: f64,
+    /// Semi-async round deadline in virtual seconds; the round closes at
+    /// the deadline even if the quorum was not met. `0` = no deadline.
+    pub deadline_s: f64,
+    /// Staleness discount exponent β: a late arrival folded `s` rounds
+    /// after dispatch is weighted by `m_n · (1+s)^{-β}`. `0` disables the
+    /// discount.
+    pub staleness_beta: f64,
 }
 
 impl Default for ExpConfig {
@@ -97,6 +113,10 @@ impl Default for ExpConfig {
             oort_alpha: 2.0,
             alloc: "optimal".into(),
             workers: 1,
+            round_mode: "sync".into(),
+            quorum: 0.7,
+            deadline_s: 0.0,
+            staleness_beta: 0.5,
         }
     }
 }
@@ -211,6 +231,26 @@ impl ExpConfig {
             "workers {} out of range (0 = auto, else ≤ 1024)",
             self.workers
         );
+        anyhow::ensure!(
+            ["sync", "semi_async"].contains(&self.round_mode.as_str()),
+            "unknown round_mode {:?} (sync|semi_async)",
+            self.round_mode
+        );
+        anyhow::ensure!(
+            self.quorum > 0.0 && self.quorum <= 1.0,
+            "quorum {} must be in (0, 1]",
+            self.quorum
+        );
+        anyhow::ensure!(
+            self.deadline_s.is_finite() && self.deadline_s >= 0.0,
+            "deadline_s {} must be finite and >= 0 (0 = none)",
+            self.deadline_s
+        );
+        anyhow::ensure!(
+            self.staleness_beta.is_finite() && self.staleness_beta >= 0.0,
+            "staleness_beta {} must be finite and >= 0",
+            self.staleness_beta
+        );
         let known_family =
             ["mlp", "cnn1", "cnn2", "het_a", "het_b"].contains(&self.model.as_str());
         // Specific sub-models (e.g. "het_a_3") run homogeneously (Fig. 3).
@@ -254,6 +294,10 @@ impl ExpConfig {
             ("oort_alpha", Json::Num(self.oort_alpha)),
             ("alloc", Json::s(&self.alloc)),
             ("workers", Json::Num(self.workers as f64)),
+            ("round_mode", Json::s(&self.round_mode)),
+            ("quorum", Json::Num(self.quorum)),
+            ("deadline_s", Json::Num(self.deadline_s)),
+            ("staleness_beta", Json::Num(self.staleness_beta)),
         ])
     }
 
@@ -298,6 +342,10 @@ impl ExpConfig {
             oort_alpha: gn("oort_alpha", d.oort_alpha),
             alloc: gs("alloc", &d.alloc),
             workers: gn("workers", d.workers as f64) as usize,
+            round_mode: gs("round_mode", &d.round_mode),
+            quorum: gn("quorum", d.quorum),
+            deadline_s: gn("deadline_s", d.deadline_s),
+            staleness_beta: gn("staleness_beta", d.staleness_beta),
         };
         Ok(cfg)
     }
@@ -339,6 +387,10 @@ impl ExpConfig {
             "oort_alpha" => self.oort_alpha = value.parse()?,
             "alloc" => self.alloc = value.into(),
             "workers" => self.workers = value.parse()?,
+            "round_mode" => self.round_mode = value.into(),
+            "quorum" => self.quorum = value.parse()?,
+            "deadline_s" => self.deadline_s = value.parse()?,
+            "staleness_beta" => self.staleness_beta = value.parse()?,
             "rare_classes" => {
                 self.rare_classes = value
                     .split(',')
@@ -425,6 +477,41 @@ mod tests {
         c.workers = 0; // auto
         c.validate().unwrap();
         c.workers = 100_000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn round_mode_knobs_roundtrip_and_validate() {
+        let mut c = ExpConfig::smoke();
+        assert_eq!(c.round_mode, "sync"); // sync stays the default
+        c.round_mode = "semi_async".into();
+        c.quorum = 0.7;
+        c.deadline_s = 120.0;
+        c.staleness_beta = 1.5;
+        c.validate().unwrap();
+        let back = ExpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+        c.set("round_mode", "sync").unwrap();
+        c.set("quorum", "0.9").unwrap();
+        c.set("deadline_s", "30.5").unwrap();
+        c.set("staleness_beta", "0.25").unwrap();
+        assert_eq!(c.round_mode, "sync");
+        assert_eq!(c.quorum, 0.9);
+        assert_eq!(c.deadline_s, 30.5);
+        assert_eq!(c.staleness_beta, 0.25);
+    }
+
+    #[test]
+    fn round_mode_knobs_reject_bad_values() {
+        let c = ExpConfig { round_mode: "async".into(), ..ExpConfig::default() };
+        assert!(c.validate().is_err());
+        let c = ExpConfig { quorum: 0.0, ..ExpConfig::default() };
+        assert!(c.validate().is_err());
+        let c = ExpConfig { quorum: 1.2, ..ExpConfig::default() };
+        assert!(c.validate().is_err());
+        let c = ExpConfig { deadline_s: -1.0, ..ExpConfig::default() };
+        assert!(c.validate().is_err());
+        let c = ExpConfig { staleness_beta: f64::NAN, ..ExpConfig::default() };
         assert!(c.validate().is_err());
     }
 

@@ -4,9 +4,34 @@
 use crate::data::FedDataset;
 use crate::model::{ModelId, ModelSpec};
 use crate::runtime::Runtime;
+use crate::selection::ChannelMask;
 use crate::simnet::DeviceProfile;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// A dispatched upload that has not yet been folded by the server
+/// (semi-asynchronous mode): the channel mask the client actually sent
+/// plus dispatch bookkeeping. The trained parameters stay in
+/// [`ClientState::params`] — nothing mutates them while the upload is in
+/// flight, because the client is busy until its arrival event fires.
+#[derive(Clone, Debug)]
+pub struct PendingUpdate {
+    /// The upload mask `M_n` selected at dispatch; its byte size — not
+    /// the full model's — is what the upload link was charged for.
+    pub mask: ChannelMask,
+    /// Mean training loss reported with the upload (folded into the
+    /// server's round loss when the upload arrives). The dispatch round
+    /// lives on the matching `simnet::ArrivalEvent`.
+    pub loss: f64,
+    /// Actual masked payload size in bytes (`mask.upload_bytes`).
+    pub uploaded: usize,
+    /// Whether the *dispatch* round was a full-broadcast round. The
+    /// arrival-time download merge honors this flag so the client
+    /// receives exactly the download its link was charged for at
+    /// dispatch (full model vs mask-sparse), even when it arrives in a
+    /// round with the opposite broadcast phase.
+    pub full_broadcast: bool,
+}
 
 /// One simulated client.
 pub struct ClientState {

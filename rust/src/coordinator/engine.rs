@@ -1,4 +1,5 @@
-//! The synchronous round engine (Algorithm 1) with scheme dispatch.
+//! The round engine: synchronous Algorithm 1 plus the semi-asynchronous
+//! event-driven variant, with scheme dispatch.
 //!
 //! One [`FedRun`] owns the fleet, the datasets, the runtime and the
 //! global model; [`FedRun::run`] executes the configured number of rounds
@@ -8,7 +9,7 @@
 //!
 //! FedDD's round body is embarrassingly parallel across clients: local
 //! training, Algorithm-2 mask selection and the Eq. 4 masked contribution
-//! are all per-client. [`FedRun::step_round`] fans these phases out over
+//! are all per-client. The engine fans these phases out over
 //! `cfg.workers` threads ([`ThreadPool::scoped_map`]) in two stages:
 //!
 //! 1. **per-client stage** — each participant (a disjoint `&mut
@@ -26,10 +27,29 @@
 //! accumulation happens in a fixed order, a round is **bitwise identical
 //! for every `workers` value** (asserted by `rust/tests/parallel_round.rs`
 //! and benchmarked by `rust/benches/round.rs`).
+//!
+//! # Round modes (`cfg.round_mode`)
+//!
+//! * **`sync`** (default) — Algorithm 1's barrier: the server waits for
+//!   every participant, so the round clock is `max_n(t_n)` and the
+//!   straggler sets the pace. This path is bitwise-identical to the
+//!   classic engine for every worker count.
+//! * **`semi_async`** — the scheduler, not the client loop, owns time
+//!   (DESIGN.md §7). Every dispatched upload becomes an arrival event in
+//!   a min-heap ([`EventQueue`]); the server closes a round when an
+//!   arrival quorum `ceil(quorum · in_flight)` is reached or the round
+//!   deadline `deadline_s` fires, whichever is earlier. Clients that
+//!   miss the close are **not discarded**: they stay in flight on their
+//!   own clocks ([`ClientClocks`]) and their uploads are folded into a
+//!   later round's Eq. 4 with the staleness discount
+//!   `m_n ← m_n · (1+s_n)^{-β}` ([`staleness_weight`]). With
+//!   `quorum = 1` and no deadline the fold degenerates to the
+//!   synchronous aggregation (asserted by `rust/tests/semi_async.rs`).
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::aggregation::{sparse_merge, AggBackend, Aggregator};
+use crate::aggregation::{sparse_merge, staleness_weight, AggBackend, Aggregator};
 use crate::baselines;
 use crate::config::ExpConfig;
 use crate::data::{FedDataset, Partition, PartitionKind, SynthSpec};
@@ -37,13 +57,13 @@ use crate::metrics::{EvalAccumulator, EvalRecord, RoundRecord, RunResult};
 use crate::model::{coverage_rates, extract_params, ModelId, ModelSpec};
 use crate::runtime::Runtime;
 use crate::selection::{select_mask, ChannelMask, Policy};
-use crate::simnet::{Fleet, RoundTiming, VirtualClock};
+use crate::simnet::{ArrivalEvent, ClientClocks, EventQueue, Fleet, RoundTiming, VirtualClock};
 use crate::solver::{allocate_fast, AllocInput, AllocParams};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
-use super::client::ClientState;
+use super::client::{ClientState, PendingUpdate};
 
 /// Upper bound on aggregation shards per round. Fixed (worker-independent)
 /// so the merge tree — and therefore the f32 summation order — is a pure
@@ -67,8 +87,20 @@ struct ClientRoundOutput {
 pub struct RoundOutcome {
     pub duration: f64,
     pub mean_loss: f64,
+    /// Mean dropout this round: realized byte savings in sync mode,
+    /// mean allocated rate over dispatched clients in semi-async mode
+    /// (0 for baselines and round 1).
+    pub mean_dropout: f64,
+    /// Whether this round was a full-model broadcast round.
+    pub full_broadcast: bool,
     pub uploaded_bytes: usize,
+    /// Clients whose uploads were folded into this round's aggregation.
     pub participants: usize,
+    /// Uploads still in flight when the round closed (semi-async; 0 in
+    /// sync mode, where the barrier waits for everyone).
+    pub stragglers: usize,
+    /// Mean staleness (in rounds) of the folded uploads (0 in sync mode).
+    pub mean_staleness: f64,
 }
 
 pub struct FedRun {
@@ -90,6 +122,12 @@ pub struct FedRun {
     backend: AggBackend,
     /// Worker pool for the per-client round phases (`cfg.workers`).
     pool: ThreadPool,
+    /// Pending arrival events (semi-async mode; empty in sync mode).
+    events: EventQueue,
+    /// Per-client busy-until clocks (semi-async mode).
+    client_clocks: ClientClocks,
+    /// Dispatched-but-unfolded uploads per client (semi-async mode).
+    pending: Vec<Option<PendingUpdate>>,
 }
 
 impl FedRun {
@@ -167,10 +205,7 @@ impl FedRun {
             let specs: Vec<&ModelSpec> = clients.iter().map(|c| &c.spec).collect();
             coverage_rates(&specs, &global_spec)
         };
-        let eval_artifact = format!(
-            "{}_eval",
-            ModelId::new(&global_name, cfg.width_pct).tag()
-        );
+        let eval_artifact = format!("{}_eval", ModelId::new(&global_name, cfg.width_pct).tag());
         runtime.manifest().get(&eval_artifact)?;
         let policy = Policy::by_name(&cfg.selection)?;
         let backend = AggBackend::by_name(&cfg.agg_backend)?;
@@ -192,6 +227,9 @@ impl FedRun {
             policy,
             backend,
             pool,
+            events: EventQueue::new(),
+            client_clocks: ClientClocks::new(n),
+            pending: vec![None; n],
         })
     }
 
@@ -223,71 +261,59 @@ impl FedRun {
         Ok((acc.accuracy(), acc.mean_loss(), acc.per_class_accuracy()))
     }
 
-    /// Execute one synchronous round (Algorithm 1 body).
+    /// Execute one round under the configured `round_mode`.
     pub fn step_round(&mut self) -> anyhow::Result<RoundOutcome> {
-        self.round += 1;
-        let t = self.round;
-        let cfg = self.cfg.clone();
-        let full_broadcast = t % cfg.h == 0 || cfg.scheme != "feddd";
+        match self.cfg.round_mode.as_str() {
+            "semi_async" => self.step_round_semi_async(),
+            _ => self.step_round_sync(),
+        }
+    }
 
-        // ---- 0. participants + dropout rates ----
-        let (participants, dropout): (Vec<usize>, Vec<f64>) = match cfg.scheme.as_str() {
+    /// Step 0 of a round: the participant set and the dropout-rate vector
+    /// (indexed by absolute client id) for round `t`, per the scheme.
+    fn round_participants(&mut self, t: usize) -> anyhow::Result<(Vec<usize>, Vec<f64>)> {
+        let n = self.clients.len();
+        match self.cfg.scheme.as_str() {
             "feddd" => {
-                let all: Vec<usize> = (0..self.clients.len()).collect();
                 let d = if t == 1 {
-                    vec![0.0; self.clients.len()] // Algorithm 1: D^1 = 0
+                    vec![0.0; n] // Algorithm 1: D^1 = 0
                 } else {
                     self.allocate_dropout()?
                 };
-                (all, d)
+                Ok(((0..n).collect(), d))
             }
-            "fedavg" => {
-                let all: Vec<usize> = (0..self.clients.len()).collect();
-                let d = vec![0.0; self.clients.len()];
-                (all, d)
-            }
+            "fedavg" => Ok(((0..n).collect(), vec![0.0; n])),
             "fedcs" => {
-                let sel = baselines::fedcs_select(
-                    &self.clients,
-                    &cfg,
-                    self.budget_bytes(),
-                );
-                let d = vec![0.0; self.clients.len()];
-                (sel, d)
+                let budget = self.budget_bytes();
+                let sel = baselines::fedcs_select(&self.clients, &self.cfg, budget);
+                Ok((sel, vec![0.0; n]))
             }
             "oort" => {
-                let sel = baselines::oort_select(
-                    &self.clients,
-                    &cfg,
-                    self.budget_bytes(),
-                    t,
-                    &mut self.rng,
-                );
-                let d = vec![0.0; self.clients.len()];
-                (sel, d)
+                let budget = self.budget_bytes();
+                let sel =
+                    baselines::oort_select(&self.clients, &self.cfg, budget, t, &mut self.rng);
+                Ok((sel, vec![0.0; n]))
             }
             s => anyhow::bail!("unknown scheme {s:?}"),
-        };
-
-        // ---- 1. download phase (server -> clients) ----
-        // FedDD round t>1, t-1 not broadcast: clients already merged the
-        // sparse download at the end of the previous round. Baselines and
-        // broadcast rounds: participants sync to the full global model.
-        for &n in &participants {
-            if cfg.scheme != "feddd" {
-                let c = &mut self.clients[n];
-                c.params = extract_params(&self.global_params, &c.spec);
-            }
         }
+    }
 
-        // ---- 2. local training + selection (parallel per client) ----
-        //
-        // Every participant is an independent work item: it owns a
-        // disjoint `&mut ClientState` (its params, RNG stream, loss
-        // bookkeeping), trains against the shared thread-safe runtime,
-        // then selects + expands its upload mask. `scoped_map` returns
-        // outputs in input (= ascending client) order, so the f64 loss
-        // sum below accumulates in the same order for every worker count.
+    /// Local training + mask selection for the given clients, fanned over
+    /// the worker pool; outputs come back in ascending client order.
+    ///
+    /// Every listed client is an independent work item: it owns a disjoint
+    /// `&mut ClientState` (its params, RNG stream, loss bookkeeping),
+    /// trains against the shared thread-safe runtime, then selects its
+    /// upload mask. `scoped_map` returns outputs in input (= ascending
+    /// client) order, so downstream f64 accumulations run in the same
+    /// order for every worker count.
+    fn train_and_select(
+        &mut self,
+        t: usize,
+        participants: &[usize],
+        dropout: &[f64],
+    ) -> anyhow::Result<Vec<ClientRoundOutput>> {
+        let cfg = self.cfg.clone();
         let is_feddd = cfg.scheme == "feddd";
         let hetero = cfg.is_hetero();
         let round_label = t as u64;
@@ -296,9 +322,8 @@ impl FedRun {
         let cr = &self.cr;
         let policy = self.policy;
         let cfg_ref = &cfg;
-        let dropout_ref = &dropout;
         let mut in_round = vec![false; self.clients.len()];
-        for &n in &participants {
+        for &n in participants {
             in_round[n] = true;
         }
         let items: Vec<(usize, &mut ClientState)> = self
@@ -307,7 +332,7 @@ impl FedRun {
             .enumerate()
             .filter(|(n, _)| in_round[*n])
             .collect();
-        let outs: Vec<ClientRoundOutput> = self.pool.scoped_try_map(
+        self.pool.scoped_try_map(
             items,
             |(n, c): (usize, &mut ClientState)| -> anyhow::Result<ClientRoundOutput> {
                 // Per-item batch buffers: one ~batch×dim alloc per client
@@ -335,7 +360,7 @@ impl FedRun {
                             w_before,
                             &c.params,
                             if hetero { Some(cr.as_slice()) } else { None },
-                            dropout_ref[n],
+                            dropout[n],
                             &mut sel_rng,
                         )
                     }
@@ -344,7 +369,93 @@ impl FedRun {
                 let uploaded = mask.upload_bytes(&c.spec);
                 Ok(ClientRoundOutput { slot: n, loss, uploaded, mask })
             },
+        )
+    }
+
+    /// Full-model broadcast round? (Every h-th round for FedDD; the
+    /// baselines always download the full model.)
+    fn is_full_broadcast(&self, t: usize) -> bool {
+        t % self.cfg.h == 0 || self.cfg.scheme != "feddd"
+    }
+
+    /// Eq. 7–12 timing for one dispatched client: the upload link is
+    /// charged for the bytes of the mask actually sent (`o.uploaded`,
+    /// never a full-model fallback); the download is the full model on
+    /// broadcast rounds, else the mask-sparse slice `W^t ⊙ M_n^t`.
+    fn client_round_timing(&self, o: &ClientRoundOutput, full_broadcast: bool) -> RoundTiming {
+        let c = &self.clients[o.slot];
+        let up_bytes = o.uploaded as f64;
+        let down_bytes = if full_broadcast {
+            c.u_bytes() as f64
+        } else {
+            up_bytes
+        };
+        RoundTiming {
+            t_down: c.profile.t_down(down_bytes),
+            t_cmp: c
+                .profile
+                .t_cmp(c.samples_per_round(self.cfg.local_steps, self.cfg.batch)),
+            t_up: c.profile.t_up(up_bytes),
+        }
+    }
+
+    /// Sharded Eq. 4 accumulation over `(client, mask)` pairs in the given
+    /// order.
+    ///
+    /// The pairs are chunked into ≤ [`AGG_SHARDS`] contiguous shards; each
+    /// shard accumulates its clients in order into a private num/den pair,
+    /// and shards merge pairwise in fixed order. The partition depends
+    /// only on the input list — never on the worker count — so the
+    /// summation order (hence the result, bit for bit) is the same for
+    /// every `workers` value.
+    fn shard_aggregate(&self, items: &[(usize, &ChannelMask)]) -> anyhow::Result<Aggregator> {
+        if items.is_empty() {
+            return Ok(Aggregator::new(&self.global_spec, self.backend));
+        }
+        let global_spec = &self.global_spec;
+        let backend = self.backend;
+        let clients = &self.clients;
+        let rt = &self.runtime;
+        let shard_len = items.len().div_ceil(AGG_SHARDS.min(items.len()));
+        let shards: Vec<&[(usize, &ChannelMask)]> = items.chunks(shard_len).collect();
+        let partials = self.pool.scoped_try_map(
+            shards,
+            |chunk: &[(usize, &ChannelMask)]| -> anyhow::Result<Aggregator> {
+                let mut shard = Aggregator::new(global_spec, backend);
+                for &(slot, mask) in chunk {
+                    let c = &clients[slot];
+                    let elems = mask.to_elementwise(&c.spec);
+                    shard.add_client(&c.params, &elems, c.m_n() as f32, Some(rt))?;
+                }
+                Ok(shard)
+            },
         )?;
+        Aggregator::merge(partials)
+    }
+
+    /// Execute one synchronous round (Algorithm 1 body).
+    fn step_round_sync(&mut self) -> anyhow::Result<RoundOutcome> {
+        self.round += 1;
+        let t = self.round;
+        let cfg = self.cfg.clone();
+        let full_broadcast = self.is_full_broadcast(t);
+
+        // ---- 0. participants + dropout rates ----
+        let (participants, dropout) = self.round_participants(t)?;
+
+        // ---- 1. download phase (server -> clients) ----
+        // FedDD round t>1, t-1 not broadcast: clients already merged the
+        // sparse download at the end of the previous round. Baselines and
+        // broadcast rounds: participants sync to the full global model.
+        for &n in &participants {
+            if cfg.scheme != "feddd" {
+                let c = &mut self.clients[n];
+                c.params = extract_params(&self.global_params, &c.spec);
+            }
+        }
+
+        // ---- 2. local training + selection (parallel per client) ----
+        let outs = self.train_and_select(t, &participants, &dropout)?;
         let mut loss_sum = 0.0;
         let mut uploaded = 0usize;
         for o in &outs {
@@ -354,41 +465,23 @@ impl FedRun {
         let mean_loss = loss_sum / outs.len().max(1) as f64;
 
         // ---- 3. sharded aggregation (Eq. 4) ----
-        //
-        // Participants are chunked into ≤ AGG_SHARDS contiguous shards;
-        // each shard accumulates its clients in order into a private
-        // num/den pair, and shards merge pairwise in fixed order. The
-        // partition depends only on the participant count, so the
-        // summation order — hence the result, bit for bit — is the same
-        // for every worker count.
-        let agg = if outs.is_empty() {
-            Aggregator::new(&self.global_spec, self.backend)
-        } else {
-            let global_spec = &self.global_spec;
-            let backend = self.backend;
-            let clients = &self.clients;
-            let shard_len = outs.len().div_ceil(AGG_SHARDS.min(outs.len()));
-            let shards: Vec<&[ClientRoundOutput]> = outs.chunks(shard_len).collect();
-            let partials = self.pool.scoped_try_map(
-                shards,
-                |chunk: &[ClientRoundOutput]| -> anyhow::Result<Aggregator> {
-                    let mut shard = Aggregator::new(global_spec, backend);
-                    for o in chunk {
-                        let c = &clients[o.slot];
-                        let elems = o.mask.to_elementwise(&c.spec);
-                        shard.add_client(&c.params, &elems, c.m_n() as f32, Some(rt))?;
-                    }
-                    Ok(shard)
-                },
-            )?;
-            Aggregator::merge(partials)?
+        let agg = {
+            let items: Vec<(usize, &ChannelMask)> =
+                outs.iter().map(|o| (o.slot, &o.mask)).collect();
+            self.shard_aggregate(&items)?
         };
-        self.global_params = agg.finalize(&self.global_params, Some(rt))?;
+        self.global_params = agg.finalize(&self.global_params, Some(&self.runtime))?;
+
+        // ---- 4. virtual-time accounting (Eq. 7–12) ----
+        let timings: Vec<RoundTiming> = outs
+            .iter()
+            .map(|o| self.client_round_timing(o, full_broadcast))
+            .collect();
         for o in outs {
             self.last_masks[o.slot] = Some(o.mask);
         }
 
-        // ---- 4. download merge (Eq. 5 / Eq. 6) ----
+        // ---- 5. download merge (Eq. 5 / Eq. 6) ----
         if cfg.scheme == "feddd" {
             for &n in &participants {
                 let c = &mut self.clients[n];
@@ -402,36 +495,195 @@ impl FedRun {
             }
         }
 
-        // ---- 5. virtual-time accounting (Eq. 7–12) ----
-        let timings: Vec<RoundTiming> = participants
-            .iter()
-            .map(|&n| {
-                let c = &self.clients[n];
-                let up_bytes = self.last_masks[n]
-                    .as_ref()
-                    .map(|m| m.upload_bytes(&c.spec))
-                    .unwrap_or_else(|| c.u_bytes()) as f64;
-                let down_bytes = if full_broadcast {
-                    c.u_bytes() as f64
-                } else {
-                    up_bytes // sparse download W^t ⊙ M_n^t
-                };
-                RoundTiming {
-                    t_down: c.profile.t_down(down_bytes),
-                    t_cmp: c
-                        .profile
-                        .t_cmp(c.samples_per_round(cfg.local_steps, cfg.batch)),
-                    t_up: c.profile.t_up(up_bytes),
-                }
-            })
-            .collect();
         let duration = self.clock.advance_round(&timings);
+
+        // Realized dropout: the byte fraction the masks actually saved.
+        let mean_dropout = if cfg.scheme == "feddd" && t > 1 {
+            1.0 - uploaded as f64 / self.clients.iter().map(|c| c.u_bytes()).sum::<usize>() as f64
+        } else {
+            0.0
+        };
 
         Ok(RoundOutcome {
             duration,
             mean_loss,
+            mean_dropout,
+            full_broadcast,
             uploaded_bytes: uploaded,
             participants: participants.len(),
+            stragglers: 0,
+            mean_staleness: 0.0,
+        })
+    }
+
+    /// Execute one semi-asynchronous, event-driven round (DESIGN.md §7).
+    ///
+    /// The scheduler owns time: idle participants are dispatched and
+    /// pushed into the arrival heap; the round closes at the earlier of
+    /// the `ceil(quorum · in_flight)`-th arrival and the deadline; every
+    /// upload that has arrived by then — fresh or buffered from an
+    /// earlier round — is folded into Eq. 4, late ones discounted by
+    /// `(1+s)^{-β}`. Clients still in flight keep their own clocks and
+    /// arrive in a later round.
+    fn step_round_semi_async(&mut self) -> anyhow::Result<RoundOutcome> {
+        self.round += 1;
+        let t = self.round;
+        let cfg = self.cfg.clone();
+        let round_start = self.clock.now();
+        let full_broadcast = self.is_full_broadcast(t);
+
+        // ---- 0. participants + dropout over the whole fleet ----
+        let (participants, dropout) = self.round_participants(t)?;
+
+        // ---- 1. dispatch idle participants ----
+        // Clients still uploading a previous round's update are skipped —
+        // their own clocks run past the server's round boundary.
+        let dispatch: Vec<usize> = participants
+            .iter()
+            .copied()
+            .filter(|&n| !self.client_clocks.is_busy(n, round_start))
+            .collect();
+        for &n in &dispatch {
+            if cfg.scheme != "feddd" {
+                let c = &mut self.clients[n];
+                c.params = extract_params(&self.global_params, &c.spec);
+            }
+        }
+        let outs = self.train_and_select(t, &dispatch, &dropout)?;
+        // Allocated dropout this round: mean rate over the dispatch set.
+        let mean_dropout = if cfg.scheme == "feddd" && t > 1 && !dispatch.is_empty() {
+            dispatch.iter().map(|&n| dropout[n]).sum::<f64>() / dispatch.len() as f64
+        } else {
+            0.0
+        };
+        for o in outs {
+            let total = self.client_round_timing(&o, full_broadcast).total();
+            let finish = round_start + total;
+            self.events.push(ArrivalEvent { finish, client: o.slot, dispatch_round: t });
+            self.client_clocks.dispatch(o.slot, finish);
+            self.pending[o.slot] = Some(PendingUpdate {
+                mask: o.mask,
+                loss: o.loss,
+                uploaded: o.uploaded,
+                full_broadcast,
+            });
+        }
+
+        // ---- 2. close the round: arrival quorum K or deadline ----
+        let in_flight = self.events.len();
+        if in_flight == 0 {
+            // Nothing outstanding (a baseline can select only busy
+            // clients): a zero-duration no-op round, nothing folded.
+            self.clock.advance_to(round_start);
+            return Ok(RoundOutcome {
+                duration: 0.0,
+                mean_loss: 0.0,
+                mean_dropout,
+                full_broadcast,
+                uploaded_bytes: 0,
+                participants: 0,
+                stragglers: 0,
+                mean_staleness: 0.0,
+            });
+        }
+        let quorum_k = ((cfg.quorum * in_flight as f64).ceil() as usize).clamp(1, in_flight);
+        let t_quorum = self.events.kth_finish(quorum_k).expect("quorum_k <= in_flight");
+        let t_deadline = if cfg.deadline_s > 0.0 {
+            round_start + cfg.deadline_s
+        } else {
+            f64::INFINITY
+        };
+        // A deadline no client meets still terminates the round: the
+        // clock advances to the deadline and zero uploads are folded.
+        let t_close = t_quorum.min(t_deadline);
+        let mut arrivals = self.events.pop_until(t_close);
+        let stragglers = self.events.len();
+        // Deterministic fold order: ascending client index within the
+        // round (Eq. 4's f32 accumulation is order-sensitive).
+        arrivals.sort_by_key(|e| e.client);
+
+        // ---- 3. staleness-weighted aggregation (Eq. 4 + discount) ----
+        // The round's loss/byte metrics describe what was actually folded
+        // (fresh or buffered), summed in the same ascending-client order
+        // the aggregation runs in.
+        let mut uploaded = 0usize;
+        let mut staleness_sum = 0usize;
+        let mut loss_sum = 0.0;
+        {
+            let mut fresh: Vec<(usize, &ChannelMask)> = Vec::new();
+            let mut stale: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for ev in &arrivals {
+                let pu = self.pending[ev.client]
+                    .as_ref()
+                    .expect("arrival without a pending upload");
+                let s = t - ev.dispatch_round;
+                uploaded += pu.uploaded;
+                staleness_sum += s;
+                loss_sum += pu.loss;
+                if s == 0 {
+                    fresh.push((ev.client, &pu.mask));
+                } else {
+                    stale.entry(s).or_default().push(ev.client);
+                }
+            }
+            // Fresh arrivals take the sharded path (identical to sync);
+            // each staleness cohort accumulates separately and is absorbed
+            // with its discount applied to numerator and denominator.
+            let mut agg = self.shard_aggregate(&fresh)?;
+            drop(fresh);
+            for (&s, cohort) in &stale {
+                let mut part = Aggregator::new(&self.global_spec, self.backend);
+                for &n in cohort {
+                    let pu = self.pending[n].as_ref().expect("stale cohort client");
+                    let c = &self.clients[n];
+                    let elems = pu.mask.to_elementwise(&c.spec);
+                    part.add_client(&c.params, &elems, c.m_n() as f32, Some(&self.runtime))?;
+                }
+                agg.absorb(&part, staleness_weight(s, cfg.staleness_beta))?;
+            }
+            if agg.clients_added() > 0 {
+                self.global_params = agg.finalize(&self.global_params, Some(&self.runtime))?;
+            }
+        }
+
+        // ---- 4. download merge for the clients that arrived ----
+        // Each client receives the download its link was charged for at
+        // dispatch (`pu.full_broadcast`), not the arrival round's phase.
+        for ev in &arrivals {
+            let n = ev.client;
+            let pu = self.pending[n].take().expect("arrival without a pending upload");
+            if cfg.scheme != "feddd" {
+                continue;
+            }
+            let c = &mut self.clients[n];
+            if pu.full_broadcast {
+                c.params = extract_params(&self.global_params, &c.spec);
+            } else {
+                let slice = extract_params(&self.global_params, &c.spec);
+                let elems = pu.mask.to_elementwise(&c.spec);
+                sparse_merge(&mut c.params, &slice, &elems);
+            }
+        }
+
+        // ---- 5. advance the server clock to the close time ----
+        let duration = self.clock.advance_to(t_close);
+        let folded = arrivals.len();
+        let mean_loss = loss_sum / folded.max(1) as f64;
+        let mean_staleness = if folded == 0 {
+            0.0
+        } else {
+            staleness_sum as f64 / folded as f64
+        };
+
+        Ok(RoundOutcome {
+            duration,
+            mean_loss,
+            mean_dropout,
+            full_broadcast,
+            uploaded_bytes: uploaded,
+            participants: folded,
+            stragglers,
+            mean_staleness,
         })
     }
 
@@ -479,12 +731,6 @@ impl FedRun {
         let budget = self.budget_bytes();
         for t in 1..=self.cfg.rounds {
             let out = self.step_round()?;
-            let mean_dropout = if self.cfg.scheme == "feddd" && t > 1 {
-                1.0 - out.uploaded_bytes as f64
-                    / self.clients.iter().map(|c| c.u_bytes()).sum::<usize>() as f64
-            } else {
-                0.0
-            };
             result.rounds.push(RoundRecord {
                 round: t,
                 v_time: self.clock.now(),
@@ -493,8 +739,10 @@ impl FedRun {
                 uploaded_bytes: out.uploaded_bytes,
                 budget_bytes: budget,
                 participants: out.participants,
-                mean_dropout,
-                full_broadcast: t % self.cfg.h == 0 || self.cfg.scheme != "feddd",
+                mean_dropout: out.mean_dropout,
+                full_broadcast: out.full_broadcast,
+                stragglers: out.stragglers,
+                mean_staleness: out.mean_staleness,
             });
             if t % self.cfg.eval_every == 0 || t == self.cfg.rounds {
                 let (acc, loss, pca) = self.evaluate()?;

@@ -1,7 +1,9 @@
-//! The FedDD coordinator (L3): the synchronous FL round engine of
-//! Algorithm 1, with the dropout-rate allocation (solver), uploaded-
-//! parameter selection (selection), mask-weighted aggregation
-//! (aggregation) and virtual-time accounting (simnet) wired together.
+//! The FedDD coordinator (L3): the FL round engine of Algorithm 1 —
+//! synchronous barrier or semi-asynchronous event scheduler
+//! (`round_mode`, DESIGN.md §7) — with the dropout-rate allocation
+//! (solver), uploaded-parameter selection (selection), mask-weighted /
+//! staleness-discounted aggregation (aggregation) and virtual-time
+//! accounting (simnet) wired together.
 //!
 //! The same engine runs the client-selection baselines (FedAvg / FedCS /
 //! Oort) under an identical byte budget so every comparison in the paper's

@@ -33,6 +33,16 @@
 //! sequential (`workers = 1`) run — see `coordinator::engine` and
 //! `rust/tests/parallel_round.rs`.
 //!
+//! # Semi-asynchronous rounds (`round_mode`)
+//!
+//! With `round_mode = "semi_async"` the barrier is replaced by an
+//! event-driven scheduler: dispatched uploads become arrival events in a
+//! virtual-time min-heap, the server closes a round at an arrival quorum
+//! or deadline, and stragglers' uploads are buffered and folded into a
+//! later round's Eq. 4 with a staleness discount `(1+s)^{-β}` — see
+//! `coordinator::engine`, `simnet`, and DESIGN.md §7. The default
+//! `round_mode = "sync"` stays bitwise-identical to the classic engine.
+//!
 //! See `DESIGN.md` for the experiment index mapping every paper figure and
 //! table to a module and a `feddd figure <id>` command.
 

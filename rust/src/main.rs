@@ -30,11 +30,19 @@ USAGE:
 Config keys (see `feddd inspect config`): seed dataset partition model
 width_pct n_clients rounds local_steps batch lr scheme selection d_max
 a_server delta h train_per_client test_n fleet eval_every agg_backend
-rare_classes rare_ratio artifacts_dir oort_alpha alloc workers.
+rare_classes rare_ratio artifacts_dir oort_alpha alloc workers
+round_mode quorum deadline_s staleness_beta.
 
 `--workers N` fans the per-client round phases (training, mask selection,
 sharded aggregation) over N threads (0 = one per core); results are
 bitwise-identical for every worker count.
+
+`--round_mode semi_async` replaces the synchronous barrier with
+event-driven rounds: the server closes a round once `--quorum` (fraction
+of in-flight uploads, default 0.7) arrivals are in or `--deadline_s`
+elapses; stragglers stay in flight and fold into a later round with the
+`--staleness_beta` discount (1+s)^-beta. `--round_mode sync` (default)
+is bitwise-identical to the classic engine.
 
 Artifacts must be built first (`make artifacts`), or use a native-exec
 manifest (runtime::write_native_manifest) for FC models without XLA.

@@ -19,10 +19,17 @@ pub struct RoundRecord {
     pub budget_bytes: usize,
     /// Participating clients.
     pub participants: usize,
-    /// Mean assigned dropout rate (0 for baselines).
+    /// Mean dropout rate: realized byte savings (sync) or mean allocated
+    /// rate over dispatched clients (semi-async); 0 for baselines.
     pub mean_dropout: f64,
     /// Whether this round broadcast the full model.
     pub full_broadcast: bool,
+    /// Uploads still in flight when the round closed (semi-async rounds;
+    /// always 0 under the synchronous barrier).
+    pub stragglers: usize,
+    /// Mean staleness, in rounds, of the uploads folded this round
+    /// (0 when every fold was fresh — in particular in sync mode).
+    pub mean_staleness: f64,
 }
 
 /// One evaluation of the global model.
@@ -77,6 +84,45 @@ impl RunResult {
         self.rounds.iter().map(|r| r.uploaded_bytes).sum()
     }
 
+    /// Virtual time at the end of the run (the last round's clock).
+    pub fn final_v_time(&self) -> f64 {
+        self.rounds.last().map(|r| r.v_time).unwrap_or(0.0)
+    }
+
+    /// Virtual-time speedup of this run over a baseline run with the
+    /// same round count (e.g. semi-async vs the synchronous barrier):
+    /// `baseline_v_time / this_v_time`. Returns 1.0 when either run has
+    /// no rounds or zero duration.
+    pub fn speedup_vs(&self, baseline: &RunResult) -> f64 {
+        let own = self.final_v_time();
+        let base = baseline.final_v_time();
+        if own <= 0.0 || base <= 0.0 {
+            1.0
+        } else {
+            base / own
+        }
+    }
+
+    /// Mean per-round straggler count (uploads left in flight at close).
+    pub fn mean_stragglers(&self) -> f64 {
+        if self.rounds.is_empty() {
+            0.0
+        } else {
+            self.rounds.iter().map(|r| r.stragglers as f64).sum::<f64>()
+                / self.rounds.len() as f64
+        }
+    }
+
+    /// Mean staleness over all rounds' folded uploads.
+    pub fn mean_staleness(&self) -> f64 {
+        if self.rounds.is_empty() {
+            0.0
+        } else {
+            self.rounds.iter().map(|r| r.mean_staleness).sum::<f64>()
+                / self.rounds.len() as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("scheme", Json::s(&self.scheme)),
@@ -98,6 +144,8 @@ impl RunResult {
                                 ("participants", Json::Num(r.participants as f64)),
                                 ("mean_dropout", Json::Num(r.mean_dropout)),
                                 ("full_broadcast", Json::Bool(r.full_broadcast)),
+                                ("stragglers", Json::Num(r.stragglers as f64)),
+                                ("mean_staleness", Json::Num(r.mean_staleness)),
                             ])
                         })
                         .collect(),
@@ -214,6 +262,8 @@ mod tests {
                 participants: 10,
                 mean_dropout: 0.4,
                 full_broadcast: i % 5 == 0,
+                stragglers: i,
+                mean_staleness: i as f64 * 0.5,
             });
             r.evals.push(EvalRecord {
                 round: i,
@@ -234,6 +284,21 @@ mod tests {
         assert_eq!(r.final_accuracy(), Some(1.0));
         assert_eq!(r.best_accuracy(), 1.0);
         assert_eq!(r.total_uploaded(), 5000);
+    }
+
+    #[test]
+    fn staleness_and_speedup_accounting() {
+        let r = sample_run();
+        // sample_run: stragglers 0..4, mean_staleness 0,0.5,..,2.0
+        assert!((r.mean_stragglers() - 2.0).abs() < 1e-12);
+        assert!((r.mean_staleness() - 1.0).abs() < 1e-12);
+        assert_eq!(r.final_v_time(), 50.0);
+        let mut faster = sample_run();
+        for rec in faster.rounds.iter_mut() {
+            rec.v_time /= 2.0;
+        }
+        assert!((faster.speedup_vs(&r) - 2.0).abs() < 1e-12);
+        assert_eq!(RunResult::new("x", "y").speedup_vs(&r), 1.0);
     }
 
     #[test]

@@ -2,12 +2,12 @@
 //! coordinator hot path. Python is never invoked — this is the only
 //! bridge between L3 and the L2/L1 computations.
 //!
-//! * [`registry`] — parses `artifacts/manifest.json` into typed metadata
+//! * `registry` — parses `artifacts/manifest.json` into typed metadata
 //!   and writes native-exec manifests (`write_native_manifest`).
-//! * [`pjrt`] — the thread-safe runtime front-end: lazy compile cache,
+//! * `pjrt` — the thread-safe runtime front-end: lazy compile cache,
 //!   literal marshalling, typed entry points for train / eval / the
 //!   Pallas kernel artifacts, and backend dispatch.
-//! * [`native`] — pure-Rust executor for FC models (manifests with
+//! * `native` — pure-Rust executor for FC models (manifests with
 //!   `"exec": "native"`); lets the threaded round engine run end-to-end
 //!   on hosts without a libxla build.
 

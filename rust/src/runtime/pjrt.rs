@@ -8,7 +8,7 @@
 //!   ids, so text round-trips where serialized jax≥0.5 protos do not;
 //!   executables were lowered with `return_tuple=True`).
 //! * **native** — `"exec": "native"` manifests route the typed entry
-//!   points to the pure-Rust FC executor in [`super::native`] (no libxla).
+//!   points to the pure-Rust FC executor in `super::native` (no libxla).
 //!
 //! The runtime is `Send + Sync`: the executable cache and the stats
 //! counters sit behind mutexes so the threaded round engine can train

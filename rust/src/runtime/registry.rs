@@ -206,7 +206,7 @@ impl Manifest {
 /// the given `(model, width)` pairs — train + eval artifacts per model and
 /// the four flat kernels. This replaces `make artifacts` on hosts without
 /// a JAX/XLA toolchain: the resulting manifest drives the pure-Rust
-/// executor in [`super::native`], which supports FC models (the `mlp`
+/// executor in `super::native`, which supports FC models (the `mlp`
 /// family). Used by the parallel-round tests and the round bench.
 pub fn write_native_manifest(
     dir: &Path,

@@ -1,10 +1,24 @@
-//! System-heterogeneity simulator: client device + channel models and the
-//! virtual-time accounting of Eq. 7–12.
+//! System-heterogeneity simulator: client device + channel models, the
+//! virtual-time accounting of Eq. 7–12, and the arrival-event model that
+//! drives the semi-asynchronous round engine (DESIGN.md §7).
 //!
 //! The paper's time axis is fully analytic (CPU cycles/sample over CPU
 //! frequency; Shannon-capacity up/down links), so a virtual clock driven
 //! by these formulas reproduces the T2A comparisons without the physical
 //! testbed (DESIGN.md §3 substitution table).
+//!
+//! Two clock regimes coexist:
+//!
+//! * [`VirtualClock::advance_round`] — the synchronous barrier,
+//!   `t_server += max_n(total_n)`;
+//! * [`EventQueue`] + [`ClientClocks`] — the semi-asynchronous timeline:
+//!   every dispatched upload becomes an [`ArrivalEvent`] in a min-heap,
+//!   each client's own clock advances to its arrival time independently
+//!   of the global round boundary, and the server closes a round at a
+//!   quorum or deadline ([`VirtualClock::advance_to`]).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 use crate::util::rng::Rng;
 
@@ -143,12 +157,149 @@ impl VirtualClock {
         dur
     }
 
+    /// Advance to an absolute close time (semi-asynchronous round); counts
+    /// one round and returns its duration. Time never moves backwards.
+    pub fn advance_to(&mut self, t: f64) -> f64 {
+        let dur = (t - self.now).max(0.0);
+        self.now += dur;
+        self.rounds += 1;
+        dur
+    }
+
     pub fn now(&self) -> f64 {
         self.now
     }
 
     pub fn rounds(&self) -> usize {
         self.rounds
+    }
+}
+
+/// One client upload arriving at the server in the semi-asynchronous
+/// virtual timeline.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrivalEvent {
+    /// Absolute virtual time the upload reaches the server
+    /// (dispatch time + t_down + t_cmp + t_up).
+    pub finish: f64,
+    /// Client index.
+    pub client: usize,
+    /// Round in which the upload was dispatched; the server folds it with
+    /// staleness `current_round − dispatch_round`.
+    pub dispatch_round: usize,
+}
+
+impl Ord for ArrivalEvent {
+    /// Total order: earliest `finish` first; exact arrival-time ties break
+    /// by ascending client index (then dispatch round), so the heap pops
+    /// deterministically on every platform.
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.finish
+            .total_cmp(&other.finish)
+            .then_with(|| self.client.cmp(&other.client))
+            .then_with(|| self.dispatch_round.cmp(&other.dispatch_round))
+    }
+}
+
+impl PartialOrd for ArrivalEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for ArrivalEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for ArrivalEvent {}
+
+/// Min-heap of pending [`ArrivalEvent`]s — the semi-asynchronous server's
+/// view of every in-flight upload, across round boundaries.
+#[derive(Clone, Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<std::cmp::Reverse<ArrivalEvent>>,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    pub fn push(&mut self, ev: ArrivalEvent) {
+        self.heap.push(std::cmp::Reverse(ev));
+    }
+
+    /// The earliest pending arrival, if any.
+    pub fn peek(&self) -> Option<&ArrivalEvent> {
+        self.heap.peek().map(|r| &r.0)
+    }
+
+    pub fn pop(&mut self) -> Option<ArrivalEvent> {
+        self.heap.pop().map(|r| r.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Arrival time of the `k`-th earliest pending event (1-based): the
+    /// round-close time under an arrival quorum of `k`. Selects over the
+    /// finish times only — no event copies, no heap clone.
+    pub fn kth_finish(&self, k: usize) -> Option<f64> {
+        if k == 0 || k > self.heap.len() {
+            return None;
+        }
+        let mut finishes: Vec<f64> = self.heap.iter().map(|r| r.0.finish).collect();
+        let (_, kth, _) = finishes.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+        Some(*kth)
+    }
+
+    /// Pop every event with `finish <= t`, in (time, client) order.
+    pub fn pop_until(&mut self, t: f64) -> Vec<ArrivalEvent> {
+        let mut out = Vec::new();
+        while let Some(ev) = self.peek() {
+            if ev.finish <= t {
+                out.push(self.pop().unwrap());
+            } else {
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// Per-client virtual clocks. Each client's timeline runs independently of
+/// the global round barrier: a dispatch pins the client until its upload's
+/// arrival time, even if the server closes one or more rounds in between.
+#[derive(Clone, Debug, Default)]
+pub struct ClientClocks {
+    free_at: Vec<f64>,
+}
+
+impl ClientClocks {
+    pub fn new(n: usize) -> ClientClocks {
+        ClientClocks { free_at: vec![0.0; n] }
+    }
+
+    /// Is client `n` still computing/uploading at virtual time `now`?
+    pub fn is_busy(&self, n: usize, now: f64) -> bool {
+        self.free_at[n] > now
+    }
+
+    /// Record a dispatch whose upload arrives at absolute time `finish`.
+    pub fn dispatch(&mut self, n: usize, finish: f64) {
+        self.free_at[n] = finish;
+    }
+
+    /// The client's own clock: when its current work (if any) arrives.
+    pub fn free_at(&self, n: usize) -> f64 {
+        self.free_at[n]
     }
 }
 
@@ -199,6 +350,66 @@ mod tests {
         let spread = ups.iter().cloned().fold(f64::MIN, f64::max)
             / ups.iter().cloned().fold(f64::MAX, f64::min);
         assert!(spread > 1.5, "geo spread too small: {spread}");
+    }
+
+    #[test]
+    fn heap_orders_by_time_then_client_index() {
+        // Equal arrival times must pop by ascending client index — the
+        // deterministic tie-break the semi-async fold order relies on.
+        let mut q = EventQueue::new();
+        for &(finish, client) in &[(2.0, 7), (1.0, 9), (1.0, 3), (2.0, 1), (1.0, 5)] {
+            q.push(ArrivalEvent { finish, client, dispatch_round: 1 });
+        }
+        let order: Vec<(f64, usize)> = std::iter::from_fn(|| q.pop())
+            .map(|e| (e.finish, e.client))
+            .collect();
+        assert_eq!(order, vec![(1.0, 3), (1.0, 5), (1.0, 9), (2.0, 1), (2.0, 7)]);
+    }
+
+    #[test]
+    fn kth_finish_and_pop_until() {
+        let mut q = EventQueue::new();
+        for (i, f) in [5.0, 1.0, 3.0, 4.0, 2.0].iter().enumerate() {
+            q.push(ArrivalEvent { finish: *f, client: i, dispatch_round: 2 });
+        }
+        assert_eq!(q.kth_finish(1), Some(1.0));
+        assert_eq!(q.kth_finish(3), Some(3.0));
+        assert_eq!(q.kth_finish(5), Some(5.0));
+        assert_eq!(q.kth_finish(0), None);
+        assert_eq!(q.kth_finish(6), None);
+        let popped = q.pop_until(3.0);
+        assert_eq!(popped.len(), 3);
+        assert!(popped.windows(2).all(|w| w[0].finish <= w[1].finish));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peek().unwrap().finish, 4.0);
+        // events strictly after t stay queued
+        assert!(q.pop_until(3.9).is_empty());
+    }
+
+    #[test]
+    fn client_clocks_advance_independently() {
+        let mut clocks = ClientClocks::new(3);
+        assert!(!clocks.is_busy(0, 0.0));
+        clocks.dispatch(0, 10.0);
+        clocks.dispatch(1, 4.0);
+        // at t=5 client 0 is still in flight, client 1 has arrived
+        assert!(clocks.is_busy(0, 5.0));
+        assert!(!clocks.is_busy(1, 5.0));
+        assert!(!clocks.is_busy(2, 5.0));
+        assert_eq!(clocks.free_at(0), 10.0);
+        // a client is free exactly at its arrival instant
+        assert!(!clocks.is_busy(0, 10.0));
+    }
+
+    #[test]
+    fn advance_to_is_monotone_and_counts_rounds() {
+        let mut clk = VirtualClock::new();
+        assert_eq!(clk.advance_to(3.0), 3.0);
+        assert_eq!(clk.now(), 3.0);
+        // moving "backwards" clamps to zero duration
+        assert_eq!(clk.advance_to(2.0), 0.0);
+        assert_eq!(clk.now(), 3.0);
+        assert_eq!(clk.rounds(), 2);
     }
 
     #[test]

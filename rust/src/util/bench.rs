@@ -1,7 +1,12 @@
 //! Criterion-free benchmark harness used by `rust/benches/*` (criterion
 //! is unavailable offline). Warms up, runs timed iterations until a time
 //! or count budget is reached, and prints a one-line summary per case
-//! plus machine-readable JSON when `FEDDD_BENCH_JSON` is set.
+//! plus machine-readable JSON when `FEDDD_BENCH_JSON` names a directory:
+//! each bench writes `BENCH_<name>.json` there (the repo's recorded perf
+//! trajectory — CI uploads it as an artifact on every run). Cases and the
+//! run itself can carry extra structured fields ([`Bencher::annotate`] /
+//! [`Bencher::annotate_run`]), e.g. uploaded bytes per round or the
+//! sync-vs-semi-async virtual-time comparison.
 
 use std::hint::black_box as bb;
 use std::time::{Duration, Instant};
@@ -11,9 +16,17 @@ use crate::util::stats::Summary;
 
 pub use std::hint::black_box;
 
+struct BenchCase {
+    case: String,
+    summary: Summary,
+    iters_per_s: f64,
+    extra: Vec<(String, Json)>,
+}
+
 pub struct Bencher {
     name: String,
-    results: Vec<(String, Summary, f64)>, // (case, per-iter seconds, iters/sec)
+    results: Vec<BenchCase>,
+    run_extra: Vec<(String, Json)>,
     warmup: Duration,
     budget: Duration,
     min_iters: usize,
@@ -25,10 +38,25 @@ impl Bencher {
         Bencher {
             name: name.to_string(),
             results: Vec::new(),
+            run_extra: Vec::new(),
             warmup: if quick { Duration::from_millis(50) } else { Duration::from_millis(300) },
             budget: if quick { Duration::from_millis(300) } else { Duration::from_secs(2) },
             min_iters: 5,
         }
+    }
+
+    /// Attach an extra structured field to the most recent case (e.g.
+    /// `uploaded_bytes`); a no-op before the first case.
+    pub fn annotate(&mut self, key: &str, value: Json) {
+        if let Some(last) = self.results.last_mut() {
+            last.extra.push((key.to_string(), value));
+        }
+    }
+
+    /// Attach an extra run-level field to the emitted JSON (e.g. the
+    /// sync-vs-semi-async virtual-time gate numbers).
+    pub fn annotate_run(&mut self, key: &str, value: Json) {
+        self.run_extra.push((key.to_string(), value));
     }
 
     /// Time `f` (one logical iteration per call).
@@ -53,54 +81,70 @@ impl Bencher {
         }
         let summary = Summary::of(&samples);
         let ips = 1.0 / summary.mean;
+        let label = format!("{}::{}", self.name, case);
         println!(
-            "{:<44} {:>12} /iter   (p50 {:>10}, n={})  {:>12.1} it/s",
-            format!("{}::{}", self.name, case),
+            "{label:<44} {:>12} /iter   (p50 {:>10}, n={})  {ips:>12.1} it/s",
             fmt_time(summary.mean),
             fmt_time(summary.p50),
             summary.n,
-            ips
         );
-        self.results.push((case.to_string(), summary, ips));
+        self.results.push(BenchCase {
+            case: case.to_string(),
+            summary,
+            iters_per_s: ips,
+            extra: Vec::new(),
+        });
     }
 
     /// Report throughput in items/sec for a case processing `items` per iter.
     pub fn bench_throughput<F: FnMut()>(&mut self, case: &str, items: u64, mut f: F) {
         self.bench(case, &mut f);
-        if let Some((_, s, _)) = self.results.last() {
+        if let Some(last) = self.results.last() {
+            let label = format!("{}::{} throughput", self.name, case);
             println!(
-                "{:<44} {:>12.2} M items/s",
-                format!("{}::{} throughput", self.name, case),
-                items as f64 / s.mean / 1e6
+                "{label:<44} {:>12.2} M items/s",
+                items as f64 / last.summary.mean / 1e6
             );
         }
     }
 
-    /// Write JSON results if FEDDD_BENCH_JSON names a directory.
+    /// Write `BENCH_<name>.json` if FEDDD_BENCH_JSON names a directory.
     pub fn finish(self) {
         if let Ok(dir) = std::env::var("FEDDD_BENCH_JSON") {
-            let cases: Vec<Json> = self
-                .results
-                .iter()
-                .map(|(c, s, ips)| {
-                    Json::obj(vec![
-                        ("case", Json::s(c)),
-                        ("mean_s", Json::Num(s.mean)),
-                        ("p50_s", Json::Num(s.p50)),
-                        ("p90_s", Json::Num(s.p90)),
-                        ("std_s", Json::Num(s.std)),
-                        ("n", Json::Num(s.n as f64)),
-                        ("iters_per_s", Json::Num(*ips)),
-                    ])
-                })
-                .collect();
-            let out = Json::obj(vec![
-                ("bench", Json::s(&self.name)),
-                ("cases", Json::Arr(cases)),
-            ]);
-            let path = std::path::Path::new(&dir).join(format!("{}.json", self.name));
-            let _ = crate::util::json::to_file(&path, &out);
+            self.finish_to_dir(std::path::Path::new(&dir));
         }
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`.
+    pub fn finish_to_dir(self, dir: &std::path::Path) {
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let s = &r.summary;
+                let mut fields = vec![
+                    ("case", Json::s(&r.case)),
+                    ("mean_s", Json::Num(s.mean)),
+                    ("mean_ns", Json::Num(s.mean * 1e9)),
+                    ("p50_s", Json::Num(s.p50)),
+                    ("p90_s", Json::Num(s.p90)),
+                    ("std_s", Json::Num(s.std)),
+                    ("n", Json::Num(s.n as f64)),
+                    ("iters_per_s", Json::Num(r.iters_per_s)),
+                ];
+                for (k, v) in &r.extra {
+                    fields.push((k.as_str(), v.clone()));
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        let mut fields = vec![("bench", Json::s(&self.name)), ("cases", Json::Arr(cases))];
+        for (k, v) in &self.run_extra {
+            fields.push((k.as_str(), v.clone()));
+        }
+        let out = Json::obj(fields);
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let _ = crate::util::json::to_file(&path, &out);
     }
 }
 
@@ -120,16 +164,55 @@ pub fn fmt_time(secs: f64) -> String {
 mod tests {
     use super::*;
 
+    /// Millisecond-budget bencher for tests. Built directly (same module)
+    /// rather than via `FEDDD_BENCH_QUICK`: mutating process env from
+    /// tests races other test threads' `std::env::var` calls.
+    fn quick_bencher(name: &str) -> Bencher {
+        Bencher {
+            name: name.to_string(),
+            results: Vec::new(),
+            run_extra: Vec::new(),
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(20),
+            min_iters: 2,
+        }
+    }
+
     #[test]
     fn bench_runs_and_summarizes() {
-        std::env::set_var("FEDDD_BENCH_QUICK", "1");
-        let mut b = Bencher::new("selftest");
+        let mut b = quick_bencher("selftest");
         let mut acc = 0u64;
         b.bench("noop-ish", || {
             acc = acc.wrapping_add(black_box(1));
         });
+        b.annotate("uploaded_bytes", Json::Num(123.0));
+        b.annotate_run("gate", Json::Bool(true));
         assert_eq!(b.results.len(), 1);
-        assert!(b.results[0].1.mean >= 0.0);
+        assert!(b.results[0].summary.mean >= 0.0);
+        assert_eq!(b.results[0].extra.len(), 1);
+        assert_eq!(b.run_extra.len(), 1);
+    }
+
+    #[test]
+    fn finish_writes_bench_json() {
+        let dir = std::env::temp_dir().join(format!("feddd_bench_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut b = quick_bencher("jsontest");
+        b.bench("tiny", || {
+            black_box(1 + 1);
+        });
+        b.annotate("uploaded_bytes", Json::Num(42.0));
+        b.annotate_run("round_mode_gate", Json::s("ok"));
+        b.finish_to_dir(std::path::Path::new(&dir));
+        let path = dir.join("BENCH_jsontest.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::parse(&text).unwrap();
+        assert_eq!(j.req_str("bench").unwrap(), "jsontest");
+        let cases = j.req_arr("cases").unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("uploaded_bytes").and_then(|v| v.as_f64()), Some(42.0));
+        assert_eq!(j.get("round_mode_gate").and_then(|v| v.as_str()), Some("ok"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
