@@ -1,0 +1,177 @@
+#!/usr/bin/env python3
+"""Bench-baseline regression gate.
+
+Compares a freshly produced BENCH_round.json (written by
+`FEDDD_BENCH_JSON=... cargo bench --bench round`) against the committed
+baseline in BENCH_baseline/, and exits non-zero when the run regressed:
+
+* **timing**: any case whose mean ns/round exceeds the baseline's by more
+  than --max-regress (default 0.20, i.e. >20%) fails;
+* **wire volume**: any run-level key starting with ``wire_`` or
+  ``payload_`` that *increased* at all fails — these totals come from a
+  fixed-seed, fixed-round-count run, so at equal config (= equal dropout
+  schedule) they are exactly reproducible and any growth is a real
+  encoding regression, not noise.
+
+Cases present on only one side are reported but never fail the gate
+(benches come and go); timing *improvements* are reported so maintainers
+can ratchet the baseline.
+
+A baseline marked ``"bootstrap": true`` (no recorded numbers yet) skips
+the numeric gates, still validates the fresh run's shape, and exits 0
+with a loud reminder to commit the fresh artifact as the real baseline.
+
+Usage:
+    python3 ci/bench_diff.py BENCH_baseline/BENCH_round.json \
+        bench-out/BENCH_round.json --max-regress 0.20 \
+        --out bench-out/BENCH_diff.md
+
+Local dry-run (documented in BENCH_baseline/README.md): feed the script a
+synthetic current file whose mean_ns is 25% above the baseline's and
+check it exits 1.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"bench_diff: cannot read {path}: {e}")
+
+
+def cases_by_name(doc):
+    out = {}
+    for case in doc.get("cases", []) or []:
+        name = case.get("case")
+        if isinstance(name, str):
+            out[name] = case
+    return out
+
+
+def run_level_bytes(doc):
+    return {
+        k: v
+        for k, v in doc.items()
+        if (k.startswith("wire_") or k.startswith("payload_"))
+        and isinstance(v, (int, float))
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--max-regress", type=float, default=0.20,
+                    help="allowed fractional ns/round growth (default 0.20)")
+    ap.add_argument("--out", default=None,
+                    help="write a markdown diff report here (PR artifact)")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cur = load(args.current)
+
+    lines = ["# Bench baseline diff", ""]
+    lines.append(f"baseline: `{args.baseline}`  ·  current: `{args.current}`")
+    lines.append(f"timing gate: +{args.max_regress:.0%} ns/round  ·  "
+                 "wire gate: any byte increase")
+    lines.append("")
+    failures = []
+
+    cur_cases = cases_by_name(cur)
+    if not cur_cases:
+        failures.append("current run has no cases — bench did not produce output")
+
+    if base.get("bootstrap"):
+        lines.append("**baseline is a bootstrap placeholder — numeric gates "
+                     "skipped.** Commit the fresh `BENCH_round.json` artifact "
+                     "as `BENCH_baseline/BENCH_round.json` to arm the gate.")
+    else:
+        base_cases = cases_by_name(base)
+        compared = 0
+        lines.append("| case | baseline ns | current ns | delta | verdict |")
+        lines.append("|---|---|---|---|---|")
+        for name in sorted(set(base_cases) | set(cur_cases)):
+            b, c = base_cases.get(name), cur_cases.get(name)
+            if b is None:
+                lines.append(f"| {name} | — | {c.get('mean_ns', 0):.0f} | new | ok |")
+                continue
+            if c is None:
+                lines.append(f"| {name} | {b.get('mean_ns', 0):.0f} | — | removed | ok |")
+                continue
+            bn, cn = b.get("mean_ns"), c.get("mean_ns")
+            if not bn or cn is None:
+                lines.append(f"| {name} | ? | ? | — | skipped |")
+                continue
+            compared += 1
+            ratio = cn / bn
+            verdict = "ok"
+            if ratio > 1.0 + args.max_regress:
+                verdict = "**REGRESSION**"
+                failures.append(
+                    f"case {name}: {cn:.0f} ns vs baseline {bn:.0f} ns "
+                    f"({ratio - 1.0:+.1%} > +{args.max_regress:.0%})")
+            elif ratio < 1.0 - args.max_regress:
+                verdict = "improved (consider ratcheting the baseline)"
+            lines.append(f"| {name} | {bn:.0f} | {cn:.0f} | {ratio - 1.0:+.1%} | {verdict} |")
+        if compared == 0 and base_cases and cur_cases:
+            # An armed baseline where no case pair was comparable means the
+            # bench output format drifted — that must not silently disarm
+            # the timing gate.
+            failures.append(
+                "no case could be compared (mean_ns missing or case names "
+                "all changed) — timing gate would be silently disarmed")
+
+        lines.append("")
+        lines.append("| wire/payload key | baseline | current | verdict |")
+        lines.append("|---|---|---|---|")
+        base_bytes = run_level_bytes(base)
+        cur_bytes = run_level_bytes(cur)
+        for key in sorted(set(base_bytes) | set(cur_bytes)):
+            bv, cv = base_bytes.get(key), cur_bytes.get(key)
+            if cv is None:
+                # A baseline wire key the fresh run no longer emits would
+                # silently disarm the zero-tolerance gate (key renames
+                # included) — refuse, and make the rename update the
+                # baseline explicitly.
+                failures.append(
+                    f"{key}: present in baseline but missing from the current "
+                    "run — wire gate would be silently disarmed (update "
+                    "BENCH_baseline/ if the key legitimately changed)")
+                lines.append(f"| {key} | {bv:.0f} | — | **MISSING** |")
+                continue
+            if bv is None:
+                lines.append(f"| {key} | — | {cv:.0f} | new — ok |")
+                continue
+            if cv > bv:
+                failures.append(
+                    f"{key}: {cv:.0f} B > baseline {bv:.0f} B "
+                    "(wire bytes may never increase at equal dropout rate)")
+                lines.append(f"| {key} | {bv:.0f} | {cv:.0f} | **REGRESSION** |")
+            else:
+                note = "ok" if cv == bv else "improved"
+                lines.append(f"| {key} | {bv:.0f} | {cv:.0f} | {note} |")
+
+    lines.append("")
+    if failures:
+        lines.append(f"## ❌ {len(failures)} gate failure(s)")
+        lines.extend(f"- {f}" for f in failures)
+    else:
+        lines.append("## ✅ within baseline")
+    report = "\n".join(lines) + "\n"
+    print(report)
+    if args.out:
+        try:
+            with open(args.out, "w", encoding="utf-8") as f:
+                f.write(report)
+        except OSError as e:
+            sys.exit(f"bench_diff: cannot write {args.out}: {e}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -81,6 +81,44 @@ fn main() {
         });
     }
 
+    // zero-copy wire folds: same 10 clients through encode + absorb_wire
+    // (no elementwise expansion, no dense contribution buffers) — the
+    // round engine's production path since the codec rework
+    let channel_masks: Vec<_> = (0..10)
+        .map(|_| {
+            feddd::selection::select_mask(
+                feddd::selection::Policy::Random,
+                &spec,
+                &prev_p,
+                &clients[0],
+                None,
+                0.4,
+                &mut rng,
+            )
+        })
+        .collect();
+    let uploads: Vec<_> = clients
+        .iter()
+        .zip(&channel_masks)
+        .map(|(c, m)| feddd::codec::encode_upload(m, c, &spec))
+        .collect();
+    b.bench("round_wire_cnn2_10clients", || {
+        let mut agg = Aggregator::new(&spec, AggBackend::Rust);
+        for up in &uploads {
+            agg.absorb_wire(up, 1.0).unwrap();
+        }
+        black_box(agg.finalize(&prev_p, None).unwrap());
+    });
+    b.annotate(
+        "wire_bytes",
+        feddd::util::json::Json::Num(uploads.iter().map(|u| u.wire_len()).sum::<usize>() as f64),
+    );
+
+    // client-side encode cost (gather + layout pick)
+    b.bench("encode_upload_cnn2", || {
+        black_box(feddd::codec::encode_upload(&channel_masks[0], &clients[0], &spec));
+    });
+
     // mask expansion cost
     let cm = ChannelMask::full(&spec);
     b.bench("mask_expand_cnn2", || {

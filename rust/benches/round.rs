@@ -6,11 +6,13 @@
 //! pure-Rust FC executor, so the sweep is measurable on any host.
 //!
 //! With `FEDDD_BENCH_JSON=<dir>` the harness writes `BENCH_<name>.json`
-//! (per case: ns/round + uploaded bytes; run level: the sync vs
-//! semi-async virtual-time comparison). The bench also **gates**: on the
-//! skewed Table-4 fleet, semi-async quorum rounds must finish the same
-//! round count in strictly less virtual time than the synchronous
-//! barrier, or the process exits non-zero (CI fails).
+//! (per case: ns/round + uploaded/wire bytes; run level: the sync vs
+//! semi-async virtual-time comparison plus *deterministic* wire-volume
+//! totals that `ci/bench_diff.py` gates against `BENCH_baseline/`). The
+//! bench also **gates** inline: on the skewed Table-4 fleet, semi-async
+//! quorum rounds must finish the same round count in strictly less
+//! virtual time than the synchronous barrier, or the process exits
+//! non-zero (CI fails).
 
 use std::path::PathBuf;
 
@@ -53,14 +55,21 @@ fn cfg(scheme: &str, workers: usize, round_mode: &str, dir: &PathBuf) -> ExpConf
     cfg
 }
 
-/// Virtual time after `rounds` rounds under the given round mode — the
-/// analytic quantity the semi-async scheduler exists to shrink.
-fn virtual_time(round_mode: &str, rounds: usize, dir: &PathBuf) -> f64 {
+/// Virtual time plus realized wire / payload volume after `rounds` rounds
+/// under the given round mode. Fully deterministic (seeded, fixed round
+/// count — unlike the timed loops, whose iteration counts depend on the
+/// host), so `ci/bench_diff.py` gates on these byte totals *exactly*:
+/// any increase at the same config (= same dropout schedule) fails CI.
+fn deterministic_run(round_mode: &str, rounds: usize, dir: &PathBuf) -> (f64, usize, usize) {
     let mut run = FedRun::new(cfg("feddd", 1, round_mode, dir)).unwrap();
+    let mut wire = 0usize;
+    let mut payload = 0usize;
     for _ in 0..rounds {
-        run.step_round().unwrap();
+        let out = run.step_round().unwrap();
+        wire += out.wire_bytes;
+        payload += out.uploaded_bytes;
     }
-    run.clock.now()
+    (run.clock.now(), wire, payload)
 }
 
 fn main() {
@@ -74,13 +83,17 @@ fn main() {
             // warm caches & pass round 1 (full upload)
             run.step_round().unwrap();
             let mut last_uploaded = 0usize;
+            let mut last_wire = 0usize;
             b.bench(&format!("step_round_feddd_mlp_10c_w{workers}_{round_mode}"), || {
-                last_uploaded = black_box(run.step_round().unwrap()).uploaded_bytes;
+                let out = black_box(run.step_round().unwrap());
+                last_uploaded = out.uploaded_bytes;
+                last_wire = out.wire_bytes;
             });
             b.annotate("scheme", Json::s("feddd"));
             b.annotate("workers", Json::Num(workers as f64));
             b.annotate("round_mode", Json::s(round_mode));
             b.annotate("uploaded_bytes", Json::Num(last_uploaded as f64));
+            b.annotate("case_wire_bytes", Json::Num(last_wire as f64));
         }
     }
     // FedAvg baseline (full uploads, no selection) at workers=1.
@@ -107,16 +120,26 @@ fn main() {
     // barrier. This is deterministic (seeded), so a violation is a real
     // scheduler regression, not noise.
     let rounds = 8;
-    let vt_sync = virtual_time("sync", rounds, &dir);
-    let vt_semi = virtual_time("semi_async", rounds, &dir);
+    let (vt_sync, wire_sync, payload_sync) = deterministic_run("sync", rounds, &dir);
+    let (vt_semi, wire_semi, payload_semi) = deterministic_run("semi_async", rounds, &dir);
     let speedup = vt_sync / vt_semi;
     println!(
         "round::virtual_time_{rounds}r  sync {vt_sync:.1}s  \
          semi_async {vt_semi:.1}s  speedup {speedup:.2}x"
     );
+    println!(
+        "round::wire_volume_{rounds}r  sync {wire_sync}B (payload {payload_sync}B)  \
+         semi_async {wire_semi}B (payload {payload_semi}B)"
+    );
     b.annotate_run("v_time_sync_s", Json::Num(vt_sync));
     b.annotate_run("v_time_semi_async_s", Json::Num(vt_semi));
     b.annotate_run("semi_async_speedup", Json::Num(speedup));
+    // Deterministic byte totals: ci/bench_diff.py fails CI on *any*
+    // increase of a `wire_*` / `payload_*` key vs the committed baseline.
+    b.annotate_run("wire_bytes_sync_8r", Json::Num(wire_sync as f64));
+    b.annotate_run("wire_bytes_semi_async_8r", Json::Num(wire_semi as f64));
+    b.annotate_run("payload_bytes_sync_8r", Json::Num(payload_sync as f64));
+    b.annotate_run("payload_bytes_semi_async_8r", Json::Num(payload_semi as f64));
     b.finish();
     if vt_semi >= vt_sync {
         eprintln!(

@@ -17,6 +17,7 @@
 //! global tensors (`model::geometry`) before accumulation, so Eq. 4's
 //! per-position counts automatically blend clients of different widths.
 
+use crate::codec::WireUpload;
 use crate::model::{embed, ModelSpec};
 use crate::runtime::Runtime;
 use crate::tensor::{axpy, masked_div, merge_masked, Tensor};
@@ -122,6 +123,101 @@ impl Aggregator {
 
     pub fn clients_added(&self) -> usize {
         self.clients_added
+    }
+
+    /// Fold one client's encoded upload straight into the Eq. 4 num/den
+    /// partials — the zero-copy path: no elementwise mask expansion, no
+    /// dense contribution buffer, no corner embedding. Per kept unit the
+    /// wire values scatter to their global positions with
+    /// `num[p] += m_n·v` and `den[p] += m_n`, which is bitwise-identical
+    /// to [`Aggregator::add_client`] with the expanded mask: the dense
+    /// path adds `m_n·(p·0) = 0.0` at masked-out positions (a bitwise
+    /// no-op — partials can never be `-0.0`, see the wire-equivalence
+    /// tests) and `m_n·1.0 = m_n` to the denominator at kept ones.
+    ///
+    /// Wire payloads are scattered, so this path always folds on the CPU
+    /// regardless of the aggregation backend; the backend still owns
+    /// `finalize`. Client sub-model geometry (hetero fleets) is handled
+    /// by the same leading-corner convention as `model::embed`.
+    pub fn absorb_wire(&mut self, wire: &WireUpload, m_n: f32) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            wire.layers.len() * 2 == self.num.len(),
+            "wire has {} layers, aggregator {} tensors",
+            wire.layers.len(),
+            self.num.len()
+        );
+        for (l, lw) in wire.layers.iter().enumerate() {
+            let wi = 2 * l;
+            let bi = 2 * l + 1;
+            let chunk = lw.group + 1;
+            anyhow::ensure!(
+                lw.values.len() == lw.units.len() * chunk,
+                "layer {l}: {} values for {} units of group {}",
+                lw.values.len(),
+                lw.units.len(),
+                lw.group
+            );
+            let gshape = &self.global_shapes[wi];
+            anyhow::ensure!(
+                self.global_shapes[bi].len() == 1 && self.global_shapes[bi][0] >= lw.out_dim,
+                "layer {l}: bias geometry mismatch"
+            );
+            // Weight tensor scatter (global layout: conv OIHW, fc (in, out)).
+            match gshape.len() {
+                4 => {
+                    let (out_g, in_g) = (gshape[0], gshape[1]);
+                    let k2 = gshape[2] * gshape[3];
+                    anyhow::ensure!(
+                        lw.out_dim <= out_g && lw.in_dim <= in_g && lw.group == lw.in_dim * k2,
+                        "layer {l}: conv geometry mismatch"
+                    );
+                    let num = self.num[wi].data_mut();
+                    let den = self.den[wi].data_mut();
+                    for (ui, &k) in lw.units.iter().enumerate() {
+                        let k = k as usize;
+                        anyhow::ensure!(k < lw.out_dim, "layer {l}: unit {k} out of range");
+                        let vals = &lw.values[ui * chunk..ui * chunk + lw.group];
+                        for i in 0..lw.in_dim {
+                            let g0 = (k * in_g + i) * k2;
+                            let s0 = i * k2;
+                            for t in 0..k2 {
+                                num[g0 + t] += m_n * vals[s0 + t];
+                                den[g0 + t] += m_n;
+                            }
+                        }
+                    }
+                }
+                2 => {
+                    let (in_g, out_g) = (gshape[0], gshape[1]);
+                    anyhow::ensure!(
+                        lw.out_dim <= out_g && lw.in_dim <= in_g && lw.group == lw.in_dim,
+                        "layer {l}: fc geometry mismatch"
+                    );
+                    let num = self.num[wi].data_mut();
+                    let den = self.den[wi].data_mut();
+                    for (ui, &k) in lw.units.iter().enumerate() {
+                        let k = k as usize;
+                        anyhow::ensure!(k < lw.out_dim, "layer {l}: unit {k} out of range");
+                        let vals = &lw.values[ui * chunk..ui * chunk + lw.group];
+                        for (j, &v) in vals.iter().enumerate() {
+                            num[j * out_g + k] += m_n * v;
+                            den[j * out_g + k] += m_n;
+                        }
+                    }
+                }
+                r => anyhow::bail!("layer {l}: unsupported weight rank {r}"),
+            }
+            // Bias scatter (1-D, unit-indexed).
+            let num_b = self.num[bi].data_mut();
+            let den_b = self.den[bi].data_mut();
+            for (ui, &k) in lw.units.iter().enumerate() {
+                let k = k as usize;
+                num_b[k] += m_n * lw.values[ui * chunk + lw.group];
+                den_b[k] += m_n;
+            }
+        }
+        self.clients_added += 1;
+        Ok(())
     }
 
     /// Fold another aggregator's partial sums into this one, scaled by
@@ -629,5 +725,49 @@ mod tests {
         for (a, b) in local2.iter().zip(&local_copy) {
             assert_eq!(a.data(), b.data());
         }
+    }
+
+    #[test]
+    fn absorb_wire_smoke_matches_add_client() {
+        // The thorough bitwise sweep lives in tests/wire_equivalence.rs;
+        // this is the in-module smoke: one masked client via the wire
+        // path equals the dense mask path bit for bit.
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(9);
+        let prev = spec.init_params(&mut rng);
+        let client = perturbed(&prev, &mut rng, 0.1);
+        let mask = crate::selection::select_mask(
+            crate::selection::Policy::Random,
+            &spec,
+            &prev,
+            &client,
+            None,
+            0.6,
+            &mut rng,
+        );
+        let mut dense = Aggregator::new(&spec, AggBackend::Rust);
+        let elems = mask.to_elementwise(&spec);
+        dense.add_client(&client, &elems, 3.0, None).unwrap();
+        let mut wire = Aggregator::new(&spec, AggBackend::Rust);
+        let up = crate::codec::encode_upload(&mask, &client, &spec);
+        wire.absorb_wire(&up, 3.0).unwrap();
+        assert_eq!(wire.clients_added(), 1);
+        let a = dense.finalize(&prev, None).unwrap();
+        let b = wire.finalize(&prev, None).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data(), y.data());
+        }
+    }
+
+    #[test]
+    fn absorb_wire_rejects_geometry_mismatch() {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let other = ModelSpec::get("cnn1", 0.25).unwrap();
+        let mut rng = Rng::new(10);
+        let params = other.init_params(&mut rng);
+        let up = crate::codec::encode_upload(&ChannelMask::full(&other), &params, &other);
+        let mut agg = Aggregator::new(&spec, AggBackend::Rust);
+        assert!(agg.absorb_wire(&up, 1.0).is_err(), "layer-count mismatch accepted");
+        assert_eq!(agg.clients_added(), 0);
     }
 }

@@ -154,6 +154,15 @@ mod tests {
     }
 
     #[test]
+    fn to_config_knows_codec_knob() {
+        let a = parse("train --codec coo");
+        let (cfg, leftover) = a.to_config().unwrap();
+        assert!(leftover.is_empty());
+        assert_eq!(cfg.codec, "coo");
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn bad_number_errors() {
         let a = parse("x --rounds abc");
         assert!(a.get_usize("rounds").is_err());

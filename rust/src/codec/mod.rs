@@ -1,0 +1,791 @@
+//! Sparse-upload wire codec: the bytes a FedDD client actually puts on
+//! the uplink (DESIGN.md §8).
+//!
+//! `ChannelMask` says *which* units a client uploads; this module decides
+//! *how* they are laid out on the wire and what that really costs. Three
+//! per-layer layouts:
+//!
+//! * **dense**  — every unit's value group in unit order, no index
+//!   overhead (only representable when the layer is fully kept);
+//! * **bitmap** — `ceil(out_dim/8)` bytes of per-unit presence bits, then
+//!   the kept units' value groups in ascending unit order;
+//! * **COO**    — one `u32` unit index per kept unit, then the value
+//!   groups (wins when fewer than ~`out_dim/32` units survive).
+//!
+//! [`encode_upload`] gathers the masked values (a unit's value group is
+//! its incoming weights followed by its bias) and auto-picks the smallest
+//! layout per layer; [`WireUpload::wire_len`] is the realized byte count
+//! the simnet charges `t_up` for — a measurement, replacing the
+//! `upload_bytes` estimate. [`WireUpload::to_bytes`] /
+//! [`WireUpload::from_bytes`] give the self-describing serialized form:
+//! a magic/version header, per-layer geometry records and a trailing
+//! FNV-1a 64 checksum over everything before it.
+//!
+//! The aggregation side never re-densifies: `Aggregator::absorb_wire`
+//! folds bitmap/COO payloads straight into the Eq. 4 num/den partials
+//! (see `aggregation`), bitwise-identical to the dense mask path.
+
+use crate::model::{Layer, LayerKind, ModelSpec};
+use crate::selection::ChannelMask;
+use crate::tensor::Tensor;
+
+/// Serialized-form magic bytes ("FedDD Wire Upload").
+pub const WIRE_MAGIC: [u8; 4] = *b"FDWU";
+/// Serialized-form version.
+pub const WIRE_VERSION: u16 = 1;
+/// Global header: magic + version (u16) + layer count (u16).
+pub const GLOBAL_HEADER_BYTES: usize = 8;
+/// Per-layer header: encoding tag (u8) + in_dim/out_dim/n_sel/group (u32).
+pub const LAYER_HEADER_BYTES: usize = 17;
+/// Trailing FNV-1a 64 checksum.
+pub const CHECKSUM_BYTES: usize = 8;
+
+/// Wire layout of one layer's kept units.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Encoding {
+    Dense,
+    Bitmap,
+    Coo,
+}
+
+impl Encoding {
+    fn tag(self) -> u8 {
+        match self {
+            Encoding::Dense => 0,
+            Encoding::Bitmap => 1,
+            Encoding::Coo => 2,
+        }
+    }
+
+    fn from_tag(tag: u8) -> anyhow::Result<Encoding> {
+        Ok(match tag {
+            0 => Encoding::Dense,
+            1 => Encoding::Bitmap,
+            2 => Encoding::Coo,
+            t => anyhow::bail!("unknown encoding tag {t}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Encoding::Dense => "dense",
+            Encoding::Bitmap => "bitmap",
+            Encoding::Coo => "coo",
+        }
+    }
+}
+
+/// Per-layout layer counts — the "encoding mix" column of round records
+/// and bench JSON.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EncodingMix {
+    pub dense: usize,
+    pub bitmap: usize,
+    pub coo: usize,
+}
+
+impl EncodingMix {
+    pub fn count(&mut self, enc: Encoding) {
+        match enc {
+            Encoding::Dense => self.dense += 1,
+            Encoding::Bitmap => self.bitmap += 1,
+            Encoding::Coo => self.coo += 1,
+        }
+    }
+
+    pub fn merge(&mut self, other: EncodingMix) {
+        self.dense += other.dense;
+        self.bitmap += other.bitmap;
+        self.coo += other.coo;
+    }
+
+    pub fn total(&self) -> usize {
+        self.dense + self.bitmap + self.coo
+    }
+}
+
+/// Encoder policy: `Auto` picks the smallest layout per layer (always
+/// dense for fully-kept layers); `Bitmap`/`Coo` force that index layout
+/// on every layer (benches/ablations — dense cannot represent a partial
+/// layer, so it is not a forcible mode).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecMode {
+    Auto,
+    Bitmap,
+    Coo,
+}
+
+impl CodecMode {
+    pub fn by_name(name: &str) -> anyhow::Result<CodecMode> {
+        Ok(match name {
+            "auto" => CodecMode::Auto,
+            "bitmap" => CodecMode::Bitmap,
+            "coo" => CodecMode::Coo,
+            _ => anyhow::bail!("unknown codec mode {name:?} (auto|bitmap|coo)"),
+        })
+    }
+}
+
+/// Weights owned by one unit of `layer` (excluding its bias): the conv
+/// kernel block `in·k·k`, or the FC input column `in`.
+pub fn unit_group(layer: &Layer) -> usize {
+    match layer.kind {
+        LayerKind::Conv { kernel, .. } => layer.in_dim * kernel * kernel,
+        LayerKind::Fc => layer.in_dim,
+    }
+}
+
+/// Index overhead (bytes) of the cheaper index layout for `n_sel` of
+/// `out_dim` units: bitmap vs COO.
+pub fn index_overhead(out_dim: usize, n_sel: usize) -> usize {
+    out_dim.div_ceil(8).min(4 * n_sel)
+}
+
+/// Upper bound on `encode_upload(mask, ..).wire_len()`: headers + masked
+/// values + the cheaper index overhead per layer, *whether or not* the
+/// layer is fully kept (a fully-kept layer encodes dense, with zero index
+/// overhead, so the bound is not tight there). `ChannelMask::upload_bytes`
+/// delegates here; `encode_upload` debug-asserts the bound.
+pub fn upload_bound(mask: &ChannelMask, spec: &ModelSpec) -> usize {
+    let mut total = GLOBAL_HEADER_BYTES + CHECKSUM_BYTES;
+    for (layer, sel) in spec.layers.iter().zip(&mask.per_layer) {
+        let n_sel = sel.iter().filter(|&&b| b).count();
+        total += LAYER_HEADER_BYTES
+            + n_sel * (unit_group(layer) + 1) * 4
+            + index_overhead(layer.out_dim, n_sel);
+    }
+    total
+}
+
+/// One layer of a [`WireUpload`] in structured (decoded) form. The
+/// `encoding` decides the serialized layout and the byte accounting;
+/// `units`/`values` are the layout-independent content: ascending kept
+/// unit ids and, per unit, its `group` incoming weights followed by its
+/// bias.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerWire {
+    pub encoding: Encoding,
+    /// Client-side layer input dimension (conv in-channels / FC inputs).
+    pub in_dim: usize,
+    /// Client-side unit count of the layer.
+    pub out_dim: usize,
+    /// Weights per unit excluding the bias ([`unit_group`]).
+    pub group: usize,
+    /// Kept unit ids, strictly ascending.
+    pub units: Vec<u32>,
+    /// `units.len() · (group + 1)` values; bias last within each chunk.
+    pub values: Vec<f32>,
+}
+
+impl LayerWire {
+    pub fn n_sel(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Serialized body bytes of this layer under its encoding.
+    pub fn body_bytes(&self) -> usize {
+        let vals = self.values.len() * 4;
+        match self.encoding {
+            Encoding::Dense => vals,
+            Encoding::Bitmap => self.out_dim.div_ceil(8) + vals,
+            Encoding::Coo => self.units.len() * 4 + vals,
+        }
+    }
+}
+
+/// A client's encoded upload: what actually travels on the uplink.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireUpload {
+    pub layers: Vec<LayerWire>,
+}
+
+impl WireUpload {
+    /// Realized wire bytes (headers + index overhead + values +
+    /// checksum) — exactly `to_bytes().len()`. This is what the simnet
+    /// charges the uplink for.
+    pub fn wire_len(&self) -> usize {
+        let body: usize = self.layers.iter().map(|l| LAYER_HEADER_BYTES + l.body_bytes()).sum();
+        GLOBAL_HEADER_BYTES + CHECKSUM_BYTES + body
+    }
+
+    /// Bytes of the masked f32 values alone (no indices, no headers) —
+    /// the budget-accounting payload, `ChannelMask::payload_bytes`.
+    pub fn payload_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.values.len() * 4).sum()
+    }
+
+    /// Per-layout layer counts of this upload.
+    pub fn mix(&self) -> EncodingMix {
+        let mut mix = EncodingMix::default();
+        for l in &self.layers {
+            mix.count(l.encoding);
+        }
+        mix
+    }
+
+    /// Serialize to the self-describing wire form (DESIGN.md §8).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len());
+        out.extend_from_slice(&WIRE_MAGIC);
+        out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.layers.len() as u16).to_le_bytes());
+        for l in &self.layers {
+            out.push(l.encoding.tag());
+            out.extend_from_slice(&(l.in_dim as u32).to_le_bytes());
+            out.extend_from_slice(&(l.out_dim as u32).to_le_bytes());
+            out.extend_from_slice(&(l.units.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(l.group as u32).to_le_bytes());
+        }
+        for l in &self.layers {
+            match l.encoding {
+                Encoding::Dense => {}
+                Encoding::Bitmap => {
+                    let mut bits = vec![0u8; l.out_dim.div_ceil(8)];
+                    for &k in &l.units {
+                        bits[k as usize / 8] |= 1 << (k as usize % 8);
+                    }
+                    out.extend_from_slice(&bits);
+                }
+                Encoding::Coo => {
+                    for &k in &l.units {
+                        out.extend_from_slice(&k.to_le_bytes());
+                    }
+                }
+            }
+            for &v in &l.values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        debug_assert_eq!(out.len(), self.wire_len());
+        out
+    }
+
+    /// Parse and validate the wire form: magic, version, geometry sanity,
+    /// strictly-ascending unit ids, and the trailing checksum (any bit
+    /// flip anywhere in the message is rejected).
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<WireUpload> {
+        anyhow::ensure!(
+            bytes.len() >= GLOBAL_HEADER_BYTES + CHECKSUM_BYTES,
+            "wire message too short ({} bytes)",
+            bytes.len()
+        );
+        let body_end = bytes.len() - CHECKSUM_BYTES;
+        let want = u64::from_le_bytes(bytes[body_end..].try_into().unwrap());
+        let got = fnv1a64(&bytes[..body_end]);
+        anyhow::ensure!(got == want, "wire checksum mismatch ({got:#x} != {want:#x})");
+        anyhow::ensure!(bytes[..4] == WIRE_MAGIC, "bad wire magic");
+        let mut off = 4;
+        let version = read_u16(bytes, &mut off)?;
+        anyhow::ensure!(version == WIRE_VERSION, "unsupported wire version {version}");
+        let n_layers = read_u16(bytes, &mut off)? as usize;
+        let mut heads = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            anyhow::ensure!(off < body_end, "layer {l}: truncated header");
+            let enc = Encoding::from_tag(bytes[off])?;
+            off += 1;
+            let in_dim = read_u32(bytes, &mut off)? as usize;
+            let out_dim = read_u32(bytes, &mut off)? as usize;
+            let n_sel = read_u32(bytes, &mut off)? as usize;
+            let group = read_u32(bytes, &mut off)? as usize;
+            anyhow::ensure!(out_dim >= 1, "layer {l}: zero out_dim");
+            anyhow::ensure!(in_dim >= 1, "layer {l}: zero in_dim");
+            anyhow::ensure!(n_sel <= out_dim, "layer {l}: n_sel {n_sel} > out_dim {out_dim}");
+            anyhow::ensure!(group >= in_dim, "layer {l}: group {group} < in_dim {in_dim}");
+            anyhow::ensure!(
+                enc != Encoding::Dense || n_sel == out_dim,
+                "layer {l}: dense encoding with partial selection"
+            );
+            heads.push((enc, in_dim, out_dim, n_sel, group));
+        }
+        // Bound every allocation by the actual message size before
+        // trusting any header geometry: the declared bodies must tile the
+        // body region exactly. (The checksum is not cryptographic, so a
+        // crafted header could otherwise demand multi-GB unit/value
+        // buffers from a tiny message.)
+        let mut expected: usize = 0;
+        for (l, &(enc, _, out_dim, n_sel, group)) in heads.iter().enumerate() {
+            let val_bytes = n_sel
+                .checked_mul(group + 1)
+                .and_then(|n| n.checked_mul(4))
+                .ok_or_else(|| anyhow::anyhow!("layer {l}: value byte count overflows"))?;
+            let idx_bytes = match enc {
+                Encoding::Dense => 0,
+                Encoding::Bitmap => out_dim.div_ceil(8),
+                Encoding::Coo => n_sel * 4,
+            };
+            expected = expected
+                .checked_add(val_bytes)
+                .and_then(|e| e.checked_add(idx_bytes))
+                .ok_or_else(|| anyhow::anyhow!("layer {l}: body size overflows"))?;
+        }
+        anyhow::ensure!(
+            off <= body_end && expected == body_end - off,
+            "declared bodies ({expected} bytes) do not tile the message body"
+        );
+        let mut layers = Vec::with_capacity(n_layers);
+        for (l, (enc, in_dim, out_dim, n_sel, group)) in heads.into_iter().enumerate() {
+            let units: Vec<u32> = match enc {
+                Encoding::Dense => (0..out_dim as u32).collect(),
+                Encoding::Bitmap => {
+                    let nb = out_dim.div_ceil(8);
+                    anyhow::ensure!(off + nb <= body_end, "layer {l}: truncated bitmap");
+                    let bits = &bytes[off..off + nb];
+                    off += nb;
+                    let mut units = Vec::with_capacity(n_sel);
+                    for k in 0..out_dim {
+                        if bits[k / 8] & (1 << (k % 8)) != 0 {
+                            units.push(k as u32);
+                        }
+                    }
+                    for (byte, &b) in bits.iter().enumerate() {
+                        for bit in 0..8 {
+                            let k = byte * 8 + bit;
+                            anyhow::ensure!(
+                                k < out_dim || b & (1 << bit) == 0,
+                                "layer {l}: bitmap bit {k} beyond out_dim {out_dim}"
+                            );
+                        }
+                    }
+                    units
+                }
+                Encoding::Coo => {
+                    let mut units = Vec::with_capacity(n_sel);
+                    for _ in 0..n_sel {
+                        units.push(read_u32(bytes, &mut off)?);
+                    }
+                    units
+                }
+            };
+            anyhow::ensure!(
+                units.len() == n_sel,
+                "layer {l}: {} indexed units, header says {n_sel}",
+                units.len()
+            );
+            for w in units.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "layer {l}: unit ids not strictly ascending");
+            }
+            if let Some(&last) = units.last() {
+                anyhow::ensure!(
+                    (last as usize) < out_dim,
+                    "layer {l}: unit {last} >= out_dim {out_dim}"
+                );
+            }
+            let n_vals = n_sel
+                .checked_mul(group + 1)
+                .ok_or_else(|| anyhow::anyhow!("layer {l}: value count overflows"))?;
+            let val_bytes = n_vals
+                .checked_mul(4)
+                .ok_or_else(|| anyhow::anyhow!("layer {l}: value byte count overflows"))?;
+            anyhow::ensure!(
+                off <= body_end && body_end - off >= val_bytes,
+                "layer {l}: truncated values"
+            );
+            let mut values = Vec::with_capacity(n_vals);
+            for _ in 0..n_vals {
+                values.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+                off += 4;
+            }
+            layers.push(LayerWire { encoding: enc, in_dim, out_dim, group, units, values });
+        }
+        anyhow::ensure!(off == body_end, "trailing bytes after last layer");
+        Ok(WireUpload { layers })
+    }
+}
+
+/// Encode a client's masked upload with the auto-pick rule: dense when a
+/// layer is fully kept, else the cheaper of bitmap and COO.
+pub fn encode_upload(mask: &ChannelMask, params: &[Tensor], spec: &ModelSpec) -> WireUpload {
+    encode_upload_with(mask, params, spec, CodecMode::Auto)
+}
+
+/// Encode with an explicit [`CodecMode`] (benches/ablations force an
+/// index layout; `Auto` is the production rule).
+pub fn encode_upload_with(
+    mask: &ChannelMask,
+    params: &[Tensor],
+    spec: &ModelSpec,
+    mode: CodecMode,
+) -> WireUpload {
+    assert_eq!(params.len(), spec.layers.len() * 2, "params arity");
+    assert_eq!(mask.per_layer.len(), spec.layers.len(), "mask arity");
+    let mut layers = Vec::with_capacity(spec.layers.len());
+    for (l, layer) in spec.layers.iter().enumerate() {
+        let sel = &mask.per_layer[l];
+        assert_eq!(sel.len(), layer.out_dim, "layer {l} mask length");
+        let group = unit_group(layer);
+        let w = params[2 * l].data();
+        let b = params[2 * l + 1].data();
+        assert_eq!(w.len(), layer.out_dim * group, "layer {l} weight numel");
+        assert_eq!(b.len(), layer.out_dim, "layer {l} bias numel");
+        let units: Vec<u32> = sel
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s)
+            .map(|(k, _)| k as u32)
+            .collect();
+        let mut values = Vec::with_capacity(units.len() * (group + 1));
+        match layer.kind {
+            LayerKind::Conv { .. } => {
+                for &k in &units {
+                    let k = k as usize;
+                    values.extend_from_slice(&w[k * group..(k + 1) * group]);
+                    values.push(b[k]);
+                }
+            }
+            LayerKind::Fc => {
+                let n_out = layer.out_dim;
+                for &k in &units {
+                    let k = k as usize;
+                    for j in 0..layer.in_dim {
+                        values.push(w[j * n_out + k]);
+                    }
+                    values.push(b[k]);
+                }
+            }
+        }
+        let n_sel = units.len();
+        let encoding = match mode {
+            CodecMode::Bitmap => Encoding::Bitmap,
+            CodecMode::Coo => Encoding::Coo,
+            CodecMode::Auto => {
+                if n_sel == layer.out_dim {
+                    Encoding::Dense
+                } else if layer.out_dim.div_ceil(8) <= 4 * n_sel {
+                    Encoding::Bitmap
+                } else {
+                    Encoding::Coo
+                }
+            }
+        };
+        layers.push(LayerWire {
+            encoding,
+            in_dim: layer.in_dim,
+            out_dim: layer.out_dim,
+            group,
+            units,
+            values,
+        });
+    }
+    let up = WireUpload { layers };
+    // The upload_bytes bound covers the auto-pick only: forcing the
+    // dearer index layout (e.g. COO on a fully-kept layer) can exceed it
+    // by construction.
+    debug_assert!(
+        mode != CodecMode::Auto || up.wire_len() <= mask.upload_bytes(spec),
+        "auto-picked wire_len {} exceeds the upload_bytes bound {}",
+        up.wire_len(),
+        mask.upload_bytes(spec)
+    );
+    up
+}
+
+/// Reconstruct the channel mask and the client-shaped masked parameters
+/// (zeros at dropped positions) from a wire upload — the decoder side of
+/// [`encode_upload`], used by round-trip tests and debugging tools.
+pub fn decode_upload(
+    up: &WireUpload,
+    spec: &ModelSpec,
+) -> anyhow::Result<(ChannelMask, Vec<Tensor>)> {
+    anyhow::ensure!(
+        up.layers.len() == spec.layers.len(),
+        "wire has {} layers, spec has {}",
+        up.layers.len(),
+        spec.layers.len()
+    );
+    let mut per_layer = Vec::with_capacity(spec.layers.len());
+    let mut params = Vec::with_capacity(spec.layers.len() * 2);
+    for (l, (lw, layer)) in up.layers.iter().zip(&spec.layers).enumerate() {
+        let group = unit_group(layer);
+        anyhow::ensure!(lw.in_dim == layer.in_dim, "layer {l}: in_dim mismatch");
+        anyhow::ensure!(lw.out_dim == layer.out_dim, "layer {l}: out_dim mismatch");
+        anyhow::ensure!(lw.group == group, "layer {l}: group mismatch");
+        let chunk = group + 1;
+        anyhow::ensure!(
+            lw.values.len() == lw.units.len() * chunk,
+            "layer {l}: {} values for {} units",
+            lw.values.len(),
+            lw.units.len()
+        );
+        let out = layer.out_dim;
+        let mut wdat = vec![0.0f32; out * group];
+        let mut bdat = vec![0.0f32; out];
+        let mut sel = vec![false; out];
+        for (ui, &k) in lw.units.iter().enumerate() {
+            let k = k as usize;
+            anyhow::ensure!(k < out, "layer {l}: unit {k} >= out_dim {out}");
+            anyhow::ensure!(!sel[k], "layer {l}: duplicate unit {k}");
+            sel[k] = true;
+            let vals = &lw.values[ui * chunk..(ui + 1) * chunk];
+            match layer.kind {
+                LayerKind::Conv { .. } => {
+                    wdat[k * group..(k + 1) * group].copy_from_slice(&vals[..group]);
+                }
+                LayerKind::Fc => {
+                    for j in 0..layer.in_dim {
+                        wdat[j * out + k] = vals[j];
+                    }
+                }
+            }
+            bdat[k] = vals[group];
+        }
+        let wshape = match layer.kind {
+            LayerKind::Conv { kernel, .. } => vec![out, layer.in_dim, kernel, kernel],
+            LayerKind::Fc => vec![layer.in_dim, out],
+        };
+        params.push(Tensor::new(wshape, wdat));
+        params.push(Tensor::new(vec![out], bdat));
+        per_layer.push(sel);
+    }
+    Ok((ChannelMask { per_layer }, params))
+}
+
+/// FNV-1a 64 over a byte slice (the wire checksum).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn read_u16(bytes: &[u8], off: &mut usize) -> anyhow::Result<u16> {
+    anyhow::ensure!(*off + 2 <= bytes.len(), "truncated u16 at offset {off}");
+    let v = u16::from_le_bytes(bytes[*off..*off + 2].try_into().unwrap());
+    *off += 2;
+    Ok(v)
+}
+
+fn read_u32(bytes: &[u8], off: &mut usize) -> anyhow::Result<u32> {
+    anyhow::ensure!(*off + 4 <= bytes.len(), "truncated u32 at offset {off}");
+    let v = u32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::{select_mask, Policy};
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn mask_with(spec: &ModelSpec, keep: &[&[usize]]) -> ChannelMask {
+        ChannelMask {
+            per_layer: spec
+                .layers
+                .iter()
+                .zip(keep)
+                .map(|(layer, ks)| {
+                    let mut v = vec![false; layer.out_dim];
+                    for &k in ks.iter() {
+                        v[k] = true;
+                    }
+                    v
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn full_mask_encodes_dense_and_costs_headers_only_extra() {
+        let spec = ModelSpec::get("mlp", 1.0).unwrap();
+        let mut rng = Rng::new(0);
+        let params = spec.init_params(&mut rng);
+        let up = encode_upload(&ChannelMask::full(&spec), &params, &spec);
+        assert_eq!(up.mix(), EncodingMix { dense: 3, bitmap: 0, coo: 0 });
+        assert_eq!(up.payload_bytes(), spec.size_bytes());
+        let overhead =
+            GLOBAL_HEADER_BYTES + CHECKSUM_BYTES + spec.layers.len() * LAYER_HEADER_BYTES;
+        assert_eq!(up.wire_len(), spec.size_bytes() + overhead);
+    }
+
+    #[test]
+    fn auto_pick_chooses_the_smallest_layout() {
+        // mlp layer 0 has 100 units: half kept -> bitmap (13 <= 200
+        // bytes); 1 kept -> COO (4 < 13); all kept -> dense.
+        let spec = ModelSpec::get("mlp", 1.0).unwrap();
+        let mut rng = Rng::new(1);
+        let params = spec.init_params(&mut rng);
+        let half: Vec<usize> = (0..50).collect();
+        let all1: Vec<usize> = (0..100).collect();
+        let all2: Vec<usize> = (0..64).collect();
+        let all3: Vec<usize> = (0..10).collect();
+        let one = [7usize];
+        let m = mask_with(&spec, &[&half[..], &all2[..], &all3[..]]);
+        let up = encode_upload(&m, &params, &spec);
+        assert_eq!(up.layers[0].encoding, Encoding::Bitmap);
+        assert_eq!(up.layers[1].encoding, Encoding::Dense);
+        assert_eq!(up.layers[2].encoding, Encoding::Dense);
+        let m = mask_with(&spec, &[&one[..], &all2[..], &all3[..]]);
+        let up = encode_upload(&m, &params, &spec);
+        assert_eq!(up.layers[0].encoding, Encoding::Coo);
+        assert_eq!(up.layers[0].units, vec![7]);
+        let m = mask_with(&spec, &[&all1[..], &all2[..], &all3[..]]);
+        let up = encode_upload(&m, &params, &spec);
+        assert_eq!(up.mix().dense, 3);
+        // the chosen layout is never beaten by an alternative
+        for lw in &up.layers {
+            let vals = lw.values.len() * 4;
+            let alt_bitmap = lw.out_dim.div_ceil(8) + vals;
+            let alt_coo = lw.units.len() * 4 + vals;
+            assert!(lw.body_bytes() <= alt_bitmap);
+            assert!(lw.body_bytes() <= alt_coo);
+        }
+    }
+
+    #[test]
+    fn forced_modes_apply_to_every_layer() {
+        let spec = ModelSpec::get("mlp", 1.0).unwrap();
+        let mut rng = Rng::new(2);
+        let params = spec.init_params(&mut rng);
+        let m = ChannelMask::full(&spec);
+        let up = encode_upload_with(&m, &params, &spec, CodecMode::Bitmap);
+        assert_eq!(up.mix(), EncodingMix { dense: 0, bitmap: 3, coo: 0 });
+        let up = encode_upload_with(&m, &params, &spec, CodecMode::Coo);
+        assert_eq!(up.mix(), EncodingMix { dense: 0, bitmap: 0, coo: 3 });
+        // round-trips still hold under forced layouts
+        let back = WireUpload::from_bytes(&up.to_bytes()).unwrap();
+        assert_eq!(back, up);
+    }
+
+    #[test]
+    fn wire_len_matches_serialized_length_and_bound() {
+        check("wire_len == to_bytes().len() <= upload_bytes", 12, |rng| {
+            for name in ["mlp", "cnn1"] {
+                let spec = ModelSpec::get(name, 0.5).unwrap();
+                let before = spec.init_params(rng);
+                let after = spec.init_params(rng);
+                let d = rng.range_f64(0.0, 0.95);
+                let m = select_mask(Policy::Random, &spec, &before, &after, None, d, rng);
+                let up = encode_upload(&m, &after, &spec);
+                let bytes = up.to_bytes();
+                if bytes.len() != up.wire_len() {
+                    return Err(format!("{} != wire_len {}", bytes.len(), up.wire_len()));
+                }
+                if up.wire_len() > m.upload_bytes(&spec) {
+                    return Err(format!(
+                        "wire_len {} > bound {}",
+                        up.wire_len(),
+                        m.upload_bytes(&spec)
+                    ));
+                }
+                if up.payload_bytes() != m.payload_bytes(&spec) {
+                    return Err("payload accounting mismatch".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn roundtrip_all_layouts_bitwise() {
+        // Sparse (COO), half (bitmap) and full (dense) layers round-trip
+        // through bytes with bitwise value equality, and the decoded
+        // params equal p ⊙ m exactly.
+        check("wire round-trip", 15, |rng| {
+            for name in ["mlp", "cnn1"] {
+                let spec = ModelSpec::get(name, 1.0).unwrap();
+                let params = spec.init_params(rng);
+                let per_layer: Vec<Vec<bool>> = spec
+                    .layers
+                    .iter()
+                    .map(|layer| {
+                        // style 0: dense; 1: bitmap-ish; 2: coo-ish
+                        let style = rng.below(3);
+                        (0..layer.out_dim)
+                            .map(|k| match style {
+                                0 => true,
+                                1 => rng.bool(0.5),
+                                _ => k == 0 || rng.bool(0.02),
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let m = ChannelMask { per_layer };
+                let up = encode_upload(&m, &params, &spec);
+                let back = WireUpload::from_bytes(&up.to_bytes()).unwrap();
+                if back != up {
+                    return Err("struct round-trip mismatch".into());
+                }
+                let (m2, masked) = decode_upload(&back, &spec).unwrap();
+                if m2 != m {
+                    return Err("mask round-trip mismatch".into());
+                }
+                let elems = m.to_elementwise(&spec);
+                for i in 0..masked.len() {
+                    for j in 0..masked[i].numel() {
+                        let want = params[i].data()[j] * elems[i].data()[j];
+                        let got = masked[i].data()[j];
+                        if got.to_bits() != want.to_bits() {
+                            return Err(format!("tensor {i} pos {j}: {got} != {want}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn corruption_anywhere_is_detected() {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(3);
+        let before = spec.init_params(&mut rng);
+        let after = spec.init_params(&mut rng);
+        let m = select_mask(Policy::Random, &spec, &before, &after, None, 0.5, &mut rng);
+        let up = encode_upload(&m, &after, &spec);
+        let bytes = up.to_bytes();
+        assert!(WireUpload::from_bytes(&bytes).is_ok());
+        // flip one bit in the header, the body and the checksum itself
+        for &pos in &[0usize, 5, GLOBAL_HEADER_BYTES + 2, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x10;
+            assert!(WireUpload::from_bytes(&bad).is_err(), "flip at byte {pos} undetected");
+        }
+        // truncation is rejected too
+        assert!(WireUpload::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(WireUpload::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn dropout_always_beats_the_dense_payload() {
+        // Acceptance: for every d > 0 that actually drops a unit, the
+        // chosen encodings are strictly smaller than the dense payload
+        // (the full-mask wire form *and* the raw full-model bytes).
+        let mut rng = Rng::new(4);
+        for name in ["mlp", "cnn1"] {
+            let spec = ModelSpec::get(name, 1.0).unwrap();
+            let before = spec.init_params(&mut rng);
+            let after = spec.init_params(&mut rng);
+            let dense = encode_upload(&ChannelMask::full(&spec), &after, &spec);
+            for policy in [Policy::Importance, Policy::Random, Policy::Max, Policy::Delta] {
+                for d in [0.1, 0.3, 0.5, 0.7, 0.9] {
+                    let m = select_mask(policy, &spec, &before, &after, None, d, &mut rng);
+                    let up = encode_upload(&m, &after, &spec);
+                    assert!(
+                        up.wire_len() < dense.wire_len(),
+                        "{name} {policy:?} d={d}: {} !< {}",
+                        up.wire_len(),
+                        dense.wire_len()
+                    );
+                    assert!(
+                        up.wire_len() < spec.size_bytes(),
+                        "{name} {policy:?} d={d}: {} !< model {}",
+                        up.wire_len(),
+                        spec.size_bytes()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fnv_vector() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -81,6 +81,11 @@ pub struct ExpConfig {
     /// after dispatch is weighted by `m_n · (1+s)^{-β}`. `0` disables the
     /// discount.
     pub staleness_beta: f64,
+    /// Upload wire-codec layout: "auto" (per-layer smallest of dense /
+    /// bitmap / COO, the default) or a forced index layout "bitmap" /
+    /// "coo" (ablations and benches; dense cannot represent a partial
+    /// layer, so it is not forcible).
+    pub codec: String,
 }
 
 impl Default for ExpConfig {
@@ -117,6 +122,7 @@ impl Default for ExpConfig {
             quorum: 0.7,
             deadline_s: 0.0,
             staleness_beta: 0.5,
+            codec: "auto".into(),
         }
     }
 }
@@ -251,6 +257,11 @@ impl ExpConfig {
             "staleness_beta {} must be finite and >= 0",
             self.staleness_beta
         );
+        anyhow::ensure!(
+            ["auto", "bitmap", "coo"].contains(&self.codec.as_str()),
+            "unknown codec {:?} (auto|bitmap|coo)",
+            self.codec
+        );
         let known_family =
             ["mlp", "cnn1", "cnn2", "het_a", "het_b"].contains(&self.model.as_str());
         // Specific sub-models (e.g. "het_a_3") run homogeneously (Fig. 3).
@@ -298,6 +309,7 @@ impl ExpConfig {
             ("quorum", Json::Num(self.quorum)),
             ("deadline_s", Json::Num(self.deadline_s)),
             ("staleness_beta", Json::Num(self.staleness_beta)),
+            ("codec", Json::s(&self.codec)),
         ])
     }
 
@@ -346,6 +358,7 @@ impl ExpConfig {
             quorum: gn("quorum", d.quorum),
             deadline_s: gn("deadline_s", d.deadline_s),
             staleness_beta: gn("staleness_beta", d.staleness_beta),
+            codec: gs("codec", &d.codec),
         };
         Ok(cfg)
     }
@@ -391,6 +404,7 @@ impl ExpConfig {
             "quorum" => self.quorum = value.parse()?,
             "deadline_s" => self.deadline_s = value.parse()?,
             "staleness_beta" => self.staleness_beta = value.parse()?,
+            "codec" => self.codec = value.into(),
             "rare_classes" => {
                 self.rare_classes = value
                     .split(',')
@@ -499,6 +513,23 @@ mod tests {
         assert_eq!(c.quorum, 0.9);
         assert_eq!(c.deadline_s, 30.5);
         assert_eq!(c.staleness_beta, 0.25);
+    }
+
+    #[test]
+    fn codec_knob_roundtrips_and_validates() {
+        let mut c = ExpConfig::smoke();
+        assert_eq!(c.codec, "auto"); // auto-pick stays the default
+        c.set("codec", "coo").unwrap();
+        assert_eq!(c.codec, "coo");
+        c.validate().unwrap();
+        let back = ExpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.codec, "coo");
+        c.codec = "bitmap".into();
+        c.validate().unwrap();
+        c.codec = "dense".into(); // dense cannot represent partial layers
+        assert!(c.validate().is_err());
+        c.codec = "gzip".into();
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Per-client state and the local-training step (the client side of
 //! Algorithm 1 steps 1–3 and 7).
 
+use crate::codec::WireUpload;
 use crate::data::FedDataset;
 use crate::model::{ModelId, ModelSpec};
 use crate::runtime::Runtime;
@@ -16,14 +17,20 @@ use crate::util::rng::Rng;
 /// flight, because the client is busy until its arrival event fires.
 #[derive(Clone, Debug)]
 pub struct PendingUpdate {
-    /// The upload mask `M_n` selected at dispatch; its byte size — not
-    /// the full model's — is what the upload link was charged for.
+    /// The upload mask `M_n` selected at dispatch (kept for the Eq. 5
+    /// sparse download when the upload arrives).
     pub mask: ChannelMask,
+    /// The encoded upload in flight; `wire.wire_len()` — the realized
+    /// encoded bytes, not the full model and not the `upload_bytes`
+    /// estimate — is what the upload link was charged for, and
+    /// `Aggregator::absorb_wire` folds it without densifying.
+    pub wire: WireUpload,
     /// Mean training loss reported with the upload (folded into the
     /// server's round loss when the upload arrives). The dispatch round
     /// lives on the matching `simnet::ArrivalEvent`.
     pub loss: f64,
-    /// Actual masked payload size in bytes (`mask.upload_bytes`).
+    /// Masked value payload bytes (`mask.payload_bytes`) for budget
+    /// accounting.
     pub uploaded: usize,
     /// Whether the *dispatch* round was a full-broadcast round. The
     /// arrival-time download merge honors this flag so the client

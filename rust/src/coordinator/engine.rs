@@ -14,13 +14,15 @@
 //!
 //! 1. **per-client stage** — each participant (a disjoint `&mut
 //!    ClientState`) trains, selects its upload mask with its own RNG
-//!    stream, and expands the mask; outputs are collected in ascending
-//!    client order.
+//!    stream, and encodes the masked values into a `WireUpload` (the
+//!    bytes the uplink is charged for); outputs are collected in
+//!    ascending client order.
 //! 2. **sharded aggregation** — participants are chunked into at most
-//!    [`AGG_SHARDS`] contiguous shards; each shard accumulates its
-//!    clients (in order) into a private [`Aggregator`], and the shard
-//!    partials are merged pairwise in fixed shard order
-//!    ([`Aggregator::merge`]) before `finalize`.
+//!    [`AGG_SHARDS`] contiguous shards; each shard folds its clients'
+//!    wire uploads (in order) into a private [`Aggregator`] via the
+//!    zero-copy `absorb_wire`, and the shard partials are merged
+//!    pairwise in fixed shard order ([`Aggregator::merge`]) before
+//!    `finalize`.
 //!
 //! Because the shard partition depends only on the participant list —
 //! never on the worker count or thread schedule — and every f32/f64
@@ -51,6 +53,7 @@ use std::time::Instant;
 
 use crate::aggregation::{sparse_merge, staleness_weight, AggBackend, Aggregator};
 use crate::baselines;
+use crate::codec::{encode_upload_with, CodecMode, EncodingMix, WireUpload};
 use crate::config::ExpConfig;
 use crate::data::{FedDataset, Partition, PartitionKind, SynthSpec};
 use crate::metrics::{EvalAccumulator, EvalRecord, RoundRecord, RunResult};
@@ -71,15 +74,26 @@ use super::client::{ClientState, PendingUpdate};
 pub const AGG_SHARDS: usize = 8;
 
 /// Per-participant output of the parallel stage (client order). Holds the
-/// compact channel mask only; the model-sized elementwise expansion is
-/// recomputed per client inside the aggregation stage so at most one
-/// expansion per worker is alive at a time.
+/// compact channel mask (kept for the Eq. 5 sparse download) plus the
+/// encoded wire upload — the bytes the uplink is actually charged for and
+/// the payload `absorb_wire` folds without any dense expansion.
+///
+/// Deliberate trade-off: a round keeps every participant's encoded
+/// payload alive at once (O(participants · masked bytes) — these *are*
+/// the in-flight uploads the round models, they feed both the timing
+/// path and the fold, and semi-async must buffer them across rounds
+/// anyway), in exchange for never materializing model-sized elementwise
+/// masks or dense contribution buffers in the aggregation stage.
 struct ClientRoundOutput {
     /// Client index.
     slot: usize,
     loss: f64,
+    /// Masked value payload bytes (`ChannelMask::payload_bytes`) — the
+    /// budget-accounting column.
     uploaded: usize,
     mask: ChannelMask,
+    /// The encoded upload; `wire.wire_len()` is the realized wire bytes.
+    wire: WireUpload,
 }
 
 /// Outcome of a single round (for tests / tracing).
@@ -94,6 +108,11 @@ pub struct RoundOutcome {
     /// Whether this round was a full-model broadcast round.
     pub full_broadcast: bool,
     pub uploaded_bytes: usize,
+    /// Realized encoded upload bytes (headers + indices + values) folded
+    /// this round — what the uplinks were actually charged for.
+    pub wire_bytes: usize,
+    /// Per-layout layer counts over the folded uploads.
+    pub encodings: EncodingMix,
     /// Clients whose uploads were folded into this round's aggregation.
     pub participants: usize,
     /// Uploads still in flight when the round closed (semi-async; 0 in
@@ -120,6 +139,8 @@ pub struct FedRun {
     last_masks: Vec<Option<ChannelMask>>,
     policy: Policy,
     backend: AggBackend,
+    /// Wire-codec layout policy (`cfg.codec`): auto-pick or forced.
+    codec: CodecMode,
     /// Worker pool for the per-client round phases (`cfg.workers`).
     pool: ThreadPool,
     /// Pending arrival events (semi-async mode; empty in sync mode).
@@ -209,6 +230,7 @@ impl FedRun {
         runtime.manifest().get(&eval_artifact)?;
         let policy = Policy::by_name(&cfg.selection)?;
         let backend = AggBackend::by_name(&cfg.agg_backend)?;
+        let codec = CodecMode::by_name(&cfg.codec)?;
         let pool = ThreadPool::new(cfg.workers);
         let n = clients.len();
         Ok(FedRun {
@@ -226,6 +248,7 @@ impl FedRun {
             last_masks: vec![None; n],
             policy,
             backend,
+            codec,
             pool,
             events: EventQueue::new(),
             client_clocks: ClientClocks::new(n),
@@ -321,6 +344,7 @@ impl FedRun {
         let ds = &self.ds;
         let cr = &self.cr;
         let policy = self.policy;
+        let codec = self.codec;
         let cfg_ref = &cfg;
         let mut in_round = vec![false; self.clients.len()];
         for &n in participants {
@@ -366,8 +390,11 @@ impl FedRun {
                     }
                     None => ChannelMask::full(&c.spec),
                 };
-                let uploaded = mask.upload_bytes(&c.spec);
-                Ok(ClientRoundOutput { slot: n, loss, uploaded, mask })
+                let uploaded = mask.payload_bytes(&c.spec);
+                // Client-side encode: the bytes this upload really puts
+                // on the wire (debug-asserted <= the upload_bytes bound).
+                let wire = encode_upload_with(&mask, &c.params, &c.spec, codec);
+                Ok(ClientRoundOutput { slot: n, loss, uploaded, mask, wire })
             },
         )
     }
@@ -379,12 +406,13 @@ impl FedRun {
     }
 
     /// Eq. 7–12 timing for one dispatched client: the upload link is
-    /// charged for the bytes of the mask actually sent (`o.uploaded`,
-    /// never a full-model fallback); the download is the full model on
-    /// broadcast rounds, else the mask-sparse slice `W^t ⊙ M_n^t`.
+    /// charged for the *realized* encoded bytes (`WireUpload::wire_len`,
+    /// never the `upload_bytes` estimate and never a full-model
+    /// fallback); the download is the full model on broadcast rounds,
+    /// else the mask-sparse slice `W^t ⊙ M_n^t` at the same wire size.
     fn client_round_timing(&self, o: &ClientRoundOutput, full_broadcast: bool) -> RoundTiming {
         let c = &self.clients[o.slot];
-        let up_bytes = o.uploaded as f64;
+        let up_bytes = o.wire.wire_len() as f64;
         let down_bytes = if full_broadcast {
             c.u_bytes() as f64
         } else {
@@ -399,33 +427,31 @@ impl FedRun {
         }
     }
 
-    /// Sharded Eq. 4 accumulation over `(client, mask)` pairs in the given
-    /// order.
+    /// Sharded Eq. 4 accumulation over `(client, wire upload)` pairs in
+    /// the given order.
     ///
     /// The pairs are chunked into ≤ [`AGG_SHARDS`] contiguous shards; each
-    /// shard accumulates its clients in order into a private num/den pair,
-    /// and shards merge pairwise in fixed order. The partition depends
-    /// only on the input list — never on the worker count — so the
-    /// summation order (hence the result, bit for bit) is the same for
-    /// every `workers` value.
-    fn shard_aggregate(&self, items: &[(usize, &ChannelMask)]) -> anyhow::Result<Aggregator> {
+    /// shard folds its clients in order into a private num/den pair via
+    /// the zero-copy `absorb_wire` — no elementwise mask expansion, no
+    /// dense contribution tensors — and shards merge pairwise in fixed
+    /// order. The partition depends only on the input list — never on the
+    /// worker count — so the summation order (hence the result, bit for
+    /// bit) is the same for every `workers` value.
+    fn shard_aggregate(&self, items: &[(usize, &WireUpload)]) -> anyhow::Result<Aggregator> {
         if items.is_empty() {
             return Ok(Aggregator::new(&self.global_spec, self.backend));
         }
         let global_spec = &self.global_spec;
         let backend = self.backend;
         let clients = &self.clients;
-        let rt = &self.runtime;
         let shard_len = items.len().div_ceil(AGG_SHARDS.min(items.len()));
-        let shards: Vec<&[(usize, &ChannelMask)]> = items.chunks(shard_len).collect();
+        let shards: Vec<&[(usize, &WireUpload)]> = items.chunks(shard_len).collect();
         let partials = self.pool.scoped_try_map(
             shards,
-            |chunk: &[(usize, &ChannelMask)]| -> anyhow::Result<Aggregator> {
+            |chunk: &[(usize, &WireUpload)]| -> anyhow::Result<Aggregator> {
                 let mut shard = Aggregator::new(global_spec, backend);
-                for &(slot, mask) in chunk {
-                    let c = &clients[slot];
-                    let elems = mask.to_elementwise(&c.spec);
-                    shard.add_client(&c.params, &elems, c.m_n() as f32, Some(rt))?;
+                for &(slot, wire) in chunk {
+                    shard.absorb_wire(wire, clients[slot].m_n() as f32)?;
                 }
                 Ok(shard)
             },
@@ -458,16 +484,20 @@ impl FedRun {
         let outs = self.train_and_select(t, &participants, &dropout)?;
         let mut loss_sum = 0.0;
         let mut uploaded = 0usize;
+        let mut wire_bytes = 0usize;
+        let mut encodings = EncodingMix::default();
         for o in &outs {
             loss_sum += o.loss;
             uploaded += o.uploaded;
+            wire_bytes += o.wire.wire_len();
+            encodings.merge(o.wire.mix());
         }
         let mean_loss = loss_sum / outs.len().max(1) as f64;
 
-        // ---- 3. sharded aggregation (Eq. 4) ----
+        // ---- 3. sharded aggregation (Eq. 4, zero-copy wire folds) ----
         let agg = {
-            let items: Vec<(usize, &ChannelMask)> =
-                outs.iter().map(|o| (o.slot, &o.mask)).collect();
+            let items: Vec<(usize, &WireUpload)> =
+                outs.iter().map(|o| (o.slot, &o.wire)).collect();
             self.shard_aggregate(&items)?
         };
         self.global_params = agg.finalize(&self.global_params, Some(&self.runtime))?;
@@ -510,6 +540,8 @@ impl FedRun {
             mean_dropout,
             full_broadcast,
             uploaded_bytes: uploaded,
+            wire_bytes,
+            encodings,
             participants: participants.len(),
             stragglers: 0,
             mean_staleness: 0.0,
@@ -563,6 +595,7 @@ impl FedRun {
             self.client_clocks.dispatch(o.slot, finish);
             self.pending[o.slot] = Some(PendingUpdate {
                 mask: o.mask,
+                wire: o.wire,
                 loss: o.loss,
                 uploaded: o.uploaded,
                 full_broadcast,
@@ -581,6 +614,8 @@ impl FedRun {
                 mean_dropout,
                 full_broadcast,
                 uploaded_bytes: 0,
+                wire_bytes: 0,
+                encodings: EncodingMix::default(),
                 participants: 0,
                 stragglers: 0,
                 mean_staleness: 0.0,
@@ -607,10 +642,12 @@ impl FedRun {
         // (fresh or buffered), summed in the same ascending-client order
         // the aggregation runs in.
         let mut uploaded = 0usize;
+        let mut wire_bytes = 0usize;
+        let mut encodings = EncodingMix::default();
         let mut staleness_sum = 0usize;
         let mut loss_sum = 0.0;
         {
-            let mut fresh: Vec<(usize, &ChannelMask)> = Vec::new();
+            let mut fresh: Vec<(usize, &WireUpload)> = Vec::new();
             let mut stale: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
             for ev in &arrivals {
                 let pu = self.pending[ev.client]
@@ -618,10 +655,12 @@ impl FedRun {
                     .expect("arrival without a pending upload");
                 let s = t - ev.dispatch_round;
                 uploaded += pu.uploaded;
+                wire_bytes += pu.wire.wire_len();
+                encodings.merge(pu.wire.mix());
                 staleness_sum += s;
                 loss_sum += pu.loss;
                 if s == 0 {
-                    fresh.push((ev.client, &pu.mask));
+                    fresh.push((ev.client, &pu.wire));
                 } else {
                     stale.entry(s).or_default().push(ev.client);
                 }
@@ -635,9 +674,7 @@ impl FedRun {
                 let mut part = Aggregator::new(&self.global_spec, self.backend);
                 for &n in cohort {
                     let pu = self.pending[n].as_ref().expect("stale cohort client");
-                    let c = &self.clients[n];
-                    let elems = pu.mask.to_elementwise(&c.spec);
-                    part.add_client(&c.params, &elems, c.m_n() as f32, Some(&self.runtime))?;
+                    part.absorb_wire(&pu.wire, self.clients[n].m_n() as f32)?;
                 }
                 agg.absorb(&part, staleness_weight(s, cfg.staleness_beta))?;
             }
@@ -681,6 +718,8 @@ impl FedRun {
             mean_dropout,
             full_broadcast,
             uploaded_bytes: uploaded,
+            wire_bytes,
+            encodings,
             participants: folded,
             stragglers,
             mean_staleness,
@@ -737,6 +776,8 @@ impl FedRun {
                 duration: out.duration,
                 train_loss: out.mean_loss,
                 uploaded_bytes: out.uploaded_bytes,
+                wire_bytes: out.wire_bytes,
+                encodings: out.encodings,
                 budget_bytes: budget,
                 participants: out.participants,
                 mean_dropout: out.mean_dropout,

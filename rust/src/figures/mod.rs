@@ -42,6 +42,7 @@ pub fn lr_for_dataset(ds: &str) -> f32 {
 }
 
 fn series_json(label: &str, r: &RunResult) -> Json {
+    let mix = r.encoding_mix();
     Json::obj(vec![
         ("label", Json::s(label)),
         ("result", r.to_json()),
@@ -49,6 +50,14 @@ fn series_json(label: &str, r: &RunResult) -> Json {
             "final_accuracy",
             Json::Num(r.final_accuracy().unwrap_or(0.0)),
         ),
+        // realized communication volume: encoded wire bytes (headers +
+        // indices + values) vs the raw masked payload, plus the layer
+        // encoding mix — per-round columns live in result.rounds.
+        ("total_uploaded_bytes", Json::Num(r.total_uploaded() as f64)),
+        ("total_wire_bytes", Json::Num(r.total_wire_bytes() as f64)),
+        ("enc_dense", Json::Num(mix.dense as f64)),
+        ("enc_bitmap", Json::Num(mix.bitmap as f64)),
+        ("enc_coo", Json::Num(mix.coo as f64)),
     ])
 }
 

@@ -33,6 +33,16 @@
 //! sequential (`workers = 1`) run — see `coordinator::engine` and
 //! `rust/tests/parallel_round.rs`.
 //!
+//! # Sparse upload wire codec (`codec`)
+//!
+//! Uploads are not estimated, they are *encoded*: `codec::encode_upload`
+//! lays each layer's kept units out as dense / bitmap / COO (auto-picking
+//! the smallest), the simnet charges `t_up` from the realized
+//! `WireUpload::wire_len()`, and `Aggregator::absorb_wire` folds the
+//! bitmap/COO payloads straight into the Eq. 4 partials without ever
+//! materializing dense mask tensors — bitwise-identical to the dense
+//! path (`rust/tests/wire_equivalence.rs`). See DESIGN.md §8.
+//!
 //! # Semi-asynchronous rounds (`round_mode`)
 //!
 //! With `round_mode = "semi_async"` the barrier is replaced by an
@@ -49,6 +59,7 @@
 pub mod aggregation;
 pub mod baselines;
 pub mod cli;
+pub mod codec;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -64,6 +75,7 @@ pub mod util;
 
 /// Commonly used items.
 pub mod prelude {
+    pub use crate::codec::{encode_upload, EncodingMix, WireUpload};
     pub use crate::config::ExpConfig;
     pub use crate::coordinator::{run_experiment, FedDdServer, FedRun, RoundOutcome};
     pub use crate::data::{FedDataset, Partition};

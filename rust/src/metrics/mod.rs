@@ -1,6 +1,7 @@
 //! Run metrics: per-round records, accuracy / time-to-accuracy (T2A)
 //! tracking, per-class accuracy (Fig. 21), JSON + CSV writers.
 
+use crate::codec::EncodingMix;
 use crate::util::json::Json;
 
 /// One synchronous round's accounting.
@@ -13,8 +14,15 @@ pub struct RoundRecord {
     pub duration: f64,
     /// Mean training loss over participants.
     pub train_loss: f64,
-    /// Total bytes uploaded by all participants this round.
+    /// Masked value payload bytes uploaded by all participants this round
+    /// (the budget-accounting column; no wire framing).
     pub uploaded_bytes: usize,
+    /// Realized encoded upload bytes this round (headers + indices +
+    /// values — `WireUpload::wire_len`, what the uplinks were charged).
+    pub wire_bytes: usize,
+    /// Per-layout layer counts over this round's folded uploads
+    /// (dense / bitmap / COO — the encoding-mix column).
+    pub encodings: EncodingMix,
     /// The byte budget the scheme was allowed (A_server · Σ U_n).
     pub budget_bytes: usize,
     /// Participating clients.
@@ -79,9 +87,24 @@ impl RunResult {
             .map(|e| e.v_time)
     }
 
-    /// Total uploaded bytes across the run.
+    /// Total uploaded payload bytes across the run.
     pub fn total_uploaded(&self) -> usize {
         self.rounds.iter().map(|r| r.uploaded_bytes).sum()
+    }
+
+    /// Total realized wire bytes across the run — the true communication
+    /// volume Table-4-style comparisons report.
+    pub fn total_wire_bytes(&self) -> usize {
+        self.rounds.iter().map(|r| r.wire_bytes).sum()
+    }
+
+    /// Layer-encoding mix summed over every round's folded uploads.
+    pub fn encoding_mix(&self) -> EncodingMix {
+        let mut mix = EncodingMix::default();
+        for r in &self.rounds {
+            mix.merge(r.encodings);
+        }
+        mix
     }
 
     /// Virtual time at the end of the run (the last round's clock).
@@ -140,6 +163,10 @@ impl RunResult {
                                 ("duration", Json::Num(r.duration)),
                                 ("train_loss", Json::Num(r.train_loss)),
                                 ("uploaded_bytes", Json::Num(r.uploaded_bytes as f64)),
+                                ("wire_bytes", Json::Num(r.wire_bytes as f64)),
+                                ("enc_dense", Json::Num(r.encodings.dense as f64)),
+                                ("enc_bitmap", Json::Num(r.encodings.bitmap as f64)),
+                                ("enc_coo", Json::Num(r.encodings.coo as f64)),
                                 ("budget_bytes", Json::Num(r.budget_bytes as f64)),
                                 ("participants", Json::Num(r.participants as f64)),
                                 ("mean_dropout", Json::Num(r.mean_dropout)),
@@ -258,6 +285,8 @@ mod tests {
                 duration: 10.0,
                 train_loss: 1.0 / (i + 1) as f64,
                 uploaded_bytes: 1000,
+                wire_bytes: 900,
+                encodings: EncodingMix { dense: 1, bitmap: 2, coo: 0 },
                 budget_bytes: 1200,
                 participants: 10,
                 mean_dropout: 0.4,
@@ -284,6 +313,8 @@ mod tests {
         assert_eq!(r.final_accuracy(), Some(1.0));
         assert_eq!(r.best_accuracy(), 1.0);
         assert_eq!(r.total_uploaded(), 5000);
+        assert_eq!(r.total_wire_bytes(), 4500);
+        assert_eq!(r.encoding_mix(), EncodingMix { dense: 5, bitmap: 10, coo: 0 });
     }
 
     #[test]

@@ -72,18 +72,31 @@ impl ChannelMask {
         out
     }
 
-    /// Uploaded payload in bytes (f32 elements under the mask).
-    pub fn upload_bytes(&self, spec: &ModelSpec) -> usize {
+    /// Masked value payload in bytes: the f32 elements under the mask,
+    /// with no wire framing. This is the budget-accounting quantity
+    /// (A_server budgets are value bytes) and the `uploaded_bytes`
+    /// round-record column; the uplink is charged for the *realized*
+    /// `codec::WireUpload::wire_len()` instead.
+    pub fn payload_bytes(&self, spec: &ModelSpec) -> usize {
         let mut total = 0usize;
         for (layer, sel) in spec.layers.iter().zip(&self.per_layer) {
-            let group = match layer.kind {
-                LayerKind::Conv { kernel, .. } => layer.in_dim * kernel * kernel,
-                LayerKind::Fc => layer.in_dim,
-            };
+            let group = crate::codec::unit_group(layer);
             let n_sel = sel.iter().filter(|&&b| b).count();
             total += n_sel * (group + 1); // + bias element
         }
         total * 4
+    }
+
+    /// Documented **upper bound** on the auto-picked encoded upload size
+    /// (`codec::upload_bound`): headers + masked values + the cheaper
+    /// per-layer index overhead, counted even when a layer is fully kept
+    /// (where the realized dense layout pays no index overhead at all).
+    /// Not used on any timing path — `encode_upload` debug-asserts
+    /// `wire_len() <= upload_bytes()` for the auto mode and the simnet
+    /// charges `wire_len()`. Forced `codec=bitmap|coo` runs can exceed
+    /// the bound by construction.
+    pub fn upload_bytes(&self, spec: &ModelSpec) -> usize {
+        crate::codec::upload_bound(self, spec)
     }
 }
 
@@ -319,7 +332,9 @@ mod tests {
         let mut rng = Rng::new(2);
         let m = select_mask(Policy::Importance, &spec, &before, &after, None, 0.0, &mut rng);
         assert_eq!(m, ChannelMask::full(&spec));
-        assert_eq!(m.upload_bytes(&spec), spec.size_bytes());
+        assert_eq!(m.payload_bytes(&spec), spec.size_bytes());
+        // the wire-size bound stays a bound even at zero dropout
+        assert!(m.upload_bytes(&spec) >= spec.size_bytes());
     }
 
     #[test]
@@ -335,7 +350,7 @@ mod tests {
     }
 
     #[test]
-    fn elementwise_mask_matches_upload_bytes() {
+    fn elementwise_mask_matches_payload_bytes() {
         check("mask expansion counts", 10, |rng| {
             let spec = ModelSpec::get("cnn1", 1.0).unwrap();
             let before = spec.init_params(rng);
@@ -347,8 +362,12 @@ mod tests {
                 .iter()
                 .map(|t| t.data().iter().filter(|&&x| x == 1.0).count())
                 .sum();
-            if ones * 4 != m.upload_bytes(&spec) {
-                return Err(format!("{} != {}", ones * 4, m.upload_bytes(&spec)));
+            if ones * 4 != m.payload_bytes(&spec) {
+                return Err(format!("{} != {}", ones * 4, m.payload_bytes(&spec)));
+            }
+            // the documented wire bound sits above the raw payload
+            if m.upload_bytes(&spec) < m.payload_bytes(&spec) {
+                return Err("upload_bytes bound below payload".into());
             }
             Ok(())
         });

@@ -42,7 +42,10 @@ impl DeviceProfile {
         self.cycles_per_sample * samples as f64 / self.cpu_hz
     }
 
-    /// Upload time for `bytes` (Eq. 9).
+    /// Upload time for `bytes` (Eq. 9). The engine passes the *realized*
+    /// encoded upload size (`codec::WireUpload::wire_len`), so the Eq. 9
+    /// delay reflects measured wire bytes — index overhead included —
+    /// rather than the `upload_bytes` estimate.
     pub fn t_up(&self, bytes: f64) -> f64 {
         bytes * 8.0 / self.up_bps
     }

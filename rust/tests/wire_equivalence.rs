@@ -1,0 +1,304 @@
+//! Wire-codec aggregation equivalence: `Aggregator::absorb_wire` must be
+//! **bitwise identical** to the dense mask path (`add_client` with the
+//! expanded elementwise mask) for every selection policy and mask shape
+//! the four schemes produce (FedDD's partial masks, the baselines' full
+//! masks), every shard partition / worker count, and hetero sub-model
+//! corners — and the chosen encodings must strictly beat the dense
+//! payload whenever dropout actually drops a unit.
+
+use std::path::PathBuf;
+
+use feddd::aggregation::{AggBackend, Aggregator};
+use feddd::codec::{encode_upload, encode_upload_with, CodecMode, WireUpload};
+use feddd::config::ExpConfig;
+use feddd::coordinator::FedRun;
+use feddd::model::ModelSpec;
+use feddd::runtime::write_native_manifest;
+use feddd::selection::{select_mask, ChannelMask, Policy};
+use feddd::tensor::Tensor;
+use feddd::util::proptest::check;
+use feddd::util::rng::Rng;
+
+fn perturbed(p: &[Tensor], rng: &mut Rng, s: f32) -> Vec<Tensor> {
+    p.iter()
+        .map(|t| {
+            let d: Vec<f32> = t.data().iter().map(|&x| x + rng.normal_f32(0.0, s)).collect();
+            Tensor::new(t.shape().to_vec(), d)
+        })
+        .collect()
+}
+
+/// A client mask in one of the shapes the schemes produce: the baselines'
+/// full mask or a FedDD policy selection at a random rate.
+fn scheme_mask(spec: &ModelSpec, prev: &[Tensor], after: &[Tensor], rng: &mut Rng) -> ChannelMask {
+    let policies = [
+        Policy::Importance,
+        Policy::Random,
+        Policy::Max,
+        Policy::Delta,
+        Policy::Ordered,
+    ];
+    match rng.below(6) {
+        0 => ChannelMask::full(spec), // fedavg / fedcs / oort upload shape
+        i => {
+            let d = rng.range_f64(0.05, 0.9);
+            select_mask(policies[i - 1], spec, prev, after, None, d, rng)
+        }
+    }
+}
+
+#[test]
+fn absorb_wire_matches_dense_add_client_bitwise() {
+    // The core guarantee, for every layout the auto-pick can choose and
+    // for the forced bitmap/COO modes: folding the encoded upload equals
+    // expanding the mask and calling add_client, bit for bit.
+    check("wire == dense fold", 20, |rng| {
+        for name in ["mlp", "cnn1"] {
+            let spec = ModelSpec::get(name, 0.5).unwrap();
+            let prev = spec.init_params(rng);
+            let n_clients = rng.int_range(1, 6);
+            let clients: Vec<Vec<Tensor>> =
+                (0..n_clients).map(|_| perturbed(&prev, rng, 0.05)).collect();
+            let masks: Vec<ChannelMask> = clients
+                .iter()
+                .map(|c| scheme_mask(&spec, &prev, c, rng))
+                .collect();
+            let weights: Vec<f32> =
+                (0..n_clients).map(|_| rng.range_f64(0.5, 200.0) as f32).collect();
+
+            let dense = {
+                let mut agg = Aggregator::new(&spec, AggBackend::Rust);
+                for i in 0..n_clients {
+                    let elems = masks[i].to_elementwise(&spec);
+                    agg.add_client(&clients[i], &elems, weights[i], None).unwrap();
+                }
+                agg.finalize(&prev, None).unwrap()
+            };
+            for mode in [CodecMode::Auto, CodecMode::Bitmap, CodecMode::Coo] {
+                let mut agg = Aggregator::new(&spec, AggBackend::Rust);
+                for i in 0..n_clients {
+                    let up = encode_upload_with(&masks[i], &clients[i], &spec, mode);
+                    agg.absorb_wire(&up, weights[i]).unwrap();
+                }
+                if agg.clients_added() != n_clients {
+                    return Err(format!("{name}: clients_added {}", agg.clients_added()));
+                }
+                let wire = agg.finalize(&prev, None).unwrap();
+                for (i, (a, b)) in dense.iter().zip(&wire).enumerate() {
+                    if a.data() != b.data() {
+                        return Err(format!("{name} {mode:?}: tensor {i} differs"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn absorb_wire_matches_dense_in_hetero_corners() {
+    // Hetero fleets embed sub-models at the leading corner of the global
+    // tensors; absorb_wire's scatter must land on exactly the positions
+    // add_client's embed covers — across all five sub-model widths.
+    check("wire == dense fold (hetero)", 8, |rng| {
+        let global = ModelSpec::get("het_a_1", 0.25).unwrap();
+        let prev = global.init_params(rng);
+        let mut dense_agg = Aggregator::new(&global, AggBackend::Rust);
+        let mut wire_agg = Aggregator::new(&global, AggBackend::Rust);
+        for i in 1..=5 {
+            let sub = ModelSpec::get(&format!("het_a_{i}"), 0.25).unwrap();
+            let params = sub.init_params(rng);
+            let before = sub.init_params(rng);
+            let mask = scheme_mask(&sub, &before, &params, rng);
+            let m_n = rng.range_f64(1.0, 50.0) as f32;
+            let elems = mask.to_elementwise(&sub);
+            dense_agg.add_client(&params, &elems, m_n, None).unwrap();
+            let up = encode_upload(&mask, &params, &sub);
+            wire_agg.absorb_wire(&up, m_n).unwrap();
+        }
+        let a = dense_agg.finalize(&prev, None).unwrap();
+        let b = wire_agg.finalize(&prev, None).unwrap();
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            if x.data() != y.data() {
+                return Err(format!("hetero tensor {i} differs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sharded_wire_folds_are_partition_deterministic() {
+    // Shard partials built with absorb_wire and merged pairwise must
+    // equal the sequential dense aggregation bitwise, for every shard
+    // length (the worker count never enters the partition).
+    check("sharded wire folds", 10, |rng| {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let prev = spec.init_params(rng);
+        let n_clients = rng.int_range(2, 9);
+        let clients: Vec<Vec<Tensor>> =
+            (0..n_clients).map(|_| perturbed(&prev, rng, 0.05)).collect();
+        let uploads: Vec<WireUpload> = clients
+            .iter()
+            .map(|c| {
+                let m = scheme_mask(&spec, &prev, c, rng);
+                encode_upload(&m, c, &spec)
+            })
+            .collect();
+        let weights: Vec<f32> = (0..n_clients).map(|_| (rng.below(100) + 1) as f32).collect();
+        let sequential = {
+            let mut agg = Aggregator::new(&spec, AggBackend::Rust);
+            for i in 0..n_clients {
+                agg.absorb_wire(&uploads[i], weights[i]).unwrap();
+            }
+            agg.finalize(&prev, None).unwrap()
+        };
+        for shard_len in 1..=n_clients {
+            let mut shards = Vec::new();
+            let mut i = 0;
+            while i < n_clients {
+                let end = (i + shard_len).min(n_clients);
+                let mut shard = Aggregator::new(&spec, AggBackend::Rust);
+                for j in i..end {
+                    shard.absorb_wire(&uploads[j], weights[j]).unwrap();
+                }
+                shards.push(shard);
+                i = end;
+            }
+            let merged = Aggregator::merge(shards).unwrap();
+            if merged.clients_added() != n_clients {
+                return Err("clients_added lost in merge".into());
+            }
+            let out = merged.finalize(&prev, None).unwrap();
+            for (x, y) in out.iter().zip(&sequential) {
+                if x.data() != y.data() {
+                    return Err(format!("shard_len {shard_len} differs from sequential"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Engine-level: the wire path drives full runs for all four schemes.
+// ---------------------------------------------------------------------
+
+fn native_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "feddd_wire_equiv_{}_{tag}",
+        std::process::id()
+    ));
+    write_native_manifest(&dir, &[("mlp", 1.0)], 16, 64).unwrap();
+    dir
+}
+
+fn cfg(scheme: &str, workers: usize, dir: &PathBuf) -> ExpConfig {
+    let mut cfg = ExpConfig::smoke();
+    cfg.scheme = scheme.into();
+    cfg.n_clients = 5;
+    cfg.rounds = 3;
+    cfg.local_steps = 2;
+    cfg.test_n = 128;
+    cfg.train_per_client = 60;
+    cfg.eval_every = 3;
+    cfg.workers = workers;
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    cfg
+}
+
+#[test]
+fn engine_wire_path_is_worker_invariant_for_every_scheme() {
+    // All four schemes now aggregate through absorb_wire; the bitwise
+    // worker-count invariance must survive the codec rework, and the
+    // new wire columns must be deterministic too.
+    let dir = native_dir("schemes");
+    for scheme in ["feddd", "fedavg", "fedcs", "oort"] {
+        let run_once = |workers: usize| {
+            let mut run = FedRun::new(cfg(scheme, workers, &dir)).unwrap();
+            let res = run.run().unwrap();
+            (res, run.global_params.clone())
+        };
+        let (res1, par1) = run_once(1);
+        let (res4, par4) = run_once(4);
+        for (a, b) in res1.rounds.iter().zip(&res4.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{scheme}");
+            assert_eq!(a.uploaded_bytes, b.uploaded_bytes, "{scheme}");
+            assert_eq!(a.wire_bytes, b.wire_bytes, "{scheme}");
+            assert_eq!(a.encodings, b.encodings, "{scheme}");
+        }
+        for (i, (x, y)) in par1.iter().zip(&par4).enumerate() {
+            assert_eq!(x.data(), y.data(), "{scheme}: global tensor {i}");
+        }
+        assert_eq!(res1.total_wire_bytes(), res4.total_wire_bytes(), "{scheme}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn engine_wire_bytes_beat_dense_under_dropout() {
+    // Acceptance: once FedDD allocates d > 0 (round 2 on), the realized
+    // wire bytes are strictly below the dense full-model volume, the
+    // uploads stop being all-dense, and wire_bytes stays within the
+    // documented bound of payload + framing.
+    let dir = native_dir("savings");
+    let mut run = FedRun::new(cfg("feddd", 2, &dir)).unwrap();
+    let full_model_bytes: usize = run.clients.iter().map(|c| c.u_bytes()).sum();
+    let res = run.run().unwrap();
+    let r1 = &res.rounds[0];
+    // round 1 uploads everything: all-dense encodings, payload == model
+    assert_eq!(r1.uploaded_bytes, full_model_bytes);
+    assert_eq!(r1.encodings.bitmap + r1.encodings.coo, 0, "round 1 not dense");
+    assert!(r1.wire_bytes > r1.uploaded_bytes, "framing bytes missing");
+    for r in res.rounds.iter().skip(1) {
+        assert!(
+            r.wire_bytes < full_model_bytes,
+            "round {}: wire {} !< dense {}",
+            r.round,
+            r.wire_bytes,
+            full_model_bytes
+        );
+        assert!(
+            r.encodings.bitmap + r.encodings.coo > 0,
+            "round {}: dropout produced only dense layers",
+            r.round
+        );
+        assert!(r.wire_bytes >= r.uploaded_bytes, "round {}: wire below payload", r.round);
+    }
+    // fedavg for the same fleet is all-dense, every round
+    let mut run = FedRun::new(cfg("fedavg", 2, &dir)).unwrap();
+    let res = run.run().unwrap();
+    for r in &res.rounds {
+        assert_eq!(r.encodings.bitmap + r.encodings.coo, 0, "fedavg round {}", r.round);
+        assert_eq!(r.uploaded_bytes, full_model_bytes);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn forced_codec_modes_do_not_change_the_math() {
+    // --codec bitmap/coo change bytes on the wire, never the model:
+    // losses and global params must equal the auto run bitwise; wire
+    // bytes must be >= auto's (auto picks the smallest layout).
+    let dir = native_dir("modes");
+    let run_with = |codec: &str| {
+        let mut c = cfg("feddd", 2, &dir);
+        c.codec = codec.into();
+        let mut run = FedRun::new(c).unwrap();
+        let res = run.run().unwrap();
+        (res, run.global_params.clone())
+    };
+    let (auto_res, auto_par) = run_with("auto");
+    for mode in ["bitmap", "coo"] {
+        let (res, par) = run_with(mode);
+        for (a, b) in auto_res.rounds.iter().zip(&res.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{mode}");
+            assert_eq!(a.uploaded_bytes, b.uploaded_bytes, "{mode}");
+            assert!(b.wire_bytes >= a.wire_bytes, "{mode} beat auto-pick");
+        }
+        for (x, y) in auto_par.iter().zip(&par) {
+            assert_eq!(x.data(), y.data(), "{mode}: global params differ");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
