@@ -7,11 +7,12 @@ baseline in BENCH_baseline/, and exits non-zero when the run regressed:
 
 * **timing**: any case whose mean ns/round exceeds the baseline's by more
   than --max-regress (default 0.20, i.e. >20%) fails;
-* **wire volume**: any run-level key starting with ``wire_`` or
-  ``payload_`` that *increased* at all fails — these totals come from a
-  fixed-seed, fixed-round-count run, so at equal config (= equal dropout
-  schedule) they are exactly reproducible and any growth is a real
-  encoding regression, not noise.
+* **wire volume / fleet state**: any run-level key starting with
+  ``wire_``, ``payload_`` or ``client_state`` that *increased* at all
+  fails — these totals come from a fixed-seed, fixed-round-count run, so
+  at equal config (= equal dropout schedule) they are exactly
+  reproducible and any growth is a real encoding or client-state
+  regression, not noise.
 
 Cases present on only one side are reported but never fail the gate
 (benches come and go); timing *improvements* are reported so maintainers
@@ -54,11 +55,11 @@ def cases_by_name(doc):
 
 
 def run_level_bytes(doc):
+    gated = ("wire_", "payload_", "client_state")
     return {
         k: v
         for k, v in doc.items()
-        if (k.startswith("wire_") or k.startswith("payload_"))
-        and isinstance(v, (int, float))
+        if k.startswith(gated) and isinstance(v, (int, float))
     }
 
 
@@ -78,7 +79,7 @@ def main():
     lines = ["# Bench baseline diff", ""]
     lines.append(f"baseline: `{args.baseline}`  ·  current: `{args.current}`")
     lines.append(f"timing gate: +{args.max_regress:.0%} ns/round  ·  "
-                 "wire gate: any byte increase")
+                 "wire/state gate: any byte increase")
     lines.append("")
     failures = []
 
@@ -127,7 +128,7 @@ def main():
                 "all changed) — timing gate would be silently disarmed")
 
         lines.append("")
-        lines.append("| wire/payload key | baseline | current | verdict |")
+        lines.append("| wire/payload/state key | baseline | current | verdict |")
         lines.append("|---|---|---|---|")
         base_bytes = run_level_bytes(base)
         cur_bytes = run_level_bytes(cur)
@@ -150,7 +151,7 @@ def main():
             if cv > bv:
                 failures.append(
                     f"{key}: {cv:.0f} B > baseline {bv:.0f} B "
-                    "(wire bytes may never increase at equal dropout rate)")
+                    "(wire/state bytes may never increase at equal dropout rate)")
                 lines.append(f"| {key} | {bv:.0f} | {cv:.0f} | **REGRESSION** |")
             else:
                 note = "ok" if cv == bv else "improved"

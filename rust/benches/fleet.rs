@@ -1,0 +1,166 @@
+//! Fleet-scale bench + smoke for the virtualized client state
+//! (DESIGN.md §Fleet-Virtualization): sweeps fleet sizes
+//! {100, 1k, 10k, 50k} on the native executor and reports
+//! `client_state_bytes` — the fleet's persistent footprint (per-client
+//! residuals + live shared snapshots) that replaces the dense
+//! O(clients · model) replica array.
+//!
+//! Two kinds of cases:
+//!
+//! * **timed** (100, 1k clients) — ns/round of the micro-batched round
+//!   engine at fleet scale, with state-byte case annotations;
+//! * **deterministic one-shots** (10k; 50k with `FEDDD_FLEET_FULL=1`) —
+//!   fixed seed, fixed round count, so the emitted
+//!   `client_state_*`-prefixed run-level byte totals are exactly
+//!   reproducible and `ci/bench_diff.py` gates them like the `wire_*`
+//!   totals (any increase fails CI).
+//!
+//! **Inline gate** (the CI fleet smoke): the 10k-client, 2-round run
+//! under the `fleet` preset (h=1 broadcast-heavy production shape) must
+//! complete with peak client-state bytes below **10% of
+//! clients × model_size_bytes**, or the process exits non-zero. A
+//! second deterministic case runs the delta path (h=5, sparse rounds) and
+//! requires the residual footprint to stay strictly below the dense
+//! fleet's — the complement-of-mask invariant.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use feddd::config::ExpConfig;
+use feddd::coordinator::FedRun;
+use feddd::runtime::write_native_manifest;
+use feddd::util::bench::{black_box, Bencher};
+use feddd::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    // Fixed name (not pid-suffixed): repeated bench runs reuse the same
+    // directory instead of leaking one per invocation.
+    let tmp = std::env::temp_dir().join("feddd_fleet_bench_native");
+    write_native_manifest(&tmp, &[("mlp", 0.25)], 8, 64).expect("native manifest");
+    tmp
+}
+
+fn cfg(n_clients: usize, h: usize, rounds: usize, dir: &PathBuf) -> ExpConfig {
+    let mut cfg = ExpConfig::fleet();
+    cfg.n_clients = n_clients;
+    cfg.h = h;
+    cfg.rounds = rounds;
+    cfg.eval_every = rounds;
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    cfg
+}
+
+/// One deterministic fixed-seed, fixed-round run; returns
+/// (peak end-of-round state bytes, final state bytes, peak residual-only
+/// bytes, model bytes, wall seconds). State bytes are independent of
+/// host timing, so these totals gate byte-exactly in CI.
+fn deterministic_fleet(
+    n_clients: usize,
+    h: usize,
+    rounds: usize,
+    dir: &PathBuf,
+) -> (usize, usize, usize, usize, f64) {
+    let mut run = FedRun::new(cfg(n_clients, h, rounds, dir)).unwrap();
+    let model_bytes = run.clients[0].u_bytes();
+    let wall0 = Instant::now();
+    let mut peak_state = 0usize;
+    let mut last_state = 0usize;
+    let mut peak_residual = 0usize;
+    for _ in 0..rounds {
+        let out = run.step_round().unwrap();
+        peak_state = peak_state.max(out.client_state_bytes);
+        last_state = out.client_state_bytes;
+        peak_residual = peak_residual.max(run.client_residual_bytes());
+    }
+    (peak_state, last_state, peak_residual, model_bytes, wall0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let dir = artifacts_dir();
+    let mut b = Bencher::new("fleet");
+
+    // ---- timed sweep: ns/round at small-to-mid fleet sizes ----
+    for &n in &[100usize, 1000] {
+        let mut run = FedRun::new(cfg(n, 1, 1000, &dir)).unwrap();
+        run.step_round().unwrap(); // warm caches, pass round 1
+        let mut state_bytes = 0usize;
+        b.bench(&format!("step_round_fleet_mlp25_{n}c_h1"), || {
+            let out = black_box(run.step_round().unwrap());
+            state_bytes = out.client_state_bytes;
+        });
+        b.annotate("n_clients", Json::Num(n as f64));
+        b.annotate("client_state_bytes", Json::Num(state_bytes as f64));
+        b.annotate(
+            "dense_state_bytes",
+            Json::Num((n * run.clients[0].u_bytes()) as f64),
+        );
+    }
+
+    // ---- deterministic delta-path case: 1k clients, sparse rounds ----
+    // h=5 keeps rounds 2..3 mask-sparse, so every client carries its
+    // complement-of-mask residual — the footprint the virtualization
+    // must keep strictly below the dense fleet's.
+    let (peak_1k, final_1k, resid_1k, model_bytes, wall_1k) =
+        deterministic_fleet(1000, 5, 3, &dir);
+    let dense_1k = 1000 * model_bytes;
+    println!(
+        "fleet::delta_1k_h5_3r  peak_state {peak_1k}B  final {final_1k}B  \
+         residuals {resid_1k}B  dense {dense_1k}B  ({:.2}x below dense)  wall {wall_1k:.1}s",
+        dense_1k as f64 / peak_1k.max(1) as f64
+    );
+    b.annotate_run("client_state_peak_bytes_1k_h5_3r", Json::Num(peak_1k as f64));
+    b.annotate_run("client_state_final_bytes_1k_h5_3r", Json::Num(final_1k as f64));
+    b.annotate_run("dense_state_bytes_1k", Json::Num(dense_1k as f64));
+    // Gate verdicts are collected here and acted on only after
+    // b.finish() has written BENCH_fleet.json — the CI diff step runs on
+    // bench failure too and must always find the JSON.
+    let mut gate_failures: Vec<String> = Vec::new();
+    if resid_1k == 0 {
+        gate_failures
+            .push("sparse rounds left no residual — the delta path never ran".into());
+    } else if resid_1k >= dense_1k {
+        gate_failures.push(format!(
+            "residual state {resid_1k}B not strictly below the dense fleet {dense_1k}B"
+        ));
+    }
+
+    // ---- the 10k-client fleet smoke (the CI acceptance gate) ----
+    let (peak_10k, final_10k, _resid_10k, model_bytes, wall_10k) =
+        deterministic_fleet(10_000, 1, 2, &dir);
+    let dense_10k = 10_000 * model_bytes;
+    let limit = dense_10k / 10; // < 10% of clients × model_size_bytes
+    println!(
+        "fleet::smoke_10k_h1_2r  peak_state {peak_10k}B  final {final_10k}B  \
+         dense {dense_10k}B  limit {limit}B  wall {wall_10k:.1}s"
+    );
+    b.annotate_run("client_state_peak_bytes_10k_h1_2r", Json::Num(peak_10k as f64));
+    b.annotate_run("client_state_final_bytes_10k_h1_2r", Json::Num(final_10k as f64));
+    b.annotate_run("dense_state_bytes_10k", Json::Num(dense_10k as f64));
+    b.annotate_run("fleet_smoke_wall_s", Json::Num(wall_10k));
+
+    // ---- optional 50k sweep point (slow; opt-in, not part of the CI
+    // quick run, so its keys never enter the baseline key set) ----
+    if std::env::var("FEDDD_FLEET_FULL").is_ok() {
+        let (peak_50k, final_50k, _r, mb, wall_50k) = deterministic_fleet(50_000, 1, 2, &dir);
+        println!(
+            "fleet::smoke_50k_h1_2r  peak_state {peak_50k}B  final {final_50k}B  \
+             dense {}B  wall {wall_50k:.1}s",
+            50_000 * mb
+        );
+        b.annotate_run("client_state_peak_bytes_50k_h1_2r", Json::Num(peak_50k as f64));
+    }
+
+    if peak_10k >= limit {
+        gate_failures.push(format!(
+            "10k-client fleet smoke peak client-state {peak_10k}B is not below \
+             10% of the dense fleet ({limit}B)"
+        ));
+    }
+    b.finish();
+    if !gate_failures.is_empty() {
+        for f in &gate_failures {
+            eprintln!("GATE FAILED: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -55,21 +55,24 @@ fn cfg(scheme: &str, workers: usize, round_mode: &str, dir: &PathBuf) -> ExpConf
     cfg
 }
 
-/// Virtual time plus realized wire / payload volume after `rounds` rounds
-/// under the given round mode. Fully deterministic (seeded, fixed round
-/// count — unlike the timed loops, whose iteration counts depend on the
-/// host), so `ci/bench_diff.py` gates on these byte totals *exactly*:
-/// any increase at the same config (= same dropout schedule) fails CI.
-fn deterministic_run(round_mode: &str, rounds: usize, dir: &PathBuf) -> (f64, usize, usize) {
+/// Virtual time plus realized wire / payload volume and peak client-state
+/// bytes after `rounds` rounds under the given round mode. Fully
+/// deterministic (seeded, fixed round count — unlike the timed loops,
+/// whose iteration counts depend on the host), so `ci/bench_diff.py`
+/// gates on these byte totals *exactly*: any increase at the same config
+/// (= same dropout schedule) fails CI.
+fn deterministic_run(round_mode: &str, rounds: usize, dir: &PathBuf) -> (f64, usize, usize, usize) {
     let mut run = FedRun::new(cfg("feddd", 1, round_mode, dir)).unwrap();
     let mut wire = 0usize;
     let mut payload = 0usize;
+    let mut peak_state = 0usize;
     for _ in 0..rounds {
         let out = run.step_round().unwrap();
         wire += out.wire_bytes;
         payload += out.uploaded_bytes;
+        peak_state = peak_state.max(out.client_state_bytes);
     }
-    (run.clock.now(), wire, payload)
+    (run.clock.now(), wire, payload, peak_state)
 }
 
 fn main() {
@@ -120,8 +123,9 @@ fn main() {
     // barrier. This is deterministic (seeded), so a violation is a real
     // scheduler regression, not noise.
     let rounds = 8;
-    let (vt_sync, wire_sync, payload_sync) = deterministic_run("sync", rounds, &dir);
-    let (vt_semi, wire_semi, payload_semi) = deterministic_run("semi_async", rounds, &dir);
+    let (vt_sync, wire_sync, payload_sync, state_sync) = deterministic_run("sync", rounds, &dir);
+    let (vt_semi, wire_semi, payload_semi, state_semi) =
+        deterministic_run("semi_async", rounds, &dir);
     let speedup = vt_sync / vt_semi;
     println!(
         "round::virtual_time_{rounds}r  sync {vt_sync:.1}s  \
@@ -140,6 +144,10 @@ fn main() {
     b.annotate_run("wire_bytes_semi_async_8r", Json::Num(wire_semi as f64));
     b.annotate_run("payload_bytes_sync_8r", Json::Num(payload_sync as f64));
     b.annotate_run("payload_bytes_semi_async_8r", Json::Num(payload_semi as f64));
+    // Virtualized client-state footprint (per-client residuals + live
+    // snapshots), gated like the wire totals: any increase fails CI.
+    b.annotate_run("client_state_peak_bytes_sync_8r", Json::Num(state_sync as f64));
+    b.annotate_run("client_state_peak_bytes_semi_async_8r", Json::Num(state_semi as f64));
     b.finish();
     if vt_semi >= vt_sync {
         eprintln!(

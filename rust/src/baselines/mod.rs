@@ -144,7 +144,9 @@ fn order_first_by_util(utils: &[f64]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{extract_params, ModelId, ModelSpec};
+    use crate::coordinator::{ClientParams, SnapshotRing};
+    use crate::data::ClientShard;
+    use crate::model::{ModelId, ModelSpec};
     use crate::simnet::DeviceProfile;
 
     fn clients(n: usize) -> (Vec<ClientState>, ExpConfig) {
@@ -152,13 +154,15 @@ mod tests {
         let spec = ModelSpec::get("mlp", 1.0).unwrap();
         let mut rng = Rng::new(0);
         let global = spec.init_params(&mut rng);
+        let mut ring = SnapshotRing::new();
+        let snap = ring.publish(0, &global);
         let v = (0..n)
             .map(|i| ClientState {
                 id: i,
                 model_id: ModelId::new("mlp", 100),
                 spec: spec.clone(),
-                params: extract_params(&global, &spec),
-                data: (0..100).collect(),
+                params: ClientParams::synced(snap.clone()),
+                data: ClientShard::Owned((0..100).collect()),
                 profile: DeviceProfile {
                     cycles_per_sample: 2e6,
                     cpu_hz: 2e9,

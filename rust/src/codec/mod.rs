@@ -135,6 +135,72 @@ pub fn unit_group(layer: &Layer) -> usize {
     }
 }
 
+/// Gather the value groups of the listed units of one layer into the
+/// canonical wire layout: per unit (ascending), its [`unit_group`]
+/// incoming weights then its bias. Shared by the upload encoder and the
+/// client-state residuals (`coordinator::state`), so both sides agree on
+/// the layout byte for byte.
+pub fn gather_unit_values(layer: &Layer, w: &[f32], b: &[f32], units: &[u32]) -> Vec<f32> {
+    let group = unit_group(layer);
+    let mut values = Vec::with_capacity(units.len() * (group + 1));
+    match layer.kind {
+        LayerKind::Conv { .. } => {
+            for &k in units {
+                let k = k as usize;
+                values.extend_from_slice(&w[k * group..(k + 1) * group]);
+                values.push(b[k]);
+            }
+        }
+        LayerKind::Fc => {
+            let n_out = layer.out_dim;
+            for &k in units {
+                let k = k as usize;
+                for j in 0..layer.in_dim {
+                    values.push(w[j * n_out + k]);
+                }
+                values.push(b[k]);
+            }
+        }
+    }
+    values
+}
+
+/// Scatter value groups laid out by [`gather_unit_values`] back into
+/// dense layer tensors: the exact inverse for the listed units; every
+/// other position is left untouched.
+pub fn scatter_unit_values(
+    layer: &Layer,
+    w: &mut [f32],
+    b: &mut [f32],
+    units: &[u32],
+    values: &[f32],
+) {
+    let group = unit_group(layer);
+    let chunk = group + 1;
+    debug_assert_eq!(values.len(), units.len() * chunk, "value/unit arity");
+    match layer.kind {
+        LayerKind::Conv { .. } => {
+            for (ui, &k) in units.iter().enumerate() {
+                let k = k as usize;
+                let vals = &values[ui * chunk..(ui + 1) * chunk];
+                w[k * group..(k + 1) * group].copy_from_slice(&vals[..group]);
+                b[k] = vals[group];
+            }
+        }
+        LayerKind::Fc => {
+            let out = layer.out_dim;
+            for (ui, &k) in units.iter().enumerate() {
+                let k = k as usize;
+                let vals = &values[ui * chunk..(ui + 1) * chunk];
+                for j in 0..layer.in_dim {
+                    w[j * out + k] = vals[j];
+                }
+                b[k] = vals[group];
+            }
+        }
+    }
+}
+
 /// Index overhead (bytes) of the cheaper index layout for `n_sel` of
 /// `out_dim` units: bitmap vs COO.
 pub fn index_overhead(out_dim: usize, n_sel: usize) -> usize {
@@ -212,6 +278,18 @@ impl WireUpload {
     /// the budget-accounting payload, `ChannelMask::payload_bytes`.
     pub fn payload_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.values.len() * 4).sum()
+    }
+
+    /// Heap bytes of the *decoded* upload held in memory (unit ids +
+    /// values) — what a server buffering this upload actually stores,
+    /// as opposed to the serialized [`WireUpload::wire_len`], whose
+    /// bitmap layout can index many units in few wire bytes. The
+    /// semi-async pending-state accounting charges this.
+    pub fn mem_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.units.len() * 4 + l.values.len() * 4)
+            .sum()
     }
 
     /// Per-layout layer counts of this upload.
@@ -425,26 +503,7 @@ pub fn encode_upload_with(
             .filter(|(_, &s)| s)
             .map(|(k, _)| k as u32)
             .collect();
-        let mut values = Vec::with_capacity(units.len() * (group + 1));
-        match layer.kind {
-            LayerKind::Conv { .. } => {
-                for &k in &units {
-                    let k = k as usize;
-                    values.extend_from_slice(&w[k * group..(k + 1) * group]);
-                    values.push(b[k]);
-                }
-            }
-            LayerKind::Fc => {
-                let n_out = layer.out_dim;
-                for &k in &units {
-                    let k = k as usize;
-                    for j in 0..layer.in_dim {
-                        values.push(w[j * n_out + k]);
-                    }
-                    values.push(b[k]);
-                }
-            }
-        }
+        let values = gather_unit_values(layer, w, b, &units);
         let n_sel = units.len();
         let encoding = match mode {
             CodecMode::Bitmap => Encoding::Bitmap,
@@ -512,24 +571,13 @@ pub fn decode_upload(
         let mut wdat = vec![0.0f32; out * group];
         let mut bdat = vec![0.0f32; out];
         let mut sel = vec![false; out];
-        for (ui, &k) in lw.units.iter().enumerate() {
+        for &k in &lw.units {
             let k = k as usize;
             anyhow::ensure!(k < out, "layer {l}: unit {k} >= out_dim {out}");
             anyhow::ensure!(!sel[k], "layer {l}: duplicate unit {k}");
             sel[k] = true;
-            let vals = &lw.values[ui * chunk..(ui + 1) * chunk];
-            match layer.kind {
-                LayerKind::Conv { .. } => {
-                    wdat[k * group..(k + 1) * group].copy_from_slice(&vals[..group]);
-                }
-                LayerKind::Fc => {
-                    for j in 0..layer.in_dim {
-                        wdat[j * out + k] = vals[j];
-                    }
-                }
-            }
-            bdat[k] = vals[group];
         }
+        scatter_unit_values(layer, &mut wdat, &mut bdat, &lw.units, &lw.values);
         let wshape = match layer.kind {
             LayerKind::Conv { kernel, .. } => vec![out, layer.in_dim, kernel, kernel],
             LayerKind::Fc => vec![layer.in_dim, out],
@@ -674,6 +722,11 @@ mod tests {
                 }
                 if up.payload_bytes() != m.payload_bytes(&spec) {
                     return Err("payload accounting mismatch".into());
+                }
+                // the in-memory size covers values + unit ids exactly
+                let units: usize = up.layers.iter().map(|l| l.units.len()).sum();
+                if up.mem_bytes() != up.payload_bytes() + units * 4 {
+                    return Err("mem_bytes accounting mismatch".into());
                 }
             }
             Ok(())

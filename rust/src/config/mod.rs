@@ -145,6 +145,30 @@ impl ExpConfig {
         }
     }
 
+    /// Large-fleet preset (DESIGN.md §Fleet-Virtualization): the
+    /// virtualized-client-state configuration the fleet benches and the
+    /// CI fleet smoke run. Fleet size is the `n_clients` knob — override
+    /// it (`--n_clients 50000`) to sweep scale. Defaults keep a round
+    /// CPU-tractable at 10k–50k clients: a width-25% MLP, one local step
+    /// on a small batch, tiny per-client shards, and the testbed's `h=1`
+    /// (full broadcast every round — every client collapses to `Synced`,
+    /// so per-client state stays at zero between rounds).
+    pub fn fleet() -> ExpConfig {
+        ExpConfig {
+            n_clients: 10_000,
+            rounds: 2,
+            local_steps: 1,
+            batch: 8,
+            width_pct: 25,
+            train_per_client: 8,
+            test_n: 128,
+            h: 1,
+            eval_every: 2,
+            workers: 0,
+            ..ExpConfig::default()
+        }
+    }
+
     /// Table 5 geo-testbed preset: 10 clients, h=1, CNN2/CIFAR10.
     pub fn testbed() -> ExpConfig {
         ExpConfig {
@@ -167,7 +191,8 @@ impl ExpConfig {
             "table4" | "paper" => Ok(Self::table4()),
             "smoke" => Ok(Self::smoke()),
             "testbed" => Ok(Self::testbed()),
-            _ => anyhow::bail!("unknown preset {name:?} (table4|smoke|testbed)"),
+            "fleet" => Ok(Self::fleet()),
+            _ => anyhow::bail!("unknown preset {name:?} (table4|smoke|testbed|fleet)"),
         }
     }
 
@@ -440,6 +465,20 @@ mod tests {
         assert_eq!(c.model, "cnn2");
         assert_eq!(c.dataset, "cifar10");
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn fleet_preset_is_large_and_broadcast_heavy() {
+        let c = ExpConfig::preset("fleet").unwrap();
+        assert_eq!(c.n_clients, 10_000);
+        assert_eq!(c.h, 1, "fleet preset must broadcast every round");
+        assert_eq!(c.width_pct, 25);
+        c.validate().unwrap();
+        // the fleet size knob is n_clients
+        let mut big = ExpConfig::fleet();
+        big.set("n_clients", "50000").unwrap();
+        assert_eq!(big.n_clients, 50_000);
+        big.validate().unwrap();
     }
 
     #[test]

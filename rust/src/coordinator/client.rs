@@ -1,42 +1,53 @@
 //! Per-client state and the local-training step (the client side of
 //! Algorithm 1 steps 1–3 and 7).
+//!
+//! Client model parameters are **virtualized** ([`ClientParams`],
+//! DESIGN.md §Fleet-Virtualization): a client stores a reference to a
+//! shared global snapshot plus, when diverged, the sparse residual of the
+//! channels its Eq. 5 downloads never overwrote — never a dense replica.
+//! The dense model exists only transiently, inside the round engine's
+//! worker stage ([`ClientParams::materialize`] → train → drop).
 
 use crate::codec::WireUpload;
-use crate::data::FedDataset;
+use crate::data::{ClientShard, FedDataset};
 use crate::model::{ModelId, ModelSpec};
 use crate::runtime::Runtime;
-use crate::selection::ChannelMask;
 use crate::simnet::DeviceProfile;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
+use super::state::{ClientParams, SparseResidual};
+
 /// A dispatched upload that has not yet been folded by the server
-/// (semi-asynchronous mode): the channel mask the client actually sent
-/// plus dispatch bookkeeping. The trained parameters stay in
-/// [`ClientState::params`] — nothing mutates them while the upload is in
-/// flight, because the client is busy until its arrival event fires.
+/// (semi-asynchronous mode): the encoded upload in flight plus the
+/// residual the client must keep once its Eq. 5 download arrives. The
+/// client's [`ClientParams`] stays at its pre-dispatch base while the
+/// upload is in flight — the client is busy until its arrival event
+/// fires, so nothing materializes it in between.
 #[derive(Clone, Debug)]
 pub struct PendingUpdate {
-    /// The upload mask `M_n` selected at dispatch (kept for the Eq. 5
-    /// sparse download when the upload arrives).
-    pub mask: ChannelMask,
     /// The encoded upload in flight; `wire.wire_len()` — the realized
     /// encoded bytes, not the full model and not the `upload_bytes`
     /// estimate — is what the upload link was charged for, and
     /// `Aggregator::absorb_wire` folds it without densifying.
     pub wire: WireUpload,
+    /// The complement-of-mask residual selected at dispatch: the state
+    /// the client keeps after the arrival-time Eq. 5 merge (`None` when
+    /// the dispatch was a full broadcast or the mask kept every unit —
+    /// the client then collapses to `Synced`).
+    pub residual: Option<SparseResidual>,
     /// Mean training loss reported with the upload (folded into the
     /// server's round loss when the upload arrives). The dispatch round
     /// lives on the matching `simnet::ArrivalEvent`.
     pub loss: f64,
     /// Masked value payload bytes (`mask.payload_bytes`) for budget
-    /// accounting.
+    /// accounting — also the Eq. 5 downlink charge of a sparse dispatch.
     pub uploaded: usize,
-    /// Whether the *dispatch* round was a full-broadcast round. The
-    /// arrival-time download merge honors this flag so the client
-    /// receives exactly the download its link was charged for at
-    /// dispatch (full model vs mask-sparse), even when it arrives in a
-    /// round with the opposite broadcast phase.
+    /// Whether the *dispatch* charged a full-model download (broadcast
+    /// round, or the client's first dispatch ever). The arrival-time
+    /// merge honors this flag so the client receives exactly the
+    /// download its link was charged for (full model vs mask-sparse),
+    /// even when it arrives in a round with the opposite phase.
     pub full_broadcast: bool,
 }
 
@@ -45,16 +56,21 @@ pub struct ClientState {
     pub id: usize,
     pub model_id: ModelId,
     pub spec: ModelSpec,
-    /// Current local model W_n^t (client shapes).
-    pub params: Vec<Tensor>,
-    /// Indices into the shared train set.
-    pub data: Vec<usize>,
+    /// Virtualized local model W_n^t: snapshot reference + sparse
+    /// residual (see `coordinator::state`).
+    pub params: ClientParams,
+    /// This client's view of the shared train set (materialized indices
+    /// or a lazy strided slice of the IID permutation).
+    pub data: ClientShard,
     pub profile: DeviceProfile,
     /// Σ_c min(C·dis_n^c, 1) — the data-distribution contribution term.
     pub dis_score: f64,
     /// Last reported training loss (drives re_n and Oort utility).
     pub last_loss: f64,
-    /// Rounds this client has participated in (exploration accounting).
+    /// Rounds this client has participated in (exploration accounting;
+    /// also flags the first dispatch, which always downloads the full
+    /// model — a client cannot merge a mask-sparse slice before it has
+    /// ever held the global model).
     pub participations: usize,
     pub rng: Rng,
     /// Name of this client's train artifact.
@@ -81,8 +97,9 @@ impl ClientState {
         local_steps * batch
     }
 
-    /// Run `local_steps` SGD steps on this client's shard; returns the
-    /// mean loss. `scratch_x/y` are reusable batch buffers.
+    /// Run `local_steps` SGD steps on this client's shard, mutating the
+    /// materialized `params` in place; returns the mean loss.
+    /// `scratch_x/y` are reusable batch buffers.
     #[allow(clippy::too_many_arguments)]
     pub fn train_local(
         &mut self,
@@ -91,6 +108,7 @@ impl ClientState {
         local_steps: usize,
         batch: usize,
         lr: f32,
+        params: &mut Vec<Tensor>,
         scratch_x: &mut Vec<f32>,
         scratch_y: &mut Vec<i32>,
     ) -> anyhow::Result<f64> {
@@ -105,16 +123,11 @@ impl ClientState {
                 idxs.clear();
                 for _ in 0..steps * batch {
                     let j = self.rng.below(self.data.len());
-                    idxs.push(self.data[j]);
+                    idxs.push(self.data.get(j));
                 }
                 ds.gather_train(&idxs, scratch_x, scratch_y);
-                let loss = runtime.train_scan(
-                    &scan_name,
-                    &mut self.params,
-                    scratch_x,
-                    scratch_y,
-                    lr,
-                )?;
+                let loss =
+                    runtime.train_scan(&scan_name, params, scratch_x, scratch_y, lr)?;
                 loss_sum += loss as f64 * steps as f64;
                 losses += steps;
                 remaining -= steps;
@@ -124,16 +137,11 @@ impl ClientState {
             idxs.clear();
             for _ in 0..batch {
                 let j = self.rng.below(self.data.len());
-                idxs.push(self.data[j]);
+                idxs.push(self.data.get(j));
             }
             ds.gather_train(&idxs, scratch_x, scratch_y);
-            let loss = runtime.train_step(
-                &self.train_artifact,
-                &mut self.params,
-                scratch_x,
-                scratch_y,
-                lr,
-            )?;
+            let loss =
+                runtime.train_step(&self.train_artifact, params, scratch_x, scratch_y, lr)?;
             loss_sum += loss as f64;
             losses += 1;
         }

@@ -5,30 +5,48 @@
 //! global model; [`FedRun::run`] executes the configured number of rounds
 //! and returns a [`RunResult`] with the full round/eval history.
 //!
+//! # Client-state virtualization (DESIGN.md §Fleet-Virtualization)
+//!
+//! FedDD has *no partial participation* — every client carries state for
+//! the whole run — so the fleet's memory footprint, not the round math,
+//! is what caps simulated scale. The engine therefore never stores a
+//! dense model per client. Each [`ClientState`] holds a
+//! [`ClientParams`]: an `Arc` reference into the [`SnapshotRing`] of
+//! end-of-round global snapshots plus, when diverged, the sparse
+//! residual of the channels its Eq. 5 downloads never overwrote. Dense
+//! parameters exist only inside the per-client worker stage
+//! (`materialize` → train → encode → drop), so peak dense memory is
+//! O(micro-batch · model), not O(clients · model), and the persistent
+//! fleet state is O(Σ_n residual_n + live snapshots) — zero per client
+//! right after a full broadcast ([`FedRun::client_state_bytes`]).
+//!
 //! # Parallel round execution
 //!
 //! FedDD's round body is embarrassingly parallel across clients: local
 //! training, Algorithm-2 mask selection and the Eq. 4 masked contribution
 //! are all per-client. The engine fans these phases out over
-//! `cfg.workers` threads ([`ThreadPool::scoped_map`]) in two stages:
+//! `cfg.workers` threads ([`ThreadPool::scoped_map`]):
 //!
 //! 1. **per-client stage** — each participant (a disjoint `&mut
-//!    ClientState`) trains, selects its upload mask with its own RNG
-//!    stream, and encodes the masked values into a `WireUpload` (the
-//!    bytes the uplink is charged for); outputs are collected in
-//!    ascending client order.
+//!    ClientState`) materializes its dense model, trains, selects its
+//!    upload mask with its own RNG stream, encodes the masked values
+//!    into a `WireUpload` (the bytes the uplink is charged for) and
+//!    gathers its post-round residual; outputs are collected in
+//!    ascending client order, micro-batch by micro-batch.
 //! 2. **sharded aggregation** — participants are chunked into at most
 //!    [`AGG_SHARDS`] contiguous shards; each shard folds its clients'
 //!    wire uploads (in order) into a private [`Aggregator`] via the
-//!    zero-copy `absorb_wire`, and the shard partials are merged
-//!    pairwise in fixed shard order ([`Aggregator::merge`]) before
-//!    `finalize`.
+//!    zero-copy `absorb_wire` — a micro-batch's uploads fold as soon as
+//!    they are produced, so they never accumulate fleet-wide — and the
+//!    shard partials are merged pairwise in fixed shard order
+//!    ([`Aggregator::merge`]) before `finalize`.
 //!
 //! Because the shard partition depends only on the participant list —
-//! never on the worker count or thread schedule — and every f32/f64
-//! accumulation happens in a fixed order, a round is **bitwise identical
-//! for every `workers` value** (asserted by `rust/tests/parallel_round.rs`
-//! and benchmarked by `rust/benches/round.rs`).
+//! never on the worker count, the micro-batch size or the thread
+//! schedule — and every f32/f64 accumulation happens in a fixed order, a
+//! round is **bitwise identical for every `workers` value** (asserted by
+//! `rust/tests/parallel_round.rs` and `rust/tests/fleet_virtualization.rs`,
+//! benchmarked by `rust/benches/round.rs` and `rust/benches/fleet.rs`).
 //!
 //! # Round modes (`cfg.round_mode`)
 //!
@@ -51,7 +69,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::aggregation::{sparse_merge, staleness_weight, AggBackend, Aggregator};
+use crate::aggregation::{staleness_weight, AggBackend, Aggregator};
 use crate::baselines;
 use crate::codec::{encode_upload_with, CodecMode, EncodingMix, WireUpload};
 use crate::config::ExpConfig;
@@ -60,40 +78,48 @@ use crate::metrics::{EvalAccumulator, EvalRecord, RoundRecord, RunResult};
 use crate::model::{coverage_rates, extract_params, ModelId, ModelSpec};
 use crate::runtime::Runtime;
 use crate::selection::{select_mask, ChannelMask, Policy};
-use crate::simnet::{ArrivalEvent, ClientClocks, EventQueue, Fleet, RoundTiming, VirtualClock};
+use crate::simnet::{
+    downlink_bytes, ArrivalEvent, ClientClocks, EventQueue, Fleet, RoundTiming, VirtualClock,
+};
 use crate::solver::{allocate_fast, AllocInput, AllocParams};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
 use super::client::{ClientState, PendingUpdate};
+use super::state::{ClientParams, SnapshotRing, SparseResidual};
 
 /// Upper bound on aggregation shards per round. Fixed (worker-independent)
 /// so the merge tree — and therefore the f32 summation order — is a pure
 /// function of the participant list.
 pub const AGG_SHARDS: usize = 8;
 
-/// Per-participant output of the parallel stage (client order). Holds the
-/// compact channel mask (kept for the Eq. 5 sparse download) plus the
-/// encoded wire upload — the bytes the uplink is actually charged for and
-/// the payload `absorb_wire` folds without any dense expansion.
-///
-/// Deliberate trade-off: a round keeps every participant's encoded
-/// payload alive at once (O(participants · masked bytes) — these *are*
-/// the in-flight uploads the round models, they feed both the timing
-/// path and the fold, and semi-async must buffer them across rounds
-/// anyway), in exchange for never materializing model-sized elementwise
-/// masks or dense contribution buffers in the aggregation stage.
+/// Per-participant output of the parallel stage (client order): the
+/// encoded wire upload (the bytes the uplink is charged for, folded by
+/// `absorb_wire` without any dense expansion), the Eq. 7–12 timing, and
+/// the post-round state handoff (the complement-of-mask residual). Dense
+/// parameters never leave the worker — a micro-batch's outputs are folded
+/// and dropped before the next micro-batch trains, so neither dense
+/// models nor encoded uploads ever accumulate fleet-wide.
 struct ClientRoundOutput {
     /// Client index.
     slot: usize,
     loss: f64,
     /// Masked value payload bytes (`ChannelMask::payload_bytes`) — the
-    /// budget-accounting column.
+    /// budget-accounting column and the Eq. 5 sparse-download charge.
     uploaded: usize,
-    mask: ChannelMask,
+    /// Aggregation weight m_n (the client's sample count).
+    m_n: f32,
     /// The encoded upload; `wire.wire_len()` is the realized wire bytes.
     wire: WireUpload,
+    /// The residual this client keeps once its download merges (`None` ⇒
+    /// collapse to `Synced`).
+    residual: Option<SparseResidual>,
+    /// Whether this client's download was charged as a full broadcast
+    /// (the round's phase, or forced for a first-ever dispatch).
+    full_broadcast: bool,
+    /// Eq. 7–12 latencies of this dispatch.
+    timing: RoundTiming,
 }
 
 /// Outcome of a single round (for tests / tracing).
@@ -120,6 +146,10 @@ pub struct RoundOutcome {
     pub stragglers: usize,
     /// Mean staleness (in rounds) of the folded uploads (0 in sync mode).
     pub mean_staleness: f64,
+    /// Fleet state footprint at the end of the round: per-client
+    /// residual bytes + live shared snapshots
+    /// ([`FedRun::client_state_bytes`]).
+    pub client_state_bytes: usize,
 }
 
 pub struct FedRun {
@@ -135,14 +165,15 @@ pub struct FedRun {
     pub eval_artifact: String,
     rng: Rng,
     round: usize,
-    /// Masks used in the current round (for the Eq. 5 sparse download).
-    last_masks: Vec<Option<ChannelMask>>,
     policy: Policy,
     backend: AggBackend,
     /// Wire-codec layout policy (`cfg.codec`): auto-pick or forced.
     codec: CodecMode,
     /// Worker pool for the per-client round phases (`cfg.workers`).
     pool: ThreadPool,
+    /// Published end-of-round snapshots (weak accounting; lifetime is
+    /// owned by the client states' `Arc`s).
+    snapshots: SnapshotRing,
     /// Pending arrival events (semi-async mode; empty in sync mode).
     events: EventQueue,
     /// Per-client busy-until clocks (semi-async mode).
@@ -165,7 +196,8 @@ impl FedRun {
         let test_n = (cfg.test_n / 64).max(1) * 64; // eval batch alignment
         let mut data_rng = rng.split(1);
         let ds = synth.generate(cfg.train_per_client * cfg.n_clients, test_n, &mut data_rng);
-        // Partition.
+        // Partition (the IID deal stays lazy: one shared permutation,
+        // per-client strided views — no per-client index heap at scale).
         let kind = PartitionKind::by_name(&cfg.partition)?;
         let mut part_rng = rng.split(2);
         let part = Partition::build(kind, &ds, cfg.n_clients, &mut part_rng);
@@ -192,13 +224,16 @@ impl FedRun {
         let global_spec = ModelSpec::get(&global_name, cfg.width_pct as f64 / 100.0)?;
         let mut init_rng = rng.split(4);
         let global_params = global_spec.init_params(&mut init_rng);
+        // Round-0 snapshot: every client starts `Synced` against the
+        // initial global model — zero per-client state.
+        let mut snapshots = SnapshotRing::new();
+        let snap0 = snapshots.publish(0, &global_params);
         // Clients: local model = global restricted to their sub-model.
         let mut clients = Vec::with_capacity(cfg.n_clients);
         for n in 0..cfg.n_clients {
             let name = cfg.client_model_name(n);
             let model_id = ModelId::new(&name, cfg.width_pct);
             let spec = ModelSpec::get(&name, cfg.width_pct as f64 / 100.0)?;
-            let params = extract_params(&global_params, &spec);
             let train_artifact = format!("{}_train", model_id.tag());
             runtime.manifest().get(&train_artifact)?; // fail fast
             let scan_name = format!("{}_train_scan", model_id.tag());
@@ -210,8 +245,8 @@ impl FedRun {
             clients.push(ClientState {
                 id: n,
                 spec,
-                params,
-                data: part.client_indices[n].clone(),
+                params: ClientParams::synced(snap0.clone()),
+                data: part.shard(n),
                 profile: fleet.profiles[n].clone(),
                 dis_score: dis_scores[n],
                 last_loss: 1.0,
@@ -245,11 +280,11 @@ impl FedRun {
             eval_artifact,
             rng,
             round: 0,
-            last_masks: vec![None; n],
             policy,
             backend,
             codec,
             pool,
+            snapshots,
             events: EventQueue::new(),
             client_clocks: ClientClocks::new(n),
             pending: vec![None; n],
@@ -260,6 +295,48 @@ impl FedRun {
     pub fn budget_bytes(&self) -> usize {
         let total: usize = self.clients.iter().map(|c| c.u_bytes()).sum();
         (self.cfg.a_server * total as f64).round() as usize
+    }
+
+    /// Fleet state footprint right now: Σ per-client residual bytes,
+    /// plus the live shared snapshots (each counted once, however many
+    /// clients reference it), plus any in-flight `PendingUpdate`s
+    /// (semi-async: buffered encoded uploads + their residuals; always 0
+    /// in sync mode, where nothing survives the round). Right after a
+    /// full broadcast with nothing in flight this is exactly the
+    /// snapshot bytes; between broadcasts it grows by each client's
+    /// complement-of-mask residual — always strictly below the dense
+    /// fleet's `clients · model` whenever any dropout was allocated.
+    pub fn client_state_bytes(&self) -> usize {
+        self.client_residual_bytes() + self.snapshot_bytes() + self.pending_bytes()
+    }
+
+    /// The per-client (residual-only) part of [`Self::client_state_bytes`].
+    pub fn client_residual_bytes(&self) -> usize {
+        self.clients.iter().map(|c| c.params.state_bytes()).sum()
+    }
+
+    /// Bytes buffered for dispatched-but-unfolded uploads (semi-async
+    /// in-flight state): the decoded upload's in-memory size
+    /// (`WireUpload::mem_bytes`, not the smaller serialized `wire_len`)
+    /// plus the residual each upload carries for its arrival-time merge.
+    pub fn pending_bytes(&self) -> usize {
+        self.pending
+            .iter()
+            .flatten()
+            .map(|pu| {
+                pu.wire.mem_bytes() + pu.residual.as_ref().map_or(0, |r| r.heap_bytes())
+            })
+            .sum()
+    }
+
+    /// Bytes of the snapshots still referenced by some client.
+    pub fn snapshot_bytes(&self) -> usize {
+        self.snapshots.live_bytes()
+    }
+
+    /// Rounds whose snapshot is still alive (ring observability).
+    pub fn live_snapshot_rounds(&self) -> Vec<usize> {
+        self.snapshots.live_rounds()
     }
 
     /// Evaluate the global model on the test set.
@@ -321,41 +398,63 @@ impl FedRun {
         }
     }
 
+    /// Micro-batch size of the per-client worker stage: enough items to
+    /// keep every worker busy, small enough that the transient dense
+    /// models and encoded uploads stay O(micro), never O(fleet). Numerics
+    /// are independent of this value (each client is a pure function of
+    /// its own state, and all downstream accumulations run in ascending
+    /// client order regardless of the batch partition).
+    fn micro_batch(&self) -> usize {
+        (self.pool.workers() * 4).max(32)
+    }
+
     /// Local training + mask selection for the given clients, fanned over
     /// the worker pool; outputs come back in ascending client order.
     ///
     /// Every listed client is an independent work item: it owns a disjoint
-    /// `&mut ClientState` (its params, RNG stream, loss bookkeeping),
-    /// trains against the shared thread-safe runtime, then selects its
-    /// upload mask. `scoped_map` returns outputs in input (= ascending
-    /// client) order, so downstream f64 accumulations run in the same
-    /// order for every worker count.
+    /// `&mut ClientState` (its virtualized params, RNG stream, loss
+    /// bookkeeping), materializes its dense model (FedDD: snapshot +
+    /// residual; baselines: re-extracted from the current global), trains
+    /// against the shared thread-safe runtime, selects its upload mask,
+    /// encodes the wire upload, gathers its post-round residual and
+    /// computes its Eq. 7–12 timing. `scoped_map` returns outputs in
+    /// input (= ascending client) order, so downstream f64 accumulations
+    /// run in the same order for every worker count.
     fn train_and_select(
         &mut self,
         t: usize,
-        participants: &[usize],
+        subset: &[usize],
         dropout: &[f64],
+        round_full_broadcast: bool,
     ) -> anyhow::Result<Vec<ClientRoundOutput>> {
-        let cfg = self.cfg.clone();
-        let is_feddd = cfg.scheme == "feddd";
-        let hetero = cfg.is_hetero();
+        let cfg_ref = &self.cfg;
+        let is_feddd = cfg_ref.scheme == "feddd";
+        let hetero = cfg_ref.is_hetero();
         let round_label = t as u64;
         let rt = &self.runtime;
         let ds = &self.ds;
         let cr = &self.cr;
+        let gp = &self.global_params;
         let policy = self.policy;
         let codec = self.codec;
-        let cfg_ref = &cfg;
-        let mut in_round = vec![false; self.clients.len()];
-        for &n in participants {
-            in_round[n] = true;
+        // Gather the disjoint `&mut ClientState` items by walking the
+        // fleet slice once over the (ascending) subset — O(subset), not
+        // O(fleet): with micro-batching this runs many times per round,
+        // so a fleet-wide scan per call would be O(fleet²/micro).
+        let mut items: Vec<(usize, &mut ClientState)> = Vec::with_capacity(subset.len());
+        let mut rest: &mut [ClientState] = self.clients.as_mut_slice();
+        let mut base = 0usize;
+        for &n in subset {
+            // Release-mode assert: the walk's `n - base` would otherwise
+            // wrap on an unsorted subset and die far from the cause.
+            assert!(n >= base, "subset must be strictly ascending (got {n} after {base})");
+            let taken = std::mem::take(&mut rest);
+            let (_, tail) = taken.split_at_mut(n - base);
+            let (c, after) = tail.split_first_mut().expect("subset id out of range");
+            items.push((n, c));
+            rest = after;
+            base = n + 1;
         }
-        let items: Vec<(usize, &mut ClientState)> = self
-            .clients
-            .iter_mut()
-            .enumerate()
-            .filter(|(n, _)| in_round[*n])
-            .collect();
         self.pool.scoped_try_map(
             items,
             |(n, c): (usize, &mut ClientState)| -> anyhow::Result<ClientRoundOutput> {
@@ -365,13 +464,25 @@ impl FedRun {
                 // (scoped_map spawns per call) — noted follow-up.
                 let mut scratch_x = Vec::new();
                 let mut scratch_y = Vec::new();
-                let before = if is_feddd { Some(c.params.clone()) } else { None };
+                // A first-ever dispatch always downloads the full model:
+                // the client has never held the global, so a mask-sparse
+                // slice would merge into nothing.
+                let full_bc = round_full_broadcast || c.participations == 0;
+                // Materialize the dense model for this round only (the
+                // baselines re-sync to the current global at dispatch).
+                let mut params = if is_feddd {
+                    c.params.materialize(&c.spec)
+                } else {
+                    extract_params(gp, &c.spec)
+                };
+                let before = if is_feddd { Some(params.clone()) } else { None };
                 let loss = c.train_local(
                     rt,
                     ds,
                     cfg_ref.local_steps,
                     cfg_ref.batch,
                     cfg_ref.lr,
+                    &mut params,
                     &mut scratch_x,
                     &mut scratch_y,
                 )?;
@@ -382,7 +493,7 @@ impl FedRun {
                             policy,
                             &c.spec,
                             w_before,
-                            &c.params,
+                            &params,
                             if hetero { Some(cr.as_slice()) } else { None },
                             dropout[n],
                             &mut sel_rng,
@@ -393,38 +504,58 @@ impl FedRun {
                 let uploaded = mask.payload_bytes(&c.spec);
                 // Client-side encode: the bytes this upload really puts
                 // on the wire (debug-asserted <= the upload_bytes bound).
-                let wire = encode_upload_with(&mask, &c.params, &c.spec, codec);
-                Ok(ClientRoundOutput { slot: n, loss, uploaded, mask, wire })
+                let wire = encode_upload_with(&mask, &params, &c.spec, codec);
+                // Post-merge state handoff: nothing after a full
+                // broadcast; else the complement-of-mask residual (the
+                // channels the Eq. 5 download will not overwrite).
+                let residual = if !is_feddd || full_bc {
+                    None
+                } else {
+                    SparseResidual::complement_of(&mask, &params, &c.spec)
+                };
+                // Eq. 7–12: the uplink is charged the *realized* encoded
+                // bytes; the downlink the full model on broadcast, else
+                // the Eq. 5 masked values only — the mask is the
+                // client's own upload echoed back, so its index/framing
+                // bytes are never re-billed (DESIGN.md §6).
+                let down = downlink_bytes(full_bc, c.u_bytes(), uploaded) as f64;
+                let timing = RoundTiming {
+                    t_down: c.profile.t_down(down),
+                    t_cmp: c
+                        .profile
+                        .t_cmp(c.samples_per_round(cfg_ref.local_steps, cfg_ref.batch)),
+                    t_up: c.profile.t_up(wire.wire_len() as f64),
+                };
+                Ok(ClientRoundOutput {
+                    slot: n,
+                    loss,
+                    uploaded,
+                    m_n: c.m_n() as f32,
+                    wire,
+                    residual,
+                    full_broadcast: full_bc,
+                    timing,
+                })
             },
         )
     }
 
-    /// Full-model broadcast round? (Every h-th round for FedDD; the
-    /// baselines always download the full model.)
+    /// Full-model broadcast round? Round 1 always broadcasts — no client
+    /// has ever received the global model, so there is nothing for a
+    /// mask-sparse download to merge into — then every h-th round for
+    /// FedDD; the baselines always download the full model.
     fn is_full_broadcast(&self, t: usize) -> bool {
-        t % self.cfg.h == 0 || self.cfg.scheme != "feddd"
+        t <= 1 || t % self.cfg.h == 0 || self.cfg.scheme != "feddd"
     }
 
-    /// Eq. 7–12 timing for one dispatched client: the upload link is
-    /// charged for the *realized* encoded bytes (`WireUpload::wire_len`,
-    /// never the `upload_bytes` estimate and never a full-model
-    /// fallback); the download is the full model on broadcast rounds,
-    /// else the mask-sparse slice `W^t ⊙ M_n^t` at the same wire size.
-    fn client_round_timing(&self, o: &ClientRoundOutput, full_broadcast: bool) -> RoundTiming {
-        let c = &self.clients[o.slot];
-        let up_bytes = o.wire.wire_len() as f64;
-        let down_bytes = if full_broadcast {
-            c.u_bytes() as f64
-        } else {
-            up_bytes
-        };
-        RoundTiming {
-            t_down: c.profile.t_down(down_bytes),
-            t_cmp: c
-                .profile
-                .t_cmp(c.samples_per_round(self.cfg.local_steps, self.cfg.batch)),
-            t_up: c.profile.t_up(up_bytes),
-        }
+    /// Shard length of the Eq. 4 fold partition over `n_items` ordered
+    /// items: ≤ [`AGG_SHARDS`] contiguous chunks. The single source of
+    /// truth for both round modes — the sync fold and the semi-async
+    /// fresh-arrival fold must chunk identically or the cross-mode
+    /// bitwise-equivalence claim breaks.
+    fn shard_len(n_items: usize) -> usize {
+        debug_assert!(n_items > 0, "shard partition of zero items");
+        n_items.div_ceil(AGG_SHARDS.min(n_items))
     }
 
     /// Sharded Eq. 4 accumulation over `(client, wire upload)` pairs in
@@ -444,7 +575,7 @@ impl FedRun {
         let global_spec = &self.global_spec;
         let backend = self.backend;
         let clients = &self.clients;
-        let shard_len = items.len().div_ceil(AGG_SHARDS.min(items.len()));
+        let shard_len = Self::shard_len(items.len());
         let shards: Vec<&[(usize, &WireUpload)]> = items.chunks(shard_len).collect();
         let partials = self.pool.scoped_try_map(
             shards,
@@ -460,6 +591,16 @@ impl FedRun {
     }
 
     /// Execute one synchronous round (Algorithm 1 body).
+    ///
+    /// The shard partition over the participant list is the same pure
+    /// function as ever (≤ [`AGG_SHARDS`] contiguous chunks, folded in
+    /// ascending client order, merged pairwise), but the round now trains
+    /// **micro-batch by micro-batch over the whole participant list**:
+    /// a full-width batch of clients trains in parallel, each wire upload
+    /// is absorbed into its position's shard aggregator and dropped, and
+    /// only then does the next batch materialize. Peak transient memory
+    /// is O(micro · model) while the f32/f64 summation order — hence the
+    /// result, bit for bit — is unchanged.
     fn step_round_sync(&mut self) -> anyhow::Result<RoundOutcome> {
         self.round += 1;
         let t = self.round;
@@ -468,60 +609,64 @@ impl FedRun {
 
         // ---- 0. participants + dropout rates ----
         let (participants, dropout) = self.round_participants(t)?;
+        let n_parts = participants.len();
 
-        // ---- 1. download phase (server -> clients) ----
-        // FedDD round t>1, t-1 not broadcast: clients already merged the
-        // sparse download at the end of the previous round. Baselines and
-        // broadcast rounds: participants sync to the full global model.
-        for &n in &participants {
-            if cfg.scheme != "feddd" {
-                let c = &mut self.clients[n];
-                c.params = extract_params(&self.global_params, &c.spec);
-            }
-        }
-
-        // ---- 2. local training + selection (parallel per client) ----
-        let outs = self.train_and_select(t, &participants, &dropout)?;
+        // ---- 1+2+3. train / select / fold, sharded + micro-batched ----
         let mut loss_sum = 0.0;
         let mut uploaded = 0usize;
         let mut wire_bytes = 0usize;
         let mut encodings = EncodingMix::default();
-        for o in &outs {
-            loss_sum += o.loss;
-            uploaded += o.uploaded;
-            wire_bytes += o.wire.wire_len();
-            encodings.merge(o.wire.mix());
-        }
-        let mean_loss = loss_sum / outs.len().max(1) as f64;
-
-        // ---- 3. sharded aggregation (Eq. 4, zero-copy wire folds) ----
-        let agg = {
-            let items: Vec<(usize, &WireUpload)> =
-                outs.iter().map(|o| (o.slot, &o.wire)).collect();
-            self.shard_aggregate(&items)?
-        };
-        self.global_params = agg.finalize(&self.global_params, Some(&self.runtime))?;
-
-        // ---- 4. virtual-time accounting (Eq. 7–12) ----
-        let timings: Vec<RoundTiming> = outs
-            .iter()
-            .map(|o| self.client_round_timing(o, full_broadcast))
-            .collect();
-        for o in outs {
-            self.last_masks[o.slot] = Some(o.mask);
-        }
-
-        // ---- 5. download merge (Eq. 5 / Eq. 6) ----
-        if cfg.scheme == "feddd" {
-            for &n in &participants {
-                let c = &mut self.clients[n];
-                if full_broadcast {
-                    c.params = extract_params(&self.global_params, &c.spec);
-                } else if let Some(mask) = &self.last_masks[n] {
-                    let slice = extract_params(&self.global_params, &c.spec);
-                    let elems = mask.to_elementwise(&c.spec);
-                    sparse_merge(&mut c.params, &slice, &elems);
+        let mut timings: Vec<RoundTiming> = Vec::with_capacity(n_parts);
+        let mut rebases: Vec<(usize, Option<SparseResidual>)> = Vec::with_capacity(n_parts);
+        // Micro-batches span the *whole* participant list (full training
+        // fan-out width regardless of the shard partition); each output
+        // is routed to its shard aggregator by participant position, so
+        // every shard still receives exactly its contiguous range in
+        // ascending order — the same fold [`Self::shard_len`] prescribes
+        // for the semi-async fresh path.
+        let shards: Vec<Aggregator> = if n_parts == 0 {
+            vec![Aggregator::new(&self.global_spec, self.backend)]
+        } else {
+            let shard_len = Self::shard_len(n_parts);
+            let micro = self.micro_batch();
+            let mut shards: Vec<Aggregator> = (0..n_parts.div_ceil(shard_len))
+                .map(|_| Aggregator::new(&self.global_spec, self.backend))
+                .collect();
+            let mut pos = 0usize; // position in participant order
+            for micro_ids in participants.chunks(micro) {
+                let outs = self.train_and_select(t, micro_ids, &dropout, full_broadcast)?;
+                for o in outs {
+                    loss_sum += o.loss;
+                    uploaded += o.uploaded;
+                    wire_bytes += o.wire.wire_len();
+                    encodings.merge(o.wire.mix());
+                    shards[pos / shard_len].absorb_wire(&o.wire, o.m_n)?;
+                    pos += 1;
+                    timings.push(o.timing);
+                    rebases.push((o.slot, o.residual));
                 }
+            }
+            shards
+        };
+        let agg = Aggregator::merge(shards)?;
+        self.global_params = agg.finalize(&self.global_params, Some(&self.runtime))?;
+        let mean_loss = loss_sum / n_parts.max(1) as f64;
+
+        // ---- 4. download merge (Eq. 5 / Eq. 6) as a state rebase ----
+        // Publishing the end-of-round snapshot and handing every
+        // participant a reference *is* the download: a broadcast client
+        // collapses to `Synced`, a sparse client keeps only its residual.
+        // The previous round's snapshot dies with its last reference.
+        // Baselines never rebase at all — they re-extract from the live
+        // global at every dispatch and never read their virtualized
+        // params, so the whole fleet keeps sharing the round-0 snapshot
+        // (rebasing them would pin one snapshot per distinct
+        // last-participation round).
+        if cfg.scheme == "feddd" {
+            let snap = self.snapshots.publish(t, &self.global_params);
+            for (slot, residual) in rebases {
+                self.clients[slot].params =
+                    ClientParams::after_download(snap.clone(), residual);
             }
         }
 
@@ -542,9 +687,10 @@ impl FedRun {
             uploaded_bytes: uploaded,
             wire_bytes,
             encodings,
-            participants: participants.len(),
+            participants: n_parts,
             stragglers: 0,
             mean_staleness: 0.0,
+            client_state_bytes: self.client_state_bytes(),
         })
     }
 
@@ -567,39 +713,38 @@ impl FedRun {
         // ---- 0. participants + dropout over the whole fleet ----
         let (participants, dropout) = self.round_participants(t)?;
 
-        // ---- 1. dispatch idle participants ----
+        // ---- 1. dispatch idle participants (micro-batched) ----
         // Clients still uploading a previous round's update are skipped —
-        // their own clocks run past the server's round boundary.
+        // their own clocks run past the server's round boundary. A
+        // dispatched client's state stays at its pre-dispatch base until
+        // its upload arrives; the residual it will keep travels with the
+        // pending update.
         let dispatch: Vec<usize> = participants
             .iter()
             .copied()
             .filter(|&n| !self.client_clocks.is_busy(n, round_start))
             .collect();
-        for &n in &dispatch {
-            if cfg.scheme != "feddd" {
-                let c = &mut self.clients[n];
-                c.params = extract_params(&self.global_params, &c.spec);
-            }
-        }
-        let outs = self.train_and_select(t, &dispatch, &dropout)?;
         // Allocated dropout this round: mean rate over the dispatch set.
         let mean_dropout = if cfg.scheme == "feddd" && t > 1 && !dispatch.is_empty() {
             dispatch.iter().map(|&n| dropout[n]).sum::<f64>() / dispatch.len() as f64
         } else {
             0.0
         };
-        for o in outs {
-            let total = self.client_round_timing(&o, full_broadcast).total();
-            let finish = round_start + total;
-            self.events.push(ArrivalEvent { finish, client: o.slot, dispatch_round: t });
-            self.client_clocks.dispatch(o.slot, finish);
-            self.pending[o.slot] = Some(PendingUpdate {
-                mask: o.mask,
-                wire: o.wire,
-                loss: o.loss,
-                uploaded: o.uploaded,
-                full_broadcast,
-            });
+        let micro = self.micro_batch();
+        for micro_ids in dispatch.chunks(micro) {
+            let outs = self.train_and_select(t, micro_ids, &dropout, full_broadcast)?;
+            for o in outs {
+                let finish = round_start + o.timing.total();
+                self.events.push(ArrivalEvent { finish, client: o.slot, dispatch_round: t });
+                self.client_clocks.dispatch(o.slot, finish);
+                self.pending[o.slot] = Some(PendingUpdate {
+                    wire: o.wire,
+                    residual: o.residual,
+                    loss: o.loss,
+                    uploaded: o.uploaded,
+                    full_broadcast: o.full_broadcast,
+                });
+            }
         }
 
         // ---- 2. close the round: arrival quorum K or deadline ----
@@ -619,6 +764,7 @@ impl FedRun {
                 participants: 0,
                 stragglers: 0,
                 mean_staleness: 0.0,
+                client_state_bytes: self.client_state_bytes(),
             });
         }
         let quorum_k = ((cfg.quorum * in_flight as f64).ceil() as usize).clamp(1, in_flight);
@@ -684,21 +830,27 @@ impl FedRun {
         }
 
         // ---- 4. download merge for the clients that arrived ----
-        // Each client receives the download its link was charged for at
-        // dispatch (`pu.full_broadcast`), not the arrival round's phase.
-        for ev in &arrivals {
-            let n = ev.client;
-            let pu = self.pending[n].take().expect("arrival without a pending upload");
-            if cfg.scheme != "feddd" {
-                continue;
+        // Each FedDD client rebases onto the close-time snapshot with
+        // the download its link was charged for at dispatch
+        // (`pu.full_broadcast`): `Synced` for a broadcast dispatch, else
+        // `Delta` with the residual selected at dispatch. Baselines only
+        // clear their pending slot — they never read their virtualized
+        // params (re-extracted from the live global at dispatch), so
+        // rebasing them would pointlessly pin per-round snapshots.
+        if !arrivals.is_empty() && cfg.scheme == "feddd" {
+            let snap = self.snapshots.publish(t, &self.global_params);
+            for ev in &arrivals {
+                let n = ev.client;
+                let pu = self.pending[n].take().expect("arrival without a pending upload");
+                self.clients[n].params = if pu.full_broadcast {
+                    ClientParams::synced(snap.clone())
+                } else {
+                    ClientParams::after_download(snap.clone(), pu.residual)
+                };
             }
-            let c = &mut self.clients[n];
-            if pu.full_broadcast {
-                c.params = extract_params(&self.global_params, &c.spec);
-            } else {
-                let slice = extract_params(&self.global_params, &c.spec);
-                let elems = pu.mask.to_elementwise(&c.spec);
-                sparse_merge(&mut c.params, &slice, &elems);
+        } else {
+            for ev in &arrivals {
+                self.pending[ev.client].take().expect("arrival without a pending upload");
             }
         }
 
@@ -723,6 +875,7 @@ impl FedRun {
             participants: folded,
             stragglers,
             mean_staleness,
+            client_state_bytes: self.client_state_bytes(),
         })
     }
 
@@ -784,6 +937,7 @@ impl FedRun {
                 full_broadcast: out.full_broadcast,
                 stragglers: out.stragglers,
                 mean_staleness: out.mean_staleness,
+                client_state_bytes: out.client_state_bytes,
             });
             if t % self.cfg.eval_every == 0 || t == self.cfg.rounds {
                 let (acc, loss, pca) = self.evaluate()?;

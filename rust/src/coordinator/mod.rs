@@ -11,6 +11,8 @@
 
 mod client;
 mod engine;
+mod state;
 
 pub use client::*;
 pub use engine::*;
+pub use state::*;

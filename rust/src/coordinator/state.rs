@@ -1,0 +1,408 @@
+//! Copy-on-write client-state virtualization (DESIGN.md §Fleet-Virtualization).
+//!
+//! FedDD has no partial participation — *every* client holds local state
+//! every round — so a production-scale fleet cannot afford one dense
+//! model replica per client (O(clients · model)). This module stores the
+//! fleet's state against a shared ring of global snapshots instead:
+//!
+//! * [`GlobalSnapshot`] — the global parameters published at the end of a
+//!   round, shared by `Arc`. Clients hold references, never copies.
+//! * [`SnapshotRing`] — weak-reference bookkeeping over the published
+//!   snapshots: a snapshot stays alive exactly while some client's state
+//!   is still based on it (the `Arc` is the lifetime; the ring only
+//!   observes it for accounting).
+//! * [`SparseResidual`] — the channels of a client's model that its
+//!   Eq. 5 sparse download did *not* overwrite: the complement of the
+//!   upload mask `M_n`, holding the client's own trained values in the
+//!   codec's canonical unit-group layout.
+//! * [`ClientParams`] — `Synced` (the client equals the snapshot slice —
+//!   nothing stored; every client right after an Eq. 6 full broadcast)
+//!   or `Delta` (snapshot slice + sparse residual).
+//!
+//! The invariant that makes this *bitwise* equivalent to a dense
+//! per-client replica: after a non-broadcast FedDD round, a client's
+//! dense state is `W^t ⊙ M_n + Ŵ_n ⊙ (1 − M_n)` (Eq. 5). Materializing
+//! `Delta { base: W^t, residual: (1−M_n) channels of Ŵ_n }` copies the
+//! *same* f32 values from the same tensors — extract the snapshot slice,
+//! then scatter the residual — so `materialize` reproduces the dense
+//! merge bit for bit (asserted in `rust/tests/fleet_virtualization.rs`).
+//! (Pedantic corner: the dense `sparse_merge` computes
+//! `g·1 + l·0` at masked positions, which differs from a plain copy of
+//! `g` only when `g` is `-0.0` or `l` is non-finite — values training
+//! arithmetic does not produce; the virtualized copy is the cleaner of
+//! the two there.)
+//!
+//! A delta **collapses back to `Synced`** whenever its residual is empty:
+//! after a full broadcast, and after any round whose upload mask kept
+//! every unit (round 1's `D¹ = 0`, or a client allocated `d = 0`).
+
+use std::sync::{Arc, Weak};
+
+use crate::codec::{gather_unit_values, scatter_unit_values};
+use crate::model::{extract_params, ModelSpec};
+use crate::selection::ChannelMask;
+use crate::tensor::Tensor;
+
+/// Global model parameters published at the end of one round, shared by
+/// every client whose state is based on that round.
+#[derive(Debug)]
+pub struct GlobalSnapshot {
+    /// The round whose aggregation produced these parameters (0 = the
+    /// initial model).
+    pub round: usize,
+    pub params: Vec<Tensor>,
+}
+
+impl GlobalSnapshot {
+    /// Bytes of the snapshot's f32 payload.
+    pub fn size_bytes(&self) -> usize {
+        self.params.iter().map(|t| t.numel() * 4).sum()
+    }
+}
+
+/// Accounting over the published snapshots. Lifetime is owned by the
+/// `Arc`s inside client state — the ring holds only weak references, so
+/// a snapshot is freed the moment the last client rebases past it (in
+/// sync FedDD that is every round; in semi-async, when the last
+/// straggler dispatched against it finally arrives).
+#[derive(Debug, Default)]
+pub struct SnapshotRing {
+    slots: Vec<(usize, Weak<GlobalSnapshot>)>,
+}
+
+impl SnapshotRing {
+    pub fn new() -> SnapshotRing {
+        SnapshotRing::default()
+    }
+
+    /// Publish the end-of-round global parameters as a shared snapshot
+    /// and prune ring entries whose snapshot has already been dropped.
+    pub fn publish(&mut self, round: usize, params: &[Tensor]) -> Arc<GlobalSnapshot> {
+        let snap = Arc::new(GlobalSnapshot { round, params: params.to_vec() });
+        self.slots.retain(|(_, w)| w.strong_count() > 0);
+        self.slots.push((round, Arc::downgrade(&snap)));
+        snap
+    }
+
+    /// Rounds whose snapshot is still referenced by some client.
+    pub fn live_rounds(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .filter(|(_, w)| w.strong_count() > 0)
+            .map(|&(r, _)| r)
+            .collect()
+    }
+
+    /// Total bytes of the snapshots still alive — the shared (not
+    /// per-client) part of the fleet's state footprint.
+    pub fn live_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .filter_map(|(_, w)| w.upgrade())
+            .map(|s| s.size_bytes())
+            .sum()
+    }
+}
+
+/// One layer's residual channels: the units the client's sparse download
+/// did not overwrite (ascending), with their value groups in the codec's
+/// canonical layout (incoming weights then bias per unit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResidualLayer {
+    pub units: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+/// A client's divergence from its base snapshot: exactly the complement
+/// of its Eq. 5 upload mask, holding the client's own trained values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseResidual {
+    pub layers: Vec<ResidualLayer>,
+}
+
+impl SparseResidual {
+    /// Build the residual a client must keep after a *non-broadcast*
+    /// round: for every layer, the units **not** selected by the upload
+    /// mask (their downloads never arrive), carrying the post-training
+    /// values. Returns `None` when the mask kept every unit — the sparse
+    /// download then overwrites the whole model and the client collapses
+    /// to [`ClientParams::Synced`].
+    pub fn complement_of(
+        mask: &ChannelMask,
+        params: &[Tensor],
+        spec: &ModelSpec,
+    ) -> Option<SparseResidual> {
+        debug_assert_eq!(params.len(), spec.layers.len() * 2, "params arity");
+        let mut layers = Vec::with_capacity(spec.layers.len());
+        let mut any = false;
+        for (l, layer) in spec.layers.iter().enumerate() {
+            let sel = &mask.per_layer[l];
+            debug_assert_eq!(sel.len(), layer.out_dim, "layer {l} mask length");
+            let units: Vec<u32> = sel
+                .iter()
+                .enumerate()
+                .filter(|(_, &s)| !s)
+                .map(|(k, _)| k as u32)
+                .collect();
+            any |= !units.is_empty();
+            let values = gather_unit_values(
+                layer,
+                params[2 * l].data(),
+                params[2 * l + 1].data(),
+                &units,
+            );
+            layers.push(ResidualLayer { units, values });
+        }
+        if any {
+            Some(SparseResidual { layers })
+        } else {
+            None
+        }
+    }
+
+    /// Overwrite the residual units' positions in dense client-shaped
+    /// params; every other position is untouched.
+    pub fn scatter_into(&self, params: &mut [Tensor], spec: &ModelSpec) {
+        debug_assert_eq!(self.layers.len(), spec.layers.len(), "residual arity");
+        for (l, (rl, layer)) in self.layers.iter().zip(&spec.layers).enumerate() {
+            let (head, tail) = params.split_at_mut(2 * l + 1);
+            scatter_unit_values(
+                layer,
+                head[2 * l].data_mut(),
+                tail[0].data_mut(),
+                &rl.units,
+                &rl.values,
+            );
+        }
+    }
+
+    /// Residual units across all layers.
+    pub fn unit_count(&self) -> usize {
+        self.layers.iter().map(|rl| rl.units.len()).sum()
+    }
+
+    /// Heap bytes this residual pins per client (unit ids + f32 values).
+    pub fn heap_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|rl| rl.units.len() * 4 + rl.values.len() * 4)
+            .sum()
+    }
+}
+
+/// A client's virtualized local model `W_n^t`.
+#[derive(Clone, Debug)]
+pub enum ClientParams {
+    /// The client equals `extract_params(base, spec)` — nothing stored
+    /// beyond the shared snapshot reference. Every client is `Synced`
+    /// right after an Eq. 6 full broadcast; baselines (which re-sync to
+    /// the current global at every dispatch) stay `Synced` permanently.
+    Synced { base: Arc<GlobalSnapshot> },
+    /// Masked channels come from `base` (the Eq. 5 sparse download); the
+    /// complement keeps the client's own trained values.
+    Delta {
+        base: Arc<GlobalSnapshot>,
+        residual: SparseResidual,
+    },
+}
+
+impl ClientParams {
+    /// State right after a full broadcast (or at fleet construction).
+    pub fn synced(base: Arc<GlobalSnapshot>) -> ClientParams {
+        ClientParams::Synced { base }
+    }
+
+    /// State right after a download merge: `Delta` while a residual
+    /// diverges, collapsing to `Synced` when nothing does.
+    pub fn after_download(
+        base: Arc<GlobalSnapshot>,
+        residual: Option<SparseResidual>,
+    ) -> ClientParams {
+        match residual {
+            Some(residual) => ClientParams::Delta { base, residual },
+            None => ClientParams::Synced { base },
+        }
+    }
+
+    /// Round of the snapshot this state is based on.
+    pub fn base_round(&self) -> usize {
+        match self {
+            ClientParams::Synced { base } => base.round,
+            ClientParams::Delta { base, .. } => base.round,
+        }
+    }
+
+    pub fn is_synced(&self) -> bool {
+        matches!(self, ClientParams::Synced { .. })
+    }
+
+    /// Reconstruct the dense client model — bitwise identical to the
+    /// dense bookkeeping's Eq. 5 merge (extract the snapshot slice, then
+    /// scatter the residual values over the complement channels). Called
+    /// only inside the per-client worker stage, so at most
+    /// O(workers · model) dense replicas exist at any instant.
+    pub fn materialize(&self, spec: &ModelSpec) -> Vec<Tensor> {
+        match self {
+            ClientParams::Synced { base } => extract_params(&base.params, spec),
+            ClientParams::Delta { base, residual } => {
+                let mut params = extract_params(&base.params, spec);
+                residual.scatter_into(&mut params, spec);
+                params
+            }
+        }
+    }
+
+    /// Per-client heap bytes this state pins (0 when `Synced`; the
+    /// shared snapshot is accounted once, by `SnapshotRing::live_bytes`).
+    pub fn state_bytes(&self) -> usize {
+        match self {
+            ClientParams::Synced { .. } => 0,
+            ClientParams::Delta { residual, .. } => residual.heap_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aggregation::sparse_merge;
+    use crate::selection::{select_mask, Policy};
+    use crate::util::rng::Rng;
+
+    fn perturbed(p: &[Tensor], rng: &mut Rng, s: f32) -> Vec<Tensor> {
+        p.iter()
+            .map(|t| {
+                let d: Vec<f32> =
+                    t.data().iter().map(|&x| x + rng.normal_f32(0.0, s)).collect();
+                Tensor::new(t.shape().to_vec(), d)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn full_mask_has_no_residual_and_collapses_to_synced() {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(0);
+        let params = spec.init_params(&mut rng);
+        let mask = ChannelMask::full(&spec);
+        assert!(SparseResidual::complement_of(&mask, &params, &spec).is_none());
+        let mut ring = SnapshotRing::new();
+        let snap = ring.publish(1, &params);
+        let state = ClientParams::after_download(snap, None);
+        assert!(state.is_synced());
+        assert_eq!(state.state_bytes(), 0);
+        assert_eq!(state.base_round(), 1);
+    }
+
+    #[test]
+    fn materialize_matches_dense_sparse_merge_bitwise() {
+        // The crux lemma: Delta-materialization equals the dense
+        // representation's Eq. 5 merge (sparse_merge) bit for bit.
+        let spec = ModelSpec::get("mlp", 0.5).unwrap();
+        let mut rng = Rng::new(1);
+        let global = spec.init_params(&mut rng);
+        for d in [0.1, 0.4, 0.8] {
+            let trained = perturbed(&global, &mut rng, 0.05);
+            let mask =
+                select_mask(Policy::Random, &spec, &global, &trained, None, d, &mut rng);
+            // dense bookkeeping: local ← W ⊙ M + trained ⊙ (1−M)
+            let mut dense = trained.clone();
+            sparse_merge(&mut dense, &global, &mask.to_elementwise(&spec));
+            // virtualized bookkeeping
+            let mut ring = SnapshotRing::new();
+            let snap = ring.publish(3, &global);
+            let residual = SparseResidual::complement_of(&mask, &trained, &spec)
+                .expect("d > 0 must leave a residual");
+            let state = ClientParams::after_download(snap, Some(residual));
+            let virt = state.materialize(&spec);
+            for (i, (a, b)) in dense.iter().zip(&virt).enumerate() {
+                assert_eq!(a.data(), b.data(), "d={d}: tensor {i} differs");
+            }
+        }
+    }
+
+    #[test]
+    fn residual_is_strictly_smaller_than_dense_whenever_dropout_drops() {
+        let spec = ModelSpec::get("cnn1", 0.5).unwrap();
+        let mut rng = Rng::new(2);
+        let global = spec.init_params(&mut rng);
+        let trained = perturbed(&global, &mut rng, 0.05);
+        for d in [0.05, 0.3, 0.6, 0.9] {
+            let mask =
+                select_mask(Policy::Delta, &spec, &global, &trained, None, d, &mut rng);
+            let r = SparseResidual::complement_of(&mask, &trained, &spec).unwrap();
+            assert!(r.heap_bytes() > 0);
+            assert!(
+                r.heap_bytes() < spec.size_bytes(),
+                "d={d}: residual {} !< dense {}",
+                r.heap_bytes(),
+                spec.size_bytes()
+            );
+        }
+        // higher dropout -> more residual channels (monotone in d).
+        let r_lo = SparseResidual::complement_of(
+            &select_mask(Policy::Delta, &spec, &global, &trained, None, 0.2, &mut rng),
+            &trained,
+            &spec,
+        )
+        .unwrap();
+        let r_hi = SparseResidual::complement_of(
+            &select_mask(Policy::Delta, &spec, &global, &trained, None, 0.7, &mut rng),
+            &trained,
+            &spec,
+        )
+        .unwrap();
+        assert!(r_hi.unit_count() > r_lo.unit_count());
+    }
+
+    #[test]
+    fn snapshot_ring_frees_unreferenced_rounds() {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(3);
+        let params = spec.init_params(&mut rng);
+        let mut ring = SnapshotRing::new();
+        let s1 = ring.publish(1, &params);
+        let bytes = s1.size_bytes();
+        assert_eq!(ring.live_rounds(), vec![1]);
+        assert_eq!(ring.live_bytes(), bytes);
+        let s2 = ring.publish(2, &params);
+        // both alive while both referenced
+        assert_eq!(ring.live_rounds(), vec![1, 2]);
+        assert_eq!(ring.live_bytes(), 2 * bytes);
+        drop(s1);
+        assert_eq!(ring.live_rounds(), vec![2]);
+        assert_eq!(ring.live_bytes(), bytes);
+        // clients sharing one snapshot count it once
+        let clones: Vec<_> = (0..10).map(|_| ClientParams::synced(s2.clone())).collect();
+        assert_eq!(ring.live_bytes(), bytes);
+        assert!(clones.iter().all(|c| c.state_bytes() == 0));
+        drop(clones);
+        drop(s2);
+        assert!(ring.live_rounds().is_empty());
+        assert_eq!(ring.live_bytes(), 0);
+    }
+
+    #[test]
+    fn residual_scatter_only_touches_complement_positions() {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(4);
+        let global = spec.init_params(&mut rng);
+        let trained = perturbed(&global, &mut rng, 0.1);
+        let mask =
+            select_mask(Policy::Random, &spec, &global, &trained, None, 0.5, &mut rng);
+        let residual = SparseResidual::complement_of(&mask, &trained, &spec).unwrap();
+        let mut out = global.clone();
+        residual.scatter_into(&mut out, &spec);
+        let elems = mask.to_elementwise(&spec);
+        for i in 0..out.len() {
+            for j in 0..out[i].numel() {
+                let want = if elems[i].data()[j] == 1.0 {
+                    global[i].data()[j] // masked: untouched base value
+                } else {
+                    trained[i].data()[j] // complement: the trained value
+                };
+                assert_eq!(out[i].data()[j].to_bits(), want.to_bits(), "[{i}][{j}]");
+            }
+        }
+    }
+}

@@ -1,15 +1,98 @@
 //! Client data partitioners — the paper's three heterogeneity settings
 //! (§6.1): IID, Non-IID-a (2–10 random classes per client), Non-IID-b
 //! (exactly 3 random classes per client).
+//!
+//! # Large-fleet representation
+//!
+//! FedDD fleets have no partial participation, so the partition is held
+//! for *every* client for the whole run. The IID shuffle-and-deal is
+//! therefore stored **lazily**: one shared permutation (derived from the
+//! partition seed), from which client `n`'s index set is the strided view
+//! `perm[n], perm[n + N], perm[n + 2N], …` — exactly the sequence the
+//! eager deal `client_indices[i % N].push(perm[i])` used to materialize,
+//! at O(1) extra memory per client instead of a heap `Vec` each. The
+//! label-restricted non-IID partitions keep materialized lists (their
+//! assignment is not a stride), which is fine: non-IID experiments run at
+//! paper scale, the 10k–50k fleet sweeps are IID.
+//!
+//! [`ClientShard`] is the per-client handle the coordinator samples from;
+//! it yields identical index sequences for both representations.
+
+use std::sync::Arc;
 
 use super::FedDataset;
 use crate::util::rng::Rng;
 
+/// One client's view of the train set: either a materialized index list
+/// or a lazy strided slice of the shared IID permutation. Both yield the
+/// same sequence the eager representation held, element for element.
+#[derive(Clone, Debug)]
+pub enum ClientShard {
+    /// Materialized index list (non-IID partitions, hand-built tests).
+    Owned(Vec<usize>),
+    /// Element `j` is `perm[offset + j · stride]` (IID shuffle-and-deal:
+    /// `offset` = client id, `stride` = fleet size).
+    Strided {
+        perm: Arc<Vec<usize>>,
+        offset: usize,
+        stride: usize,
+    },
+}
+
+/// Elements of a strided view over `len` items starting at `offset` —
+/// the single source of truth for the ragged-tail arithmetic, shared by
+/// [`ClientShard::len`] and [`Partition::m_n`].
+fn strided_len(len: usize, offset: usize, stride: usize) -> usize {
+    if offset >= len {
+        0
+    } else {
+        (len - offset - 1) / stride + 1
+    }
+}
+
+impl ClientShard {
+    pub fn len(&self) -> usize {
+        match self {
+            ClientShard::Owned(v) => v.len(),
+            ClientShard::Strided { perm, offset, stride } => {
+                strided_len(perm.len(), *offset, *stride)
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `j`-th train-set index of this shard.
+    pub fn get(&self, j: usize) -> usize {
+        match self {
+            ClientShard::Owned(v) => v[j],
+            ClientShard::Strided { perm, offset, stride } => perm[offset + j * stride],
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.len()).map(move |j| self.get(j))
+    }
+
+    pub fn to_vec(&self) -> Vec<usize> {
+        self.iter().collect()
+    }
+}
+
 /// Which samples each client owns (indices into the train set).
 #[derive(Clone, Debug)]
 pub struct Partition {
-    pub client_indices: Vec<Vec<usize>>,
     pub num_classes: usize,
+    assign: Assignment,
+}
+
+#[derive(Clone, Debug)]
+enum Assignment {
+    Explicit(Vec<Vec<usize>>),
+    /// IID shuffle-and-deal: client `n` owns `perm[n], perm[n+N], …`.
+    Strided { perm: Arc<Vec<usize>>, n_clients: usize },
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -56,14 +139,19 @@ impl Partition {
         }
     }
 
-    /// Uniform shuffle-and-deal.
+    /// Uniform shuffle-and-deal, stored as the shared permutation (each
+    /// client's set is derived lazily — see the module docs).
     pub fn iid(ds: &FedDataset, n_clients: usize, rng: &mut Rng) -> Partition {
-        let mut idx = rng.permutation(ds.train_len());
-        let mut client_indices = vec![Vec::new(); n_clients];
-        for (i, sample) in idx.drain(..).enumerate() {
-            client_indices[i % n_clients].push(sample);
+        let perm = rng.permutation(ds.train_len());
+        Partition {
+            num_classes: ds.num_classes,
+            assign: Assignment::Strided { perm: Arc::new(perm), n_clients },
         }
-        Partition { client_indices, num_classes: ds.num_classes }
+    }
+
+    /// A partition from materialized per-client index lists.
+    pub fn explicit(client_indices: Vec<Vec<usize>>, num_classes: usize) -> Partition {
+        Partition { num_classes, assign: Assignment::Explicit(client_indices) }
     }
 
     /// Label-restricted partition: each client claims `k = pick(rng)`
@@ -107,28 +195,82 @@ impl Partition {
                 client_indices[owners[i % owners.len()]].push(sample);
             }
         }
-        Partition { client_indices, num_classes: ds.num_classes }
+        Partition::explicit(client_indices, ds.num_classes)
     }
 
     pub fn n_clients(&self) -> usize {
-        self.client_indices.len()
+        match &self.assign {
+            Assignment::Explicit(v) => v.len(),
+            Assignment::Strided { n_clients, .. } => *n_clients,
+        }
+    }
+
+    /// m_n — samples held by client `n` (no shard handle, no copies).
+    pub fn m_n(&self, n: usize) -> usize {
+        match &self.assign {
+            Assignment::Explicit(v) => v[n].len(),
+            Assignment::Strided { perm, n_clients } => {
+                // Out-of-range ids must panic like the Explicit arm's
+                // `v[n]` — the stride formula would otherwise fabricate
+                // a plausible count for a client that does not exist.
+                assert!(n < *n_clients, "client {n} out of range ({n_clients} clients)");
+                strided_len(perm.len(), n, *n_clients)
+            }
+        }
     }
 
     /// m_n — samples per client.
     pub fn sizes(&self) -> Vec<usize> {
-        self.client_indices.iter().map(|v| v.len()).collect()
+        (0..self.n_clients()).map(|n| self.m_n(n)).collect()
+    }
+
+    /// Client `n`'s shard handle (O(1) for the lazy IID representation).
+    pub fn shard(&self, n: usize) -> ClientShard {
+        match &self.assign {
+            Assignment::Explicit(v) => ClientShard::Owned(v[n].clone()),
+            Assignment::Strided { perm, n_clients } => {
+                assert!(n < *n_clients, "client {n} out of range ({n_clients} clients)");
+                ClientShard::Strided {
+                    perm: Arc::clone(perm),
+                    offset: n,
+                    stride: *n_clients,
+                }
+            }
+        }
+    }
+
+    /// Client `n`'s materialized index list (tests / diagnostics; the
+    /// coordinator samples through [`Partition::shard`] instead).
+    pub fn indices_of(&self, n: usize) -> Vec<usize> {
+        self.shard(n).to_vec()
+    }
+
+    /// Visit every index of client `n` in shard order, without
+    /// materializing a list (the Explicit arm iterates in place; the
+    /// Strided arm walks through the shared [`ClientShard`] view, so the
+    /// stride traversal has a single implementation).
+    pub fn visit_client(&self, n: usize, mut f: impl FnMut(usize)) {
+        match &self.assign {
+            Assignment::Explicit(v) => {
+                for &i in &v[n] {
+                    f(i);
+                }
+            }
+            Assignment::Strided { .. } => {
+                for i in self.shard(n).iter() {
+                    f(i);
+                }
+            }
+        }
     }
 
     /// dis_n^c — per-client label distribution (fractions summing to 1).
     pub fn label_distribution(&self, ds: &FedDataset) -> Vec<Vec<f64>> {
-        self.client_indices
-            .iter()
-            .map(|idxs| {
+        (0..self.n_clients())
+            .map(|n| {
                 let mut counts = vec![0usize; self.num_classes];
-                for &i in idxs {
-                    counts[ds.train_y[i] as usize] += 1;
-                }
-                let total = idxs.len().max(1) as f64;
+                self.visit_client(n, |i| counts[ds.train_y[i] as usize] += 1);
+                let total = self.m_n(n).max(1) as f64;
                 counts.iter().map(|&k| k as f64 / total).collect()
             })
             .collect()
@@ -155,14 +297,56 @@ mod tests {
         SynthSpec::mnist_like().generate(2000, 100, rng)
     }
 
+    /// The eager shuffle-and-deal the lazy representation must reproduce.
+    fn eager_iid_deal(perm: &[usize], n_clients: usize) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); n_clients];
+        for (i, &sample) in perm.iter().enumerate() {
+            out[i % n_clients].push(sample);
+        }
+        out
+    }
+
     #[test]
     fn partitions_are_disjoint_and_complete_iid() {
         let mut rng = Rng::new(0);
         let ds = dataset(&mut rng);
         let p = Partition::iid(&ds, 10, &mut rng);
-        let mut all: Vec<usize> = p.client_indices.iter().flatten().copied().collect();
+        let mut all: Vec<usize> =
+            (0..10).flat_map(|n| p.indices_of(n)).collect();
         all.sort_unstable();
         assert_eq!(all, (0..2000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lazy_iid_matches_the_eager_deal_exactly() {
+        // The lazy strided view must yield the exact per-client index
+        // sequences the old materialized deal produced, including ragged
+        // tails (train_len not divisible by n_clients).
+        for (len, n_clients) in [(2000usize, 10usize), (1003, 7), (10, 16), (5, 5)] {
+            let mut rng = Rng::new(42 + len as u64);
+            let perm = rng.permutation(len);
+            let eager = eager_iid_deal(&perm, n_clients);
+            let p = Partition {
+                num_classes: 10,
+                assign: Assignment::Strided {
+                    perm: Arc::new(perm),
+                    n_clients,
+                },
+            };
+            assert_eq!(p.n_clients(), n_clients);
+            for n in 0..n_clients {
+                assert_eq!(p.m_n(n), eager[n].len(), "len={len} client {n}");
+                assert_eq!(p.indices_of(n), eager[n], "len={len} client {n}");
+                let shard = p.shard(n);
+                assert_eq!(shard.len(), eager[n].len());
+                for (j, &want) in eager[n].iter().enumerate() {
+                    assert_eq!(shard.get(j), want);
+                }
+                let mut visited = Vec::new();
+                p.visit_client(n, |i| visited.push(i));
+                assert_eq!(visited, eager[n]);
+            }
+        }
     }
 
     #[test]
@@ -170,8 +354,9 @@ mod tests {
         let mut rng = Rng::new(1);
         let ds = dataset(&mut rng);
         let p = Partition::build(PartitionKind::NonIidB, &ds, 20, &mut rng);
-        for (n, idxs) in p.client_indices.iter().enumerate() {
-            let mut classes: Vec<i32> = idxs.iter().map(|&i| ds.train_y[i]).collect();
+        for n in 0..p.n_clients() {
+            let mut classes: Vec<i32> =
+                p.indices_of(n).iter().map(|&i| ds.train_y[i]).collect();
             classes.sort_unstable();
             classes.dedup();
             assert!(classes.len() <= 3, "client {n} has {} classes", classes.len());
@@ -183,8 +368,9 @@ mod tests {
         let mut rng = Rng::new(2);
         let ds = dataset(&mut rng);
         let p = Partition::build(PartitionKind::NonIidA, &ds, 20, &mut rng);
-        for idxs in &p.client_indices {
-            let mut classes: Vec<i32> = idxs.iter().map(|&i| ds.train_y[i]).collect();
+        for n in 0..p.n_clients() {
+            let mut classes: Vec<i32> =
+                p.indices_of(n).iter().map(|&i| ds.train_y[i]).collect();
             classes.sort_unstable();
             classes.dedup();
             assert!((1..=10).contains(&classes.len()));
@@ -198,7 +384,7 @@ mod tests {
             for kind in [PartitionKind::Iid, PartitionKind::NonIidA, PartitionKind::NonIidB] {
                 let p = Partition::build(kind, &ds, rng.int_range(2, 15), rng);
                 let mut all: Vec<usize> =
-                    p.client_indices.iter().flatten().copied().collect();
+                    (0..p.n_clients()).flat_map(|n| p.indices_of(n)).collect();
                 let total = all.len();
                 all.sort_unstable();
                 all.dedup();
@@ -236,5 +422,32 @@ mod tests {
         assert!(avg(&s_iid) > avg(&s_nb), "{s_iid:?} vs {s_nb:?}");
         // IID with plenty of data per class ≈ C * min(C * 1/C, 1) = 10
         assert!(avg(&s_iid) > 9.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn strided_m_n_rejects_out_of_range_ids() {
+        // The stride formula would fabricate a plausible count for a
+        // nonexistent client; it must panic like the Explicit arm.
+        let mut rng = Rng::new(6);
+        let ds = dataset(&mut rng);
+        let p = Partition::iid(&ds, 5, &mut rng);
+        let _ = p.m_n(7);
+    }
+
+    #[test]
+    fn empty_and_tiny_shards_behave() {
+        // 3 samples over 5 clients: clients 3 and 4 get nothing.
+        let mut rng = Rng::new(5);
+        let perm = rng.permutation(3);
+        let p = Partition {
+            num_classes: 10,
+            assign: Assignment::Strided { perm: Arc::new(perm), n_clients: 5 },
+        };
+        assert_eq!(p.sizes().iter().sum::<usize>(), 3);
+        assert!(p.shard(4).is_empty());
+        assert_eq!(p.shard(4).len(), 0);
+        assert_eq!(p.indices_of(4), Vec::<usize>::new());
+        assert_eq!(p.shard(0).len(), 1);
     }
 }

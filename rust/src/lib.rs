@@ -53,6 +53,17 @@
 //! `coordinator::engine`, `simnet`, and DESIGN.md §7. The default
 //! `round_mode = "sync"` stays bitwise-identical to the classic engine.
 //!
+//! # Client-state virtualization (fleet scale)
+//!
+//! Client models are never stored densely: each client holds an `Arc`
+//! into a ring of shared global snapshots plus, when diverged, the
+//! sparse residual of the channels its Eq. 5 downloads never overwrote
+//! (`coordinator::state`, DESIGN.md §Fleet-Virtualization). Dense
+//! parameters exist only inside the worker stage, so 10k–50k-client
+//! fleets fit in memory (`n_clients` is the fleet-size knob; see the
+//! `fleet` preset and `rust/benches/fleet.rs`), bitwise-identical to the
+//! dense representation (`rust/tests/fleet_virtualization.rs`).
+//!
 //! See `DESIGN.md` for the experiment index mapping every paper figure and
 //! table to a module and a `feddd figure <id>` command.
 

@@ -22,7 +22,7 @@ const HELP: &str = "\
 feddd — FedDD (differential parameter dropout FL) coordinator
 
 USAGE:
-  feddd train   [--preset smoke|table4|testbed] [--key value ...] [--out results/]
+  feddd train   [--preset smoke|table4|testbed|fleet] [--key value ...] [--out results/]
   feddd figure  <fig2..fig21|all> [--preset ...] [--key value ...] [--out results/]
   feddd inspect models|config|manifest [--preset ...]
   feddd help
@@ -43,6 +43,12 @@ of in-flight uploads, default 0.7) arrivals are in or `--deadline_s`
 elapses; stragglers stay in flight and fold into a later round with the
 `--staleness_beta` discount (1+s)^-beta. `--round_mode sync` (default)
 is bitwise-identical to the classic engine.
+
+Fleet size is the `--n_clients` knob; client state is virtualized
+(snapshot ring + sparse residuals, DESIGN.md Fleet-Virtualization), so
+10k-50k-client fleets fit in memory. `--preset fleet` gives the
+large-fleet defaults (10k clients, width-25% MLP, h=1); e.g.
+`feddd train --preset fleet --n_clients 50000`.
 
 Artifacts must be built first (`make artifacts`), or use a native-exec
 manifest (runtime::write_native_manifest) for FC models without XLA.

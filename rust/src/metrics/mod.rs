@@ -38,6 +38,13 @@ pub struct RoundRecord {
     /// Mean staleness, in rounds, of the uploads folded this round
     /// (0 when every fold was fresh — in particular in sync mode).
     pub mean_staleness: f64,
+    /// Fleet state footprint at the end of the round: Σ per-client
+    /// residual bytes + live shared snapshots (each counted once) +
+    /// in-flight buffered uploads (semi-async pending; 0 in sync mode) —
+    /// see `FedRun::client_state_bytes`. Zero residuals right after a
+    /// full broadcast; the persistent per-client part stays strictly
+    /// below `clients · model` under any dropout.
+    pub client_state_bytes: usize,
 }
 
 /// One evaluation of the global model.
@@ -146,6 +153,18 @@ impl RunResult {
         }
     }
 
+    /// Peak end-of-round fleet state footprint across the run — the
+    /// headline number of the fleet-virtualization benches (gated by
+    /// `ci/bench_diff.py` like the `wire_*` totals).
+    pub fn peak_client_state_bytes(&self) -> usize {
+        self.rounds.iter().map(|r| r.client_state_bytes).max().unwrap_or(0)
+    }
+
+    /// Final-round fleet state footprint.
+    pub fn final_client_state_bytes(&self) -> usize {
+        self.rounds.last().map(|r| r.client_state_bytes).unwrap_or(0)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("scheme", Json::s(&self.scheme)),
@@ -173,6 +192,10 @@ impl RunResult {
                                 ("full_broadcast", Json::Bool(r.full_broadcast)),
                                 ("stragglers", Json::Num(r.stragglers as f64)),
                                 ("mean_staleness", Json::Num(r.mean_staleness)),
+                                (
+                                    "client_state_bytes",
+                                    Json::Num(r.client_state_bytes as f64),
+                                ),
                             ])
                         })
                         .collect(),
@@ -293,6 +316,7 @@ mod tests {
                 full_broadcast: i % 5 == 0,
                 stragglers: i,
                 mean_staleness: i as f64 * 0.5,
+                client_state_bytes: 100 * (5 - i),
             });
             r.evals.push(EvalRecord {
                 round: i,
@@ -330,6 +354,21 @@ mod tests {
         }
         assert!((faster.speedup_vs(&r) - 2.0).abs() < 1e-12);
         assert_eq!(RunResult::new("x", "y").speedup_vs(&r), 1.0);
+    }
+
+    #[test]
+    fn client_state_accounting() {
+        let r = sample_run();
+        // sample_run: client_state_bytes 500, 400, 300, 200, 100
+        assert_eq!(r.peak_client_state_bytes(), 500);
+        assert_eq!(r.final_client_state_bytes(), 100);
+        assert_eq!(RunResult::new("x", "y").peak_client_state_bytes(), 0);
+        let j = r.to_json();
+        let round0 = &j.req_arr("rounds").unwrap()[0];
+        assert_eq!(
+            round0.get("client_state_bytes").and_then(|v| v.as_f64()),
+            Some(500.0)
+        );
     }
 
     #[test]

@@ -67,6 +67,24 @@ pub fn shannon_rate_bps(bandwidth_hz: f64, tx_power: f64, gain: f64, noise: f64)
     bandwidth_hz * (1.0 + tx_power * gain / noise).log2()
 }
 
+/// Bytes the Eq. 11 downlink is charged for one dispatch (DESIGN.md §6):
+///
+/// * **full broadcast** (Eq. 6, and always a client's first dispatch) —
+///   the dense model, `U_n` bytes;
+/// * **sparse download** (Eq. 5) — the masked *values only*,
+///   `mask.payload_bytes`. The server echoes the client's own mask
+///   `M_n`, which the client already holds, so no wire headers and no
+///   bitmap/COO index bytes travel down. Charging the uplink's
+///   `wire_len()` here (as the engine once did) double-bills the framing
+///   the client itself produced.
+pub fn downlink_bytes(full_broadcast: bool, model_bytes: usize, payload_bytes: usize) -> usize {
+    if full_broadcast {
+        model_bytes
+    } else {
+        payload_bytes
+    }
+}
+
 /// A fleet of client profiles.
 #[derive(Clone, Debug)]
 pub struct Fleet {
@@ -322,6 +340,18 @@ mod tests {
         assert!((p.t_up(1e4) - 8.0).abs() < 1e-12); // 8e4 bits / 1e4 bps
         assert!((p.t_down(1e4) - 2.0).abs() < 1e-12);
         assert!((p.sec_per_byte() - (8e-4 + 2e-4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn downlink_charges_values_only_for_sparse_rounds() {
+        // Eq. 5 sends the masked values; the mask itself is the client's
+        // own upload echoed back, so index/framing bytes never download.
+        let model = 400_000;
+        let payload = 120_000;
+        assert_eq!(downlink_bytes(true, model, payload), model);
+        assert_eq!(downlink_bytes(false, model, payload), payload);
+        // the sparse charge is independent of any wire framing overhead
+        assert!(downlink_bytes(false, model, payload) < model);
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Client-state virtualization (DESIGN.md §Fleet-Virtualization):
+//!
+//! * the **dense-equivalence lemma** — materializing
+//!   `Delta{snapshot, complement-of-mask residual}` must reproduce the
+//!   dense representation's Eq. 5 merge (`sparse_merge`) **bitwise**, for
+//!   every selection policy / mask shape the schemes produce, dropout
+//!   rate, model family and hetero sub-model corner;
+//! * the engine built on it stays bitwise-invariant across worker
+//!   counts, codec layouts and the two round modes;
+//! * round 1 is always a full broadcast (regression: clients used to be
+//!   charged a mask-sparse download before ever holding the global);
+//! * state accounting: zero residuals after a broadcast, strictly below
+//!   the dense fleet under any dropout, collapse back to `Synced` on the
+//!   next broadcast, and a single live snapshot per sync round.
+
+use std::path::PathBuf;
+
+use feddd::aggregation::sparse_merge;
+use feddd::config::ExpConfig;
+use feddd::coordinator::{ClientParams, FedRun, SnapshotRing, SparseResidual};
+use feddd::metrics::RunResult;
+use feddd::model::{extract_params, ModelSpec};
+use feddd::runtime::write_native_manifest;
+use feddd::selection::{select_mask, ChannelMask, Policy};
+use feddd::tensor::Tensor;
+use feddd::util::proptest::check;
+use feddd::util::rng::Rng;
+
+fn perturbed(p: &[Tensor], rng: &mut Rng, s: f32) -> Vec<Tensor> {
+    p.iter()
+        .map(|t| {
+            let d: Vec<f32> = t.data().iter().map(|&x| x + rng.normal_f32(0.0, s)).collect();
+            Tensor::new(t.shape().to_vec(), d)
+        })
+        .collect()
+}
+
+/// A client mask in one of the shapes the schemes produce: the baselines'
+/// full mask or a FedDD policy selection at a random rate.
+fn scheme_mask(spec: &ModelSpec, prev: &[Tensor], after: &[Tensor], rng: &mut Rng) -> ChannelMask {
+    let policies = [
+        Policy::Importance,
+        Policy::Random,
+        Policy::Max,
+        Policy::Delta,
+        Policy::Ordered,
+    ];
+    match rng.below(6) {
+        0 => ChannelMask::full(spec),
+        i => {
+            let d = rng.range_f64(0.05, 0.9);
+            select_mask(policies[i - 1], spec, prev, after, None, d, rng)
+        }
+    }
+}
+
+#[test]
+fn virtualized_state_matches_dense_representation_bitwise() {
+    // The dense bookkeeping kept, per client, the merged model
+    //   W_n ← W ⊙ M_n + Ŵ_n ⊙ (1 − M_n)            (Eq. 5, sparse_merge)
+    // The virtualized bookkeeping keeps only the complement residual and
+    // rebuilds the same tensor on demand. Bitwise equality, across every
+    // policy/mask shape and dropout rate the schemes produce.
+    check("virtualized == dense client state", 20, |rng| {
+        for name in ["mlp", "cnn1"] {
+            let spec = ModelSpec::get(name, 0.5).unwrap();
+            let global = spec.init_params(rng);
+            let trained = perturbed(&global, rng, 0.05);
+            let mask = scheme_mask(&spec, &global, &trained, rng);
+
+            let mut dense = trained.clone();
+            sparse_merge(&mut dense, &global, &mask.to_elementwise(&spec));
+
+            let mut ring = SnapshotRing::new();
+            let snap = ring.publish(7, &global);
+            let residual = SparseResidual::complement_of(&mask, &trained, &spec);
+            // full mask ⇒ no residual ⇒ collapse to Synced
+            if mask == ChannelMask::full(&spec) && residual.is_some() {
+                return Err(format!("{name}: full mask produced a residual"));
+            }
+            let state = ClientParams::after_download(snap, residual);
+            let virt = state.materialize(&spec);
+            for (i, (a, b)) in dense.iter().zip(&virt).enumerate() {
+                if a.data() != b.data() {
+                    return Err(format!("{name}: tensor {i} differs from dense merge"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn virtualized_state_matches_dense_in_hetero_corners() {
+    // Hetero fleets: the snapshot holds the *global* (widest) model; a
+    // sub-model client materializes its leading corner + residual. The
+    // dense path sliced first, then merged — same bits required.
+    check("virtualized == dense (hetero)", 8, |rng| {
+        let global_spec = ModelSpec::get("het_a_1", 0.25).unwrap();
+        let global = global_spec.init_params(rng);
+        for i in 1..=5 {
+            let sub = ModelSpec::get(&format!("het_a_{i}"), 0.25).unwrap();
+            let slice = extract_params(&global, &sub);
+            let trained = perturbed(&slice, rng, 0.05);
+            let mask = scheme_mask(&sub, &slice, &trained, rng);
+
+            let mut dense = trained.clone();
+            sparse_merge(&mut dense, &slice, &mask.to_elementwise(&sub));
+
+            let mut ring = SnapshotRing::new();
+            let snap = ring.publish(3, &global);
+            let state = ClientParams::after_download(
+                snap,
+                SparseResidual::complement_of(&mask, &trained, &sub),
+            );
+            let virt = state.materialize(&sub);
+            for (ti, (a, b)) in dense.iter().zip(&virt).enumerate() {
+                if a.data() != b.data() {
+                    return Err(format!("het_a_{i}: tensor {ti} differs"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Engine level (native-exec runtime — runs on any host).
+// ---------------------------------------------------------------------
+
+fn native_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("feddd_fleet_virt_{}_{tag}", std::process::id()));
+    write_native_manifest(&dir, &[("mlp", 1.0)], 16, 64).unwrap();
+    dir
+}
+
+fn cfg(dir: &PathBuf) -> ExpConfig {
+    let mut cfg = ExpConfig::smoke();
+    cfg.scheme = "feddd".into();
+    cfg.n_clients = 5;
+    cfg.rounds = 4;
+    cfg.h = 3; // rounds 1 and 3 broadcast; 2 and 4 leave residuals
+    cfg.local_steps = 2;
+    cfg.test_n = 128;
+    cfg.train_per_client = 60;
+    cfg.eval_every = 4;
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    cfg
+}
+
+fn run_once(cfg: ExpConfig) -> (RunResult, Vec<Tensor>) {
+    let mut run = FedRun::new(cfg).unwrap();
+    let result = run.run().unwrap();
+    (result, run.global_params.clone())
+}
+
+fn assert_bitwise(a: &(RunResult, Vec<Tensor>), b: &(RunResult, Vec<Tensor>), ctx: &str) {
+    assert_eq!(a.0.rounds.len(), b.0.rounds.len(), "{ctx}: round count");
+    for (x, y) in a.0.rounds.iter().zip(&b.0.rounds) {
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{ctx} r{}", x.round);
+        assert_eq!(x.uploaded_bytes, y.uploaded_bytes, "{ctx} r{}", x.round);
+        assert_eq!(x.duration.to_bits(), y.duration.to_bits(), "{ctx} r{}", x.round);
+        assert_eq!(x.client_state_bytes, y.client_state_bytes, "{ctx} r{}", x.round);
+        assert_eq!(x.full_broadcast, y.full_broadcast, "{ctx} r{}", x.round);
+    }
+    for (i, (x, y)) in a.1.iter().zip(&b.1).enumerate() {
+        assert_eq!(x.data(), y.data(), "{ctx}: global tensor {i}");
+    }
+}
+
+#[test]
+fn engine_is_bitwise_invariant_across_workers_codecs_and_modes() {
+    // The virtualized engine keeps PR-1's headline guarantee: workers,
+    // codec layout and quorum-1 semi-async never change a bit — states,
+    // losses, durations, global params, state-byte accounting included.
+    let dir = native_dir("bitwise");
+    let reference = run_once(cfg(&dir));
+    for workers in [2usize, 4] {
+        let mut c = cfg(&dir);
+        c.workers = workers;
+        assert_bitwise(&reference, &run_once(c), &format!("workers={workers}"));
+    }
+    for codec in ["bitmap", "coo"] {
+        let mut c = cfg(&dir);
+        c.codec = codec.into();
+        let out = run_once(c);
+        // wire bytes move with the layout; the model and the client
+        // state must not.
+        for (x, y) in reference.0.rounds.iter().zip(&out.0.rounds) {
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{codec}");
+            assert_eq!(x.client_state_bytes, y.client_state_bytes, "{codec}");
+        }
+        for (i, (x, y)) in reference.1.iter().zip(&out.1).enumerate() {
+            assert_eq!(x.data(), y.data(), "{codec}: global tensor {i}");
+        }
+    }
+    {
+        let mut c = cfg(&dir);
+        c.round_mode = "semi_async".into();
+        c.quorum = 1.0;
+        c.deadline_s = 0.0;
+        let out = run_once(c);
+        for (x, y) in reference.0.rounds.iter().zip(&out.0.rounds) {
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "semi_async q1");
+            assert_eq!(x.client_state_bytes, y.client_state_bytes, "semi_async q1");
+        }
+        for (i, (x, y)) in reference.1.iter().zip(&out.1).enumerate() {
+            assert_eq!(x.data(), y.data(), "semi_async q1: global tensor {i}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn round_one_is_always_a_full_broadcast() {
+    // Regression (Eq. 9/11 charging): with h > 1, round 1 used to be
+    // charged as a mask-sparse download although no client had ever
+    // received the global model. Both round modes must now flag (and
+    // charge) round 1 as a full broadcast, and clients must come out of
+    // it with zero residual state.
+    for round_mode in ["sync", "semi_async"] {
+        let dir = native_dir(&format!("r1bc_{round_mode}"));
+        let mut c = cfg(&dir);
+        c.h = 5; // 1 % 5 != 0 — the old predicate said "sparse"
+        c.rounds = 2;
+        c.eval_every = 2;
+        c.round_mode = round_mode.into();
+        if round_mode == "semi_async" {
+            c.quorum = 1.0; // everyone arrives in-round
+        }
+        let mut run = FedRun::new(c).unwrap();
+        let r1 = run.step_round().unwrap();
+        assert!(r1.full_broadcast, "{round_mode}: round 1 not a full broadcast");
+        assert_eq!(
+            run.client_residual_bytes(),
+            0,
+            "{round_mode}: a broadcast round left residuals"
+        );
+        let r2 = run.step_round().unwrap();
+        assert!(!r2.full_broadcast, "{round_mode}: round 2 (h=5) must be sparse");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn client_state_collapses_on_broadcast_and_stays_below_dense() {
+    // The accounting contract across a broadcast/sparse/broadcast cycle:
+    // * after a broadcast round every client is Synced — residuals are
+    //   exactly 0 and the whole footprint is the single live snapshot;
+    // * after a sparse round every client carries its complement
+    //   residual — > 0 (dropout dropped something) and strictly below
+    //   the dense fleet's clients × model bytes;
+    // * the ring holds exactly one live snapshot after every sync round
+    //   (all clients rebase together).
+    let dir = native_dir("accounting");
+    let mut run = FedRun::new(cfg(&dir)).unwrap();
+    let dense_fleet: usize = run.clients.iter().map(|c| c.u_bytes()).sum();
+    assert_eq!(run.client_residual_bytes(), 0, "fresh fleet must be Synced");
+    assert_eq!(run.live_snapshot_rounds(), vec![0]);
+
+    let r1 = run.step_round().unwrap(); // broadcast (round 1)
+    assert!(r1.full_broadcast);
+    assert_eq!(run.client_residual_bytes(), 0);
+    assert_eq!(r1.client_state_bytes, run.snapshot_bytes());
+    assert_eq!(run.live_snapshot_rounds(), vec![1]);
+
+    let r2 = run.step_round().unwrap(); // sparse (h=3)
+    assert!(!r2.full_broadcast);
+    let residuals = run.client_residual_bytes();
+    assert!(residuals > 0, "sparse round left no residual");
+    assert!(
+        residuals < dense_fleet,
+        "residuals {residuals} not strictly below dense fleet {dense_fleet}"
+    );
+    assert_eq!(r2.client_state_bytes, residuals + run.snapshot_bytes());
+    assert_eq!(run.live_snapshot_rounds(), vec![2]);
+
+    let r3 = run.step_round().unwrap(); // broadcast again (3 % 3 == 0)
+    assert!(r3.full_broadcast);
+    assert_eq!(run.client_residual_bytes(), 0, "broadcast must collapse deltas");
+    assert_eq!(run.live_snapshot_rounds(), vec![3]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn semi_async_stragglers_keep_consistent_state() {
+    // Deadline rounds leave uploads in flight; the in-flight clients must
+    // keep their pre-dispatch base (pinning its snapshot) and rebase only
+    // when they arrive — no discarded updates, no dangling snapshots,
+    // finite state throughout.
+    let dir = native_dir("straggler");
+    let mut c = cfg(&dir);
+    c.n_clients = 8;
+    c.rounds = 16;
+    c.eval_every = 16;
+    c.round_mode = "semi_async".into();
+    c.quorum = 1.0; // close on the deadline only
+    c.deadline_s = 40.0; // under the slowest client's round time
+    c.staleness_beta = 1.0;
+    let mut run = FedRun::new(c).unwrap();
+    let dense_fleet: usize = run.clients.iter().map(|x| x.u_bytes()).sum();
+    let mut folded = 0usize;
+    for _ in 0..16 {
+        let out = run.step_round().unwrap();
+        folded += out.participants;
+        // The persistent per-client part (residuals) stays strictly
+        // below the dense fleet; the full metric additionally counts
+        // live snapshots and the in-flight pending uploads.
+        assert!(run.client_residual_bytes() < dense_fleet);
+        assert_eq!(
+            out.client_state_bytes,
+            run.client_residual_bytes() + run.snapshot_bytes() + run.pending_bytes()
+        );
+        // the ring only ever holds snapshots some client still references
+        for r in run.live_snapshot_rounds() {
+            assert!(r <= 16);
+        }
+    }
+    assert!(folded > 0, "nothing ever folded");
+    for t in &run.global_params {
+        assert!(t.data().iter().all(|x| x.is_finite()));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

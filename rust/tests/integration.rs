@@ -122,7 +122,7 @@ fn manifest_covers_every_config_combination() {
 
 #[test]
 fn config_presets_are_runnable() {
-    for preset in ["smoke", "table4", "testbed"] {
+    for preset in ["smoke", "table4", "testbed", "fleet"] {
         ExpConfig::preset(preset).unwrap().validate().unwrap();
     }
 }
