@@ -1,0 +1,192 @@
+#!/usr/bin/env python3
+"""Unit tests for the bench-baseline gate (``ci/bench_diff.py``).
+
+The gate's red/green logic must itself be tested even while the committed
+baselines are still ``"bootstrap": true`` placeholders — otherwise arming
+the numeric gates (committing the first green CI run's artifacts) could
+arm a gate that never fires. Exercised end-to-end by invoking the script
+as a subprocess on synthetic baseline/current JSON pairs:
+
+* green: equal runs, sub-threshold timing growth, timing improvements,
+  byte decreases, new cases/keys, bootstrap placeholders;
+* red: >20% ns/round growth, a single extra ``wire_*`` /
+  ``client_state*`` byte, a vanished wire key (silent disarm), an empty
+  current run, an all-incomparable case set.
+
+Stdlib only; run with ``python3 ci/test_bench_diff.py -v`` (the CI step).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SCRIPT = os.path.join(HERE, "bench_diff.py")
+
+
+def doc(cases=None, **run_level):
+    """A minimal BENCH_*.json document; ``cases`` maps name -> mean_ns."""
+    body = {
+        "bench": "round",
+        "cases": [
+            {"case": name, "mean_ns": ns}
+            for name, ns in sorted((cases or {}).items())
+        ],
+    }
+    body.update(run_level)
+    return body
+
+
+def run_gate(base, cur, extra=()):
+    """Run bench_diff.py on the two documents; returns CompletedProcess."""
+    with tempfile.TemporaryDirectory() as d:
+        bp = os.path.join(d, "base.json")
+        cp = os.path.join(d, "cur.json")
+        with open(bp, "w", encoding="utf-8") as f:
+            json.dump(base, f)
+        with open(cp, "w", encoding="utf-8") as f:
+            json.dump(cur, f)
+        return subprocess.run(
+            [sys.executable, SCRIPT, bp, cp, *extra],
+            capture_output=True,
+            text=True,
+            check=False,
+        )
+
+
+class GreenPaths(unittest.TestCase):
+    def test_identical_run_passes(self):
+        d = doc({"step_round": 1000.0}, wire_bytes_sync_8r=4096)
+        proc = run_gate(d, d)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("within baseline", proc.stdout)
+
+    def test_timing_growth_within_threshold_passes(self):
+        base = doc({"step_round": 1000.0})
+        cur = doc({"step_round": 1190.0})  # +19% < +20%
+        self.assertEqual(run_gate(base, cur).returncode, 0)
+
+    def test_timing_improvement_passes_and_suggests_ratchet(self):
+        base = doc({"step_round": 1000.0})
+        cur = doc({"step_round": 500.0})
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 0)
+        self.assertIn("improved", proc.stdout)
+
+    def test_byte_decrease_passes(self):
+        base = doc({"step_round": 1000.0}, wire_bytes_sync_8r=4096)
+        cur = doc({"step_round": 1000.0}, wire_bytes_sync_8r=4095)
+        self.assertEqual(run_gate(base, cur).returncode, 0)
+
+    def test_new_case_and_new_byte_key_pass(self):
+        base = doc({"step_round": 1000.0})
+        cur = doc(
+            {"step_round": 1000.0, "step_round_pooled": 800.0},
+            wire_bytes_sync_8r=4096,
+        )
+        self.assertEqual(run_gate(base, cur).returncode, 0)
+
+    def test_removed_case_alone_passes(self):
+        # Cases come and go (benches are renamed); only byte KEYS are
+        # held to the never-vanish rule.
+        base = doc({"step_round": 1000.0, "old_case": 50.0})
+        cur = doc({"step_round": 1000.0})
+        self.assertEqual(run_gate(base, cur).returncode, 0)
+
+    def test_bootstrap_baseline_skips_numeric_gates(self):
+        base = {"bootstrap": True, "bench": "round", "cases": []}
+        # Numbers that would fail an armed gate sail through bootstrap...
+        cur = doc({"step_round": 99999.0}, wire_bytes_sync_8r=10**9)
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        # ...with a loud reminder to commit the artifact.
+        self.assertIn("bootstrap placeholder", proc.stdout)
+
+
+class RedPaths(unittest.TestCase):
+    def test_timing_regression_over_threshold_fails(self):
+        base = doc({"step_round": 1000.0})
+        cur = doc({"step_round": 1250.0})  # +25% > +20%
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("REGRESSION", proc.stdout)
+
+    def test_custom_threshold_is_honored(self):
+        base = doc({"step_round": 1000.0})
+        cur = doc({"step_round": 1150.0})  # +15%
+        self.assertEqual(run_gate(base, cur).returncode, 0)
+        self.assertEqual(
+            run_gate(base, cur, ("--max-regress", "0.10")).returncode, 1
+        )
+
+    def test_one_extra_wire_byte_fails(self):
+        base = doc({"step_round": 1000.0}, wire_bytes_sync_8r=4096)
+        cur = doc({"step_round": 1000.0}, wire_bytes_sync_8r=4097)
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("wire_bytes_sync_8r", proc.stdout)
+
+    def test_one_extra_client_state_byte_fails(self):
+        base = doc({"step_round": 1000.0}, client_state_peak_bytes_10k_h1_2r=500)
+        cur = doc({"step_round": 1000.0}, client_state_peak_bytes_10k_h1_2r=501)
+        self.assertEqual(run_gate(base, cur).returncode, 1)
+
+    def test_one_extra_payload_byte_fails(self):
+        base = doc({"step_round": 1000.0}, payload_bytes_sync_8r=100)
+        cur = doc({"step_round": 1000.0}, payload_bytes_sync_8r=101)
+        self.assertEqual(run_gate(base, cur).returncode, 1)
+
+    def test_vanished_wire_key_fails(self):
+        # A renamed/dropped byte key would silently disarm the
+        # zero-tolerance gate — must be an explicit baseline update.
+        base = doc({"step_round": 1000.0}, wire_bytes_sync_8r=4096)
+        cur = doc({"step_round": 1000.0})
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("silently disarmed", proc.stdout)
+
+    def test_empty_current_run_fails_even_against_bootstrap(self):
+        base = {"bootstrap": True, "bench": "round", "cases": []}
+        cur = {"bench": "round", "cases": []}
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("no cases", proc.stdout)
+
+    def test_all_cases_incomparable_fails(self):
+        # Wholesale case renames would leave zero timing comparisons —
+        # that must not pass as a silently disarmed gate.
+        base = doc({"old_name": 1000.0})
+        cur = doc({"new_name": 1000.0})
+        self.assertEqual(run_gate(base, cur).returncode, 1)
+
+
+class ReportOutput(unittest.TestCase):
+    def test_out_flag_writes_the_markdown_report(self):
+        base = doc({"step_round": 1000.0}, wire_bytes_sync_8r=4096)
+        cur = doc({"step_round": 1250.0}, wire_bytes_sync_8r=4097)
+        with tempfile.TemporaryDirectory() as d:
+            bp = os.path.join(d, "base.json")
+            cp = os.path.join(d, "cur.json")
+            out = os.path.join(d, "BENCH_diff.md")
+            with open(bp, "w", encoding="utf-8") as f:
+                json.dump(base, f)
+            with open(cp, "w", encoding="utf-8") as f:
+                json.dump(cur, f)
+            proc = subprocess.run(
+                [sys.executable, SCRIPT, bp, cp, "--out", out],
+                capture_output=True,
+                text=True,
+                check=False,
+            )
+            self.assertEqual(proc.returncode, 1)
+            with open(out, encoding="utf-8") as f:
+                report = f.read()
+        self.assertIn("# Bench baseline diff", report)
+        self.assertIn("2 gate failure(s)", report)
+
+
+if __name__ == "__main__":
+    unittest.main()

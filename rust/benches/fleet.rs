@@ -31,6 +31,7 @@ use feddd::coordinator::FedRun;
 use feddd::runtime::write_native_manifest;
 use feddd::util::bench::{black_box, Bencher};
 use feddd::util::json::Json;
+use feddd::util::threadpool::total_threads_spawned;
 
 fn artifacts_dir() -> PathBuf {
     // Fixed name (not pid-suffixed): repeated bench runs reuse the same
@@ -59,7 +60,9 @@ fn deterministic_fleet(
     h: usize,
     rounds: usize,
     dir: &PathBuf,
+    gates: &mut Vec<String>,
 ) -> (usize, usize, usize, usize, f64) {
+    let spawned_before = total_threads_spawned();
     let mut run = FedRun::new(cfg(n_clients, h, rounds, dir)).unwrap();
     let model_bytes = run.clients[0].u_bytes();
     let wall0 = Instant::now();
@@ -72,15 +75,31 @@ fn deterministic_fleet(
         last_state = out.client_state_bytes;
         peak_residual = peak_residual.max(run.client_residual_bytes());
     }
+    // Spawn invariant at fleet scale: `rounds` rounds over `n_clients`
+    // clients dispatch thousands of micro-batches, yet the whole run may
+    // spawn at most its pool (`workers = 0` ⇒ available parallelism).
+    let spawned = total_threads_spawned() - spawned_before;
+    if spawned > run.pool_workers() {
+        gates.push(format!(
+            "fleet {n_clients}c run spawned {spawned} OS threads \
+             (> pool workers {}): O(micro-batches) spawning is back",
+            run.pool_workers()
+        ));
+    }
     (peak_state, last_state, peak_residual, model_bytes, wall0.elapsed().as_secs_f64())
 }
 
 fn main() {
     let dir = artifacts_dir();
     let mut b = Bencher::new("fleet");
+    // Gate verdicts are collected here and acted on only after
+    // b.finish() has written BENCH_fleet.json — the CI diff step runs on
+    // bench failure too and must always find the JSON.
+    let mut gate_failures: Vec<String> = Vec::new();
 
     // ---- timed sweep: ns/round at small-to-mid fleet sizes ----
     for &n in &[100usize, 1000] {
+        let spawned_before = total_threads_spawned();
         let mut run = FedRun::new(cfg(n, 1, 1000, &dir)).unwrap();
         run.step_round().unwrap(); // warm caches, pass round 1
         let mut state_bytes = 0usize;
@@ -88,12 +107,23 @@ fn main() {
             let out = black_box(run.step_round().unwrap());
             state_bytes = out.client_state_bytes;
         });
+        // Whole-run OS thread spawns: the persistent pool pays exactly
+        // its size once, however many timed rounds (× micro-batches per
+        // round) just executed.
+        let spawned = total_threads_spawned() - spawned_before;
         b.annotate("n_clients", Json::Num(n as f64));
         b.annotate("client_state_bytes", Json::Num(state_bytes as f64));
         b.annotate(
             "dense_state_bytes",
             Json::Num((n * run.clients[0].u_bytes()) as f64),
         );
+        b.annotate("thread_spawns", Json::Num(spawned as f64));
+        if spawned > run.pool_workers() {
+            gate_failures.push(format!(
+                "fleet timed {n}c: spawned {spawned} OS threads (> pool workers {})",
+                run.pool_workers()
+            ));
+        }
     }
 
     // ---- deterministic delta-path case: 1k clients, sparse rounds ----
@@ -101,7 +131,7 @@ fn main() {
     // complement-of-mask residual — the footprint the virtualization
     // must keep strictly below the dense fleet's.
     let (peak_1k, final_1k, resid_1k, model_bytes, wall_1k) =
-        deterministic_fleet(1000, 5, 3, &dir);
+        deterministic_fleet(1000, 5, 3, &dir, &mut gate_failures);
     let dense_1k = 1000 * model_bytes;
     println!(
         "fleet::delta_1k_h5_3r  peak_state {peak_1k}B  final {final_1k}B  \
@@ -111,10 +141,6 @@ fn main() {
     b.annotate_run("client_state_peak_bytes_1k_h5_3r", Json::Num(peak_1k as f64));
     b.annotate_run("client_state_final_bytes_1k_h5_3r", Json::Num(final_1k as f64));
     b.annotate_run("dense_state_bytes_1k", Json::Num(dense_1k as f64));
-    // Gate verdicts are collected here and acted on only after
-    // b.finish() has written BENCH_fleet.json — the CI diff step runs on
-    // bench failure too and must always find the JSON.
-    let mut gate_failures: Vec<String> = Vec::new();
     if resid_1k == 0 {
         gate_failures
             .push("sparse rounds left no residual — the delta path never ran".into());
@@ -126,7 +152,7 @@ fn main() {
 
     // ---- the 10k-client fleet smoke (the CI acceptance gate) ----
     let (peak_10k, final_10k, _resid_10k, model_bytes, wall_10k) =
-        deterministic_fleet(10_000, 1, 2, &dir);
+        deterministic_fleet(10_000, 1, 2, &dir, &mut gate_failures);
     let dense_10k = 10_000 * model_bytes;
     let limit = dense_10k / 10; // < 10% of clients × model_size_bytes
     println!(
@@ -141,7 +167,8 @@ fn main() {
     // ---- optional 50k sweep point (slow; opt-in, not part of the CI
     // quick run, so its keys never enter the baseline key set) ----
     if std::env::var("FEDDD_FLEET_FULL").is_ok() {
-        let (peak_50k, final_50k, _r, mb, wall_50k) = deterministic_fleet(50_000, 1, 2, &dir);
+        let (peak_50k, final_50k, _r, mb, wall_50k) =
+            deterministic_fleet(50_000, 1, 2, &dir, &mut gate_failures);
         println!(
             "fleet::smoke_50k_h1_2r  peak_state {peak_50k}B  final {final_50k}B  \
              dense {}B  wall {wall_50k:.1}s",
@@ -156,6 +183,9 @@ fn main() {
              10% of the dense fleet ({limit}B)"
         ));
     }
+    // Whole-process spawn total (observability; the per-run gates above
+    // are what fail on an O(micro-batches) regression).
+    b.annotate_run("thread_spawns_process_total", Json::Num(total_threads_spawned() as f64));
     b.finish();
     if !gate_failures.is_empty() {
         for f in &gate_failures {

@@ -21,6 +21,7 @@ use feddd::coordinator::FedRun;
 use feddd::runtime::{default_artifacts_dir, write_native_manifest, Runtime};
 use feddd::util::bench::{black_box, Bencher};
 use feddd::util::json::Json;
+use feddd::util::threadpool::total_threads_spawned;
 
 fn artifacts_dir() -> PathBuf {
     // Use the prebuilt artifacts only when the runtime can actually open
@@ -78,10 +79,18 @@ fn deterministic_run(round_mode: &str, rounds: usize, dir: &PathBuf) -> (f64, us
 fn main() {
     let dir = artifacts_dir();
     let mut b = Bencher::new("round");
+    // Gate verdicts are collected and acted on only after b.finish() has
+    // written BENCH_round.json — the CI diff step must always find it.
+    let mut gate_failures: Vec<String> = Vec::new();
     // headline sweep: FedDD round wall-clock at scheme × workers ×
-    // round_mode (workers=1 sync is the sequential baseline).
+    // round_mode (workers=1 sync is the sequential baseline). Each case
+    // also annotates `thread_spawns` — the OS threads the whole run
+    // (construction + every timed round) cost. The persistent pool must
+    // keep this ≤ workers, i.e. O(workers); the old spawn-per-call pool
+    // paid O(micro-batches) here, thousands after the timed loop.
     for round_mode in ["sync", "semi_async"] {
         for workers in [1usize, 2, 4] {
+            let spawned_before = total_threads_spawned();
             let mut run = FedRun::new(cfg("feddd", workers, round_mode, &dir)).unwrap();
             // warm caches & pass round 1 (full upload)
             run.step_round().unwrap();
@@ -92,24 +101,40 @@ fn main() {
                 last_uploaded = out.uploaded_bytes;
                 last_wire = out.wire_bytes;
             });
+            let spawned = total_threads_spawned() - spawned_before;
             b.annotate("scheme", Json::s("feddd"));
             b.annotate("workers", Json::Num(workers as f64));
             b.annotate("round_mode", Json::s(round_mode));
             b.annotate("uploaded_bytes", Json::Num(last_uploaded as f64));
             b.annotate("case_wire_bytes", Json::Num(last_wire as f64));
+            b.annotate("thread_spawns", Json::Num(spawned as f64));
+            if spawned > workers {
+                gate_failures.push(format!(
+                    "step_round w{workers} {round_mode}: spawned {spawned} OS threads \
+                     (> workers = {workers}); spawns must be O(workers), not O(micro-batches)"
+                ));
+            }
         }
     }
     // FedAvg baseline (full uploads, no selection) at workers=1.
+    let spawned_before = total_threads_spawned();
     let mut run = FedRun::new(cfg("fedavg", 1, "sync", &dir)).unwrap();
     run.step_round().unwrap();
     let mut last_uploaded = 0usize;
     b.bench("step_round_fedavg_mlp_10c_w1_sync", || {
         last_uploaded = black_box(run.step_round().unwrap()).uploaded_bytes;
     });
+    let spawned = total_threads_spawned() - spawned_before;
     b.annotate("scheme", Json::s("fedavg"));
     b.annotate("workers", Json::Num(1.0));
     b.annotate("round_mode", Json::s("sync"));
     b.annotate("uploaded_bytes", Json::Num(last_uploaded as f64));
+    b.annotate("thread_spawns", Json::Num(spawned as f64));
+    if spawned > 0 {
+        gate_failures.push(format!(
+            "fedavg w1: a sequential run spawned {spawned} OS threads (want 0)"
+        ));
+    }
     // evaluation pass
     let mut run = FedRun::new(cfg("feddd", 1, "sync", &dir)).unwrap();
     run.step_round().unwrap();
@@ -148,12 +173,22 @@ fn main() {
     // snapshots), gated like the wire totals: any increase fails CI.
     b.annotate_run("client_state_peak_bytes_sync_8r", Json::Num(state_sync as f64));
     b.annotate_run("client_state_peak_bytes_semi_async_8r", Json::Num(state_semi as f64));
+    // Total OS threads the whole bench process ever spawned — a fixed
+    // function of the swept worker counts (2+4 twice), never of round or
+    // micro-batch counts. Observability only: the per-case gates above
+    // already fail on any O(micro-batches) regression.
+    b.annotate_run("thread_spawns_process_total", Json::Num(total_threads_spawned() as f64));
     b.finish();
     if vt_semi >= vt_sync {
-        eprintln!(
-            "GATE FAILED: semi_async virtual time {vt_semi:.1}s is not \
-             faster than sync {vt_sync:.1}s on the skewed fleet"
-        );
+        gate_failures.push(format!(
+            "semi_async virtual time {vt_semi:.1}s is not faster than sync \
+             {vt_sync:.1}s on the skewed fleet"
+        ));
+    }
+    if !gate_failures.is_empty() {
+        for f in &gate_failures {
+            eprintln!("GATE FAILED: {f}");
+        }
         std::process::exit(1);
     }
 }

@@ -62,8 +62,12 @@ pub struct ExpConfig {
     pub alloc: String,
     /// Worker threads for the per-client round phases (local training,
     /// mask selection, sharded aggregation). `1` = sequential (default),
-    /// `0` = one per available core. Results are bitwise-identical for
-    /// every worker count (see `coordinator::engine`).
+    /// `0` = one per available core. The pool is **persistent**: threads
+    /// are spawned once per run and reuse per-worker scratch arenas
+    /// across micro-batches and rounds (DESIGN.md §Worker-Pool), so a
+    /// run's OS thread spawns are O(workers). Results are
+    /// bitwise-identical for every worker count (see
+    /// `coordinator::engine` and `rust/tests/pool_determinism.rs`).
     pub workers: usize,
     /// Round engine: "sync" (Algorithm 1's barrier, the default — bitwise
     /// identical to the classic engine) | "semi_async" (event-driven

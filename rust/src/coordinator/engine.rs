@@ -75,18 +75,19 @@ use crate::codec::{encode_upload_with, CodecMode, EncodingMix, WireUpload};
 use crate::config::ExpConfig;
 use crate::data::{FedDataset, Partition, PartitionKind, SynthSpec};
 use crate::metrics::{EvalAccumulator, EvalRecord, RoundRecord, RunResult};
-use crate::model::{coverage_rates, extract_params, ModelId, ModelSpec};
+use crate::model::{coverage_rates, extract_params_into, ModelId, ModelSpec};
 use crate::runtime::Runtime;
 use crate::selection::{select_mask, ChannelMask, Policy};
 use crate::simnet::{
     downlink_bytes, ArrivalEvent, ClientClocks, EventQueue, Fleet, RoundTiming, VirtualClock,
 };
 use crate::solver::{allocate_fast, AllocInput, AllocParams};
-use crate::tensor::Tensor;
+use crate::tensor::{copy_tensors_into, Tensor};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
 use super::client::{ClientState, PendingUpdate};
+use super::scratch;
 use super::state::{ClientParams, SnapshotRing, SparseResidual};
 
 /// Upper bound on aggregation shards per round. Fixed (worker-independent)
@@ -169,7 +170,13 @@ pub struct FedRun {
     backend: AggBackend,
     /// Wire-codec layout policy (`cfg.codec`): auto-pick or forced.
     codec: CodecMode,
-    /// Worker pool for the per-client round phases (`cfg.workers`).
+    /// Persistent worker pool for the per-client round phases
+    /// (`cfg.workers`): threads are spawned once here and live for the
+    /// whole run, so per-worker scratch arenas (`coordinator::scratch`,
+    /// the native executor's buffer pool) are reused across micro-batches
+    /// and rounds. Total OS thread spawns per run are O(workers), never
+    /// O(micro-batches) — asserted by `rust/tests/pool_determinism.rs`
+    /// and the round/fleet bench gates.
     pool: ThreadPool,
     /// Published end-of-round snapshots (weak accounting; lifetime is
     /// owned by the client states' `Arc`s).
@@ -289,6 +296,35 @@ impl FedRun {
             client_clocks: ClientClocks::new(n),
             pending: vec![None; n],
         })
+    }
+
+    /// Resolved worker count of this run's persistent pool (`cfg.workers`
+    /// with `0` resolved to the host's available parallelism).
+    pub fn pool_workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// OS threads this run's pool owns (0 when sequential). The pool is
+    /// the run's **entire** spawn budget: stepping rounds spawns nothing
+    /// further, however many micro-batches execute — the invariant the
+    /// round/fleet benches gate via
+    /// `util::threadpool::total_threads_spawned`.
+    pub fn pool_threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Test support: overwrite every per-worker scratch arena — the
+    /// coordinator's materialization/batch buffers and the native
+    /// executor's buffer pool, on the caller thread and on every pool
+    /// worker — with sentinel values (NaN / `i32::MIN`), keeping lengths
+    /// and shapes. Round outputs must be bitwise identical with or
+    /// without poisoning: the executable proof that no job ever reads
+    /// stale scratch contents (`rust/tests/pool_determinism.rs`).
+    pub fn poison_worker_scratch(&self) {
+        self.pool.broadcast(|| {
+            scratch::poison_thread_scratch();
+            crate::runtime::poison_native_scratch();
+        });
     }
 
     /// Per-round byte budget A_server · Σ U_n.
@@ -458,83 +494,90 @@ impl FedRun {
         self.pool.scoped_try_map(
             items,
             |(n, c): (usize, &mut ClientState)| -> anyhow::Result<ClientRoundOutput> {
-                // Per-item batch buffers: one ~batch×dim alloc per client
-                // per round, dwarfed by the training matmuls. True
-                // per-worker reuse needs a persistent worker pool
-                // (scoped_map spawns per call) — noted follow-up.
-                let mut scratch_x = Vec::new();
-                let mut scratch_y = Vec::new();
-                // A first-ever dispatch always downloads the full model:
-                // the client has never held the global, so a mask-sparse
-                // slice would merge into nothing.
-                let full_bc = round_full_broadcast || c.participations == 0;
-                // Materialize the dense model for this round only (the
-                // baselines re-sync to the current global at dispatch).
-                let mut params = if is_feddd {
-                    c.params.materialize(&c.spec)
-                } else {
-                    extract_params(gp, &c.spec)
-                };
-                let before = if is_feddd { Some(params.clone()) } else { None };
-                let loss = c.train_local(
-                    rt,
-                    ds,
-                    cfg_ref.local_steps,
-                    cfg_ref.batch,
-                    cfg_ref.lr,
-                    &mut params,
-                    &mut scratch_x,
-                    &mut scratch_y,
-                )?;
-                let mask = match &before {
-                    Some(w_before) => {
+                // The whole job runs against the worker's persistent
+                // scratch arena: the dense materialization target, the
+                // pre-training copy and the batch buffers are reused
+                // across micro-batches and rounds (every consumer fully
+                // overwrites what it reads — see `coordinator::scratch`;
+                // `pool_determinism.rs` sentinel-poisons the arenas
+                // between rounds to prove no stale byte leaks through).
+                scratch::with_scratch(|s| -> anyhow::Result<ClientRoundOutput> {
+                    // A first-ever dispatch always downloads the full
+                    // model: the client has never held the global, so a
+                    // mask-sparse slice would merge into nothing.
+                    let full_bc = round_full_broadcast || c.participations == 0;
+                    // Materialize the dense model for this round only
+                    // (the baselines re-sync to the current global at
+                    // dispatch and never select, so they skip the
+                    // pre-training copy).
+                    if is_feddd {
+                        c.params.materialize_into(&c.spec, &mut s.params);
+                        copy_tensors_into(&s.params, &mut s.params_before);
+                    } else {
+                        extract_params_into(gp, &c.spec, &mut s.params);
+                    }
+                    let loss = c.train_local(
+                        rt,
+                        ds,
+                        cfg_ref.local_steps,
+                        cfg_ref.batch,
+                        cfg_ref.lr,
+                        &mut s.params,
+                        &mut s.x,
+                        &mut s.y,
+                    )?;
+                    let mask = if is_feddd {
                         let mut sel_rng = c.rng.split(round_label);
                         select_mask(
                             policy,
                             &c.spec,
-                            w_before,
-                            &params,
+                            &s.params_before,
+                            &s.params,
                             if hetero { Some(cr.as_slice()) } else { None },
                             dropout[n],
                             &mut sel_rng,
                         )
-                    }
-                    None => ChannelMask::full(&c.spec),
-                };
-                let uploaded = mask.payload_bytes(&c.spec);
-                // Client-side encode: the bytes this upload really puts
-                // on the wire (debug-asserted <= the upload_bytes bound).
-                let wire = encode_upload_with(&mask, &params, &c.spec, codec);
-                // Post-merge state handoff: nothing after a full
-                // broadcast; else the complement-of-mask residual (the
-                // channels the Eq. 5 download will not overwrite).
-                let residual = if !is_feddd || full_bc {
-                    None
-                } else {
-                    SparseResidual::complement_of(&mask, &params, &c.spec)
-                };
-                // Eq. 7–12: the uplink is charged the *realized* encoded
-                // bytes; the downlink the full model on broadcast, else
-                // the Eq. 5 masked values only — the mask is the
-                // client's own upload echoed back, so its index/framing
-                // bytes are never re-billed (DESIGN.md §6).
-                let down = downlink_bytes(full_bc, c.u_bytes(), uploaded) as f64;
-                let timing = RoundTiming {
-                    t_down: c.profile.t_down(down),
-                    t_cmp: c
-                        .profile
-                        .t_cmp(c.samples_per_round(cfg_ref.local_steps, cfg_ref.batch)),
-                    t_up: c.profile.t_up(wire.wire_len() as f64),
-                };
-                Ok(ClientRoundOutput {
-                    slot: n,
-                    loss,
-                    uploaded,
-                    m_n: c.m_n() as f32,
-                    wire,
-                    residual,
-                    full_broadcast: full_bc,
-                    timing,
+                    } else {
+                        ChannelMask::full(&c.spec)
+                    };
+                    let uploaded = mask.payload_bytes(&c.spec);
+                    // Client-side encode: the bytes this upload really
+                    // puts on the wire (debug-asserted <= the
+                    // upload_bytes bound).
+                    let wire = encode_upload_with(&mask, &s.params, &c.spec, codec);
+                    // Post-merge state handoff: nothing after a full
+                    // broadcast; else the complement-of-mask residual
+                    // (the channels the Eq. 5 download will not
+                    // overwrite).
+                    let residual = if !is_feddd || full_bc {
+                        None
+                    } else {
+                        SparseResidual::complement_of(&mask, &s.params, &c.spec)
+                    };
+                    // Eq. 7–12: the uplink is charged the *realized*
+                    // encoded bytes; the downlink the full model on
+                    // broadcast, else the Eq. 5 masked values only — the
+                    // mask is the client's own upload echoed back, so
+                    // its index/framing bytes are never re-billed
+                    // (DESIGN.md §6).
+                    let down = downlink_bytes(full_bc, c.u_bytes(), uploaded) as f64;
+                    let timing = RoundTiming {
+                        t_down: c.profile.t_down(down),
+                        t_cmp: c
+                            .profile
+                            .t_cmp(c.samples_per_round(cfg_ref.local_steps, cfg_ref.batch)),
+                        t_up: c.profile.t_up(wire.wire_len() as f64),
+                    };
+                    Ok(ClientRoundOutput {
+                        slot: n,
+                        loss,
+                        uploaded,
+                        m_n: c.m_n() as f32,
+                        wire,
+                        residual,
+                        full_broadcast: full_bc,
+                        timing,
+                    })
                 })
             },
         )

@@ -11,6 +11,11 @@
 
 mod client;
 mod engine;
+// Per-worker scratch arenas are module-internal: jobs reach them through
+// `scratch::with_scratch` on their own thread, and tests poison them
+// through `FedRun::poison_worker_scratch` (which covers *every* worker —
+// a lone `poison_thread_scratch` call would touch only the caller).
+mod scratch;
 mod state;
 
 pub use client::*;

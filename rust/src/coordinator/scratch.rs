@@ -1,0 +1,98 @@
+//! Per-worker scratch arenas for the round engine's client stage.
+//!
+//! Each worker thread of the persistent pool (`util::threadpool`) owns
+//! one [`WorkerScratch`] in a thread-local: the dense materialization
+//! target, the pre-training parameter copy and the minibatch gather
+//! buffers are taken from it and **reused across micro-batches and
+//! rounds** instead of reallocated per client job. The arena exists
+//! exactly because the pool's threads are long-lived — with the old
+//! spawn-per-call pool every buffer died with its thread.
+//!
+//! # Safety contract (why reuse cannot change a bit)
+//!
+//! Every consumer of an arena buffer fully overwrites the region it
+//! later reads: `extract_params_into`/`materialize_into` rewrite the
+//! whole client-shaped tensor set, `copy_tensors_into` rewrites every
+//! retained element, and `FedDataset::gather_train` clears before
+//! writing. Nothing reads a byte it did not just write, so a pooled run
+//! is bitwise identical to `workers = 1` — and to prove it,
+//! `FedRun::poison_worker_scratch` fills every arena with sentinels
+//! (NaN / `i32::MIN`) between rounds in
+//! `rust/tests/pool_determinism.rs`: any stale-scratch read would
+//! surface as a NaN loss or diverged parameters.
+
+use std::cell::RefCell;
+
+use crate::tensor::Tensor;
+
+/// Reusable buffers for one worker thread's client jobs.
+pub struct WorkerScratch {
+    /// Dense materialization target — the client's model for the round
+    /// (snapshot slice + residual scatter, or the baseline re-extract).
+    pub params: Vec<Tensor>,
+    /// Pre-training copy of `params` (Algorithm-2 selection input).
+    pub params_before: Vec<Tensor>,
+    /// Flattened minibatch inputs for `FedDataset::gather_train`.
+    pub x: Vec<f32>,
+    /// Minibatch labels.
+    pub y: Vec<i32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<WorkerScratch> = const {
+        RefCell::new(WorkerScratch {
+            params: Vec::new(),
+            params_before: Vec::new(),
+            x: Vec::new(),
+            y: Vec::new(),
+        })
+    };
+}
+
+/// Run `f` with the calling thread's scratch arena. Client jobs are
+/// never nested, so the `RefCell` borrow is uncontended.
+pub fn with_scratch<R>(f: impl FnOnce(&mut WorkerScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Test support: overwrite the calling thread's arena with sentinel
+/// values, keeping lengths and shapes — the reuse paths then face dirty,
+/// wrong-valued memory rather than conveniently empty buffers. Reached
+/// through `FedRun::poison_worker_scratch`, which broadcasts this to
+/// every pool worker.
+pub fn poison_thread_scratch() {
+    with_scratch(|s| {
+        for t in s.params.iter_mut().chain(s.params_before.iter_mut()) {
+            t.data_mut().fill(f32::NAN);
+        }
+        s.x.fill(f32::NAN);
+        s.y.fill(i32::MIN);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_persists_on_the_same_thread_and_poison_keeps_lengths() {
+        with_scratch(|s| {
+            s.x.clear();
+            s.x.extend_from_slice(&[1.0, 2.0]);
+            s.y.clear();
+            s.y.extend_from_slice(&[7, 8, 9]);
+            s.params = vec![Tensor::full(vec![2, 2], 1.5)];
+        });
+        with_scratch(|s| {
+            assert_eq!(s.x, vec![1.0, 2.0], "arena must persist across calls");
+        });
+        poison_thread_scratch();
+        with_scratch(|s| {
+            assert_eq!(s.x.len(), 2);
+            assert!(s.x.iter().all(|v| v.is_nan()));
+            assert_eq!(s.y, vec![i32::MIN; 3]);
+            assert_eq!(s.params[0].shape(), &[2, 2]);
+            assert!(s.params[0].data().iter().all(|v| v.is_nan()));
+        });
+    }
+}

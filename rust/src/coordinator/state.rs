@@ -39,7 +39,7 @@
 use std::sync::{Arc, Weak};
 
 use crate::codec::{gather_unit_values, scatter_unit_values};
-use crate::model::{extract_params, ModelSpec};
+use crate::model::{extract_params_into, ModelSpec};
 use crate::selection::ChannelMask;
 use crate::tensor::Tensor;
 
@@ -242,12 +242,24 @@ impl ClientParams {
     /// only inside the per-client worker stage, so at most
     /// O(workers · model) dense replicas exist at any instant.
     pub fn materialize(&self, spec: &ModelSpec) -> Vec<Tensor> {
+        let mut out = Vec::new();
+        self.materialize_into(spec, &mut out);
+        out
+    }
+
+    /// [`Self::materialize`] into a reusable buffer — the per-worker
+    /// scratch arena's dense materialization target. Same bits: the
+    /// snapshot extraction fully overwrites every client-shaped tensor
+    /// (`extract_params_into`), then the residual scatter rewrites its
+    /// complement channels, so the buffer's previous contents — another
+    /// client's model, or the poisoning sentinels of
+    /// `rust/tests/pool_determinism.rs` — can never leak through.
+    pub fn materialize_into(&self, spec: &ModelSpec, out: &mut Vec<Tensor>) {
         match self {
-            ClientParams::Synced { base } => extract_params(&base.params, spec),
+            ClientParams::Synced { base } => extract_params_into(&base.params, spec, out),
             ClientParams::Delta { base, residual } => {
-                let mut params = extract_params(&base.params, spec);
-                residual.scatter_into(&mut params, spec);
-                params
+                extract_params_into(&base.params, spec, out);
+                residual.scatter_into(out, spec);
             }
         }
     }
@@ -353,6 +365,31 @@ mod tests {
         )
         .unwrap();
         assert!(r_hi.unit_count() > r_lo.unit_count());
+    }
+
+    #[test]
+    fn materialize_into_dirty_reused_buffer_matches_materialize() {
+        // The worker-arena path: after another client's job (here:
+        // sentinel poisoning) the same buffer must materialize to the
+        // same bits a fresh allocation does.
+        let spec = ModelSpec::get("mlp", 0.5).unwrap();
+        let mut rng = Rng::new(5);
+        let global = spec.init_params(&mut rng);
+        let trained = perturbed(&global, &mut rng, 0.05);
+        let mask = select_mask(Policy::Random, &spec, &global, &trained, None, 0.5, &mut rng);
+        let mut ring = SnapshotRing::new();
+        let snap = ring.publish(1, &global);
+        let residual = SparseResidual::complement_of(&mask, &trained, &spec).unwrap();
+        let state = ClientParams::after_download(snap, Some(residual));
+        let want = state.materialize(&spec);
+        let mut buf: Vec<Tensor> = want
+            .iter()
+            .map(|t| Tensor::full(t.shape().to_vec(), f32::NAN))
+            .collect();
+        state.materialize_into(&spec, &mut buf);
+        for (i, (a, b)) in want.iter().zip(&buf).enumerate() {
+            assert_eq!(a.data(), b.data(), "tensor {i} differs from fresh materialize");
+        }
     }
 
     #[test]

@@ -317,36 +317,88 @@ mod tests {
         assert_eq!(all, (0..2000).collect::<Vec<_>>());
     }
 
+    /// Assert the lazy strided representation over a seeded permutation of
+    /// `len` samples yields byte-identical per-client sequences to the
+    /// eager deal, through every access path (`m_n`, `indices_of`,
+    /// `shard.get`, `visit_client`), and that the shards partition the
+    /// whole permutation.
+    fn assert_lazy_matches_eager(len: usize, n_clients: usize, seed: u64) {
+        let ctx = format!("len={len} n_clients={n_clients}");
+        let mut rng = Rng::new(seed);
+        let perm = rng.permutation(len);
+        let eager = eager_iid_deal(&perm, n_clients);
+        let p = Partition {
+            num_classes: 10,
+            assign: Assignment::Strided { perm: Arc::new(perm), n_clients },
+        };
+        assert_eq!(p.n_clients(), n_clients, "{ctx}");
+        let mut total = 0usize;
+        for n in 0..n_clients {
+            assert_eq!(p.m_n(n), eager[n].len(), "{ctx} client {n}");
+            assert_eq!(p.indices_of(n), eager[n], "{ctx} client {n}");
+            let shard = p.shard(n);
+            assert_eq!(shard.len(), eager[n].len(), "{ctx} client {n}");
+            assert_eq!(shard.is_empty(), eager[n].is_empty(), "{ctx} client {n}");
+            for (j, &want) in eager[n].iter().enumerate() {
+                assert_eq!(shard.get(j), want, "{ctx} client {n} elem {j}");
+            }
+            let mut visited = Vec::new();
+            p.visit_client(n, |i| visited.push(i));
+            assert_eq!(visited, eager[n], "{ctx} client {n}");
+            total += p.m_n(n);
+        }
+        assert_eq!(total, len, "{ctx}: shards must partition the permutation");
+    }
+
     #[test]
     fn lazy_iid_matches_the_eager_deal_exactly() {
         // The lazy strided view must yield the exact per-client index
         // sequences the old materialized deal produced, including ragged
         // tails (train_len not divisible by n_clients).
         for (len, n_clients) in [(2000usize, 10usize), (1003, 7), (10, 16), (5, 5)] {
-            let mut rng = Rng::new(42 + len as u64);
-            let perm = rng.permutation(len);
-            let eager = eager_iid_deal(&perm, n_clients);
-            let p = Partition {
-                num_classes: 10,
-                assign: Assignment::Strided {
-                    perm: Arc::new(perm),
-                    n_clients,
-                },
-            };
-            assert_eq!(p.n_clients(), n_clients);
-            for n in 0..n_clients {
-                assert_eq!(p.m_n(n), eager[n].len(), "len={len} client {n}");
-                assert_eq!(p.indices_of(n), eager[n], "len={len} client {n}");
-                let shard = p.shard(n);
-                assert_eq!(shard.len(), eager[n].len());
-                for (j, &want) in eager[n].iter().enumerate() {
-                    assert_eq!(shard.get(j), want);
-                }
-                let mut visited = Vec::new();
-                p.visit_client(n, |i| visited.push(i));
-                assert_eq!(visited, eager[n]);
-            }
+            assert_lazy_matches_eager(len, n_clients, 42 + len as u64);
         }
+    }
+
+    #[test]
+    fn lazy_iid_adversarial_edges_match_eager() {
+        // The corners the fleet sweeps can hit: `train_per_client ∈
+        // {0, 1}` (so the dataset has 0 or n_clients samples), a single
+        // client owning everything, prime fleet sizes (no stride
+        // alignment), and more clients than samples (empty ragged tails
+        // for every client past the permutation length).
+        for &(len, n_clients) in &[
+            (0usize, 1usize), // tpc = 0, one client: a single empty shard
+            (0, 7),           // tpc = 0 across a fleet: all shards empty
+            (1, 1),           // one sample, one client
+            (7, 7),           // tpc = 1 at a prime fleet size
+            (13, 13),         // tpc = 1 at a larger prime
+            (5, 11),          // n_clients > samples (prime): 6 empty tails
+            (3, 97),          // n_clients ≫ samples: 94 empty shards
+            (97, 1),          // one client owns a prime-sized set
+            (96, 97),         // one sample short of the fleet
+            (101, 13),        // prime samples over prime clients
+        ] {
+            assert_lazy_matches_eager(len, n_clients, 1000 + len as u64 * 131 + n_clients as u64);
+        }
+    }
+
+    #[test]
+    fn lazy_iid_matches_eager_property() {
+        // Random (len, n_clients) pairs biased toward the edges: empty
+        // and near-empty permutations, fleets larger than the sample
+        // count, and everything in between.
+        check("lazy IID == eager deal", 40, |rng| {
+            let n_clients = 1 + rng.below(60);
+            let len = match rng.below(4) {
+                0 => 0,
+                1 => rng.below(2 * n_clients), // around the fleet size
+                _ => rng.below(300),
+            };
+            let seed = 7000 + (len * 331 + n_clients) as u64;
+            assert_lazy_matches_eager(len, n_clients, seed);
+            Ok(())
+        });
     }
 
     #[test]

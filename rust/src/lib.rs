@@ -26,12 +26,17 @@
 //!
 //! FedDD's round body is per-client independent, so the engine fans local
 //! training, Algorithm-2 mask selection and the Eq. 4 masked accumulation
-//! out over `ExpConfig::workers` threads. Aggregation is *sharded*: each
-//! worker task accumulates a contiguous, worker-count-independent chunk
-//! of participants into private `num`/`den` partials which are merged
-//! pairwise in fixed order, so every run is bitwise-identical to the
-//! sequential (`workers = 1`) run — see `coordinator::engine` and
-//! `rust/tests/parallel_round.rs`.
+//! out over a **persistent** pool of `ExpConfig::workers` threads —
+//! spawned once per run, with per-worker scratch arenas (materialization,
+//! batch and executor buffers) reused across micro-batches and rounds;
+//! total OS thread spawns per run are O(workers), never O(micro-batches)
+//! (`util::threadpool`, DESIGN.md §Worker-Pool). Aggregation is
+//! *sharded*: each worker task accumulates a contiguous,
+//! worker-count-independent chunk of participants into private
+//! `num`/`den` partials which are merged pairwise in fixed order, so
+//! every run is bitwise-identical to the sequential (`workers = 1`) run —
+//! see `coordinator::engine`, `rust/tests/parallel_round.rs` and the
+//! pooled-engine battery `rust/tests/pool_determinism.rs`.
 //!
 //! # Sparse upload wire codec (`codec`)
 //!

@@ -149,6 +149,29 @@ pub fn extract_params(global_params: &[Tensor], client: &ModelSpec) -> Vec<Tenso
         .collect()
 }
 
+/// [`extract_params`] into a reusable buffer (the per-worker scratch
+/// arena): bitwise the same result, but tensors whose shape already
+/// matches keep their allocation. Every retained element is **fully
+/// overwritten** — `gather_corner` writes the whole client-shaped tensor
+/// — so arbitrary (even sentinel-poisoned) previous contents can never
+/// leak into the extracted values.
+pub fn extract_params_into(global_params: &[Tensor], client: &ModelSpec, out: &mut Vec<Tensor>) {
+    let shapes = client.param_shapes();
+    out.truncate(shapes.len());
+    for (i, ((_, cshape), gt)) in shapes.iter().zip(global_params).enumerate() {
+        match out.get_mut(i) {
+            Some(t) if t.shape() == cshape.as_slice() => {
+                let gs = gt.shape();
+                assert_eq!(gs.len(), cshape.len());
+                assert!(cshape.iter().zip(gs).all(|(c, g)| c <= g));
+                gather_corner(gt.data(), gs, t.data_mut(), cshape);
+            }
+            Some(t) => *t = extract(gt, cshape),
+            None => out.push(extract(gt, cshape)),
+        }
+    }
+}
+
 /// Elementwise structural-presence masks (1 where the client's sub-model
 /// has a parameter) on global shapes.
 pub fn structural_presence(client: &ModelSpec, global: &ModelSpec) -> Vec<Tensor> {
@@ -249,6 +272,46 @@ mod tests {
         }
         let back = extract_params(&gp, &sub);
         for (a, b) in back.iter().zip(&cp) {
+            assert_eq!(a.data(), b.data());
+        }
+    }
+
+    #[test]
+    fn extract_params_into_matches_extract_params_from_dirty_buffers() {
+        // The scratch-arena path: whatever the reused buffer held before
+        // (matching shapes full of sentinels, mismatched shapes, wrong
+        // arity), the result must be bitwise extract_params.
+        let global = ModelSpec::get("het_a_1", 0.25).unwrap();
+        let sub = ModelSpec::get("het_a_4", 0.25).unwrap();
+        let mut rng = crate::util::rng::Rng::new(2);
+        let gp = global.init_params(&mut rng);
+        let want = extract_params(&gp, &sub);
+
+        // (a) empty buffer grows
+        let mut out: Vec<Tensor> = Vec::new();
+        extract_params_into(&gp, &sub, &mut out);
+        assert_eq!(out.len(), want.len());
+        for (a, b) in want.iter().zip(&out) {
+            assert_eq!(a.data(), b.data());
+        }
+        // (b) shape-matching poisoned buffer is reused in place
+        for t in out.iter_mut() {
+            t.data_mut().fill(f32::NAN);
+        }
+        let ptrs: Vec<_> = out.iter().map(|t| t.data().as_ptr()).collect();
+        extract_params_into(&gp, &sub, &mut out);
+        for ((a, b), p) in want.iter().zip(&out).zip(&ptrs) {
+            assert_eq!(a.data(), b.data());
+            assert_eq!(b.data().as_ptr(), *p, "matching shape must reuse the allocation");
+        }
+        // (c) wrong shapes / surplus arity are rebuilt / truncated
+        let mut dirty: Vec<Tensor> = (0..want.len() + 3)
+            .map(|i| Tensor::full(vec![i + 1], f32::NAN))
+            .collect();
+        extract_params_into(&gp, &sub, &mut dirty);
+        assert_eq!(dirty.len(), want.len());
+        for (a, b) in want.iter().zip(&dirty) {
+            assert_eq!(a.shape(), b.shape());
             assert_eq!(a.data(), b.data());
         }
     }

@@ -9,7 +9,10 @@
 //!   Pallas kernel artifacts, and backend dispatch.
 //! * `native` — pure-Rust executor for FC models (manifests with
 //!   `"exec": "native"`); lets the threaded round engine run end-to-end
-//!   on hosts without a libxla build.
+//!   on hosts without a libxla build. Its forward/backward working set
+//!   comes from a per-thread buffer pool reused across calls (see the
+//!   module docs), sized for the persistent worker pool's long-lived
+//!   threads.
 
 mod native;
 mod pjrt;
@@ -17,3 +20,11 @@ mod registry;
 
 pub use pjrt::*;
 pub use registry::*;
+
+/// Test support: sentinel-poison the calling thread's native-executor
+/// buffer pool (NaN-fill every idle buffer in place). Part of the
+/// scratch-poisoning determinism battery — see
+/// `FedRun::poison_worker_scratch` and `rust/tests/pool_determinism.rs`.
+pub fn poison_native_scratch() {
+    native::poison_thread_scratch();
+}

@@ -13,11 +13,64 @@
 //! given (params, batch) pair produces bit-identical results no matter
 //! which worker thread executes it — the property the parallel round
 //! engine's `workers=N ≡ workers=1` guarantee rests on.
+//!
+//! # Per-thread buffer pool
+//!
+//! The forward/backward working set (activations, logit gradients, dW /
+//! db / upstream deltas) is drawn from a thread-local pool of `Vec<f32>`
+//! buffers instead of freshly allocated per step: on the persistent
+//! worker pool the same ~7 buffers serve every micro-batch and round of
+//! a run. Each take either zero-fills (`take_zeroed`) or copy-fills
+//! (`take_copy`) the full length it hands out, so reuse is bitwise
+//! invisible — `rust/tests/pool_determinism.rs` sentinel-poisons the
+//! pool between rounds to prove it.
+
+use std::cell::RefCell;
 
 use crate::model::{LayerKind, ModelSpec};
 use crate::tensor::Tensor;
 
 use super::registry::ArtifactMeta;
+
+thread_local! {
+    /// Idle f32 buffers of this thread's executor (capacity is retained
+    /// across jobs; contents are dead until re-filled by a take).
+    static BUF_POOL: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Take a buffer of exactly `n` zeros from the pool (or allocate one).
+fn take_zeroed(n: usize) -> Vec<f32> {
+    let mut v = BUF_POOL.with(|p| p.borrow_mut().pop()).unwrap_or_default();
+    v.clear();
+    v.resize(n, 0.0);
+    v
+}
+
+/// Take a buffer holding a copy of `src` from the pool (or allocate one).
+fn take_copy(src: &[f32]) -> Vec<f32> {
+    let mut v = BUF_POOL.with(|p| p.borrow_mut().pop()).unwrap_or_default();
+    v.clear();
+    v.extend_from_slice(src);
+    v
+}
+
+/// Return a buffer to this thread's pool for reuse.
+fn give_back(v: Vec<f32>) {
+    BUF_POOL.with(|p| p.borrow_mut().push(v));
+}
+
+/// Test support: fill every idle pooled buffer with NaN sentinels (in
+/// place, lengths kept). Exposed as `runtime::poison_native_scratch` and
+/// broadcast to every worker by `FedRun::poison_worker_scratch`; any
+/// take that failed to overwrite its full length would surface as NaN
+/// losses or parameters.
+pub(crate) fn poison_thread_scratch() {
+    BUF_POOL.with(|p| {
+        for v in p.borrow_mut().iter_mut() {
+            v.fill(f32::NAN);
+        }
+    });
+}
 
 /// Stateless native executor (all state lives in the caller's tensors).
 pub(crate) struct NativeExec;
@@ -99,8 +152,8 @@ impl NativeExec {
         for l in (0..n_layers).rev() {
             let (d_in, d_out) = (dims[l], dims[l + 1]);
             let input = &acts[l];
-            let mut dw = vec![0.0f32; d_in * d_out];
-            let mut db = vec![0.0f32; d_out];
+            let mut dw = take_zeroed(d_in * d_out);
+            let mut db = take_zeroed(d_out);
             for i in 0..b {
                 let drow = &delta[i * d_out..(i + 1) * d_out];
                 let xrow = &input[i * d_in..(i + 1) * d_in];
@@ -121,7 +174,7 @@ impl NativeExec {
                 // dprev = (delta @ Wᵀ) ⊙ relu'(input); relu' from the
                 // post-relu activation (0 ⇔ inactive unit).
                 let w = params[2 * l].data();
-                let mut dprev = vec![0.0f32; b * d_in];
+                let mut dprev = take_zeroed(b * d_in);
                 for i in 0..b {
                     let drow = &delta[i * d_out..(i + 1) * d_out];
                     let xrow = &input[i * d_in..(i + 1) * d_in];
@@ -138,7 +191,7 @@ impl NativeExec {
                         prow[j] = s;
                     }
                 }
-                delta = dprev;
+                give_back(std::mem::replace(&mut delta, dprev));
             }
             let wt = params[2 * l].data_mut();
             for (wv, &gv) in wt.iter_mut().zip(&dw) {
@@ -148,6 +201,12 @@ impl NativeExec {
             for (bv, &gv) in bt.iter_mut().zip(&db) {
                 *bv -= lr * gv;
             }
+            give_back(dw);
+            give_back(db);
+        }
+        give_back(delta);
+        for a in acts {
+            give_back(a);
         }
         Ok(loss_sum / b as f32)
     }
@@ -213,21 +272,25 @@ impl NativeExec {
                 correct[yi] += 1.0;
             }
         }
+        for a in acts {
+            give_back(a);
+        }
         Ok((loss_sum, correct, count))
     }
 }
 
 /// Per-layer activations: `acts[0] = x`, `acts[l+1]` = output of layer `l`
-/// (post-ReLU except the final logits).
+/// (post-ReLU except the final logits). Buffers come from the thread's
+/// pool; the caller returns them with `give_back` when done.
 fn forward(dims: &[usize], params: &[Tensor], x: &[f32], b: usize) -> Vec<Vec<f32>> {
     let n_layers = dims.len() - 1;
     let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers + 1);
-    acts.push(x.to_vec());
+    acts.push(take_copy(x));
     for l in 0..n_layers {
         let (d_in, d_out) = (dims[l], dims[l + 1]);
         let w = params[2 * l].data();
         let bias = params[2 * l + 1].data();
-        let mut out = vec![0.0f32; b * d_out];
+        let mut out = take_zeroed(b * d_out);
         {
             let input = &acts[l];
             for i in 0..b {
@@ -266,7 +329,7 @@ fn softmax_ce_grad(
     k: usize,
 ) -> anyhow::Result<(f32, Vec<f32>)> {
     let mut loss_sum = 0.0f32;
-    let mut dlogits = vec![0.0f32; b * k];
+    let mut dlogits = take_zeroed(b * k);
     for i in 0..b {
         let row = &logits[i * k..(i + 1) * k];
         let yi = y[i] as usize;
@@ -454,6 +517,39 @@ mod tests {
             .train_step(&meta, &mut params, &[0.0; 4 * 784], &[0i32; 4], 0.1)
             .unwrap_err();
         assert!(err.to_string().contains("FC models only"), "{err}");
+    }
+
+    #[test]
+    fn pooled_buffers_and_poisoning_do_not_change_bits() {
+        // The buffer pool's correctness contract: takes fully overwrite
+        // what they hand out, so a run after sentinel-poisoning the idle
+        // pool is bit-identical to the first run (which populated it).
+        let spec = ModelSpec::get("mlp", 1.0).unwrap();
+        let mut rng = Rng::new(5);
+        let base = spec.init_params(&mut rng);
+        let (x, y) = batch(&mut rng, 16);
+        let train = mlp_meta("train", 16);
+        let eval = mlp_meta("eval", 16);
+        let run = || {
+            let mut p = base.clone();
+            let mut loss_bits = Vec::new();
+            for _ in 0..3 {
+                let l = NativeExec.train_step(&train, &mut p, &x, &y, 0.05).unwrap();
+                loss_bits.push(l.to_bits());
+            }
+            let (el, ec, en) = NativeExec.eval_batch(&eval, &p, &x, &y).unwrap();
+            (loss_bits, el.to_bits(), ec, en, p)
+        };
+        let a = run();
+        poison_thread_scratch();
+        let b = run();
+        assert_eq!(a.0, b.0, "train losses drifted after pool poisoning");
+        assert_eq!(a.1, b.1, "eval loss drifted after pool poisoning");
+        assert_eq!(a.2, b.2);
+        assert_eq!(a.3, b.3);
+        for (i, (ta, tb)) in a.4.iter().zip(&b.4).enumerate() {
+            assert_eq!(ta.data(), tb.data(), "param tensor {i} drifted");
+        }
     }
 
     #[test]

@@ -89,6 +89,22 @@ pub fn params_numel(params: &[Tensor]) -> usize {
     params.iter().map(|t| t.numel()).sum()
 }
 
+/// Copy `src` into `dst` (same values and shapes as `dst = src.to_vec()`,
+/// bit for bit), reusing `dst`'s allocations wherever the shapes already
+/// match — the per-worker scratch-arena path, where `dst` is a reused
+/// buffer whose previous contents are arbitrary. Every retained element
+/// is fully overwritten; surplus elements are truncated.
+pub fn copy_tensors_into(src: &[Tensor], dst: &mut Vec<Tensor>) {
+    dst.truncate(src.len());
+    for (i, t) in src.iter().enumerate() {
+        match dst.get_mut(i) {
+            Some(d) if d.shape() == t.shape() => d.data_mut().copy_from_slice(t.data()),
+            Some(d) => *d = t.clone(),
+            None => dst.push(t.clone()),
+        }
+    }
+}
+
 /// Deep elementwise binary op over parameter sets.
 pub fn params_zip_mut(a: &mut [Tensor], b: &[Tensor], f: impl Fn(&mut f32, f32)) {
     assert_eq!(a.len(), b.len());
@@ -130,5 +146,33 @@ mod tests {
     fn l2_norm() {
         let t = Tensor::new(vec![2], vec![3.0, 4.0]);
         assert!((t.l2_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn copy_tensors_into_reuses_and_matches_clone() {
+        let src = vec![
+            Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.5, f32::MIN_POSITIVE]),
+            Tensor::full(vec![3], -0.0),
+        ];
+        // dirty destination: wrong shapes, wrong arity, poisoned values
+        let mut dst = vec![
+            Tensor::full(vec![2, 2], f32::NAN), // shape matches → reused
+            Tensor::full(vec![5], f32::NAN),    // shape differs → rebuilt
+            Tensor::full(vec![7], f32::NAN),    // surplus → truncated
+        ];
+        let reused_ptr = dst[0].data().as_ptr();
+        copy_tensors_into(&src, &mut dst);
+        assert_eq!(dst.len(), src.len());
+        for (a, b) in src.iter().zip(&dst) {
+            assert_eq!(a.shape(), b.shape());
+            for (x, y) in a.data().iter().zip(b.data()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(dst[0].data().as_ptr(), reused_ptr, "matching shape must reuse");
+        // growing from a short destination works too
+        let mut short: Vec<Tensor> = Vec::new();
+        copy_tensors_into(&src, &mut short);
+        assert_eq!(short, src);
     }
 }

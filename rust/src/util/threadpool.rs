@@ -1,37 +1,143 @@
-//! Minimal scoped threadpool (tokio is unavailable offline; the FL
-//! round's per-client work is CPU-bound and synchronous anyway).
+//! Persistent worker pool (tokio is unavailable offline; the FL round's
+//! per-client work is CPU-bound and synchronous anyway).
 //!
-//! `ThreadPool::scoped_map` fans a job per item out to worker threads and
-//! collects results in input order. On the 1-core CI image this degrades
-//! gracefully to near-sequential execution; the coordinator's structure
-//! (one logical task per client) is what we are encoding.
+//! Workers are **long-lived**: [`ThreadPool::new`] spawns them once (one
+//! OS thread per worker, each behind its own channel lane) and every
+//! [`ThreadPool::scoped_map`] call dispatches borrowed drain-loop jobs to
+//! the same threads. The engine creates one pool per `FedRun`, so a run's
+//! total thread-spawn count is O(`workers`) — **not** O(micro-batches),
+//! as the old spawn-per-call implementation was — which is what makes
+//! per-worker scratch reuse possible at all: a worker thread's
+//! thread-local arenas (`coordinator::scratch`, the native executor's
+//! buffer pool) survive across micro-batches and rounds because the
+//! thread itself does. The process-wide [`total_threads_spawned`] counter
+//! lets tests and benches assert the spawn invariant
+//! (`rust/tests/pool_determinism.rs`, `rust/benches/round.rs`).
+//!
+//! # How borrowed jobs run on `'static` threads
+//!
+//! `scoped_map`'s per-call state (item queue, the job closure, the panic
+//! slot) lives on the caller's stack frame; the drain-loop closures sent
+//! to the workers borrow it, with the lifetime erased at the dispatch
+//! boundary. Soundness rests on a completion barrier: every drain loop
+//! owns a clone of the result `Sender`, dropped only after the loop has
+//! finished touching the borrows, and the caller returns only once the
+//! result channel has **disconnected** — i.e. once every dispatched
+//! closure has run to completion (or been caught panicking) on every
+//! lane. No worker can touch the borrowed frame after `scoped_map`
+//! returns. Panics inside jobs are caught on the worker (which stays
+//! alive for the next call) and resumed on the caller.
+//!
+//! On the 1-core CI image the pool degrades gracefully to sequential
+//! execution on the caller thread (no worker threads are spawned at all
+//! for `workers <= 1`); the coordinator's structure (one logical task per
+//! client) is what we are encoding.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::thread;
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Mutex;
+use std::thread::{self, JoinHandle};
+
+/// OS threads ever spawned by any [`ThreadPool`] in this process. The
+/// observable half of the spawn invariant: after a pool is constructed,
+/// dispatching work must not move this counter.
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Process-wide total of pool-spawned OS threads (the `SPAWNED` counter).
+pub fn total_threads_spawned() -> usize {
+    SPAWNED.load(Ordering::SeqCst)
+}
+
+/// A lifetime-erased job as it travels down a worker lane.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Erase the borrow lifetime of a dispatch closure so it can travel down
+/// a worker lane — the single unsafe operation of this module.
+///
+/// # Safety
+///
+/// The caller must not return (or unwind past its frame) before every
+/// closure it dispatched has finished executing on its worker:
+/// `scoped_map` blocks until its result channel *disconnects*, which
+/// happens only once every drain loop has dropped its `Sender` clone —
+/// its last touch of the borrowed frame; `broadcast` blocks until every
+/// lane has acknowledged, and the acknowledgement is sent only after `f`
+/// returned (or its unwind was caught). After those points workers only
+/// drop the closure box, whose drop glue touches no borrowed data.
+unsafe fn erase_job_lifetime(job: Box<dyn FnOnce() + Send + '_>) -> Job {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+}
+
+/// What a caught job panic carries back to the caller.
+type PanicPayload = Box<dyn Any + Send + 'static>;
+
+thread_local! {
+    /// Set once on pool worker threads. A `scoped_map` issued *from a
+    /// worker* (a nested call) runs sequentially inline instead of
+    /// dispatching: its own lane is busy running the outer job, so
+    /// waiting on it would deadlock.
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
 
 pub struct ThreadPool {
     workers: usize,
+    /// One dispatch lane per worker thread (kept in spawn order; dropping
+    /// a lane's `Sender` is the worker's shutdown signal). Behind a
+    /// `Mutex` so the pool stays `Sync` (`mpsc::Sender` is not): each
+    /// call locks only to enqueue its jobs, and concurrent calls simply
+    /// interleave on the lanes' FIFO queues.
+    lanes: Mutex<Vec<Sender<Job>>>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl ThreadPool {
-    /// `workers = 0` ⇒ available_parallelism.
+    /// `workers = 0` ⇒ available_parallelism. Spawns the worker threads
+    /// immediately (none for `workers <= 1`, which runs sequentially on
+    /// the caller); they live until the pool is dropped.
     pub fn new(workers: usize) -> Self {
         let workers = if workers == 0 {
             thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             workers
         };
-        ThreadPool { workers }
+        let mut lanes = Vec::new();
+        let mut handles = Vec::new();
+        if workers > 1 {
+            for i in 0..workers {
+                let (tx, rx) = mpsc::channel::<Job>();
+                let handle = thread::Builder::new()
+                    .name(format!("feddd-worker-{i}"))
+                    .spawn(move || {
+                        IN_WORKER.with(|w| w.set(true));
+                        while let Ok(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn pool worker");
+                SPAWNED.fetch_add(1, Ordering::SeqCst);
+                lanes.push(tx);
+                handles.push(handle);
+            }
+        }
+        ThreadPool { workers, lanes: Mutex::new(lanes), handles }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
     }
 
+    /// Worker threads this pool owns (0 when sequential) — a pool's whole
+    /// spawn budget; no call spawns anything further.
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
     /// Apply `f` to every item (in parallel across up to `workers`
-    /// threads), returning outputs in input order. Panics in jobs are
-    /// propagated.
+    /// persistent threads), returning outputs in input order. Panics in
+    /// jobs are propagated to the caller; the workers survive them.
     pub fn scoped_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send,
@@ -42,44 +148,69 @@ impl ThreadPool {
         if n == 0 {
             return Vec::new();
         }
-        let nworkers = self.workers.min(n);
-        if nworkers <= 1 {
+        let n_lanes = self.handles.len().min(n);
+        if n_lanes <= 1 || IN_WORKER.with(|w| w.get()) {
             return items.into_iter().map(f).collect();
         }
         // Dynamic work queue: scheduling order is nondeterministic, but
         // outputs are index-ordered and each job is a pure function of its
-        // item, so results never depend on the schedule.
-        let queue = Arc::new(Mutex::new(
-            items.into_iter().enumerate().collect::<Vec<_>>(),
-        ));
+        // item, so results never depend on the schedule. All of this state
+        // is borrowed by the dispatched drain loops and outlives them (see
+        // the module docs for the completion argument).
+        let queue: Mutex<Vec<(usize, T)>> =
+            Mutex::new(items.into_iter().enumerate().collect());
+        let first_panic: Mutex<Option<PanicPayload>> = Mutex::new(None);
         let (tx, rx) = mpsc::channel::<(usize, R)>();
-        let fref = &f;
-        thread::scope(|scope| {
-            for _ in 0..nworkers {
-                let queue = Arc::clone(&queue);
-                let tx = tx.clone();
-                scope.spawn(move || loop {
-                    let item = queue.lock().unwrap().pop();
+        let queue_ref = &queue;
+        let f_ref = &f;
+        let panic_ref = &first_panic;
+        let lanes = self.lanes.lock().unwrap_or_else(|e| e.into_inner());
+        for lane in &lanes[..n_lanes] {
+            let tx = tx.clone();
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let drained = panic::catch_unwind(AssertUnwindSafe(|| loop {
+                    let item = queue_ref.lock().unwrap_or_else(|e| e.into_inner()).pop();
                     match item {
                         Some((i, x)) => {
-                            let r = fref(x);
+                            let r = f_ref(x);
                             if tx.send((i, r)).is_err() {
                                 return;
                             }
                         }
                         None => return,
                     }
-                });
-            }
-            drop(tx);
-            let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-            for (i, r) in rx {
-                out[i] = Some(r);
-            }
-            out.into_iter()
-                .map(|o| o.expect("worker died before producing result"))
-                .collect()
-        })
+                }));
+                if let Err(payload) = drained {
+                    let mut slot = panic_ref.lock().unwrap_or_else(|e| e.into_inner());
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+                // `tx` (this drain loop's Sender clone) drops here — the
+                // caller's result channel disconnects only after every
+                // dispatched closure has reached this point.
+            });
+            // SAFETY: the closure borrows `queue`/`f`/`first_panic` from
+            // this stack frame, and this call returns only once the
+            // result channel below has disconnected — the completion
+            // barrier `erase_job_lifetime` requires.
+            let job: Job = unsafe { erase_job_lifetime(job) };
+            lane.send(job).expect("pool worker thread is gone");
+        }
+        drop(lanes);
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        // Channel disconnected ⇒ every drain loop completed ⇒ safe to
+        // unwind or return; borrowed state is no longer touched.
+        if let Some(p) = first_panic.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            panic::resume_unwind(p);
+        }
+        out.into_iter()
+            .map(|o| o.expect("worker died before producing result"))
+            .collect()
     }
 
     /// [`Self::scoped_map`] over fallible jobs: runs every job, then
@@ -94,14 +225,74 @@ impl ThreadPool {
     {
         self.scoped_map(items, f).into_iter().collect()
     }
+
+    /// Run `f` once on the calling thread and once on **every** worker
+    /// thread, returning after all invocations completed. Each lane gets
+    /// its own job, so no worker is skipped however fast the others
+    /// drain. Used to maintain per-worker thread-local state — e.g. the
+    /// scratch-arena sentinel poisoning in the determinism battery
+    /// (`FedRun::poison_worker_scratch`). A panic inside `f` on a worker
+    /// is swallowed; the worker stays alive.
+    pub fn broadcast<F>(&self, f: F)
+    where
+        F: Fn() + Sync,
+    {
+        f();
+        if self.handles.is_empty() {
+            return;
+        }
+        let f_ref = &f;
+        let (tx, rx) = mpsc::channel::<()>();
+        let lanes = self.lanes.lock().unwrap_or_else(|e| e.into_inner());
+        for lane in lanes.iter() {
+            let tx = tx.clone();
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let _ = panic::catch_unwind(AssertUnwindSafe(f_ref));
+                let _ = tx.send(());
+            });
+            // SAFETY: the closure borrows `f` from this stack frame, and
+            // this call returns only after every lane has acknowledged —
+            // the completion barrier `erase_job_lifetime` requires.
+            let job: Job = unsafe { erase_job_lifetime(job) };
+            lane.send(job).expect("pool worker thread is gone");
+        }
+        drop(lanes);
+        drop(tx);
+        for _ in 0..self.handles.len() {
+            let _ = rx.recv();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // Dropping the lanes disconnects every worker's receiver; each
+        // worker finishes its in-flight job (there are none outside an
+        // active call) and exits. Join so no worker outlives the pool.
+        self.lanes.lock().unwrap_or_else(|e| e.into_inner()).clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    /// The spawn-counter assertions read the process-wide [`SPAWNED`]
+    /// counter, so tests in this module (the only lib-unit tests that
+    /// construct pools) must not construct pools concurrently.
+    static SERIAL: Mutex<()> = Mutex::new(());
+
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+    }
 
     #[test]
     fn map_preserves_order() {
+        let _g = serial();
         let pool = ThreadPool::new(4);
         let out = pool.scoped_map((0..100).collect(), |x: usize| x * x);
         assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
@@ -109,13 +300,16 @@ mod tests {
 
     #[test]
     fn single_worker_fallback() {
+        let _g = serial();
         let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 0, "sequential pool must spawn nothing");
         let out = pool.scoped_map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
     }
 
     #[test]
     fn empty_input() {
+        let _g = serial();
         let pool = ThreadPool::new(4);
         let out: Vec<i32> = pool.scoped_map(Vec::<i32>::new(), |x| x);
         assert!(out.is_empty());
@@ -123,6 +317,7 @@ mod tests {
 
     #[test]
     fn borrows_environment() {
+        let _g = serial();
         let pool = ThreadPool::new(3);
         let offset = 10usize;
         let out = pool.scoped_map(vec![1usize, 2, 3], |x| x + offset);
@@ -131,6 +326,7 @@ mod tests {
 
     #[test]
     fn try_map_reports_first_error_by_input_order() {
+        let _g = serial();
         let pool = ThreadPool::new(4);
         let out = pool.scoped_try_map((0..100).collect::<Vec<usize>>(), |x| {
             if x % 7 == 3 {
@@ -148,6 +344,7 @@ mod tests {
     #[test]
     fn mutable_items_fan_out() {
         // The round engine hands each worker a disjoint `&mut` client.
+        let _g = serial();
         let pool = ThreadPool::new(4);
         let mut state = vec![0u64; 16];
         let items: Vec<(usize, &mut u64)> = state.iter_mut().enumerate().collect();
@@ -157,5 +354,104 @@ mod tests {
         for (i, v) in state.iter().enumerate() {
             assert_eq!(*v, (i as u64) * 3);
         }
+    }
+
+    #[test]
+    fn workers_are_persistent_across_calls() {
+        // The tentpole invariant: construction spawns O(workers) threads,
+        // and no amount of scoped_map traffic spawns any more — the old
+        // implementation spawned min(workers, n) per call.
+        let _g = serial();
+        let before = total_threads_spawned();
+        let pool = ThreadPool::new(3);
+        assert_eq!(total_threads_spawned() - before, 3);
+        assert_eq!(pool.threads(), 3);
+        for round in 0..50usize {
+            let out = pool.scoped_map((0..8).collect(), |x: usize| x + round);
+            assert_eq!(out, (0..8).map(|x| x + round).collect::<Vec<_>>());
+        }
+        assert_eq!(
+            total_threads_spawned() - before,
+            3,
+            "dispatching 50 calls must spawn zero additional threads"
+        );
+    }
+
+    #[test]
+    fn worker_thread_locals_survive_across_calls() {
+        // Per-worker scratch reuse rests on this: a worker's thread-local
+        // state written during one scoped_map call is still there in the
+        // next call, because the OS thread is the same.
+        thread_local! {
+            static CALLS: Cell<usize> = const { Cell::new(0) };
+        }
+        let _g = serial();
+        let pool = ThreadPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..20 {
+            pool.scoped_map((0..6).collect::<Vec<usize>>(), |_| {
+                CALLS.with(|c| c.set(c.get() + 1));
+            });
+        }
+        // Every job ran on one of the two persistent workers, so the two
+        // thread-locals must account for all 120 jobs.
+        pool.broadcast(|| {
+            total.fetch_add(CALLS.with(|c| c.get()), Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 20 * 6);
+    }
+
+    #[test]
+    fn broadcast_reaches_every_worker_and_the_caller() {
+        let _g = serial();
+        let pool = ThreadPool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.broadcast(|| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 5, "4 workers + the caller");
+        let seq = ThreadPool::new(1);
+        let count = AtomicUsize::new(0);
+        seq.broadcast(|| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 1, "sequential pool: caller only");
+    }
+
+    #[test]
+    fn job_panics_propagate_and_the_pool_survives() {
+        let _g = serial();
+        let pool = ThreadPool::new(3);
+        let err = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped_map((0..10).collect::<Vec<usize>>(), |x| {
+                if x == 4 {
+                    panic!("boom on {x}");
+                }
+                x
+            })
+        }))
+        .expect_err("job panic must propagate to the caller");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string payload>".into());
+        assert!(msg.contains("boom on 4"), "unexpected payload {msg:?}");
+        // Workers caught the unwind and are still serving.
+        let out = pool.scoped_map(vec![1, 2, 3], |x| x * 10);
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn nested_scoped_map_runs_inline_without_deadlock() {
+        // A job that calls back into the pool must not wait on its own
+        // busy lane: nested calls degrade to sequential execution.
+        let _g = serial();
+        let pool = ThreadPool::new(2);
+        let out = pool.scoped_map(vec![10usize, 20], |base| {
+            pool.scoped_map((0..3).collect::<Vec<usize>>(), |x| x + base)
+                .into_iter()
+                .sum::<usize>()
+        });
+        assert_eq!(out, vec![33, 63]);
     }
 }

@@ -284,6 +284,65 @@ fn client_state_collapses_on_broadcast_and_stays_below_dense() {
 }
 
 #[test]
+fn snapshot_ring_accounting_under_pathological_straggler_tail() {
+    // Executable spec for the deferred snapshot-ring eviction work
+    // (ROADMAP "Snapshot-ring eviction under semi-async staleness
+    // tails"): an in-flight client pins its pre-dispatch snapshot until
+    // its upload arrives, so a low quorum over a skewed fleet keeps MANY
+    // snapshots alive at once. Until eviction exists, the contract is
+    // exact weak-ref accounting — pinned here so any future eviction
+    // scheme has to update this test deliberately:
+    //   (1) the ring's live set is precisely the distinct base rounds
+    //       still referenced by some client — nothing leaks, nothing is
+    //       freed early;
+    //   (2) the reported footprint decomposes into residuals + live
+    //       snapshots + in-flight pending bytes, every round;
+    //   (3) the hazard is real: the tail pins several snapshots at once;
+    //   (4) draining the tail (quorum 1) collapses the ring back to a
+    //       single live snapshot and empties the pending set.
+    let dir = native_dir("ring_tail");
+    let mut c = cfg(&dir);
+    c.n_clients = 16;
+    c.rounds = 1000; // stepped manually
+    c.eval_every = 1000;
+    c.round_mode = "semi_async".into();
+    c.quorum = 0.1; // close after ~2 arrivals — the tail stays in flight
+    c.deadline_s = 0.0;
+    c.staleness_beta = 1.0;
+    let mut run = FedRun::new(c).unwrap();
+    let mut max_live = 0usize;
+    for t in 1..=24 {
+        let out = run.step_round().unwrap();
+        let live = run.live_snapshot_rounds();
+        let mut expect: Vec<usize> =
+            run.clients.iter().map(|cl| cl.params.base_round()).collect();
+        expect.sort_unstable();
+        expect.dedup();
+        assert_eq!(live, expect, "round {t}: ring live set drifted from client bases");
+        assert_eq!(
+            out.client_state_bytes,
+            run.client_residual_bytes() + run.snapshot_bytes() + run.pending_bytes(),
+            "round {t}: footprint does not decompose"
+        );
+        max_live = max_live.max(live.len());
+    }
+    assert!(
+        max_live >= 4,
+        "a pathological tail should pin several snapshots at once, saw at most {max_live}"
+    );
+    run.cfg.quorum = 1.0; // next close waits for every in-flight upload
+    run.step_round().unwrap();
+    let live = run.live_snapshot_rounds();
+    assert_eq!(live.len(), 1, "drained ring must hold one live snapshot, got {live:?}");
+    assert_eq!(run.pending_bytes(), 0, "nothing may stay in flight after the drain");
+    assert_eq!(
+        run.client_state_bytes(),
+        run.client_residual_bytes() + run.snapshot_bytes()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn semi_async_stragglers_keep_consistent_state() {
     // Deadline rounds leave uploads in flight; the in-flight clients must
     // keep their pre-dispatch base (pinning its snapshot) and rebase only

@@ -1,0 +1,210 @@
+//! Determinism & regression battery for the persistent worker pool.
+//!
+//! PR 1's headline guarantee — a round is bitwise identical for every
+//! `workers` value — was authored against a spawn-per-call pool. This
+//! battery re-proves it against the persistent pool and its per-worker
+//! scratch arenas, where the new failure mode is *stale scratch*: a
+//! buffer that survives across micro-batches and rounds could leak a
+//! previous client's bytes into the current job. Three angles:
+//!
+//! * **sweep** — `workers ∈ {1, 2, 3, 8}` × `round_mode` × codec layout,
+//!   asserting the full `RunResult` (losses, durations, wire bytes,
+//!   client-state accounting, straggler/staleness columns, evals) and
+//!   the final global parameters are bitwise identical to `workers = 1`;
+//! * **scratch poisoning** — `FedRun::poison_worker_scratch` fills every
+//!   arena (coordinator materialization/batch buffers, the native
+//!   executor's buffer pool, on every worker thread) with sentinels
+//!   between rounds; outputs must not move by a bit, proving every
+//!   consumer fully overwrites what it reads;
+//! * **spawn accounting** — a run's OS thread spawns equal its pool size
+//!   and stepping rounds spawns nothing, i.e. O(workers), never
+//!   O(micro-batches) (`util::threadpool::total_threads_spawned`).
+//!
+//! Runs against a native-exec manifest (pure-Rust FC executor) so the
+//! battery is green on any host, no libxla or prebuilt HLO required.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use feddd::config::ExpConfig;
+use feddd::coordinator::FedRun;
+use feddd::metrics::RunResult;
+use feddd::runtime::write_native_manifest;
+use feddd::tensor::Tensor;
+use feddd::util::threadpool::total_threads_spawned;
+
+/// Every test in this binary serializes on one lock: the spawn-count
+/// assertions read the process-wide spawn counter, which concurrently
+/// constructed pools (each test builds `FedRun`s) would pollute.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn native_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("feddd_pool_det_{}_{tag}", std::process::id()));
+    write_native_manifest(&dir, &[("mlp", 1.0)], 16, 64).unwrap();
+    dir
+}
+
+fn cfg(dir: &PathBuf, workers: usize, round_mode: &str, codec: &str) -> ExpConfig {
+    let mut cfg = ExpConfig::smoke();
+    cfg.scheme = "feddd".into();
+    cfg.n_clients = 6;
+    cfg.rounds = 4;
+    cfg.h = 3; // rounds 1 and 3 broadcast; 2 and 4 leave residuals
+    cfg.local_steps = 2;
+    cfg.test_n = 128;
+    cfg.train_per_client = 50;
+    cfg.eval_every = 4;
+    cfg.workers = workers;
+    cfg.round_mode = round_mode.into();
+    cfg.codec = codec.into();
+    if round_mode == "semi_async" {
+        // A real quorum: every round leaves stragglers whose uploads fold
+        // later with a staleness discount — worker-count invariance must
+        // hold through the buffered path too.
+        cfg.quorum = 0.7;
+        cfg.staleness_beta = 0.5;
+    }
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    cfg
+}
+
+fn run_once(cfg: ExpConfig) -> (RunResult, Vec<Tensor>) {
+    let mut run = FedRun::new(cfg).unwrap();
+    let result = run.run().unwrap();
+    (result, run.global_params.clone())
+}
+
+/// Full bitwise comparison of two runs: every round column that derives
+/// from client math or timing, every eval, every global parameter bit.
+fn assert_bitwise(a: &(RunResult, Vec<Tensor>), b: &(RunResult, Vec<Tensor>), ctx: &str) {
+    assert_eq!(a.0.rounds.len(), b.0.rounds.len(), "{ctx}: round count");
+    for (x, y) in a.0.rounds.iter().zip(&b.0.rounds) {
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{ctx} r{r} loss");
+        assert_eq!(x.duration.to_bits(), y.duration.to_bits(), "{ctx} r{r} duration");
+        assert_eq!(x.v_time.to_bits(), y.v_time.to_bits(), "{ctx} r{r} v_time");
+        assert_eq!(x.uploaded_bytes, y.uploaded_bytes, "{ctx} r{r} uploaded");
+        assert_eq!(x.wire_bytes, y.wire_bytes, "{ctx} r{r} wire");
+        assert_eq!(x.client_state_bytes, y.client_state_bytes, "{ctx} r{r} state");
+        assert_eq!(x.participants, y.participants, "{ctx} r{r} participants");
+        assert_eq!(x.stragglers, y.stragglers, "{ctx} r{r} stragglers");
+        assert_eq!(
+            x.mean_staleness.to_bits(),
+            y.mean_staleness.to_bits(),
+            "{ctx} r{r} staleness"
+        );
+        assert_eq!(x.full_broadcast, y.full_broadcast, "{ctx} r{r} broadcast");
+    }
+    assert_eq!(a.0.evals.len(), b.0.evals.len(), "{ctx}: eval count");
+    for (x, y) in a.0.evals.iter().zip(&b.0.evals) {
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "{ctx} eval acc");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{ctx} eval loss");
+    }
+    for (i, (x, y)) in a.1.iter().zip(&b.1).enumerate() {
+        assert_eq!(x.data(), y.data(), "{ctx}: global tensor {i}");
+    }
+}
+
+#[test]
+fn pooled_engine_matches_workers_1_across_modes_and_codecs() {
+    let _g = serial();
+    let dir = native_dir("sweep");
+    for round_mode in ["sync", "semi_async"] {
+        for codec in ["auto", "bitmap", "coo"] {
+            let reference = run_once(cfg(&dir, 1, round_mode, codec));
+            for workers in [2usize, 3, 8] {
+                let out = run_once(cfg(&dir, workers, round_mode, codec));
+                assert_bitwise(
+                    &reference,
+                    &out,
+                    &format!("{round_mode}/{codec}/workers={workers}"),
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scratch_poisoning_between_rounds_never_changes_outputs() {
+    // The stale-scratch case: sentinel-fill every per-worker arena (the
+    // materialization target, the pre-training copy, the batch buffers,
+    // the native executor's buffer pool — on the caller thread and every
+    // pool worker) before the run starts and again between every pair of
+    // rounds. A single byte read before being rewritten surfaces as a
+    // NaN loss or diverged global parameters.
+    let _g = serial();
+    let dir = native_dir("poison");
+    for workers in [1usize, 3] {
+        for round_mode in ["sync", "semi_async"] {
+            let base = cfg(&dir, workers, round_mode, "auto");
+            let mut clean = FedRun::new(base.clone()).unwrap();
+            let mut poisoned = FedRun::new(base).unwrap();
+            poisoned.poison_worker_scratch();
+            let ctx = format!("w{workers}/{round_mode}");
+            for r in 1..=4 {
+                let a = clean.step_round().unwrap();
+                let b = poisoned.step_round().unwrap();
+                assert_eq!(
+                    a.mean_loss.to_bits(),
+                    b.mean_loss.to_bits(),
+                    "{ctx} r{r}: loss drifted under poisoning"
+                );
+                assert_eq!(a.duration.to_bits(), b.duration.to_bits(), "{ctx} r{r} duration");
+                assert_eq!(a.uploaded_bytes, b.uploaded_bytes, "{ctx} r{r} uploaded");
+                assert_eq!(a.wire_bytes, b.wire_bytes, "{ctx} r{r} wire");
+                assert_eq!(a.client_state_bytes, b.client_state_bytes, "{ctx} r{r} state");
+                poisoned.poison_worker_scratch();
+            }
+            for (i, (x, y)) in clean
+                .global_params
+                .iter()
+                .zip(&poisoned.global_params)
+                .enumerate()
+            {
+                assert_eq!(x.data(), y.data(), "{ctx}: global tensor {i} drifted");
+                assert!(x.data().iter().all(|v| v.is_finite()), "{ctx}: tensor {i} non-finite");
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn thread_spawns_are_o_workers_not_o_micro_batches() {
+    let _g = serial();
+    let dir = native_dir("spawns");
+    for workers in [1usize, 2, 3, 8] {
+        let mut c = cfg(&dir, workers, "sync", "auto");
+        // 40 clients at micro = max(4·workers, 32) gives ≥ 2 micro-batch
+        // dispatches per round × 3 rounds — each of which the old
+        // spawn-per-call pool paid min(workers, n) fresh OS threads for.
+        c.n_clients = 40;
+        c.rounds = 3;
+        c.train_per_client = 4;
+        c.local_steps = 1;
+        c.eval_every = 3;
+        let before = total_threads_spawned();
+        let mut run = FedRun::new(c).unwrap();
+        let after_new = total_threads_spawned();
+        let expected = if workers > 1 { workers } else { 0 };
+        assert_eq!(
+            after_new - before,
+            expected,
+            "pool construction must spawn exactly the pool (w={workers})"
+        );
+        assert_eq!(run.pool_threads(), expected);
+        run.run().unwrap();
+        assert_eq!(
+            total_threads_spawned(),
+            after_new,
+            "stepping rounds must spawn zero OS threads (w={workers})"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
