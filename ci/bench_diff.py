@@ -8,10 +8,11 @@ baseline in BENCH_baseline/, and exits non-zero when the run regressed:
 * **timing**: any case whose mean ns/round exceeds the baseline's by more
   than --max-regress (default 0.20, i.e. >20%) fails;
 * **wire volume / fleet state**: any run-level key starting with
-  ``wire_``, ``payload_`` or ``client_state`` that *increased* at all
-  fails — these totals come from a fixed-seed, fixed-round-count run, so
-  at equal config (= equal dropout schedule) they are exactly
-  reproducible and any growth is a real encoding or client-state
+  ``wire_``, ``payload_``, ``client_state``, ``sim_state`` or
+  ``data_state`` that *increased* at all fails — these totals come from
+  a fixed-seed, fixed-round-count run, so at equal config (= equal
+  dropout schedule) they are exactly reproducible and any growth is a
+  real encoding, client-state, simulation-runtime or data-plane
   regression, not noise.
 
 Cases present on only one side are reported but never fail the gate
@@ -55,7 +56,7 @@ def cases_by_name(doc):
 
 
 def run_level_bytes(doc):
-    gated = ("wire_", "payload_", "client_state")
+    gated = ("wire_", "payload_", "client_state", "sim_state", "data_state")
     return {
         k: v
         for k, v in doc.items()

@@ -10,8 +10,9 @@ as a subprocess on synthetic baseline/current JSON pairs:
 * green: equal runs, sub-threshold timing growth, timing improvements,
   byte decreases, new cases/keys, bootstrap placeholders;
 * red: >20% ns/round growth, a single extra ``wire_*`` /
-  ``client_state*`` byte, a vanished wire key (silent disarm), an empty
-  current run, an all-incomparable case set.
+  ``client_state*`` / ``sim_state*`` / ``data_state*`` byte, a vanished
+  wire key (silent disarm), an empty current run, an all-incomparable
+  case set.
 
 Stdlib only; run with ``python3 ci/test_bench_diff.py -v`` (the CI step).
 """
@@ -138,6 +139,26 @@ class RedPaths(unittest.TestCase):
         base = doc({"step_round": 1000.0}, payload_bytes_sync_8r=100)
         cur = doc({"step_round": 1000.0}, payload_bytes_sync_8r=101)
         self.assertEqual(run_gate(base, cur).returncode, 1)
+
+    def test_one_extra_sim_state_byte_fails(self):
+        base = doc({"step_round": 1000.0}, sim_state_peak_bytes_100k_h1_2r=4000)
+        cur = doc({"step_round": 1000.0}, sim_state_peak_bytes_100k_h1_2r=4001)
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("sim_state_peak_bytes_100k_h1_2r", proc.stdout)
+
+    def test_one_extra_data_state_byte_fails(self):
+        base = doc({"step_round": 1000.0}, data_state_bytes_100k_h1_2r=9000)
+        cur = doc({"step_round": 1000.0}, data_state_bytes_100k_h1_2r=9001)
+        self.assertEqual(run_gate(base, cur).returncode, 1)
+
+    def test_sim_and_data_state_equality_passes(self):
+        d = doc(
+            {"step_round": 1000.0},
+            sim_state_peak_bytes_100k_h1_2r=4000,
+            data_state_bytes_100k_h1_2r=9000,
+        )
+        self.assertEqual(run_gate(d, d).returncode, 0)
 
     def test_vanished_wire_key_fails(self):
         # A renamed/dropped byte key would silently disarm the

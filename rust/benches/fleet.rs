@@ -1,27 +1,37 @@
-//! Fleet-scale bench + smoke for the virtualized client state
+//! Fleet-scale bench + smoke for the virtualized fleet
 //! (DESIGN.md §Fleet-Virtualization): sweeps fleet sizes
-//! {100, 1k, 10k, 50k} on the native executor and reports
-//! `client_state_bytes` — the fleet's persistent footprint (per-client
-//! residuals + live shared snapshots) that replaces the dense
-//! O(clients · model) replica array.
+//! {100, 1k, 100k; 1M with `FEDDD_FLEET_FULL=1`} on the native executor
+//! and reports the three virtualized planes per run:
+//!
+//! * `client_state_bytes` — per-client residuals + live shared
+//!   snapshots + in-flight pending uploads (replaces the dense
+//!   O(clients · model) replica array);
+//! * `sim_state_bytes` — device profiles + per-client clocks + the
+//!   arrival heap (O(fleet) scalars);
+//! * `data_state_bytes` — lazy dataset store + shared partition + owned
+//!   shard indices (O(prototypes + samples·8), never O(samples · dim)).
 //!
 //! Two kinds of cases:
 //!
 //! * **timed** (100, 1k clients) — ns/round of the micro-batched round
 //!   engine at fleet scale, with state-byte case annotations;
-//! * **deterministic one-shots** (10k; 50k with `FEDDD_FLEET_FULL=1`) —
-//!   fixed seed, fixed round count, so the emitted
-//!   `client_state_*`-prefixed run-level byte totals are exactly
+//! * **deterministic one-shots** (100k; 1M with `FEDDD_FLEET_FULL=1`) —
+//!   fixed seed, fixed round count, so the emitted `client_state_*` /
+//!   `sim_state_*` / `data_state_*` run-level byte totals are exactly
 //!   reproducible and `ci/bench_diff.py` gates them like the `wire_*`
 //!   totals (any increase fails CI).
 //!
-//! **Inline gate** (the CI fleet smoke): the 10k-client, 2-round run
+//! **Inline gates** (the CI fleet smoke): the 100k-client, 2-round run
 //! under the `fleet` preset (h=1 broadcast-heavy production shape) must
 //! complete with peak client-state bytes below **10% of
-//! clients × model_size_bytes**, or the process exits non-zero. A
+//! clients × model_size_bytes**, and the *combined* resident footprint
+//! (client + sim + data planes) below the same 10% yardstick — the
+//! strictly-sublinear memory gate — or the process exits non-zero. A
 //! second deterministic case runs the delta path (h=5, sparse rounds) and
 //! requires the residual footprint to stay strictly below the dense
-//! fleet's — the complement-of-mask invariant.
+//! fleet's — the complement-of-mask invariant. The opt-in 1M case
+//! additionally runs its round twice at different worker counts and
+//! requires bitwise-identical losses, durations and global parameters.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -51,30 +61,64 @@ fn cfg(n_clients: usize, h: usize, rounds: usize, dir: &PathBuf) -> ExpConfig {
     cfg
 }
 
-/// One deterministic fixed-seed, fixed-round run; returns
-/// (peak end-of-round state bytes, final state bytes, peak residual-only
-/// bytes, model bytes, wall seconds). State bytes are independent of
-/// host timing, so these totals gate byte-exactly in CI.
+/// Byte accounting of one deterministic fleet run. Every field is
+/// independent of host timing, so the totals gate byte-exactly in CI.
+struct FleetStats {
+    /// Peak end-of-round client-state bytes.
+    peak_state: usize,
+    /// Final-round client-state bytes.
+    final_state: usize,
+    /// Peak residual-only bytes (the per-client persistent part).
+    peak_residual: usize,
+    /// Peak simulation-runtime bytes.
+    peak_sim: usize,
+    /// Data-plane bytes (constant across rounds).
+    data_bytes: usize,
+    /// One client's dense model size (the yardstick unit).
+    model_bytes: usize,
+    wall_s: f64,
+}
+
+/// One deterministic fixed-seed, fixed-round run at the given worker
+/// count (`None` ⇒ the preset's `workers = 0` auto width).
 fn deterministic_fleet(
     n_clients: usize,
     h: usize,
     rounds: usize,
+    workers: Option<usize>,
     dir: &PathBuf,
     gates: &mut Vec<String>,
-) -> (usize, usize, usize, usize, f64) {
+) -> (FleetStats, Vec<u64>, Vec<Vec<f32>>) {
     let spawned_before = total_threads_spawned();
-    let mut run = FedRun::new(cfg(n_clients, h, rounds, dir)).unwrap();
+    let mut c = cfg(n_clients, h, rounds, dir);
+    if let Some(w) = workers {
+        c.workers = w;
+    }
+    let mut run = FedRun::new(c).unwrap();
     let model_bytes = run.clients[0].u_bytes();
     let wall0 = Instant::now();
-    let mut peak_state = 0usize;
-    let mut last_state = 0usize;
-    let mut peak_residual = 0usize;
+    let mut stats = FleetStats {
+        peak_state: 0,
+        final_state: 0,
+        peak_residual: 0,
+        peak_sim: 0,
+        data_bytes: run.data_state_bytes(),
+        model_bytes,
+        wall_s: 0.0,
+    };
+    // Bitwise digest of the run: per-round loss/duration bits (the
+    // cross-worker identity check of the opt-in 1M case).
+    let mut digest: Vec<u64> = Vec::new();
     for _ in 0..rounds {
         let out = run.step_round().unwrap();
-        peak_state = peak_state.max(out.client_state_bytes);
-        last_state = out.client_state_bytes;
-        peak_residual = peak_residual.max(run.client_residual_bytes());
+        stats.peak_state = stats.peak_state.max(out.client_state_bytes);
+        stats.final_state = out.client_state_bytes;
+        stats.peak_residual = stats.peak_residual.max(run.client_residual_bytes());
+        stats.peak_sim = stats.peak_sim.max(out.sim_state_bytes);
+        digest.push(out.mean_loss.to_bits());
+        digest.push(out.duration.to_bits());
     }
+    stats.wall_s = wall0.elapsed().as_secs_f64();
     // Spawn invariant at fleet scale: `rounds` rounds over `n_clients`
     // clients dispatch thousands of micro-batches, yet the whole run may
     // spawn at most its pool (`workers = 0` ⇒ available parallelism).
@@ -86,7 +130,9 @@ fn deterministic_fleet(
             run.pool_workers()
         ));
     }
-    (peak_state, last_state, peak_residual, model_bytes, wall0.elapsed().as_secs_f64())
+    let globals: Vec<Vec<f32>> =
+        run.global_params.iter().map(|t| t.data().to_vec()).collect();
+    (stats, digest, globals)
 }
 
 fn main() {
@@ -130,59 +176,105 @@ fn main() {
     // h=5 keeps rounds 2..3 mask-sparse, so every client carries its
     // complement-of-mask residual — the footprint the virtualization
     // must keep strictly below the dense fleet's.
-    let (peak_1k, final_1k, resid_1k, model_bytes, wall_1k) =
-        deterministic_fleet(1000, 5, 3, &dir, &mut gate_failures);
-    let dense_1k = 1000 * model_bytes;
+    let (s1k, _, _) = deterministic_fleet(1000, 5, 3, None, &dir, &mut gate_failures);
+    let dense_1k = 1000 * s1k.model_bytes;
     println!(
-        "fleet::delta_1k_h5_3r  peak_state {peak_1k}B  final {final_1k}B  \
-         residuals {resid_1k}B  dense {dense_1k}B  ({:.2}x below dense)  wall {wall_1k:.1}s",
-        dense_1k as f64 / peak_1k.max(1) as f64
+        "fleet::delta_1k_h5_3r  peak_state {}B  final {}B  residuals {}B  \
+         sim {}B  data {}B  dense {dense_1k}B  ({:.2}x below dense)  wall {:.1}s",
+        s1k.peak_state,
+        s1k.final_state,
+        s1k.peak_residual,
+        s1k.peak_sim,
+        s1k.data_bytes,
+        dense_1k as f64 / s1k.peak_state.max(1) as f64,
+        s1k.wall_s
     );
-    b.annotate_run("client_state_peak_bytes_1k_h5_3r", Json::Num(peak_1k as f64));
-    b.annotate_run("client_state_final_bytes_1k_h5_3r", Json::Num(final_1k as f64));
+    b.annotate_run("client_state_peak_bytes_1k_h5_3r", Json::Num(s1k.peak_state as f64));
+    b.annotate_run("client_state_final_bytes_1k_h5_3r", Json::Num(s1k.final_state as f64));
+    b.annotate_run("sim_state_peak_bytes_1k_h5_3r", Json::Num(s1k.peak_sim as f64));
+    b.annotate_run("data_state_bytes_1k_h5_3r", Json::Num(s1k.data_bytes as f64));
     b.annotate_run("dense_state_bytes_1k", Json::Num(dense_1k as f64));
-    if resid_1k == 0 {
+    if s1k.peak_residual == 0 {
         gate_failures
             .push("sparse rounds left no residual — the delta path never ran".into());
-    } else if resid_1k >= dense_1k {
+    } else if s1k.peak_residual >= dense_1k {
         gate_failures.push(format!(
-            "residual state {resid_1k}B not strictly below the dense fleet {dense_1k}B"
+            "residual state {}B not strictly below the dense fleet {dense_1k}B",
+            s1k.peak_residual
         ));
     }
 
-    // ---- the 10k-client fleet smoke (the CI acceptance gate) ----
-    let (peak_10k, final_10k, _resid_10k, model_bytes, wall_10k) =
-        deterministic_fleet(10_000, 1, 2, &dir, &mut gate_failures);
-    let dense_10k = 10_000 * model_bytes;
-    let limit = dense_10k / 10; // < 10% of clients × model_size_bytes
+    // ---- the 100k-client fleet smoke (the CI acceptance gate) ----
+    let (s100k, _, _) = deterministic_fleet(100_000, 1, 2, None, &dir, &mut gate_failures);
+    let dense_100k = 100_000 * s100k.model_bytes;
+    let limit = dense_100k / 10; // < 10% of clients × model_size_bytes
+    let combined = s100k.peak_state + s100k.peak_sim + s100k.data_bytes;
     println!(
-        "fleet::smoke_10k_h1_2r  peak_state {peak_10k}B  final {final_10k}B  \
-         dense {dense_10k}B  limit {limit}B  wall {wall_10k:.1}s"
+        "fleet::smoke_100k_h1_2r  peak_state {}B  final {}B  sim {}B  data {}B  \
+         combined {combined}B  dense {dense_100k}B  limit {limit}B  wall {:.1}s",
+        s100k.peak_state, s100k.final_state, s100k.peak_sim, s100k.data_bytes, s100k.wall_s
     );
-    b.annotate_run("client_state_peak_bytes_10k_h1_2r", Json::Num(peak_10k as f64));
-    b.annotate_run("client_state_final_bytes_10k_h1_2r", Json::Num(final_10k as f64));
-    b.annotate_run("dense_state_bytes_10k", Json::Num(dense_10k as f64));
-    b.annotate_run("fleet_smoke_wall_s", Json::Num(wall_10k));
-
-    // ---- optional 50k sweep point (slow; opt-in, not part of the CI
-    // quick run, so its keys never enter the baseline key set) ----
-    if std::env::var("FEDDD_FLEET_FULL").is_ok() {
-        let (peak_50k, final_50k, _r, mb, wall_50k) =
-            deterministic_fleet(50_000, 1, 2, &dir, &mut gate_failures);
-        println!(
-            "fleet::smoke_50k_h1_2r  peak_state {peak_50k}B  final {final_50k}B  \
-             dense {}B  wall {wall_50k:.1}s",
-            50_000 * mb
-        );
-        b.annotate_run("client_state_peak_bytes_50k_h1_2r", Json::Num(peak_50k as f64));
-    }
-
-    if peak_10k >= limit {
+    b.annotate_run("client_state_peak_bytes_100k_h1_2r", Json::Num(s100k.peak_state as f64));
+    b.annotate_run(
+        "client_state_final_bytes_100k_h1_2r",
+        Json::Num(s100k.final_state as f64),
+    );
+    b.annotate_run("sim_state_peak_bytes_100k_h1_2r", Json::Num(s100k.peak_sim as f64));
+    b.annotate_run("data_state_bytes_100k_h1_2r", Json::Num(s100k.data_bytes as f64));
+    b.annotate_run("dense_state_bytes_100k", Json::Num(dense_100k as f64));
+    b.annotate_run("fleet_smoke_wall_s", Json::Num(s100k.wall_s));
+    if s100k.peak_state >= limit {
         gate_failures.push(format!(
-            "10k-client fleet smoke peak client-state {peak_10k}B is not below \
-             10% of the dense fleet ({limit}B)"
+            "100k-client fleet smoke peak client-state {}B is not below \
+             10% of the dense fleet ({limit}B)",
+            s100k.peak_state
         ));
     }
+    if combined >= limit {
+        gate_failures.push(format!(
+            "100k-client combined resident footprint {combined}B (client + sim + data) \
+             is not below 10% of the dense fleet ({limit}B): some plane regressed to \
+             O(clients x model)"
+        ));
+    }
+
+    // ---- optional 1M-client round (slow; opt-in, not part of the CI
+    // quick run, so its keys never enter the baseline key set) ----
+    // Run the same single round at two worker counts: the memory gate
+    // must hold at megafleet scale AND the round must be bitwise
+    // identical — the determinism contract does not decay with n.
+    if std::env::var("FEDDD_FLEET_FULL").is_ok() {
+        let (s1m, digest_a, globals_a) =
+            deterministic_fleet(1_000_000, 1, 1, Some(2), &dir, &mut gate_failures);
+        let (_, digest_b, globals_b) =
+            deterministic_fleet(1_000_000, 1, 1, Some(4), &dir, &mut gate_failures);
+        let dense_1m = 1_000_000 * s1m.model_bytes;
+        let limit_1m = dense_1m / 10;
+        let combined_1m = s1m.peak_state + s1m.peak_sim + s1m.data_bytes;
+        println!(
+            "fleet::smoke_1m_h1_1r  peak_state {}B  sim {}B  data {}B  \
+             combined {combined_1m}B  dense {dense_1m}B  limit {limit_1m}B  wall {:.1}s",
+            s1m.peak_state, s1m.peak_sim, s1m.data_bytes, s1m.wall_s
+        );
+        b.annotate_run("client_state_peak_bytes_1m_h1_1r", Json::Num(s1m.peak_state as f64));
+        b.annotate_run("sim_state_peak_bytes_1m_h1_1r", Json::Num(s1m.peak_sim as f64));
+        b.annotate_run("data_state_bytes_1m_h1_1r", Json::Num(s1m.data_bytes as f64));
+        if combined_1m >= limit_1m {
+            gate_failures.push(format!(
+                "1M-client combined resident footprint {combined_1m}B is not below \
+                 10% of the dense fleet ({limit_1m}B)"
+            ));
+        }
+        if digest_a != digest_b {
+            gate_failures
+                .push("1M-client round loss/duration digest differs across worker counts".into());
+        }
+        if globals_a != globals_b {
+            gate_failures
+                .push("1M-client round global parameters differ across worker counts".into());
+        }
+    }
+
     // Whole-process spawn total (observability; the per-run gates above
     // are what fail on an O(micro-batches) regression).
     b.annotate_run("thread_spawns_process_total", Json::Num(total_threads_spawned() as f64));

@@ -163,6 +163,16 @@ mod tests {
     }
 
     #[test]
+    fn to_config_knows_virtualization_knobs() {
+        let a = parse("train --data_mode eager --snapshot_ring_cap 4");
+        let (cfg, leftover) = a.to_config().unwrap();
+        assert!(leftover.is_empty());
+        assert_eq!(cfg.data_mode, "eager");
+        assert_eq!(cfg.snapshot_ring_cap, 4);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn bad_number_errors() {
         let a = parse("x --rounds abc");
         assert!(a.get_usize("rounds").is_err());

@@ -25,9 +25,57 @@
 //! folds bitmap/COO payloads straight into the Eq. 4 num/den partials
 //! (see `aggregation`), bitwise-identical to the dense mask path.
 
+use std::sync::Mutex;
+
 use crate::model::{Layer, LayerKind, ModelSpec};
 use crate::selection::ChannelMask;
 use crate::tensor::Tensor;
+
+/// Recycling pool for decoded upload buffers: the `units`/`values` pairs
+/// a [`WireUpload`] owns. An upload is encoded on a pool worker, folded
+/// once by `Aggregator::absorb_wire` on the coordinator thread, and then
+/// dropped — at fleet scale that is two short-lived heap allocations per
+/// client per round. The engine returns folded uploads here
+/// ([`recycle_wire_upload`]) and [`encode_upload_with`] draws from the
+/// pool before allocating fresh.
+///
+/// Determinism-safe by construction: a drawn buffer is cleared and then
+/// fully rewritten (`extend` over exactly the kept units), every byte
+/// accounting is length-based, and the wire form never sees capacity —
+/// so pool hits and misses produce identical uploads (asserted by
+/// `recycled_buffers_encode_identically` below and the cross-worker
+/// fleet battery).
+static WIRE_SCRATCH: Mutex<Vec<(Vec<u32>, Vec<f32>)>> = Mutex::new(Vec::new());
+
+/// Freelist size cap: enough for every layer of a full micro-batch of
+/// in-flight uploads, small enough that the pool itself stays O(workers),
+/// never O(fleet).
+const WIRE_SCRATCH_CAP: usize = 1024;
+
+fn take_wire_buffers() -> (Vec<u32>, Vec<f32>) {
+    let mut pool = WIRE_SCRATCH.lock().unwrap_or_else(|e| e.into_inner());
+    pool.pop().unwrap_or_default()
+}
+
+/// Return a folded upload's owned buffers to the encode freelist. Call
+/// after `absorb_wire` has consumed the upload; the buffers are cleared
+/// here and fully overwritten by their next encode.
+pub fn recycle_wire_upload(up: WireUpload) {
+    let mut pool = WIRE_SCRATCH.lock().unwrap_or_else(|e| e.into_inner());
+    for mut lw in up.layers {
+        if pool.len() >= WIRE_SCRATCH_CAP {
+            break;
+        }
+        lw.units.clear();
+        lw.values.clear();
+        pool.push((lw.units, lw.values));
+    }
+}
+
+/// Buffer pairs currently parked in the encode freelist (observability).
+pub fn wire_scratch_len() -> usize {
+    WIRE_SCRATCH.lock().unwrap_or_else(|e| e.into_inner()).len()
+}
 
 /// Serialized-form magic bytes ("FedDD Wire Upload").
 pub const WIRE_MAGIC: [u8; 4] = *b"FDWU";
@@ -141,8 +189,23 @@ pub fn unit_group(layer: &Layer) -> usize {
 /// client-state residuals (`coordinator::state`), so both sides agree on
 /// the layout byte for byte.
 pub fn gather_unit_values(layer: &Layer, w: &[f32], b: &[f32], units: &[u32]) -> Vec<f32> {
+    let mut values = Vec::with_capacity(units.len() * (unit_group(layer) + 1));
+    gather_unit_values_into(layer, w, b, units, &mut values);
+    values
+}
+
+/// Append-into form of [`gather_unit_values`]: writes the value groups
+/// onto the end of `values` (callers clear first when reusing a recycled
+/// buffer). The wire layout is identical to the allocating form.
+pub fn gather_unit_values_into(
+    layer: &Layer,
+    w: &[f32],
+    b: &[f32],
+    units: &[u32],
+    values: &mut Vec<f32>,
+) {
     let group = unit_group(layer);
-    let mut values = Vec::with_capacity(units.len() * (group + 1));
+    values.reserve(units.len() * (group + 1));
     match layer.kind {
         LayerKind::Conv { .. } => {
             for &k in units {
@@ -162,7 +225,6 @@ pub fn gather_unit_values(layer: &Layer, w: &[f32], b: &[f32], units: &[u32]) ->
             }
         }
     }
-    values
 }
 
 /// Scatter value groups laid out by [`gather_unit_values`] back into
@@ -497,13 +559,16 @@ pub fn encode_upload_with(
         let b = params[2 * l + 1].data();
         assert_eq!(w.len(), layer.out_dim * group, "layer {l} weight numel");
         assert_eq!(b.len(), layer.out_dim, "layer {l} bias numel");
-        let units: Vec<u32> = sel
-            .iter()
-            .enumerate()
-            .filter(|(_, &s)| s)
-            .map(|(k, _)| k as u32)
-            .collect();
-        let values = gather_unit_values(layer, w, b, &units);
+        let (mut units, mut values) = take_wire_buffers();
+        units.clear();
+        units.extend(
+            sel.iter()
+                .enumerate()
+                .filter(|(_, &s)| s)
+                .map(|(k, _)| k as u32),
+        );
+        values.clear();
+        gather_unit_values_into(layer, w, b, &units, &mut values);
         let n_sel = units.len();
         let encoding = match mode {
             CodecMode::Bitmap => Encoding::Bitmap,
@@ -648,6 +713,27 @@ mod tests {
         let overhead =
             GLOBAL_HEADER_BYTES + CHECKSUM_BYTES + spec.layers.len() * LAYER_HEADER_BYTES;
         assert_eq!(up.wire_len(), spec.size_bytes() + overhead);
+    }
+
+    #[test]
+    fn recycled_buffers_encode_identically() {
+        // Encode, recycle, re-encode: the second pass draws parked
+        // buffers from the freelist and must produce the same upload
+        // bit for bit (and the same serialized wire bytes).
+        let spec = ModelSpec::get("mlp", 0.5).unwrap();
+        let mut rng = Rng::new(7);
+        let params = spec.init_params(&mut rng);
+        let half: Vec<usize> = (0..spec.layers[0].out_dim / 2).collect();
+        let one = [3usize];
+        let tail: Vec<usize> = (0..spec.layers[2].out_dim).collect();
+        let m = mask_with(&spec, &[&half[..], &one[..], &tail[..]]);
+        let want = encode_upload(&m, &params, &spec);
+        recycle_wire_upload(want.clone());
+        let got = encode_upload(&m, &params, &spec);
+        assert_eq!(got, want);
+        assert_eq!(got.to_bytes(), want.to_bytes());
+        assert_eq!(got.wire_len(), want.wire_len());
+        assert_eq!(got.mem_bytes(), want.mem_bytes());
     }
 
     #[test]

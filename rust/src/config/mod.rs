@@ -90,6 +90,15 @@ pub struct ExpConfig {
     /// "coo" (ablations and benches; dense cannot represent a partial
     /// layer, so it is not forcible).
     pub codec: String,
+    /// Train-set storage: "lazy" (the default — samples are regenerated
+    /// on demand from the dataset seed, O(prototypes) resident) or
+    /// "eager" (materialize every sample up front; A/B toggle for the
+    /// lazy-vs-eager equivalence sweeps).
+    pub data_mode: String,
+    /// Maximum live snapshots the ring may pin under semi-async straggler
+    /// tails before the engine evicts the oldest round's dependents
+    /// (DESIGN.md §Fleet-Virtualization). `0` = uncapped.
+    pub snapshot_ring_cap: usize,
 }
 
 impl Default for ExpConfig {
@@ -127,6 +136,8 @@ impl Default for ExpConfig {
             deadline_s: 0.0,
             staleness_beta: 0.5,
             codec: "auto".into(),
+            data_mode: "lazy".into(),
+            snapshot_ring_cap: 0,
         }
     }
 }
@@ -291,6 +302,17 @@ impl ExpConfig {
             "unknown codec {:?} (auto|bitmap|coo)",
             self.codec
         );
+        anyhow::ensure!(
+            ["lazy", "eager"].contains(&self.data_mode.as_str()),
+            "unknown data_mode {:?} (lazy|eager)",
+            self.data_mode
+        );
+        anyhow::ensure!(
+            self.snapshot_ring_cap == 0 || self.snapshot_ring_cap >= 2,
+            "snapshot_ring_cap {} must be 0 (uncapped) or >= 2 (the \
+             current and previous rounds are always momentarily live)",
+            self.snapshot_ring_cap
+        );
         let known_family =
             ["mlp", "cnn1", "cnn2", "het_a", "het_b"].contains(&self.model.as_str());
         // Specific sub-models (e.g. "het_a_3") run homogeneously (Fig. 3).
@@ -339,6 +361,8 @@ impl ExpConfig {
             ("deadline_s", Json::Num(self.deadline_s)),
             ("staleness_beta", Json::Num(self.staleness_beta)),
             ("codec", Json::s(&self.codec)),
+            ("data_mode", Json::s(&self.data_mode)),
+            ("snapshot_ring_cap", Json::Num(self.snapshot_ring_cap as f64)),
         ])
     }
 
@@ -388,6 +412,9 @@ impl ExpConfig {
             deadline_s: gn("deadline_s", d.deadline_s),
             staleness_beta: gn("staleness_beta", d.staleness_beta),
             codec: gs("codec", &d.codec),
+            data_mode: gs("data_mode", &d.data_mode),
+            snapshot_ring_cap: gn("snapshot_ring_cap", d.snapshot_ring_cap as f64)
+                as usize,
         };
         Ok(cfg)
     }
@@ -434,6 +461,8 @@ impl ExpConfig {
             "deadline_s" => self.deadline_s = value.parse()?,
             "staleness_beta" => self.staleness_beta = value.parse()?,
             "codec" => self.codec = value.into(),
+            "data_mode" => self.data_mode = value.into(),
+            "snapshot_ring_cap" => self.snapshot_ring_cap = value.parse()?,
             "rare_classes" => {
                 self.rare_classes = value
                     .split(',')
@@ -573,6 +602,27 @@ mod tests {
         assert!(c.validate().is_err());
         c.codec = "gzip".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn virtualization_knobs_roundtrip_and_validate() {
+        let mut c = ExpConfig::smoke();
+        assert_eq!(c.data_mode, "lazy"); // virtual train store is the default
+        assert_eq!(c.snapshot_ring_cap, 0); // uncapped by default
+        c.set("data_mode", "eager").unwrap();
+        c.set("snapshot_ring_cap", "3").unwrap();
+        assert_eq!(c.data_mode, "eager");
+        assert_eq!(c.snapshot_ring_cap, 3);
+        c.validate().unwrap();
+        let back = ExpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+        c.data_mode = "mmap".into();
+        assert!(c.validate().is_err());
+        c.data_mode = "lazy".into();
+        c.snapshot_ring_cap = 1; // can't hold current + previous round
+        assert!(c.validate().is_err());
+        c.snapshot_ring_cap = 2;
+        c.validate().unwrap();
     }
 
     #[test]

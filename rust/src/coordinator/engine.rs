@@ -20,6 +20,15 @@
 //! fleet state is O(Σ_n residual_n + live snapshots) — zero per client
 //! right after a full broadcast ([`FedRun::client_state_bytes`]).
 //!
+//! Two more planes are virtualized alongside the clients: the **data
+//! plane** (`cfg.data_mode = "lazy"` regenerates training samples from
+//! the seed on demand and the partitions are shared strided /
+//! class-strided views, [`FedRun::data_state_bytes`]) and the **snapshot
+//! ring** (`cfg.snapshot_ring_cap` bounds the live end-of-round
+//! snapshots by evicting the oldest round's dependents,
+//! [`FedRun::enforce_ring_cap`]). The simulation runtime's own footprint
+//! is reported as [`FedRun::sim_state_bytes`].
+//!
 //! # Parallel round execution
 //!
 //! FedDD's round body is embarrassingly parallel across clients: local
@@ -71,7 +80,7 @@ use std::time::Instant;
 
 use crate::aggregation::{staleness_weight, AggBackend, Aggregator};
 use crate::baselines;
-use crate::codec::{encode_upload_with, CodecMode, EncodingMix, WireUpload};
+use crate::codec::{encode_upload_with, recycle_wire_upload, CodecMode, EncodingMix, WireUpload};
 use crate::config::ExpConfig;
 use crate::data::{FedDataset, Partition, PartitionKind, SynthSpec};
 use crate::metrics::{EvalAccumulator, EvalRecord, RoundRecord, RunResult};
@@ -79,7 +88,8 @@ use crate::model::{coverage_rates, extract_params_into, ModelId, ModelSpec};
 use crate::runtime::Runtime;
 use crate::selection::{select_mask, ChannelMask, Policy};
 use crate::simnet::{
-    downlink_bytes, ArrivalEvent, ClientClocks, EventQueue, Fleet, RoundTiming, VirtualClock,
+    downlink_bytes, ArrivalEvent, ClientClocks, DeviceProfile, EventQueue, Fleet, RoundTiming,
+    VirtualClock,
 };
 use crate::solver::{allocate_fast, AllocInput, AllocParams};
 use crate::tensor::{copy_tensors_into, Tensor};
@@ -151,6 +161,13 @@ pub struct RoundOutcome {
     /// residual bytes + live shared snapshots
     /// ([`FedRun::client_state_bytes`]).
     pub client_state_bytes: usize,
+    /// Simulation-runtime footprint at the end of the round: device
+    /// profiles + per-client clocks + the arrival heap
+    /// ([`FedRun::sim_state_bytes`]).
+    pub sim_state_bytes: usize,
+    /// Dataset + partition + shard-index footprint — constant across
+    /// rounds ([`FedRun::data_state_bytes`]).
+    pub data_state_bytes: usize,
 }
 
 pub struct FedRun {
@@ -185,8 +202,16 @@ pub struct FedRun {
     events: EventQueue,
     /// Per-client busy-until clocks (semi-async mode).
     client_clocks: ClientClocks,
-    /// Dispatched-but-unfolded uploads per client (semi-async mode).
-    pending: Vec<Option<PendingUpdate>>,
+    /// Dispatched-but-unfolded uploads keyed by client (semi-async mode).
+    /// A `BTreeMap` keeps iteration deterministic while costing O(in
+    /// flight), not O(fleet): with nothing outstanding the map is empty,
+    /// where a `Vec<Option<_>>` would hold a fleet-sized slab of `None`s.
+    pending: BTreeMap<usize, PendingUpdate>,
+    /// Dataset + partition + shard-index bytes, computed once at build
+    /// (all three are immutable for the life of the run).
+    data_state_bytes: usize,
+    /// Cumulative clients evicted by [`Self::enforce_ring_cap`].
+    snapshot_evictions: usize,
 }
 
 impl FedRun {
@@ -202,9 +227,20 @@ impl FedRun {
         }
         let test_n = (cfg.test_n / 64).max(1) * 64; // eval batch alignment
         let mut data_rng = rng.split(1);
-        let ds = synth.generate(cfg.train_per_client * cfg.n_clients, test_n, &mut data_rng);
-        // Partition (the IID deal stays lazy: one shared permutation,
-        // per-client strided views — no per-client index heap at scale).
+        // `data_mode == "lazy"` (the default) keeps the training store
+        // virtual: samples regenerate from the seed on demand,
+        // byte-identical to the eager tensor (`data::synth`), so the
+        // resident dataset is O(prototypes), not O(samples · dim).
+        let ds = synth.generate_mode(
+            cfg.train_per_client * cfg.n_clients,
+            test_n,
+            &mut data_rng,
+            cfg.data_mode == "lazy",
+        );
+        // Partition (every deal stays lazy: the IID share is one shared
+        // permutation with per-client strided views, the non-IID deals
+        // are class-strided segment tables — no per-client index heap at
+        // scale).
         let kind = PartitionKind::by_name(&cfg.partition)?;
         let mut part_rng = rng.split(2);
         let part = Partition::build(kind, &ds, cfg.n_clients, &mut part_rng);
@@ -264,6 +300,13 @@ impl FedRun {
                 model_id,
             });
         }
+        // Data-plane footprint (constant for the life of the run): the
+        // dataset store, the shared partition representation, and any
+        // per-client shard indices that are actually owned heap (zero for
+        // the lazy strided/class-strided deals).
+        let data_state_bytes = ds.mem_bytes()
+            + part.mem_bytes()
+            + clients.iter().map(|c| c.data.owned_bytes()).sum::<usize>();
         let cr = {
             let specs: Vec<&ModelSpec> = clients.iter().map(|c| &c.spec).collect();
             coverage_rates(&specs, &global_spec)
@@ -294,7 +337,9 @@ impl FedRun {
             snapshots,
             events: EventQueue::new(),
             client_clocks: ClientClocks::new(n),
-            pending: vec![None; n],
+            pending: BTreeMap::new(),
+            data_state_bytes,
+            snapshot_evictions: 0,
         })
     }
 
@@ -357,8 +402,7 @@ impl FedRun {
     /// plus the residual each upload carries for its arrival-time merge.
     pub fn pending_bytes(&self) -> usize {
         self.pending
-            .iter()
-            .flatten()
+            .values()
             .map(|pu| {
                 pu.wire.mem_bytes() + pu.residual.as_ref().map_or(0, |r| r.heap_bytes())
             })
@@ -373,6 +417,62 @@ impl FedRun {
     /// Rounds whose snapshot is still alive (ring observability).
     pub fn live_snapshot_rounds(&self) -> Vec<usize> {
         self.snapshots.live_rounds()
+    }
+
+    /// Simulation-runtime footprint: the per-client device profiles (held
+    /// inline in the client states), the per-client busy-until clocks,
+    /// and the in-flight arrival heap. O(fleet) by design — each term is
+    /// a handful of scalars per client — and reported per round so the
+    /// fleet benches can gate it against the dense `clients · model`
+    /// yardstick alongside [`Self::client_state_bytes`].
+    pub fn sim_state_bytes(&self) -> usize {
+        self.clients.len() * std::mem::size_of::<DeviceProfile>()
+            + self.client_clocks.mem_bytes()
+            + self.events.mem_bytes()
+    }
+
+    /// Dataset + partition + owned shard-index bytes (constant across
+    /// rounds; see `FedRun::new`).
+    pub fn data_state_bytes(&self) -> usize {
+        self.data_state_bytes
+    }
+
+    /// Cumulative clients evicted by the snapshot-ring cap.
+    pub fn snapshot_evictions(&self) -> usize {
+        self.snapshot_evictions
+    }
+
+    /// Enforce `cfg.snapshot_ring_cap` on the live snapshot ring
+    /// (DESIGN.md §Fleet-Virtualization). While more than `cap` snapshot
+    /// rounds are alive, every client still based on the oldest live
+    /// round is marked [`ClientParams::Evicted`], dropping its reference
+    /// so the snapshot's memory is freed. An in-flight client never
+    /// reads its pinned base again (its arrival rebases onto the
+    /// close-time snapshot), so for it eviction is bitwise neutral; an
+    /// idle client is force-re-synced at its next dispatch with a
+    /// full-model downlink charge. `cap == 0` disables the gate.
+    fn enforce_ring_cap(&mut self) {
+        let cap = self.cfg.snapshot_ring_cap;
+        if cap == 0 {
+            return;
+        }
+        while self.snapshots.live_count() > cap {
+            let Some(oldest) = self.snapshots.oldest_live_round() else { break };
+            let mut evicted = 0usize;
+            for c in &mut self.clients {
+                if c.params.base_round() == Some(oldest) {
+                    c.params = ClientParams::Evicted;
+                    evicted += 1;
+                }
+            }
+            self.snapshot_evictions += evicted;
+            if evicted == 0 {
+                // Only client states pin snapshots, so this is
+                // unreachable; the break guards against an accounting bug
+                // turning into a spin.
+                break;
+            }
+        }
     }
 
     /// Evaluate the global model on the test set.
@@ -504,14 +604,24 @@ impl FedRun {
                 scratch::with_scratch(|s| -> anyhow::Result<ClientRoundOutput> {
                     // A first-ever dispatch always downloads the full
                     // model: the client has never held the global, so a
-                    // mask-sparse slice would merge into nothing.
-                    let full_bc = round_full_broadcast || c.participations == 0;
+                    // mask-sparse slice would merge into nothing. A
+                    // ring-cap-evicted client is in the same boat — its
+                    // base snapshot is gone, so it is force-re-synced
+                    // with a full download charged to its link.
+                    let evicted = matches!(c.params, ClientParams::Evicted);
+                    let full_bc =
+                        round_full_broadcast || c.participations == 0 || evicted;
                     // Materialize the dense model for this round only
                     // (the baselines re-sync to the current global at
                     // dispatch and never select, so they skip the
-                    // pre-training copy).
+                    // pre-training copy; an evicted FedDD client re-syncs
+                    // from the live global like a baseline would).
                     if is_feddd {
-                        c.params.materialize_into(&c.spec, &mut s.params);
+                        if evicted {
+                            extract_params_into(gp, &c.spec, &mut s.params);
+                        } else {
+                            c.params.materialize_into(&c.spec, &mut s.params);
+                        }
                         copy_tensors_into(&s.params, &mut s.params_before);
                     } else {
                         extract_params_into(gp, &c.spec, &mut s.params);
@@ -659,7 +769,10 @@ impl FedRun {
         let mut uploaded = 0usize;
         let mut wire_bytes = 0usize;
         let mut encodings = EncodingMix::default();
-        let mut timings: Vec<RoundTiming> = Vec::with_capacity(n_parts);
+        // The round clock only needs max_n(t_n), and `f64::max` is
+        // order-independent — a running fold replaces the old O(fleet)
+        // timing buffer without moving a bit of the result.
+        let mut slowest = 0.0f64;
         let mut rebases: Vec<(usize, Option<SparseResidual>)> = Vec::with_capacity(n_parts);
         // Micro-batches span the *whole* participant list (full training
         // fan-out width regardless of the shard partition); each output
@@ -684,8 +797,11 @@ impl FedRun {
                     wire_bytes += o.wire.wire_len();
                     encodings.merge(o.wire.mix());
                     shards[pos / shard_len].absorb_wire(&o.wire, o.m_n)?;
+                    // The upload is folded; its buffers go back to the
+                    // encode freelist for the next micro-batch.
+                    recycle_wire_upload(o.wire);
                     pos += 1;
-                    timings.push(o.timing);
+                    slowest = slowest.max(o.timing.total());
                     rebases.push((o.slot, o.residual));
                 }
             }
@@ -711,9 +827,10 @@ impl FedRun {
                 self.clients[slot].params =
                     ClientParams::after_download(snap.clone(), residual);
             }
+            self.enforce_ring_cap();
         }
 
-        let duration = self.clock.advance_round(&timings);
+        let duration = self.clock.advance_round_by(slowest);
 
         // Realized dropout: the byte fraction the masks actually saved.
         let mean_dropout = if cfg.scheme == "feddd" && t > 1 {
@@ -734,6 +851,8 @@ impl FedRun {
             stragglers: 0,
             mean_staleness: 0.0,
             client_state_bytes: self.client_state_bytes(),
+            sim_state_bytes: self.sim_state_bytes(),
+            data_state_bytes: self.data_state_bytes,
         })
     }
 
@@ -780,13 +899,16 @@ impl FedRun {
                 let finish = round_start + o.timing.total();
                 self.events.push(ArrivalEvent { finish, client: o.slot, dispatch_round: t });
                 self.client_clocks.dispatch(o.slot, finish);
-                self.pending[o.slot] = Some(PendingUpdate {
-                    wire: o.wire,
-                    residual: o.residual,
-                    loss: o.loss,
-                    uploaded: o.uploaded,
-                    full_broadcast: o.full_broadcast,
-                });
+                self.pending.insert(
+                    o.slot,
+                    PendingUpdate {
+                        wire: o.wire,
+                        residual: o.residual,
+                        loss: o.loss,
+                        uploaded: o.uploaded,
+                        full_broadcast: o.full_broadcast,
+                    },
+                );
             }
         }
 
@@ -808,6 +930,8 @@ impl FedRun {
                 stragglers: 0,
                 mean_staleness: 0.0,
                 client_state_bytes: self.client_state_bytes(),
+                sim_state_bytes: self.sim_state_bytes(),
+                data_state_bytes: self.data_state_bytes,
             });
         }
         let quorum_k = ((cfg.quorum * in_flight as f64).ceil() as usize).clamp(1, in_flight);
@@ -839,8 +963,9 @@ impl FedRun {
             let mut fresh: Vec<(usize, &WireUpload)> = Vec::new();
             let mut stale: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
             for ev in &arrivals {
-                let pu = self.pending[ev.client]
-                    .as_ref()
+                let pu = self
+                    .pending
+                    .get(&ev.client)
                     .expect("arrival without a pending upload");
                 let s = t - ev.dispatch_round;
                 uploaded += pu.uploaded;
@@ -862,7 +987,7 @@ impl FedRun {
             for (&s, cohort) in &stale {
                 let mut part = Aggregator::new(&self.global_spec, self.backend);
                 for &n in cohort {
-                    let pu = self.pending[n].as_ref().expect("stale cohort client");
+                    let pu = self.pending.get(&n).expect("stale cohort client");
                     part.absorb_wire(&pu.wire, self.clients[n].m_n() as f32)?;
                 }
                 agg.absorb(&part, staleness_weight(s, cfg.staleness_beta))?;
@@ -884,16 +1009,25 @@ impl FedRun {
             let snap = self.snapshots.publish(t, &self.global_params);
             for ev in &arrivals {
                 let n = ev.client;
-                let pu = self.pending[n].take().expect("arrival without a pending upload");
+                let pu = self
+                    .pending
+                    .remove(&n)
+                    .expect("arrival without a pending upload");
                 self.clients[n].params = if pu.full_broadcast {
                     ClientParams::synced(snap.clone())
                 } else {
                     ClientParams::after_download(snap.clone(), pu.residual)
                 };
+                recycle_wire_upload(pu.wire);
             }
+            self.enforce_ring_cap();
         } else {
             for ev in &arrivals {
-                self.pending[ev.client].take().expect("arrival without a pending upload");
+                let pu = self
+                    .pending
+                    .remove(&ev.client)
+                    .expect("arrival without a pending upload");
+                recycle_wire_upload(pu.wire);
             }
         }
 
@@ -919,6 +1053,8 @@ impl FedRun {
             stragglers,
             mean_staleness,
             client_state_bytes: self.client_state_bytes(),
+            sim_state_bytes: self.sim_state_bytes(),
+            data_state_bytes: self.data_state_bytes,
         })
     }
 
@@ -981,6 +1117,8 @@ impl FedRun {
                 stragglers: out.stragglers,
                 mean_staleness: out.mean_staleness,
                 client_state_bytes: out.client_state_bytes,
+                sim_state_bytes: out.sim_state_bytes,
+                data_state_bytes: out.data_state_bytes,
             });
             if t % self.cfg.eval_every == 0 || t == self.cfg.rounds {
                 let (acc, loss, pca) = self.evaluate()?;

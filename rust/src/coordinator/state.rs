@@ -36,6 +36,25 @@
 //! after a full broadcast, and after any round whose upload mask kept
 //! every unit (round 1's `D¹ = 0`, or a client allocated `d = 0`).
 
+//! # Capping the ring
+//!
+//! Uncapped, a pathological semi-async straggler tail pins one snapshot
+//! per distinct dispatch round still in flight — O(tail · model) shared
+//! bytes. With `snapshot_ring_cap > 0` the engine evicts the oldest live
+//! round's dependents to [`ClientParams::Evicted`] whenever the live
+//! count exceeds the cap, which drops their `Arc`s and frees the
+//! snapshot. Two cases, one variant:
+//!
+//! * **In-flight dependents** (dispatched, not yet arrived): their pinned
+//!   pre-dispatch base is dead weight — the arrival path rebases onto the
+//!   close-time snapshot using only the `PendingUpdate` residual, and the
+//!   dispatch filter skips busy clients — so evicting them is *bitwise
+//!   neutral*.
+//! * **Idle dependents**: their state is genuinely lost; the next
+//!   dispatch detects `Evicted` and forces a full re-sync (an Eq. 6-style
+//!   full download, charged through `simnet::downlink_bytes`) — a
+//!   deliberate, accounted numeric change.
+
 use std::sync::{Arc, Weak};
 
 use crate::codec::{gather_unit_values, scatter_unit_values};
@@ -101,6 +120,21 @@ impl SnapshotRing {
             .filter_map(|(_, w)| w.upgrade())
             .map(|s| s.size_bytes())
             .sum()
+    }
+
+    /// Number of snapshots still referenced by some client.
+    pub fn live_count(&self) -> usize {
+        self.slots.iter().filter(|(_, w)| w.strong_count() > 0).count()
+    }
+
+    /// The oldest round whose snapshot is still referenced — the eviction
+    /// candidate when the ring exceeds its cap. Slots are pushed in
+    /// publish order, so the first live slot is the oldest.
+    pub fn oldest_live_round(&self) -> Option<usize> {
+        self.slots
+            .iter()
+            .find(|(_, w)| w.strong_count() > 0)
+            .map(|&(r, _)| r)
     }
 }
 
@@ -204,6 +238,10 @@ pub enum ClientParams {
         base: Arc<GlobalSnapshot>,
         residual: SparseResidual,
     },
+    /// The ring cap evicted this client's base snapshot (see the module
+    /// docs). Nothing is stored; the next dispatch must re-sync the
+    /// client with a full download before training.
+    Evicted,
 }
 
 impl ClientParams {
@@ -224,11 +262,13 @@ impl ClientParams {
         }
     }
 
-    /// Round of the snapshot this state is based on.
-    pub fn base_round(&self) -> usize {
+    /// Round of the snapshot this state is based on (`None` once the
+    /// ring cap evicted it).
+    pub fn base_round(&self) -> Option<usize> {
         match self {
-            ClientParams::Synced { base } => base.round,
-            ClientParams::Delta { base, .. } => base.round,
+            ClientParams::Synced { base } => Some(base.round),
+            ClientParams::Delta { base, .. } => Some(base.round),
+            ClientParams::Evicted => None,
         }
     }
 
@@ -261,14 +301,18 @@ impl ClientParams {
                 extract_params_into(&base.params, spec, out);
                 residual.scatter_into(out, spec);
             }
+            ClientParams::Evicted => {
+                panic!("materialize: evicted client state must be re-synced at dispatch")
+            }
         }
     }
 
-    /// Per-client heap bytes this state pins (0 when `Synced`; the
-    /// shared snapshot is accounted once, by `SnapshotRing::live_bytes`).
+    /// Per-client heap bytes this state pins (0 when `Synced` or
+    /// `Evicted`; the shared snapshot is accounted once, by
+    /// `SnapshotRing::live_bytes`).
     pub fn state_bytes(&self) -> usize {
         match self {
-            ClientParams::Synced { .. } => 0,
+            ClientParams::Synced { .. } | ClientParams::Evicted => 0,
             ClientParams::Delta { residual, .. } => residual.heap_bytes(),
         }
     }
@@ -303,7 +347,46 @@ mod tests {
         let state = ClientParams::after_download(snap, None);
         assert!(state.is_synced());
         assert_eq!(state.state_bytes(), 0);
-        assert_eq!(state.base_round(), 1);
+        assert_eq!(state.base_round(), Some(1));
+    }
+
+    #[test]
+    fn evicting_dependents_frees_the_oldest_snapshot() {
+        // The cap mechanism in miniature: replacing every dependent of
+        // the oldest live round with `Evicted` drops the last Arcs, the
+        // snapshot dies, and the ring's live set shrinks — while the
+        // evicted state itself pins nothing and reports no base.
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(6);
+        let params = spec.init_params(&mut rng);
+        let mut ring = SnapshotRing::new();
+        let s1 = ring.publish(1, &params);
+        let s2 = ring.publish(2, &params);
+        let mut fleet = vec![
+            ClientParams::synced(s1.clone()),
+            ClientParams::synced(s1),
+            ClientParams::synced(s2),
+        ];
+        assert_eq!(ring.live_count(), 2);
+        assert_eq!(ring.oldest_live_round(), Some(1));
+        let oldest = ring.oldest_live_round().unwrap();
+        for c in &mut fleet {
+            if c.base_round() == Some(oldest) {
+                *c = ClientParams::Evicted;
+            }
+        }
+        assert_eq!(ring.live_count(), 1);
+        assert_eq!(ring.oldest_live_round(), Some(2));
+        assert_eq!(fleet[0].base_round(), None);
+        assert_eq!(fleet[0].state_bytes(), 0);
+        assert!(!fleet[0].is_synced());
+    }
+
+    #[test]
+    #[should_panic(expected = "evicted client state")]
+    fn materializing_evicted_state_panics() {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let _ = ClientParams::Evicted.materialize(&spec);
     }
 
     #[test]

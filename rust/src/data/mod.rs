@@ -2,6 +2,13 @@
 //! MNIST / FMNIST / CIFAR10 (offline image — see DESIGN.md §3), plus the
 //! paper's three heterogeneity partitions (IID, Non-IID-a, Non-IID-b) and
 //! the class-imbalanced global dataset of §6.7.
+//!
+//! The train store is virtualized for large fleets: `data_mode = "lazy"`
+//! (the default) keeps only a [`SynthGen`] — prototypes + apportionment +
+//! seed — and regenerates samples on demand straight into the caller's
+//! batch buffer; `"eager"` materializes the same bytes up front (A/B
+//! toggle). Both paths run through [`SynthGen::sample_into`], so the
+//! sample stream is byte-identical by construction.
 
 mod partition;
 mod synth;
@@ -9,14 +16,22 @@ mod synth;
 pub use partition::*;
 pub use synth::*;
 
-/// A federated dataset: flattened train/test tensors plus labels.
+/// Training-sample storage: materialized tensors or the virtual
+/// generator. Private — everything reads through the [`FedDataset`]
+/// accessors, which is what makes the representations interchangeable.
+#[derive(Clone, Debug)]
+enum TrainStore {
+    Eager { x: Vec<f32>, y: Vec<i32> },
+    Lazy { synth: SynthGen },
+}
+
+/// A federated dataset: train store + flattened test tensors and labels.
 #[derive(Clone, Debug)]
 pub struct FedDataset {
     /// Per-sample input shape (e.g. `[784]` or `[3, 32, 32]`).
     pub input_shape: Vec<usize>,
     pub num_classes: usize,
-    pub train_x: Vec<f32>,
-    pub train_y: Vec<i32>,
+    train: TrainStore,
     pub test_x: Vec<f32>,
     pub test_y: Vec<i32>,
 }
@@ -27,16 +42,40 @@ impl FedDataset {
     }
 
     pub fn train_len(&self) -> usize {
-        self.train_y.len()
+        match &self.train {
+            TrainStore::Eager { y, .. } => y.len(),
+            TrainStore::Lazy { synth } => synth.len(),
+        }
     }
 
     pub fn test_len(&self) -> usize {
         self.test_y.len()
     }
 
+    /// Whether the train store is the virtual (regenerate-on-demand)
+    /// representation.
+    pub fn is_lazy(&self) -> bool {
+        matches!(self.train, TrainStore::Lazy { .. })
+    }
+
+    /// Label of training sample `i` — O(1) in both representations.
+    pub fn train_label(&self, i: usize) -> i32 {
+        match &self.train {
+            TrainStore::Eager { y, .. } => y[i],
+            TrainStore::Lazy { synth } => synth.label_of(i),
+        }
+    }
+
+    /// Borrow a materialized training sample. Only the eager store can
+    /// hand out a slice; lazy readers go through [`Self::gather_train`].
     pub fn train_sample(&self, i: usize) -> &[f32] {
         let d = self.sample_dim();
-        &self.train_x[i * d..(i + 1) * d]
+        match &self.train {
+            TrainStore::Eager { x, .. } => &x[i * d..(i + 1) * d],
+            TrainStore::Lazy { .. } => {
+                panic!("train_sample: lazy train store has no resident samples")
+            }
+        }
     }
 
     pub fn test_sample(&self, i: usize) -> &[f32] {
@@ -44,31 +83,66 @@ impl FedDataset {
         &self.test_x[i * d..(i + 1) * d]
     }
 
-    /// Gather a training batch into a contiguous buffer.
+    /// Gather a training batch into a contiguous buffer: copied from the
+    /// eager store, or regenerated straight into `x_out` by the lazy one
+    /// (no intermediate allocation either way).
     pub fn gather_train(&self, idxs: &[usize], x_out: &mut Vec<f32>, y_out: &mut Vec<i32>) {
         let d = self.sample_dim();
         x_out.clear();
         y_out.clear();
-        x_out.reserve(idxs.len() * d);
-        for &i in idxs {
-            x_out.extend_from_slice(self.train_sample(i));
-            y_out.push(self.train_y[i]);
+        match &self.train {
+            TrainStore::Eager { x, y } => {
+                x_out.reserve(idxs.len() * d);
+                for &i in idxs {
+                    x_out.extend_from_slice(&x[i * d..(i + 1) * d]);
+                    y_out.push(y[i]);
+                }
+            }
+            TrainStore::Lazy { synth } => {
+                x_out.resize(idxs.len() * d, 0.0);
+                for (k, &i) in idxs.iter().enumerate() {
+                    y_out.push(synth.sample_into(i, &mut x_out[k * d..(k + 1) * d]));
+                }
+            }
         }
     }
 
-    /// Label histogram of the full training set.
+    /// Label histogram of the full training set (exact in both
+    /// representations; the lazy store answers from its apportionment
+    /// without generating anything).
     pub fn train_class_counts(&self) -> Vec<usize> {
-        let mut counts = vec![0usize; self.num_classes];
-        for &y in &self.train_y {
-            counts[y as usize] += 1;
+        match &self.train {
+            TrainStore::Eager { y, .. } => {
+                let mut counts = vec![0usize; self.num_classes];
+                for &v in y {
+                    counts[v as usize] += 1;
+                }
+                counts
+            }
+            TrainStore::Lazy { synth } => synth.class_counts(),
         }
-        counts
+    }
+
+    /// Resident heap bytes of the dataset: train store + test tensors.
+    /// This is the `data_state_bytes` term of the fleet memory audit —
+    /// for the lazy store it is O(prototypes), independent of
+    /// `train_len()`.
+    pub fn mem_bytes(&self) -> usize {
+        let train = match &self.train {
+            TrainStore::Eager { x, y } => x.len() * 4 + y.len() * 4,
+            TrainStore::Lazy { synth } => synth.mem_bytes(),
+        };
+        train
+            + self.test_x.len() * 4
+            + self.test_y.len() * 4
+            + self.input_shape.len() * std::mem::size_of::<usize>()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::check;
     use crate::util::rng::Rng;
 
     #[test]
@@ -80,6 +154,79 @@ mod tests {
         ds.gather_train(&[3, 7], &mut x, &mut y);
         assert_eq!(x.len(), 2 * 784);
         assert_eq!(&x[..784], ds.train_sample(3));
-        assert_eq!(y, vec![ds.train_y[3], ds.train_y[7]]);
+        assert_eq!(y, vec![ds.train_label(3), ds.train_label(7)]);
+    }
+
+    /// Lazy and eager stores must be indistinguishable through every
+    /// accessor — same bytes, same labels, same counts — including the
+    /// adversarial corners the fleet runs hit (`train_n = 0/1`,
+    /// imbalanced specs, out-of-order batch gathers).
+    #[test]
+    fn lazy_store_matches_eager_bytes() {
+        let specs: Vec<SynthSpec> = vec![
+            SynthSpec::mnist_like(),
+            SynthSpec::fmnist_like(),
+            SynthSpec::mnist_like().imbalanced(&[0, 4], 0.3),
+        ];
+        check("lazy train store == eager", 30, |rng| {
+            let spec = &specs[rng.below(specs.len())];
+            let train_n = [0usize, 1, 2, 13, 97][rng.below(5)];
+            let test_n = rng.below(8);
+            let seed = rng.next_u64();
+            let eager = spec.generate(train_n, test_n, &mut Rng::new(seed));
+            let lazy = spec.generate_lazy(train_n, test_n, &mut Rng::new(seed));
+            if !lazy.is_lazy() || eager.is_lazy() {
+                return Err("store tags wrong".into());
+            }
+            if eager.train_len() != train_n || lazy.train_len() != train_n {
+                return Err("train_len mismatch".into());
+            }
+            if eager.train_class_counts() != lazy.train_class_counts() {
+                return Err("class counts mismatch".into());
+            }
+            if eager.test_x != lazy.test_x || eager.test_y != lazy.test_y {
+                return Err("test set diverged".into());
+            }
+            // Random (possibly repeated, unordered) batch gather.
+            if train_n > 0 {
+                let idxs: Vec<usize> =
+                    (0..rng.below(12)).map(|_| rng.below(train_n)).collect();
+                let (mut xe, mut ye) = (Vec::new(), Vec::new());
+                let (mut xl, mut yl) = (Vec::new(), Vec::new());
+                eager.gather_train(&idxs, &mut xe, &mut ye);
+                lazy.gather_train(&idxs, &mut xl, &mut yl);
+                if ye != yl {
+                    return Err("labels mismatch".into());
+                }
+                let be: Vec<u32> = xe.iter().map(|v| v.to_bits()).collect();
+                let bl: Vec<u32> = xl.iter().map(|v| v.to_bits()).collect();
+                if be != bl {
+                    return Err("sample bytes mismatch".into());
+                }
+                for (k, &i) in idxs.iter().enumerate() {
+                    if ye[k] != eager.train_label(i) || yl[k] != lazy.train_label(i) {
+                        return Err("train_label inconsistent with gather".into());
+                    }
+                }
+            }
+            // The lazy footprint must be independent of train_n (only
+            // prototypes + offsets are resident).
+            let bigger = spec.generate_lazy(train_n * 10 + 1, test_n, &mut Rng::new(seed));
+            if bigger.mem_bytes() != lazy.mem_bytes() {
+                return Err(format!(
+                    "lazy footprint scales with train_n: {} vs {}",
+                    lazy.mem_bytes(),
+                    bigger.mem_bytes()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "lazy train store")]
+    fn train_sample_panics_on_lazy() {
+        let ds = SynthSpec::mnist_like().generate_lazy(4, 2, &mut Rng::new(1));
+        let _ = ds.train_sample(0);
     }
 }

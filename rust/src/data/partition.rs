@@ -5,30 +5,59 @@
 //! # Large-fleet representation
 //!
 //! FedDD fleets have no partial participation, so the partition is held
-//! for *every* client for the whole run. The IID shuffle-and-deal is
-//! therefore stored **lazily**: one shared permutation (derived from the
-//! partition seed), from which client `n`'s index set is the strided view
-//! `perm[n], perm[n + N], perm[n + 2N], …` — exactly the sequence the
-//! eager deal `client_indices[i % N].push(perm[i])` used to materialize,
-//! at O(1) extra memory per client instead of a heap `Vec` each. The
-//! label-restricted non-IID partitions keep materialized lists (their
-//! assignment is not a stride), which is fine: non-IID experiments run at
-//! paper scale, the 10k–50k fleet sweeps are IID.
+//! for *every* client for the whole run — no per-client index heaps
+//! survive at fleet scale:
+//!
+//! * **IID** shuffle-and-deal is one shared permutation (derived from the
+//!   partition seed); client `n`'s index set is the strided view
+//!   `perm[n], perm[n + N], perm[n + 2N], …` — exactly the sequence the
+//!   eager deal `client_indices[i % N].push(perm[i])` used to
+//!   materialize, at O(1) extra memory per client.
+//! * **Non-IID-a/b** deal each class's shuffled samples round-robin over
+//!   the class's claimants, so the claimant at rank `p` of class `cls`
+//!   owns the strided view `by_class[cls][p], by_class[cls][p + W], …`
+//!   (`W` = claimant count). A client's full sequence is the ascending-
+//!   class concatenation of its ≤ `num_classes` strided segments —
+//!   [`Assignment::ClassStrided`] stores the shared per-class lists once
+//!   plus one flat segment table, O(claimed classes) per client instead
+//!   of a `Vec<usize>` heap each. Byte-identical to the eager deal
+//!   (proptested below).
 //!
 //! [`ClientShard`] is the per-client handle the coordinator samples from;
-//! it yields identical index sequences for both representations.
+//! it yields identical index sequences for every representation.
 
 use std::sync::Arc;
 
 use super::FedDataset;
 use crate::util::rng::Rng;
 
-/// One client's view of the train set: either a materialized index list
-/// or a lazy strided slice of the shared IID permutation. Both yield the
-/// same sequence the eager representation held, element for element.
+/// One strided segment of a class-stratified shard: the claimant at rank
+/// `offset` of class `cls` owns every `stride`-th element of that class's
+/// shuffled sample list.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassSeg {
+    cls: u32,
+    offset: u32,
+    stride: u32,
+}
+
+impl ClassSeg {
+    fn len_in(&self, lists: &[Vec<usize>]) -> usize {
+        strided_len(
+            lists[self.cls as usize].len(),
+            self.offset as usize,
+            self.stride as usize,
+        )
+    }
+}
+
+/// One client's view of the train set: a materialized index list, a lazy
+/// strided slice of the shared IID permutation, or a lazy class-stratified
+/// segment run. All yield the same sequence the eager representation
+/// held, element for element.
 #[derive(Clone, Debug)]
 pub enum ClientShard {
-    /// Materialized index list (non-IID partitions, hand-built tests).
+    /// Materialized index list (hand-built tests, explicit partitions).
     Owned(Vec<usize>),
     /// Element `j` is `perm[offset + j · stride]` (IID shuffle-and-deal:
     /// `offset` = client id, `stride` = fleet size).
@@ -36,6 +65,15 @@ pub enum ClientShard {
         perm: Arc<Vec<usize>>,
         offset: usize,
         stride: usize,
+    },
+    /// Ascending-class concatenation of strided views over the shared
+    /// per-class lists (non-IID a/b): segments `segs[start..end]` of the
+    /// partition-wide table. O(1) owned heap — everything is shared.
+    ClassStrided {
+        lists: Arc<Vec<Vec<usize>>>,
+        segs: Arc<Vec<ClassSeg>>,
+        start: usize,
+        end: usize,
     },
 }
 
@@ -57,6 +95,10 @@ impl ClientShard {
             ClientShard::Strided { perm, offset, stride } => {
                 strided_len(perm.len(), *offset, *stride)
             }
+            ClientShard::ClassStrided { lists, segs, start, end } => segs[*start..*end]
+                .iter()
+                .map(|s| s.len_in(lists))
+                .sum(),
         }
     }
 
@@ -69,15 +111,86 @@ impl ClientShard {
         match self {
             ClientShard::Owned(v) => v[j],
             ClientShard::Strided { perm, offset, stride } => perm[offset + j * stride],
+            ClientShard::ClassStrided { lists, segs, start, end } => {
+                let mut j = j;
+                for s in &segs[*start..*end] {
+                    let l = s.len_in(lists);
+                    if j < l {
+                        return lists[s.cls as usize]
+                            [s.offset as usize + j * s.stride as usize];
+                    }
+                    j -= l;
+                }
+                panic!("shard index {j} past the final segment");
+            }
         }
     }
 
     pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
-        (0..self.len()).map(move |j| self.get(j))
+        ShardIter { shard: self, seg: 0, pos: 0, remaining: self.len() }
     }
 
     pub fn to_vec(&self) -> Vec<usize> {
         self.iter().collect()
+    }
+
+    /// Heap bytes owned by this shard alone (shared `Arc` storage is
+    /// charged once at the [`Partition`], not per client).
+    pub fn owned_bytes(&self) -> usize {
+        match self {
+            ClientShard::Owned(v) => v.len() * std::mem::size_of::<usize>(),
+            ClientShard::Strided { .. } | ClientShard::ClassStrided { .. } => 0,
+        }
+    }
+}
+
+/// Sequential iterator over a shard. For the class-strided arm this walks
+/// segments in place (no repeated prefix scan, unlike indexed `get`).
+struct ShardIter<'a> {
+    shard: &'a ClientShard,
+    seg: usize,
+    pos: usize,
+    remaining: usize,
+}
+
+impl Iterator for ShardIter<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        match self.shard {
+            ClientShard::Owned(v) => {
+                let out = v[self.pos];
+                self.pos += 1;
+                Some(out)
+            }
+            ClientShard::Strided { perm, offset, stride } => {
+                let out = perm[offset + self.pos * stride];
+                self.pos += 1;
+                Some(out)
+            }
+            ClientShard::ClassStrided { lists, segs, start, end } => {
+                loop {
+                    let s = &segs[start + self.seg];
+                    debug_assert!(start + self.seg < *end);
+                    if self.pos < s.len_in(lists) {
+                        let out = lists[s.cls as usize]
+                            [s.offset as usize + self.pos * s.stride as usize];
+                        self.pos += 1;
+                        return Some(out);
+                    }
+                    self.seg += 1;
+                    self.pos = 0;
+                }
+            }
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
     }
 }
 
@@ -93,6 +206,14 @@ enum Assignment {
     Explicit(Vec<Vec<usize>>),
     /// IID shuffle-and-deal: client `n` owns `perm[n], perm[n+N], …`.
     Strided { perm: Arc<Vec<usize>>, n_clients: usize },
+    /// Non-IID class deal: shared per-class shuffled lists + one flat
+    /// segment table; client `n` owns `segs[bounds[n]..bounds[n+1]]`.
+    ClassStrided {
+        lists: Arc<Vec<Vec<usize>>>,
+        segs: Arc<Vec<ClassSeg>>,
+        /// Per-client segment ranges, length `n_clients + 1`.
+        bounds: Vec<u32>,
+    },
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -118,6 +239,96 @@ impl PartitionKind {
             PartitionKind::NonIidA => "noniid_a",
             PartitionKind::NonIidB => "noniid_b",
         }
+    }
+}
+
+/// The seeded class-deal plan shared by the lazy and eager non-IID
+/// builders: per-class shuffled sample lists and per-class claimant
+/// rosters. Consuming the RNG here (and only here) is what makes the two
+/// representations byte-identical.
+struct ClassPlan {
+    by_class: Vec<Vec<usize>>,
+    claimants: Vec<Vec<usize>>,
+    n_clients: usize,
+}
+
+impl ClassPlan {
+    fn build(
+        ds: &FedDataset,
+        n_clients: usize,
+        rng: &mut Rng,
+        pick: impl Fn(&mut Rng) -> usize,
+    ) -> ClassPlan {
+        let c = ds.num_classes;
+        // class -> shuffled sample indices
+        let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); c];
+        for i in 0..ds.train_len() {
+            by_class[ds.train_label(i) as usize].push(i);
+        }
+        for v in &mut by_class {
+            rng.shuffle(v);
+        }
+        // client -> claimed classes
+        let claims: Vec<Vec<usize>> = (0..n_clients)
+            .map(|_| {
+                let k = pick(rng).min(c);
+                rng.choose_k(c, k)
+            })
+            .collect();
+        // class -> claimants (ascending client order)
+        let mut claimants: Vec<Vec<usize>> = vec![Vec::new(); c];
+        for (client, classes) in claims.iter().enumerate() {
+            for &cls in classes {
+                claimants[cls].push(client);
+            }
+        }
+        ClassPlan { by_class, claimants, n_clients }
+    }
+
+    /// The lazy representation: one segment per (class, claimant) pair.
+    fn into_lazy(self, num_classes: usize) -> Partition {
+        assert!(self.n_clients < u32::MAX as usize, "fleet too large for u32 segments");
+        let mut per_client: Vec<Vec<ClassSeg>> = vec![Vec::new(); self.n_clients];
+        for (cls, owners) in self.claimants.iter().enumerate() {
+            for (p, &client) in owners.iter().enumerate() {
+                per_client[client].push(ClassSeg {
+                    cls: cls as u32,
+                    offset: p as u32,
+                    stride: owners.len() as u32,
+                });
+            }
+        }
+        let mut segs = Vec::with_capacity(per_client.iter().map(Vec::len).sum());
+        let mut bounds = Vec::with_capacity(self.n_clients + 1);
+        bounds.push(0u32);
+        for client_segs in per_client {
+            segs.extend(client_segs);
+            bounds.push(segs.len() as u32);
+        }
+        Partition {
+            num_classes,
+            assign: Assignment::ClassStrided {
+                lists: Arc::new(self.by_class),
+                segs: Arc::new(segs),
+                bounds,
+            },
+        }
+    }
+
+    /// The materialized deal the lazy representation must reproduce
+    /// (kept for the equality proptests).
+    #[cfg(test)]
+    fn into_eager(self, num_classes: usize) -> Partition {
+        let mut client_indices = vec![Vec::new(); self.n_clients];
+        for (cls, owners) in self.claimants.iter().enumerate() {
+            if owners.is_empty() {
+                continue; // class unseen by everyone (rare; small n_clients)
+            }
+            for (i, &sample) in self.by_class[cls].iter().enumerate() {
+                client_indices[owners[i % owners.len()]].push(sample);
+            }
+        }
+        Partition::explicit(client_indices, num_classes)
     }
 }
 
@@ -155,53 +366,22 @@ impl Partition {
     }
 
     /// Label-restricted partition: each client claims `k = pick(rng)`
-    /// classes; each class's samples are split evenly among its claimants.
+    /// classes; each class's samples are split evenly among its claimants
+    /// — stored lazily as class-strided segments.
     fn by_class_counts(
         ds: &FedDataset,
         n_clients: usize,
         rng: &mut Rng,
         pick: impl Fn(&mut Rng) -> usize,
     ) -> Partition {
-        let c = ds.num_classes;
-        // class -> shuffled sample indices
-        let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); c];
-        for i in 0..ds.train_len() {
-            by_class[ds.train_y[i] as usize].push(i);
-        }
-        for v in &mut by_class {
-            rng.shuffle(v);
-        }
-        // client -> claimed classes
-        let claims: Vec<Vec<usize>> = (0..n_clients)
-            .map(|_| {
-                let k = pick(rng).min(c);
-                rng.choose_k(c, k)
-            })
-            .collect();
-        // class -> claimants
-        let mut claimants: Vec<Vec<usize>> = vec![Vec::new(); c];
-        for (client, classes) in claims.iter().enumerate() {
-            for &cls in classes {
-                claimants[cls].push(client);
-            }
-        }
-        let mut client_indices = vec![Vec::new(); n_clients];
-        for cls in 0..c {
-            let owners = &claimants[cls];
-            if owners.is_empty() {
-                continue; // class unseen by everyone (rare; small n_clients)
-            }
-            for (i, &sample) in by_class[cls].iter().enumerate() {
-                client_indices[owners[i % owners.len()]].push(sample);
-            }
-        }
-        Partition::explicit(client_indices, ds.num_classes)
+        ClassPlan::build(ds, n_clients, rng, pick).into_lazy(ds.num_classes)
     }
 
     pub fn n_clients(&self) -> usize {
         match &self.assign {
             Assignment::Explicit(v) => v.len(),
             Assignment::Strided { n_clients, .. } => *n_clients,
+            Assignment::ClassStrided { bounds, .. } => bounds.len() - 1,
         }
     }
 
@@ -216,6 +396,11 @@ impl Partition {
                 assert!(n < *n_clients, "client {n} out of range ({n_clients} clients)");
                 strided_len(perm.len(), n, *n_clients)
             }
+            Assignment::ClassStrided { lists, segs, bounds } => segs
+                [bounds[n] as usize..bounds[n + 1] as usize]
+                .iter()
+                .map(|s| s.len_in(lists))
+                .sum(),
         }
     }
 
@@ -224,7 +409,8 @@ impl Partition {
         (0..self.n_clients()).map(|n| self.m_n(n)).collect()
     }
 
-    /// Client `n`'s shard handle (O(1) for the lazy IID representation).
+    /// Client `n`'s shard handle (O(1) for both lazy representations —
+    /// shared storage is `Arc`-cloned, never copied).
     pub fn shard(&self, n: usize) -> ClientShard {
         match &self.assign {
             Assignment::Explicit(v) => ClientShard::Owned(v[n].clone()),
@@ -236,6 +422,12 @@ impl Partition {
                     stride: *n_clients,
                 }
             }
+            Assignment::ClassStrided { lists, segs, bounds } => ClientShard::ClassStrided {
+                lists: Arc::clone(lists),
+                segs: Arc::clone(segs),
+                start: bounds[n] as usize,
+                end: bounds[n + 1] as usize,
+            },
         }
     }
 
@@ -246,9 +438,9 @@ impl Partition {
     }
 
     /// Visit every index of client `n` in shard order, without
-    /// materializing a list (the Explicit arm iterates in place; the
-    /// Strided arm walks through the shared [`ClientShard`] view, so the
-    /// stride traversal has a single implementation).
+    /// materializing a list: every arm iterates in place (the lazy arms
+    /// walk their shared storage through [`ClientShard::iter`]'s
+    /// segment-cursor, so diagnostics never allocate per client).
     pub fn visit_client(&self, n: usize, mut f: impl FnMut(usize)) {
         match &self.assign {
             Assignment::Explicit(v) => {
@@ -256,7 +448,7 @@ impl Partition {
                     f(i);
                 }
             }
-            Assignment::Strided { .. } => {
+            Assignment::Strided { .. } | Assignment::ClassStrided { .. } => {
                 for i in self.shard(n).iter() {
                     f(i);
                 }
@@ -265,11 +457,20 @@ impl Partition {
     }
 
     /// dis_n^c — per-client label distribution (fractions summing to 1).
+    /// The class-strided arm answers from segment lengths alone (every
+    /// sample in a segment shares the segment's class) — no sample visit,
+    /// no label lookup.
     pub fn label_distribution(&self, ds: &FedDataset) -> Vec<Vec<f64>> {
         (0..self.n_clients())
             .map(|n| {
                 let mut counts = vec![0usize; self.num_classes];
-                self.visit_client(n, |i| counts[ds.train_y[i] as usize] += 1);
+                if let Assignment::ClassStrided { lists, segs, bounds } = &self.assign {
+                    for s in &segs[bounds[n] as usize..bounds[n + 1] as usize] {
+                        counts[s.cls as usize] += s.len_in(lists);
+                    }
+                } else {
+                    self.visit_client(n, |i| counts[ds.train_label(i) as usize] += 1);
+                }
                 let total = self.m_n(n).max(1) as f64;
                 counts.iter().map(|&k| k as f64 / total).collect()
             })
@@ -284,6 +485,23 @@ impl Partition {
             .iter()
             .map(|dis| dis.iter().map(|&d| (c * d).min(1.0)).sum())
             .collect()
+    }
+
+    /// Heap bytes of the partition's shared storage (per-client `Owned`
+    /// shard copies are charged by [`ClientShard::owned_bytes`]).
+    pub fn mem_bytes(&self) -> usize {
+        let w = std::mem::size_of::<usize>();
+        match &self.assign {
+            Assignment::Explicit(v) => {
+                v.iter().map(|c| c.len() * w).sum::<usize>() + v.len() * 3 * w
+            }
+            Assignment::Strided { perm, .. } => perm.len() * w,
+            Assignment::ClassStrided { lists, segs, bounds } => {
+                lists.iter().map(|c| c.len() * w).sum::<usize>()
+                    + segs.len() * std::mem::size_of::<ClassSeg>()
+                    + bounds.len() * 4
+            }
+        }
     }
 }
 
@@ -401,6 +619,113 @@ mod tests {
         });
     }
 
+    /// Assert the lazy class-strided representation equals the eager
+    /// class deal built from an identical plan, through every access
+    /// path, plus the segment-only `label_distribution` shortcut.
+    fn assert_class_lazy_matches_eager(
+        ds: &FedDataset,
+        n_clients: usize,
+        seed: u64,
+        kind: PartitionKind,
+    ) {
+        let ctx = format!("n_clients={n_clients} kind={kind:?}");
+        let pick = |rng: &mut Rng| match kind {
+            PartitionKind::NonIidA => rng.int_range(2, 10),
+            PartitionKind::NonIidB => 3,
+            PartitionKind::Iid => unreachable!(),
+        };
+        let lazy = ClassPlan::build(ds, n_clients, &mut Rng::new(seed), &pick)
+            .into_lazy(ds.num_classes);
+        let eager = ClassPlan::build(ds, n_clients, &mut Rng::new(seed), &pick)
+            .into_eager(ds.num_classes);
+        // The builder consumed identical RNG streams, so Partition::build
+        // (which is the lazy path) must agree with `lazy` too.
+        let built = Partition::build(kind, ds, n_clients, &mut Rng::new(seed));
+        assert!(
+            matches!(built.assign, Assignment::ClassStrided { .. }),
+            "{ctx}: build() must produce the lazy representation"
+        );
+        assert_eq!(lazy.n_clients(), n_clients, "{ctx}");
+        assert_eq!(eager.n_clients(), n_clients, "{ctx}");
+        for n in 0..n_clients {
+            let want = eager.indices_of(n);
+            assert_eq!(lazy.m_n(n), want.len(), "{ctx} client {n} m_n");
+            assert_eq!(lazy.indices_of(n), want, "{ctx} client {n} indices");
+            assert_eq!(built.indices_of(n), want, "{ctx} client {n} via build()");
+            let shard = lazy.shard(n);
+            assert_eq!(shard.len(), want.len(), "{ctx} client {n} shard len");
+            assert_eq!(shard.owned_bytes(), 0, "{ctx} client {n}: lazy shard owns heap");
+            for (j, &w) in want.iter().enumerate() {
+                assert_eq!(shard.get(j), w, "{ctx} client {n} elem {j}");
+            }
+            let mut visited = Vec::new();
+            lazy.visit_client(n, |i| visited.push(i));
+            assert_eq!(visited, want, "{ctx} client {n} visit");
+        }
+        // label_distribution: the segment shortcut vs the sample scan.
+        assert_eq!(
+            lazy.label_distribution(ds),
+            eager.label_distribution(ds),
+            "{ctx}: label distributions diverge"
+        );
+        assert_eq!(
+            lazy.distribution_scores(ds),
+            eager.distribution_scores(ds),
+            "{ctx}: distribution scores diverge"
+        );
+    }
+
+    #[test]
+    fn lazy_noniid_matches_eager_deal_exactly() {
+        let mut rng = Rng::new(11);
+        let ds = dataset(&mut rng);
+        for kind in [PartitionKind::NonIidA, PartitionKind::NonIidB] {
+            for n_clients in [1usize, 7, 20] {
+                assert_class_lazy_matches_eager(&ds, n_clients, 500 + n_clients as u64, kind);
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_noniid_adversarial_edges_match_eager() {
+        // n_clients ∈ {1, prime, > samples}, train_per_client ∈ {0, 1},
+        // and a class-imbalanced spec — the satellite corners. With more
+        // clients than samples most shards are empty; with tpc ∈ {0, 1}
+        // whole classes have no samples at all.
+        let mut rng = Rng::new(12);
+        let tiny0 = SynthSpec::mnist_like().generate(0, 5, &mut rng); // tpc = 0
+        let tiny1 = SynthSpec::mnist_like().generate(13, 5, &mut rng); // tpc = 1 at 13 clients
+        let imb = SynthSpec::mnist_like()
+            .imbalanced(&[0, 1, 2], 0.2)
+            .generate(400, 5, &mut rng);
+        for kind in [PartitionKind::NonIidA, PartitionKind::NonIidB] {
+            for &(ds, n_clients) in &[
+                (&tiny0, 1usize),
+                (&tiny0, 7),
+                (&tiny1, 13),
+                (&tiny1, 97), // n_clients ≫ samples
+                (&imb, 1),
+                (&imb, 11),
+                (&imb, 401), // n_clients > samples, prime
+            ] {
+                let seed = 9000 + n_clients as u64 * 17;
+                assert_class_lazy_matches_eager(ds, n_clients, seed, kind);
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_noniid_matches_eager_property() {
+        check("lazy non-IID == eager class deal", 15, |rng| {
+            let train_n = [0usize, 1, 17, 230][rng.below(4)];
+            let ds = SynthSpec::fmnist_like().generate(train_n, 5, rng);
+            let n_clients = 1 + rng.below(40);
+            let kind = if rng.bool(0.5) { PartitionKind::NonIidA } else { PartitionKind::NonIidB };
+            assert_class_lazy_matches_eager(&ds, n_clients, rng.next_u64(), kind);
+            Ok(())
+        });
+    }
+
     #[test]
     fn noniid_b_three_classes_each() {
         let mut rng = Rng::new(1);
@@ -408,7 +733,7 @@ mod tests {
         let p = Partition::build(PartitionKind::NonIidB, &ds, 20, &mut rng);
         for n in 0..p.n_clients() {
             let mut classes: Vec<i32> =
-                p.indices_of(n).iter().map(|&i| ds.train_y[i]).collect();
+                p.indices_of(n).iter().map(|&i| ds.train_label(i)).collect();
             classes.sort_unstable();
             classes.dedup();
             assert!(classes.len() <= 3, "client {n} has {} classes", classes.len());
@@ -422,7 +747,7 @@ mod tests {
         let p = Partition::build(PartitionKind::NonIidA, &ds, 20, &mut rng);
         for n in 0..p.n_clients() {
             let mut classes: Vec<i32> =
-                p.indices_of(n).iter().map(|&i| ds.train_y[i]).collect();
+                p.indices_of(n).iter().map(|&i| ds.train_label(i)).collect();
             classes.sort_unstable();
             classes.dedup();
             assert!((1..=10).contains(&classes.len()));
@@ -501,5 +826,21 @@ mod tests {
         assert_eq!(p.shard(4).len(), 0);
         assert_eq!(p.indices_of(4), Vec::<usize>::new());
         assert_eq!(p.shard(0).len(), 1);
+    }
+
+    #[test]
+    fn noniid_partitions_hold_no_per_client_heaps() {
+        // The whole point: shared lists + segment table, bounded well
+        // below one usize per sample per claim, and shards own nothing.
+        let mut rng = Rng::new(7);
+        let ds = dataset(&mut rng);
+        let p = Partition::build(PartitionKind::NonIidB, &ds, 50, &mut rng);
+        let w = std::mem::size_of::<usize>();
+        // shared lists ≈ train_len usizes; segments ≤ 3 per client.
+        let budget = ds.train_len() * w + 50 * 3 * std::mem::size_of::<ClassSeg>() + 51 * 4 + 64;
+        assert!(p.mem_bytes() <= budget, "{} > {budget}", p.mem_bytes());
+        for n in 0..50 {
+            assert_eq!(p.shard(n).owned_bytes(), 0);
+        }
     }
 }

@@ -7,9 +7,19 @@
 //! difficulty matches the paper: MNIST-like ≫ easier than CIFAR-like.
 //! This preserves the drivers of every evaluation claim (label coverage,
 //! data amount, budget) while being generable offline — DESIGN.md §3.
+//!
+//! The training set is **virtual**: [`SynthGen`] holds only the class
+//! prototypes, a per-class sample apportionment and one derived seed, and
+//! [`SynthGen::sample_into`] regenerates any sample on demand into a
+//! caller buffer. The eager path materializes by calling `sample_into`
+//! for every index, so lazy and eager train stores are byte-identical by
+//! construction (`data_mode` config knob; proptested in `data/mod.rs`).
 
-use super::FedDataset;
+use super::{FedDataset, TrainStore};
 use crate::util::rng::Rng;
+
+/// Same odd constant `Rng::split` uses to decorrelate labeled streams.
+const SAMPLE_STREAM_MUL: u64 = 0x9E37_79B9_7F4A_7C15;
 
 #[derive(Clone, Debug)]
 pub struct SynthSpec {
@@ -87,9 +97,6 @@ impl SynthSpec {
         self
     }
 
-    /// Generate `train_n` training and `test_n` test samples. The test
-    /// set is always class-balanced so per-class accuracy (Fig. 21) is
-    /// well-measured.
     /// One prototype vector. Image-shaped data ([C,H,W]) gets *spatially
     /// smooth* prototypes (a coarse 4×4-block pattern): convolution +
     /// max-pooling preserves low-frequency class signal, mirroring how
@@ -123,44 +130,183 @@ impl SynthSpec {
         out
     }
 
-    pub fn generate(&self, train_n: usize, test_n: usize, rng: &mut Rng) -> FedDataset {
-        let dim: usize = self.input_shape.iter().product();
+    /// Build the virtual train-set generator: prototypes (same RNG draws
+    /// as always), the exact per-class apportionment of `train_n`, and
+    /// one derived seed from which every sample's private stream is
+    /// re-keyed. Consumes a fixed amount of `rng` regardless of
+    /// `train_n`, so downstream draws (test set, partition) don't depend
+    /// on the train-set size representation.
+    fn plan(&self, train_n: usize, rng: &mut Rng) -> SynthGen {
         // Prototypes: [class][mode][dim]
         let protos: Vec<Vec<Vec<f32>>> = (0..self.num_classes)
             .map(|_| (0..self.modes).map(|_| self.prototype(rng)).collect())
             .collect();
-
         let weights: Vec<f64> = self
             .class_weights
             .clone()
             .unwrap_or_else(|| vec![1.0; self.num_classes]);
-
-        let mut train_x = Vec::with_capacity(train_n * dim);
-        let mut train_y = Vec::with_capacity(train_n);
-        for _ in 0..train_n {
-            let c = rng.categorical(&weights);
-            let m = rng.below(self.modes);
-            let p = &protos[c][m];
-            train_x.extend(p.iter().map(|&v| v + rng.normal_f32(0.0, self.noise)));
-            train_y.push(c as i32);
+        let counts = apportion(&weights, train_n);
+        let mut class_offsets = Vec::with_capacity(self.num_classes + 1);
+        let mut acc = 0usize;
+        class_offsets.push(0);
+        for &c in &counts {
+            acc += c;
+            class_offsets.push(acc);
         }
+        let sample_seed = rng.next_u64();
+        SynthGen {
+            spec: self.clone(),
+            protos,
+            class_offsets,
+            sample_seed,
+        }
+    }
+
+    /// Generate `train_n` training and `test_n` test samples with the
+    /// train set fully materialized. The test set is always materialized
+    /// and class-balanced so per-class accuracy (Fig. 21) is
+    /// well-measured.
+    pub fn generate(&self, train_n: usize, test_n: usize, rng: &mut Rng) -> FedDataset {
+        self.generate_mode(train_n, test_n, rng, false)
+    }
+
+    /// Like [`SynthSpec::generate`] but the train set stays virtual: only
+    /// the prototypes are stored and samples regenerate on demand.
+    pub fn generate_lazy(&self, train_n: usize, test_n: usize, rng: &mut Rng) -> FedDataset {
+        self.generate_mode(train_n, test_n, rng, true)
+    }
+
+    /// `lazy` selects the train-store representation; the sample bytes
+    /// are identical either way (the eager store is materialized through
+    /// the same [`SynthGen::sample_into`] path).
+    pub fn generate_mode(
+        &self,
+        train_n: usize,
+        test_n: usize,
+        rng: &mut Rng,
+        lazy: bool,
+    ) -> FedDataset {
+        let dim: usize = self.input_shape.iter().product();
+        let synth = self.plan(train_n, rng);
+
         let mut test_x = Vec::with_capacity(test_n * dim);
         let mut test_y = Vec::with_capacity(test_n);
         for i in 0..test_n {
             let c = i % self.num_classes; // balanced test set
             let m = rng.below(self.modes);
-            let p = &protos[c][m];
+            let p = &synth.protos[c][m];
             test_x.extend(p.iter().map(|&v| v + rng.normal_f32(0.0, self.noise)));
             test_y.push(c as i32);
         }
+
+        let train = if lazy {
+            TrainStore::Lazy { synth }
+        } else {
+            let mut x = vec![0.0f32; train_n * dim];
+            let mut y = Vec::with_capacity(train_n);
+            for i in 0..train_n {
+                y.push(synth.sample_into(i, &mut x[i * dim..(i + 1) * dim]));
+            }
+            TrainStore::Eager { x, y }
+        };
         FedDataset {
             input_shape: self.input_shape.clone(),
             num_classes: self.num_classes,
-            train_x,
-            train_y,
+            train,
             test_x,
             test_y,
         }
+    }
+}
+
+/// Largest-remainder apportionment of `total` samples over `weights`:
+/// floor of each exact share, remainder distributed by descending
+/// fractional part with ties broken by ascending class — deterministic,
+/// exact (sums to `total`), and within one sample of proportional.
+fn apportion(weights: &[f64], total: usize) -> Vec<usize> {
+    let wsum: f64 = weights.iter().sum();
+    debug_assert!(wsum > 0.0 && weights.iter().all(|&w| w >= 0.0));
+    let mut counts = Vec::with_capacity(weights.len());
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(weights.len());
+    let mut assigned = 0usize;
+    for (c, &w) in weights.iter().enumerate() {
+        let share = w / wsum * total as f64;
+        let fl = share.floor() as usize;
+        counts.push(fl);
+        assigned += fl;
+        fracs.push((share - fl as f64, c));
+    }
+    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    for &(_, c) in fracs.iter().take(total.saturating_sub(assigned)) {
+        counts[c] += 1;
+    }
+    counts
+}
+
+/// The virtual training set: class prototypes + per-class apportionment
+/// + one seed. Any sample regenerates on demand with a private RNG
+/// stream keyed by its index, so random access never perturbs (or
+/// depends on) any other draw — O(classes · modes · dim) resident bytes
+/// for a train set of any length.
+#[derive(Clone, Debug)]
+pub struct SynthGen {
+    spec: SynthSpec,
+    /// `[class][mode][dim]` prototype vectors.
+    protos: Vec<Vec<Vec<f32>>>,
+    /// Class-major layout: sample `i` has the class `c` with
+    /// `class_offsets[c] <= i < class_offsets[c + 1]` (len `C + 1`).
+    class_offsets: Vec<usize>,
+    /// Base seed for the per-sample streams.
+    sample_seed: u64,
+}
+
+impl SynthGen {
+    pub fn len(&self) -> usize {
+        *self.class_offsets.last().unwrap()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Label of sample `i` (prefix-sum lookup, no generation).
+    pub fn label_of(&self, i: usize) -> i32 {
+        debug_assert!(i < self.len());
+        (self.class_offsets.partition_point(|&o| o <= i) - 1) as i32
+    }
+
+    /// Regenerate sample `i` into `out` (length `sample_dim`); returns
+    /// its label. Each sample owns a fresh `Rng` derived from
+    /// `(sample_seed, i)` — Box–Muller caches a second deviate inside the
+    /// generator, so a shared stream would leak state across random
+    /// accesses.
+    pub fn sample_into(&self, i: usize, out: &mut [f32]) -> i32 {
+        let c = self.label_of(i) as usize;
+        let mut rng =
+            Rng::new(self.sample_seed ^ (i as u64 + 1).wrapping_mul(SAMPLE_STREAM_MUL));
+        let m = rng.below(self.spec.modes);
+        let p = &self.protos[c][m];
+        debug_assert_eq!(out.len(), p.len());
+        for (o, &v) in out.iter_mut().zip(p) {
+            *o = v + rng.normal_f32(0.0, self.spec.noise);
+        }
+        c as i32
+    }
+
+    /// Exact per-class sample counts (no scan).
+    pub fn class_counts(&self) -> Vec<usize> {
+        self.class_offsets.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    /// Resident heap bytes of the generator (prototypes + offsets) — the
+    /// whole per-train-set footprint, independent of `len()`.
+    pub fn mem_bytes(&self) -> usize {
+        let proto_bytes: usize = self
+            .protos
+            .iter()
+            .flat_map(|ms| ms.iter().map(|p| p.len() * 4))
+            .sum();
+        proto_bytes + self.class_offsets.len() * std::mem::size_of::<usize>()
     }
 }
 
@@ -173,9 +319,9 @@ mod tests {
         let mut rng = Rng::new(0);
         let ds = SynthSpec::cifar_like().generate(50, 30, &mut rng);
         assert_eq!(ds.sample_dim(), 3 * 32 * 32);
-        assert_eq!(ds.train_x.len(), 50 * 3072);
+        assert_eq!(ds.train_len(), 50);
         assert_eq!(ds.test_len(), 30);
-        assert!(ds.train_y.iter().all(|&y| (0..10).contains(&y)));
+        assert!((0..ds.train_len()).all(|i| (0..10).contains(&ds.train_label(i))));
     }
 
     #[test]
@@ -203,6 +349,31 @@ mod tests {
     }
 
     #[test]
+    fn apportion_is_exact_and_proportional() {
+        // Sums to total exactly; each class within one sample of its
+        // exact share; deterministic tie-break.
+        for &(total, w) in &[
+            (0usize, vec![1.0, 1.0]),
+            (1, vec![1.0, 1.0, 1.0]),
+            (7, vec![1.0; 10]),
+            (20_000, vec![0.4, 0.4, 0.4, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]),
+            (13, vec![5.0, 0.0, 1.0]),
+        ] {
+            let counts = apportion(&w, total);
+            assert_eq!(counts.iter().sum::<usize>(), total, "{w:?} × {total}");
+            let wsum: f64 = w.iter().sum();
+            for (c, &n) in counts.iter().enumerate() {
+                let share = w[c] / wsum * total as f64;
+                assert!(
+                    (n as f64 - share).abs() < 1.0 + 1e-9,
+                    "class {c}: {n} vs share {share}"
+                );
+            }
+            assert_eq!(apportion(&w, total), counts);
+        }
+    }
+
+    #[test]
     fn classes_are_separable() {
         // Nearest-prototype classification on fresh samples should beat
         // chance by a wide margin for the mnist-like spec.
@@ -214,7 +385,7 @@ mod tests {
         let mut means = vec![vec![0.0f64; dim]; 10];
         let counts = ds.train_class_counts();
         for i in 0..ds.train_len() {
-            let c = ds.train_y[i] as usize;
+            let c = ds.train_label(i) as usize;
             for (m, &v) in means[c].iter_mut().zip(ds.train_sample(i)) {
                 *m += v as f64;
             }
@@ -254,7 +425,15 @@ mod tests {
     fn deterministic_given_seed() {
         let a = SynthSpec::mnist_like().generate(10, 5, &mut Rng::new(7));
         let b = SynthSpec::mnist_like().generate(10, 5, &mut Rng::new(7));
-        assert_eq!(a.train_x, b.train_x);
+        let mut xa = Vec::new();
+        let mut xb = Vec::new();
+        let (mut ya, mut yb) = (Vec::new(), Vec::new());
+        let idxs: Vec<usize> = (0..10).collect();
+        a.gather_train(&idxs, &mut xa, &mut ya);
+        b.gather_train(&idxs, &mut xb, &mut yb);
+        assert_eq!(xa.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            xb.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        assert_eq!(ya, yb);
         assert_eq!(a.test_y, b.test_y);
     }
 }

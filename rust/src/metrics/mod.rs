@@ -45,6 +45,14 @@ pub struct RoundRecord {
     /// full broadcast; the persistent per-client part stays strictly
     /// below `clients · model` under any dropout.
     pub client_state_bytes: usize,
+    /// Simulation-runtime footprint at the end of the round: device
+    /// profiles + per-client clocks + the in-flight arrival heap — see
+    /// `FedRun::sim_state_bytes`. O(fleet) scalars, never O(fleet · model).
+    pub sim_state_bytes: usize,
+    /// Data-plane footprint: dataset store + shared partition + owned
+    /// shard indices — see `FedRun::data_state_bytes`. Constant across
+    /// rounds; O(prototypes + fleet) in lazy mode, O(samples · dim) eager.
+    pub data_state_bytes: usize,
 }
 
 /// One evaluation of the global model.
@@ -165,6 +173,17 @@ impl RunResult {
         self.rounds.last().map(|r| r.client_state_bytes).unwrap_or(0)
     }
 
+    /// Peak simulation-runtime footprint across the run (gated alongside
+    /// the client-state peak by the fleet benches).
+    pub fn peak_sim_state_bytes(&self) -> usize {
+        self.rounds.iter().map(|r| r.sim_state_bytes).max().unwrap_or(0)
+    }
+
+    /// Data-plane footprint (constant across rounds; 0 for an empty run).
+    pub fn data_state_bytes(&self) -> usize {
+        self.rounds.last().map(|r| r.data_state_bytes).unwrap_or(0)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("scheme", Json::s(&self.scheme)),
@@ -195,6 +214,11 @@ impl RunResult {
                                 (
                                     "client_state_bytes",
                                     Json::Num(r.client_state_bytes as f64),
+                                ),
+                                ("sim_state_bytes", Json::Num(r.sim_state_bytes as f64)),
+                                (
+                                    "data_state_bytes",
+                                    Json::Num(r.data_state_bytes as f64),
                                 ),
                             ])
                         })
@@ -317,6 +341,8 @@ mod tests {
                 stragglers: i,
                 mean_staleness: i as f64 * 0.5,
                 client_state_bytes: 100 * (5 - i),
+                sim_state_bytes: 50 + 10 * i,
+                data_state_bytes: 7777,
             });
             r.evals.push(EvalRecord {
                 round: i,
@@ -368,6 +394,26 @@ mod tests {
         assert_eq!(
             round0.get("client_state_bytes").and_then(|v| v.as_f64()),
             Some(500.0)
+        );
+    }
+
+    #[test]
+    fn sim_and_data_state_accounting() {
+        let r = sample_run();
+        // sample_run: sim_state_bytes 50, 60, 70, 80, 90; data 7777 flat
+        assert_eq!(r.peak_sim_state_bytes(), 90);
+        assert_eq!(r.data_state_bytes(), 7777);
+        assert_eq!(RunResult::new("x", "y").peak_sim_state_bytes(), 0);
+        assert_eq!(RunResult::new("x", "y").data_state_bytes(), 0);
+        let j = r.to_json();
+        let round0 = &j.req_arr("rounds").unwrap()[0];
+        assert_eq!(
+            round0.get("sim_state_bytes").and_then(|v| v.as_f64()),
+            Some(50.0)
+        );
+        assert_eq!(
+            round0.get("data_state_bytes").and_then(|v| v.as_f64()),
+            Some(7777.0)
         );
     }
 

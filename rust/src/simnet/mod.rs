@@ -172,7 +172,14 @@ impl VirtualClock {
 
     /// Advance by one synchronous round; returns the round's duration.
     pub fn advance_round(&mut self, timings: &[RoundTiming]) -> f64 {
-        let dur = timings.iter().map(|t| t.total()).fold(0.0, f64::max);
+        self.advance_round_by(timings.iter().map(|t| t.total()).fold(0.0, f64::max))
+    }
+
+    /// Advance by a precomputed synchronous round duration. `f64::max` is
+    /// order-independent, so the engine folds the fleet maximum
+    /// incrementally as micro-batches complete instead of buffering an
+    /// O(fleet) timing vector; counts one round and returns the duration.
+    pub fn advance_round_by(&mut self, dur: f64) -> f64 {
         self.now += dur;
         self.rounds += 1;
         dur
@@ -281,6 +288,12 @@ impl EventQueue {
         Some(*kth)
     }
 
+    /// Heap bytes of the pending-event buffer — the in-flight tail's
+    /// contribution to the engine's `sim_state_bytes` audit.
+    pub fn mem_bytes(&self) -> usize {
+        self.heap.len() * std::mem::size_of::<std::cmp::Reverse<ArrivalEvent>>()
+    }
+
     /// Pop every event with `finish <= t`, in (time, client) order.
     pub fn pop_until(&mut self, t: f64) -> Vec<ArrivalEvent> {
         let mut out = Vec::new();
@@ -321,6 +334,11 @@ impl ClientClocks {
     /// The client's own clock: when its current work (if any) arrives.
     pub fn free_at(&self, n: usize) -> f64 {
         self.free_at[n]
+    }
+
+    /// Heap bytes of the per-client clock array (`sim_state_bytes` term).
+    pub fn mem_bytes(&self) -> usize {
+        self.free_at.len() * std::mem::size_of::<f64>()
     }
 }
 
@@ -417,6 +435,19 @@ mod tests {
         assert_eq!(q.peek().unwrap().finish, 4.0);
         // events strictly after t stay queued
         assert!(q.pop_until(3.9).is_empty());
+    }
+
+    #[test]
+    fn sim_state_accounting_tracks_in_flight_tail() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.mem_bytes(), 0);
+        q.push(ArrivalEvent { finish: 1.0, client: 0, dispatch_round: 1 });
+        q.push(ArrivalEvent { finish: 2.0, client: 1, dispatch_round: 1 });
+        assert_eq!(q.mem_bytes(), 2 * std::mem::size_of::<ArrivalEvent>());
+        q.pop_until(1.5);
+        assert_eq!(q.mem_bytes(), std::mem::size_of::<ArrivalEvent>());
+        let clocks = ClientClocks::new(100);
+        assert_eq!(clocks.mem_bytes(), 100 * std::mem::size_of::<f64>());
     }
 
     #[test]

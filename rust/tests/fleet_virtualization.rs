@@ -283,25 +283,11 @@ fn client_state_collapses_on_broadcast_and_stays_below_dense() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
-#[test]
-fn snapshot_ring_accounting_under_pathological_straggler_tail() {
-    // Executable spec for the deferred snapshot-ring eviction work
-    // (ROADMAP "Snapshot-ring eviction under semi-async staleness
-    // tails"): an in-flight client pins its pre-dispatch snapshot until
-    // its upload arrives, so a low quorum over a skewed fleet keeps MANY
-    // snapshots alive at once. Until eviction exists, the contract is
-    // exact weak-ref accounting — pinned here so any future eviction
-    // scheme has to update this test deliberately:
-    //   (1) the ring's live set is precisely the distinct base rounds
-    //       still referenced by some client — nothing leaks, nothing is
-    //       freed early;
-    //   (2) the reported footprint decomposes into residuals + live
-    //       snapshots + in-flight pending bytes, every round;
-    //   (3) the hazard is real: the tail pins several snapshots at once;
-    //   (4) draining the tail (quorum 1) collapses the ring back to a
-    //       single live snapshot and empties the pending set.
-    let dir = native_dir("ring_tail");
-    let mut c = cfg(&dir);
+/// The pathological straggler tail both ring tests run: a low quorum
+/// over a skewed fleet keeps MANY uploads (and hence base snapshots)
+/// outstanding at once.
+fn tail_cfg(dir: &PathBuf) -> ExpConfig {
+    let mut c = cfg(dir);
     c.n_clients = 16;
     c.rounds = 1000; // stepped manually
     c.eval_every = 1000;
@@ -309,13 +295,36 @@ fn snapshot_ring_accounting_under_pathological_straggler_tail() {
     c.quorum = 0.1; // close after ~2 arrivals — the tail stays in flight
     c.deadline_s = 0.0;
     c.staleness_beta = 1.0;
-    let mut run = FedRun::new(c).unwrap();
+    c
+}
+
+#[test]
+fn snapshot_ring_accounting_under_pathological_straggler_tail() {
+    // The uncapped ring (`snapshot_ring_cap = 0`, the default): an
+    // in-flight client pins its pre-dispatch snapshot until its upload
+    // arrives, so the tail keeps MANY snapshots alive at once. With no
+    // cap the contract is exact weak-ref accounting:
+    //   (1) the ring's live set is precisely the distinct base rounds
+    //       still referenced by some client — nothing leaks, nothing is
+    //       freed early (an `Evicted` client references nothing, but no
+    //       client is ever evicted here);
+    //   (2) the reported footprint decomposes into residuals + live
+    //       snapshots + in-flight pending bytes, every round;
+    //   (3) the hazard is real: the tail pins several snapshots at once;
+    //   (4) draining the tail (quorum 1) collapses the ring back to a
+    //       single live snapshot and empties the pending set.
+    // The capped companion below proves the eviction gate bounds (3).
+    let dir = native_dir("ring_tail");
+    let mut run = FedRun::new(tail_cfg(&dir)).unwrap();
     let mut max_live = 0usize;
     for t in 1..=24 {
         let out = run.step_round().unwrap();
         let live = run.live_snapshot_rounds();
-        let mut expect: Vec<usize> =
-            run.clients.iter().map(|cl| cl.params.base_round()).collect();
+        let mut expect: Vec<usize> = run
+            .clients
+            .iter()
+            .filter_map(|cl| cl.params.base_round())
+            .collect();
         expect.sort_unstable();
         expect.dedup();
         assert_eq!(live, expect, "round {t}: ring live set drifted from client bases");
@@ -326,6 +335,7 @@ fn snapshot_ring_accounting_under_pathological_straggler_tail() {
         );
         max_live = max_live.max(live.len());
     }
+    assert_eq!(run.snapshot_evictions(), 0, "uncapped ring must never evict");
     assert!(
         max_live >= 4,
         "a pathological tail should pin several snapshots at once, saw at most {max_live}"
@@ -338,6 +348,85 @@ fn snapshot_ring_accounting_under_pathological_straggler_tail() {
     assert_eq!(
         run.client_state_bytes(),
         run.client_residual_bytes() + run.snapshot_bytes()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_ring_cap_bounds_the_tail_and_charges_resyncs() {
+    // The capped ring under the *same* pathological tail: the live set
+    // may never exceed `snapshot_ring_cap`, the cap must actually bite
+    // (evictions > 0 where the uncapped run pinned >= 4 snapshots), the
+    // footprint decomposition must keep holding with evicted clients in
+    // the fleet (an `Evicted` client contributes 0 resident bytes), and
+    // the run must stay numerically healthy — an evicted idle client is
+    // force-re-synced from the live global at its next dispatch, charged
+    // as a full broadcast.
+    let cap = 3usize;
+    let dir = native_dir("ring_cap");
+    let mut c = tail_cfg(&dir);
+    c.snapshot_ring_cap = cap;
+    let mut run = FedRun::new(c).unwrap();
+    for t in 1..=24 {
+        let out = run.step_round().unwrap();
+        let live = run.live_snapshot_rounds();
+        assert!(
+            live.len() <= cap,
+            "round {t}: {} live snapshots exceed the cap {cap}: {live:?}",
+            live.len()
+        );
+        // Every live snapshot is still referenced by some client — the
+        // cap evicts, it never leaks.
+        let mut expect: Vec<usize> = run
+            .clients
+            .iter()
+            .filter_map(|cl| cl.params.base_round())
+            .collect();
+        expect.sort_unstable();
+        expect.dedup();
+        assert_eq!(live, expect, "round {t}: capped live set drifted from client bases");
+        assert_eq!(
+            out.client_state_bytes,
+            run.client_residual_bytes() + run.snapshot_bytes() + run.pending_bytes(),
+            "round {t}: capped footprint does not decompose"
+        );
+    }
+    assert!(
+        run.snapshot_evictions() > 0,
+        "the cap never bit a tail that uncapped pins >= 4 snapshots"
+    );
+    for t in &run.global_params {
+        assert!(t.data().iter().all(|x| x.is_finite()));
+    }
+    // Draining the tail still collapses the ring to one live snapshot.
+    run.cfg.quorum = 1.0;
+    run.step_round().unwrap();
+    assert_eq!(run.live_snapshot_rounds().len(), 1);
+    assert_eq!(run.pending_bytes(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lazy_and_eager_data_modes_run_bitwise_identically() {
+    // `data_mode = "lazy"` regenerates every training sample from the
+    // seed on demand; `"eager"` materializes the same plan into a dense
+    // tensor up front. The data layer proves the stores byte-identical
+    // (`data::synth`); this pins the end-to-end consequence: whole runs
+    // — losses, durations, uploads, globals — are bitwise equal, while
+    // only the lazy run's data plane is sublinear in the sample count.
+    let dir = native_dir("data_mode");
+    let mut lazy_cfg = cfg(&dir);
+    lazy_cfg.data_mode = "lazy".into();
+    let mut eager_cfg = cfg(&dir);
+    eager_cfg.data_mode = "eager".into();
+    let lazy = run_once(lazy_cfg);
+    let eager = run_once(eager_cfg);
+    assert_bitwise(&lazy, &eager, "lazy vs eager data plane");
+    let lazy_bytes = lazy.0.data_state_bytes();
+    let eager_bytes = eager.0.data_state_bytes();
+    assert!(
+        lazy_bytes < eager_bytes,
+        "lazy data plane ({lazy_bytes} B) not below eager ({eager_bytes} B)"
     );
     let _ = std::fs::remove_dir_all(&dir);
 }
