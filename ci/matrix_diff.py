@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Scenario-matrix regression gate.
+
+Compares two matrix reports written by ``feddd matrix`` (one-line-per-cell
+JSON, see DESIGN.md §Scenario-Matrix) and exits non-zero when the current
+report regressed. The rules mirror the in-binary compare mode
+(``feddd matrix --compare``) exactly:
+
+* cells match on their ``scenario/scheme/seed/tier`` key;
+* **accuracy** may not drop by more than ``--tol-acc`` (default 0.01,
+  absolute) — every cell runs on the fixed-seed virtual-clock machinery,
+  so at equal code the value is exactly reproducible and a drop beyond
+  tolerance is a real quality regression, not noise;
+* the deterministic byte totals (``wire_bytes``, ``uploaded_bytes``) may
+  not increase at all;
+* a cell present only in the current report is reported as **new** but
+  never fails the gate — there is no baseline for it, so no delta or
+  ratio is ever computed (the undefined-division rule);
+* a cell that **vanished** from the current report fails: a gate that
+  silently stops covering a cell is itself a regression;
+* an empty current report fails outright.
+
+Only regressions (and new-cell notes) are printed — never the full table.
+
+Usage:
+    python3 ci/matrix_diff.py reports/MATRIX_smoke_base.json \
+        matrix-out/MATRIX_smoke_ci.json --tol-acc 0.01 \
+        --out matrix-out/MATRIX_diff.md
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"matrix_diff: cannot read {path}: {e}")
+
+
+def cell_key(cell):
+    return "{}/{}/seed{}/{}".format(
+        cell.get("scenario", "?"),
+        cell.get("scheme", "?"),
+        cell.get("seed", "?"),
+        cell.get("tier", "?"),
+    )
+
+
+def cells_by_key(doc):
+    out = {}
+    for cell in doc.get("cells", []) or []:
+        if isinstance(cell, dict):
+            out[cell_key(cell)] = cell
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--tol-acc", type=float, default=0.01,
+                    help="allowed absolute accuracy drop per cell (default 0.01)")
+    ap.add_argument("--out", default=None,
+                    help="write a markdown diff report here (PR artifact)")
+    args = ap.parse_args()
+
+    base = cells_by_key(load(args.baseline))
+    cur = cells_by_key(load(args.current))
+
+    failures = []
+    notes = []
+    if not cur:
+        failures.append("current report has no cells — the matrix did not run")
+
+    for key in sorted(base):
+        b = base[key]
+        c = cur.get(key)
+        if c is None:
+            failures.append(
+                f"{key}: cell vanished from the current report — its gate "
+                "would be silently disarmed")
+            continue
+        ba, ca = b.get("accuracy"), c.get("accuracy")
+        if isinstance(ba, (int, float)) and isinstance(ca, (int, float)):
+            if ca < ba - args.tol_acc:
+                failures.append(
+                    f"{key}: accuracy {ba:.4f} -> {ca:.4f} "
+                    f"(drop {ba - ca:.4f} > tol {args.tol_acc})")
+        for field in ("wire_bytes", "uploaded_bytes"):
+            bv, cv = b.get(field), c.get(field)
+            if isinstance(bv, (int, float)) and isinstance(cv, (int, float)):
+                if cv > bv:
+                    failures.append(
+                        f"{key}: {field} {bv:.0f} -> {cv:.0f} "
+                        "(deterministic byte total may not grow)")
+
+    for key in sorted(cur):
+        if key not in base:
+            notes.append(f"new cell {key} — no baseline, no delta computed")
+
+    lines = ["# Matrix diff", ""]
+    lines.append(f"baseline: `{args.baseline}`  ·  current: `{args.current}`")
+    lines.append(f"accuracy tolerance: {args.tol_acc}  ·  "
+                 "byte gate: any increase")
+    lines.append("")
+    if failures:
+        lines.append(f"## ❌ {len(failures)} regression(s)")
+        lines.extend(f"- FAIL {f}" for f in failures)
+    else:
+        lines.append("## ✅ No regressions.")
+    if notes:
+        lines.append("")
+        lines.extend(f"- note: {n}" for n in notes)
+    report = "\n".join(lines) + "\n"
+    print(report)
+    if args.out:
+        try:
+            with open(args.out, "w", encoding="utf-8") as f:
+                f.write(report)
+        except OSError as e:
+            sys.exit(f"matrix_diff: cannot write {args.out}: {e}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+#!/usr/bin/env python3
+"""Unit tests for the scenario-matrix gate (``ci/matrix_diff.py``).
+
+The gate's red/green logic is itself the first CI step — a regression
+gate that never fires is worse than none. Exercised end-to-end by
+invoking the script as a subprocess on synthetic report pairs:
+
+* green: identical reports, accuracy drop within tolerance, byte
+  decreases, accuracy improvements, new cells (reported, never fatal);
+* red: accuracy drop beyond tolerance, a single extra ``wire_bytes`` /
+  ``uploaded_bytes`` byte, a vanished cell (silent disarm), an empty
+  current report.
+
+Stdlib only; run with ``python3 ci/test_matrix_diff.py -v`` (the CI
+step).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SCRIPT = os.path.join(HERE, "matrix_diff.py")
+
+
+def cell(**overrides):
+    """A minimal matrix cell; overrides patch the defaults."""
+    body = {
+        "scenario": "baseline_iid",
+        "scheme": "feddd",
+        "tier": "smoke",
+        "seed": 17,
+        "rounds": 6,
+        "accuracy": 0.8125,
+        "rare_accuracy": None,
+        "uploaded_bytes": 123456,
+        "wire_bytes": 130000,
+        "v_time": 901.5,
+        "mean_staleness": 0.25,
+        "mean_stragglers": 1.5,
+        "mean_participants": 7.0,
+        "churned": 0,
+        "peak_client_state_bytes": 40000,
+    }
+    body.update(overrides)
+    return body
+
+
+def doc(cells):
+    return {
+        "matrix": {"tier": "smoke", "label": "test", "scenarios": [],
+                   "schemes": [], "seeds": [17]},
+        "cells": cells,
+    }
+
+
+def run_gate(base, cur, extra=()):
+    """Run matrix_diff.py on the two documents; returns CompletedProcess."""
+    with tempfile.TemporaryDirectory() as d:
+        bp = os.path.join(d, "base.json")
+        cp = os.path.join(d, "cur.json")
+        with open(bp, "w", encoding="utf-8") as f:
+            json.dump(base, f)
+        with open(cp, "w", encoding="utf-8") as f:
+            json.dump(cur, f)
+        return subprocess.run(
+            [sys.executable, SCRIPT, bp, cp, *extra],
+            capture_output=True,
+            text=True,
+            check=False,
+        )
+
+
+class GreenPaths(unittest.TestCase):
+    def test_identical_reports_pass(self):
+        d = doc([cell()])
+        proc = run_gate(d, d)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("No regressions", proc.stdout)
+
+    def test_accuracy_drop_within_tolerance_passes(self):
+        base = doc([cell(accuracy=0.8125)])
+        cur = doc([cell(accuracy=0.8075)])  # -0.005 < tol 0.01
+        self.assertEqual(run_gate(base, cur).returncode, 0)
+
+    def test_accuracy_improvement_passes(self):
+        base = doc([cell(accuracy=0.80)])
+        cur = doc([cell(accuracy=0.90)])
+        self.assertEqual(run_gate(base, cur).returncode, 0)
+
+    def test_byte_decrease_passes(self):
+        base = doc([cell(wire_bytes=130000, uploaded_bytes=123456)])
+        cur = doc([cell(wire_bytes=129999, uploaded_bytes=123455)])
+        self.assertEqual(run_gate(base, cur).returncode, 0)
+
+    def test_new_cell_is_reported_but_not_fatal(self):
+        base = doc([cell()])
+        cur = doc([cell(), cell(scheme="oort")])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("new cell", proc.stdout)
+        self.assertIn("baseline_iid/oort/seed17/smoke", proc.stdout)
+        # the undefined-division rule: no delta/ratio for a new cell
+        self.assertIn("no delta computed", proc.stdout)
+
+
+class RedPaths(unittest.TestCase):
+    def test_accuracy_regression_beyond_tolerance_fails(self):
+        base = doc([cell(accuracy=0.8125)])
+        cur = doc([cell(accuracy=0.75)])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("accuracy", proc.stdout)
+        self.assertIn("baseline_iid/feddd/seed17/smoke", proc.stdout)
+
+    def test_custom_tolerance_is_honored(self):
+        base = doc([cell(accuracy=0.8125)])
+        cur = doc([cell(accuracy=0.78)])  # -0.0325
+        self.assertEqual(run_gate(base, cur, ("--tol-acc", "0.05")).returncode, 0)
+        self.assertEqual(run_gate(base, cur, ("--tol-acc", "0.01")).returncode, 1)
+
+    def test_one_extra_wire_byte_fails(self):
+        base = doc([cell(wire_bytes=130000)])
+        cur = doc([cell(wire_bytes=130001)])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("wire_bytes", proc.stdout)
+
+    def test_one_extra_uploaded_byte_fails(self):
+        base = doc([cell(uploaded_bytes=123456)])
+        cur = doc([cell(uploaded_bytes=123457)])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("uploaded_bytes", proc.stdout)
+
+    def test_vanished_cell_fails(self):
+        # A cell that stops being run would silently disarm its gate —
+        # shrinking the matrix must be an explicit baseline update.
+        base = doc([cell(), cell(scheme="oort")])
+        cur = doc([cell()])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("silently disarmed", proc.stdout)
+
+    def test_empty_current_report_fails(self):
+        base = doc([cell()])
+        cur = doc([])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("no cells", proc.stdout)
+
+
+class ReportOutput(unittest.TestCase):
+    def test_out_flag_writes_the_markdown_report(self):
+        base = doc([cell(accuracy=0.8125, wire_bytes=130000)])
+        cur = doc([cell(accuracy=0.75, wire_bytes=130001)])
+        with tempfile.TemporaryDirectory() as d:
+            bp = os.path.join(d, "base.json")
+            cp = os.path.join(d, "cur.json")
+            out = os.path.join(d, "MATRIX_diff.md")
+            with open(bp, "w", encoding="utf-8") as f:
+                json.dump(base, f)
+            with open(cp, "w", encoding="utf-8") as f:
+                json.dump(cur, f)
+            proc = subprocess.run(
+                [sys.executable, SCRIPT, bp, cp, "--out", out],
+                capture_output=True,
+                text=True,
+                check=False,
+            )
+            self.assertEqual(proc.returncode, 1)
+            with open(out, encoding="utf-8") as f:
+                report = f.read()
+        self.assertIn("# Matrix diff", report)
+        self.assertIn("2 regression(s)", report)
+
+    def test_diff_prints_only_regressions_not_the_full_table(self):
+        base = doc([cell(), cell(scheme="fedavg"), cell(scheme="fedcs")])
+        cur = doc([cell(accuracy=0.5), cell(scheme="fedavg"),
+                   cell(scheme="fedcs")])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        # only the regressed cell's key appears
+        self.assertIn("baseline_iid/feddd/seed17/smoke", proc.stdout)
+        self.assertNotIn("baseline_iid/fedavg/seed17/smoke", proc.stdout)
+        self.assertNotIn("baseline_iid/fedcs/seed17/smoke", proc.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -1,39 +1,33 @@
-//! §6.7 generalization on class-imbalanced data (Fig. 21): three rare
-//! classes at 0.4× frequency, Non-IID-b shards, a tight 20% communication
-//! budget. Client selection starves the rare classes; FedDD keeps them.
+//! §6.7 generalization on class-imbalanced data (Fig. 21): the
+//! `class_imbalance` registry scenario (docs/SCENARIOS.md) at the small
+//! tier — three rare classes at 0.4× frequency, Non-IID-b shards, a
+//! tight 20% communication budget. Client selection starves the rare
+//! classes; FedDD keeps them. The knobs live in the scenario registry,
+//! shared with `feddd matrix`.
 
 use feddd::prelude::*;
-
-fn base(scheme: &str) -> ExpConfig {
-    let mut cfg = ExpConfig::smoke();
-    cfg.scheme = scheme.into();
-    cfg.partition = "noniid_b".into();
-    cfg.rare_classes = vec![0, 1, 2];
-    cfg.rare_ratio = 0.4;
-    cfg.a_server = 0.2;
-    cfg.d_max = 0.85;
-    cfg.rounds = 25;
-    cfg.eval_every = 25;
-    cfg.workers = 0; // parallel round engine: one worker per core
-    cfg.artifacts_dir = feddd::runtime::default_artifacts_dir()
-        .to_string_lossy()
-        .into_owned();
-    cfg
-}
+use feddd::scenarios::{example_config, Tier, MATRIX_SCHEMES};
 
 fn main() -> anyhow::Result<()> {
     feddd::util::logging::init();
     println!("== class-imbalanced MNIST-like, rare classes {{0,1,2}} @ 0.4x, budget 20% ==\n");
-    println!("{:<8} {:>8} {:>8} {:>8} | per-class accuracy (0..9)", "scheme", "overall", "rare", "common");
-    for scheme in ["fedavg", "fedcs", "oort", "feddd"] {
-        let res = run_experiment(base(scheme))?;
+    println!(
+        "{:<8} {:>8} {:>8} {:>8} | per-class accuracy (0..9)",
+        "scheme", "overall", "rare", "common"
+    );
+    for scheme in MATRIX_SCHEMES {
+        let mut cfg = example_config("class_imbalance", Tier::Small)?;
+        cfg.scheme = (*scheme).into();
+        let rare_classes = cfg.rare_classes.clone();
+        let res = run_experiment(cfg)?;
         let pca = res
             .evals
             .last()
             .map(|e| e.per_class_accuracy.clone())
             .unwrap_or_default();
-        let rare = pca.iter().take(3).sum::<f64>() / 3.0;
-        let common = pca.iter().skip(3).sum::<f64>() / 7.0;
+        let rare = res.rare_class_accuracy(&rare_classes).unwrap_or(0.0);
+        let n_rare = rare_classes.len();
+        let common = pca.iter().skip(n_rare).sum::<f64>() / (pca.len() - n_rare).max(1) as f64;
         let cells: Vec<String> = pca.iter().map(|a| format!("{a:.2}")).collect();
         println!(
             "{:<8} {:>8.3} {:>8.3} {:>8.3} | {}",

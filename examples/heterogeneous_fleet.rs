@@ -1,37 +1,27 @@
-//! Model-heterogeneous fleet (the paper's Table 6 "het_b" setting): five
-//! different VGG-style sub-models across the clients, differential
-//! dropout-rate allocation, and the coverage-rate-corrected importance
-//! selection (Eq. 21). Compares FedDD against FedCS under the same byte
-//! budget and prints the per-client dropout profile.
+//! Model-heterogeneous fleet (the paper's Table 6 "het_b" setting): the
+//! `hetero_fleet` registry scenario (docs/SCENARIOS.md) at the small
+//! tier — five different VGG-style sub-models across the clients,
+//! differential dropout-rate allocation, and the coverage-rate-corrected
+//! importance selection (Eq. 21). Compares FedDD against FedCS under the
+//! same byte budget and prints the per-client sub-model profile.
 
 use feddd::prelude::*;
+use feddd::scenarios::{example_config, Tier};
 
-fn base() -> ExpConfig {
-    let mut cfg = ExpConfig::smoke();
-    cfg.dataset = "cifar10".into();
-    cfg.model = "het_b".into();
-    cfg.width_pct = 25;
-    cfg.lr = 0.02;
-    cfg.rounds = 40;
-    cfg.local_steps = 4;
-    cfg.n_clients = 10;
-    cfg.eval_every = 4;
-    cfg.workers = 0; // parallel round engine: one worker per core
-    cfg.artifacts_dir = feddd::runtime::default_artifacts_dir()
-        .to_string_lossy()
-        .into_owned();
-    cfg
+fn base() -> anyhow::Result<ExpConfig> {
+    example_config("hetero_fleet", Tier::Small)
 }
 
 fn main() -> anyhow::Result<()> {
     feddd::util::logging::init();
 
     // Show the sub-model spread of the fleet.
-    let cfg = base();
-    println!("== heterogeneous fleet (Table 6 sub-models, width 25%) ==");
+    let cfg = base()?;
+    let width = cfg.width_pct as f64 / 100.0;
+    println!("== heterogeneous fleet (Table 6 sub-models, width {}%) ==", cfg.width_pct);
     for n in 0..5 {
         let name = cfg.client_model_name(n);
-        let spec = feddd::model::ModelSpec::get(&name, 0.25)?;
+        let spec = feddd::model::ModelSpec::get(&name, width)?;
         println!(
             "  client {n}: {:<10} {:>8} params  {:>6} KiB",
             name,
@@ -40,10 +30,10 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let mut feddd_run = FedRun::new(base())?;
+    let mut feddd_run = FedRun::new(base()?)?;
     let feddd_res = feddd_run.run()?;
 
-    let mut cs_cfg = base();
+    let mut cs_cfg = base()?;
     cs_cfg.scheme = "fedcs".into();
     let cs_res = FedRun::new(cs_cfg)?.run()?;
 
@@ -52,19 +42,18 @@ fn main() -> anyhow::Result<()> {
         "FedDD : final acc {:.3}  best {:.3}  vtime {:.0}s",
         feddd_res.final_accuracy().unwrap_or(0.0),
         feddd_res.best_accuracy(),
-        feddd_res.evals.last().map(|e| e.v_time).unwrap_or(0.0)
+        feddd_res.final_v_time()
     );
     println!(
         "FedCS : final acc {:.3}  best {:.3}  vtime {:.0}s",
         cs_res.final_accuracy().unwrap_or(0.0),
         cs_res.best_accuracy(),
-        cs_res.evals.last().map(|e| e.v_time).unwrap_or(0.0)
+        cs_res.final_v_time()
     );
     println!(
         "\nFedDD engaged all {} clients every round; FedCS averaged {:.1} participants.",
         feddd_res.rounds.last().map(|r| r.participants).unwrap_or(0),
-        cs_res.rounds.iter().map(|r| r.participants).sum::<usize>() as f64
-            / cs_res.rounds.len() as f64
+        cs_res.mean_participants()
     );
     Ok(())
 }

@@ -1,19 +1,19 @@
-//! Quickstart: a 12-round FedDD run on the smoke preset (10 simulated
-//! clients, MLP on the MNIST stand-in), printing the accuracy curve and
-//! the allocator's dropout decisions.
+//! Quickstart: the `baseline_iid` registry scenario at the smoke tier
+//! (docs/SCENARIOS.md), printing the accuracy curve and the allocator's
+//! byte budget. The config comes straight from the scenario registry —
+//! the same cell `feddd matrix --tier smoke` runs — so this example and
+//! the matrix can never drift apart.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
 use feddd::prelude::*;
+use feddd::scenarios::{example_config, Tier};
 
 fn main() -> anyhow::Result<()> {
     feddd::util::logging::init();
-    let mut cfg = ExpConfig::smoke();
+    let mut cfg = example_config("baseline_iid", Tier::Smoke)?;
     cfg.rounds = 12;
-    cfg.workers = 0; // fan client training/aggregation over all cores
-    cfg.artifacts_dir = feddd::runtime::default_artifacts_dir()
-        .to_string_lossy()
-        .into_owned();
+    cfg.eval_every = 3;
 
     println!("== FedDD quickstart: {} clients, {} rounds ==", cfg.n_clients, cfg.rounds);
     let mut run = FedRun::new(cfg)?;

@@ -1,23 +1,21 @@
-//! The Table 5 geo-distributed testbed: 10 VM-like clients whose compute
-//! and link quality mirror the paper's Alibaba-cloud fleet (Guangzhou /
-//! Nanjing / Beijing / Zhangjiakou / Shanghai vs an Ulanqab server),
-//! CNN2 on the CIFAR10 stand-in with h=1. Reports time-to-accuracy of
-//! FedDD vs FedAvg on the virtual clock.
+//! The Table 5 geo-distributed testbed: the `geo_testbed` registry
+//! scenario (docs/SCENARIOS.md) at the small tier — 10 VM-like clients
+//! whose compute and link quality mirror the paper's Alibaba-cloud fleet
+//! (Guangzhou / Nanjing / Beijing / Zhangjiakou / Shanghai vs an Ulanqab
+//! server), h=1. Reports time-to-accuracy of FedDD vs FedAvg on the
+//! virtual clock. The fleet/h knobs live in the scenario registry,
+//! shared with `feddd matrix`.
 
 use feddd::prelude::*;
+use feddd::scenarios::{example_config, Tier};
 
 fn main() -> anyhow::Result<()> {
     feddd::util::logging::init();
-    let mk = |scheme: &str| -> ExpConfig {
-        let mut cfg = ExpConfig::testbed();
+    let mk = |scheme: &str| -> anyhow::Result<ExpConfig> {
+        let mut cfg = example_config("geo_testbed", Tier::Small)?;
         cfg.scheme = scheme.into();
-        cfg.rounds = 30;
         cfg.eval_every = 2;
-        cfg.workers = 0; // parallel round engine: one worker per core
-        cfg.artifacts_dir = feddd::runtime::default_artifacts_dir()
-            .to_string_lossy()
-            .into_owned();
-        cfg
+        Ok(cfg)
     };
 
     println!("== Table 5 testbed fleet ==");
@@ -32,8 +30,8 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let feddd_res = run_experiment(mk("feddd"))?;
-    let fedavg_res = run_experiment(mk("fedavg"))?;
+    let feddd_res = run_experiment(mk("feddd")?)?;
+    let fedavg_res = run_experiment(mk("fedavg")?)?;
 
     let target = 0.9 * fedavg_res.best_accuracy();
     println!("\ntarget accuracy (90% of FedAvg best): {target:.3}");

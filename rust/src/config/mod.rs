@@ -99,6 +99,24 @@ pub struct ExpConfig {
     /// tails before the engine evicts the oldest round's dependents
     /// (DESIGN.md §Fleet-Virtualization). `0` = uncapped.
     pub snapshot_ring_cap: usize,
+    /// Client-availability trace (DESIGN.md §Scenario-Matrix): "none"
+    /// (every client reachable, the default), "diurnal" (a rolling half
+    /// of the fleet is offline, phase-shifted per client), "flash_crowd"
+    /// (only a ~10% vanguard is online until `trace_period_s`, then
+    /// everyone joins at once) or "churn" (every client reachable, but
+    /// each in-flight upload may drop mid-round — see `churn_rate`). All
+    /// traces are pure functions of (client, virtual time, seed), so runs
+    /// stay bitwise-reproducible for every worker count.
+    pub trace: String,
+    /// Period of the availability trace in virtual seconds: the diurnal
+    /// day length, or the flash-crowd arrival instant.
+    pub trace_period_s: f64,
+    /// Probability that a dispatched upload churns (connection drops at
+    /// arrival time; the upload is discarded, the client keeps its
+    /// pre-dispatch state and reconnects idle). Only consulted when
+    /// `trace = "churn"` under `round_mode = "semi_async"`; decided by a
+    /// pure hash of (seed, client, dispatch round).
+    pub churn_rate: f64,
 }
 
 impl Default for ExpConfig {
@@ -138,6 +156,9 @@ impl Default for ExpConfig {
             codec: "auto".into(),
             data_mode: "lazy".into(),
             snapshot_ring_cap: 0,
+            trace: "none".into(),
+            trace_period_s: 600.0,
+            churn_rate: 0.0,
         }
     }
 }
@@ -313,6 +334,21 @@ impl ExpConfig {
              current and previous rounds are always momentarily live)",
             self.snapshot_ring_cap
         );
+        anyhow::ensure!(
+            ["none", "diurnal", "flash_crowd", "churn"].contains(&self.trace.as_str()),
+            "unknown trace {:?} (none|diurnal|flash_crowd|churn)",
+            self.trace
+        );
+        anyhow::ensure!(
+            self.trace_period_s.is_finite() && self.trace_period_s > 0.0,
+            "trace_period_s {} must be finite and > 0",
+            self.trace_period_s
+        );
+        anyhow::ensure!(
+            self.churn_rate.is_finite() && (0.0..1.0).contains(&self.churn_rate),
+            "churn_rate {} must be in [0, 1)",
+            self.churn_rate
+        );
         let known_family =
             ["mlp", "cnn1", "cnn2", "het_a", "het_b"].contains(&self.model.as_str());
         // Specific sub-models (e.g. "het_a_3") run homogeneously (Fig. 3).
@@ -363,6 +399,9 @@ impl ExpConfig {
             ("codec", Json::s(&self.codec)),
             ("data_mode", Json::s(&self.data_mode)),
             ("snapshot_ring_cap", Json::Num(self.snapshot_ring_cap as f64)),
+            ("trace", Json::s(&self.trace)),
+            ("trace_period_s", Json::Num(self.trace_period_s)),
+            ("churn_rate", Json::Num(self.churn_rate)),
         ])
     }
 
@@ -415,6 +454,9 @@ impl ExpConfig {
             data_mode: gs("data_mode", &d.data_mode),
             snapshot_ring_cap: gn("snapshot_ring_cap", d.snapshot_ring_cap as f64)
                 as usize,
+            trace: gs("trace", &d.trace),
+            trace_period_s: gn("trace_period_s", d.trace_period_s),
+            churn_rate: gn("churn_rate", d.churn_rate),
         };
         Ok(cfg)
     }
@@ -463,6 +505,9 @@ impl ExpConfig {
             "codec" => self.codec = value.into(),
             "data_mode" => self.data_mode = value.into(),
             "snapshot_ring_cap" => self.snapshot_ring_cap = value.parse()?,
+            "trace" => self.trace = value.into(),
+            "trace_period_s" => self.trace_period_s = value.parse()?,
+            "churn_rate" => self.churn_rate = value.parse()?,
             "rare_classes" => {
                 self.rare_classes = value
                     .split(',')
@@ -637,6 +682,34 @@ mod tests {
         assert!(c.validate().is_err());
         let c = ExpConfig { staleness_beta: f64::NAN, ..ExpConfig::default() };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn trace_knobs_roundtrip_and_validate() {
+        let mut c = ExpConfig::smoke();
+        assert_eq!(c.trace, "none"); // every client reachable by default
+        assert_eq!(c.churn_rate, 0.0);
+        c.set("trace", "diurnal").unwrap();
+        c.set("trace_period_s", "900").unwrap();
+        c.validate().unwrap();
+        c.set("trace", "churn").unwrap();
+        c.set("churn_rate", "0.2").unwrap();
+        c.round_mode = "semi_async".into();
+        c.validate().unwrap();
+        let back = ExpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+        c.trace = "weekend".into();
+        assert!(c.validate().is_err());
+        c.trace = "flash_crowd".into();
+        c.trace_period_s = 0.0;
+        assert!(c.validate().is_err());
+        c.trace_period_s = 600.0;
+        c.churn_rate = 1.0; // every upload dropping can never converge
+        assert!(c.validate().is_err());
+        c.churn_rate = -0.1;
+        assert!(c.validate().is_err());
+        c.churn_rate = 0.999;
+        c.validate().unwrap();
     }
 
     #[test]

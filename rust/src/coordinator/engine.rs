@@ -88,8 +88,8 @@ use crate::model::{coverage_rates, extract_params_into, ModelId, ModelSpec};
 use crate::runtime::Runtime;
 use crate::selection::{select_mask, ChannelMask, Policy};
 use crate::simnet::{
-    downlink_bytes, ArrivalEvent, ClientClocks, DeviceProfile, EventQueue, Fleet, RoundTiming,
-    VirtualClock,
+    churn_drops, downlink_bytes, ArrivalEvent, AvailabilityTrace, ClientClocks, DeviceProfile,
+    EventQueue, Fleet, RoundTiming, VirtualClock,
 };
 use crate::solver::{allocate_fast, AllocInput, AllocParams};
 use crate::tensor::{copy_tensors_into, Tensor};
@@ -157,6 +157,11 @@ pub struct RoundOutcome {
     pub stragglers: usize,
     /// Mean staleness (in rounds) of the folded uploads (0 in sync mode).
     pub mean_staleness: f64,
+    /// Uploads that churned at arrival time this round (`cfg.trace =
+    /// "churn"` under semi-async): the connection dropped, the upload was
+    /// discarded unfolded and the client reconnects idle. Always 0 in
+    /// sync mode and for every other trace.
+    pub churned: usize,
     /// Fleet state footprint at the end of the round: per-client
     /// residual bytes + live shared snapshots
     /// ([`FedRun::client_state_bytes`]).
@@ -212,6 +217,13 @@ pub struct FedRun {
     data_state_bytes: usize,
     /// Cumulative clients evicted by [`Self::enforce_ring_cap`].
     snapshot_evictions: usize,
+    /// Client-availability trace (`cfg.trace`, DESIGN.md
+    /// §Scenario-Matrix): a pure function of (client, virtual time) that
+    /// gates dispatch in both round modes; `Churn` additionally drops
+    /// in-flight uploads at arrival time in semi-async mode.
+    trace: AvailabilityTrace,
+    /// Cumulative uploads dropped by churn at arrival time.
+    churned_total: usize,
 }
 
 impl FedRun {
@@ -316,6 +328,7 @@ impl FedRun {
         let policy = Policy::by_name(&cfg.selection)?;
         let backend = AggBackend::by_name(&cfg.agg_backend)?;
         let codec = CodecMode::by_name(&cfg.codec)?;
+        let trace = AvailabilityTrace::by_name(&cfg.trace)?;
         let pool = ThreadPool::new(cfg.workers);
         let n = clients.len();
         Ok(FedRun {
@@ -340,6 +353,8 @@ impl FedRun {
             pending: BTreeMap::new(),
             data_state_bytes,
             snapshot_evictions: 0,
+            trace,
+            churned_total: 0,
         })
     }
 
@@ -440,6 +455,28 @@ impl FedRun {
     /// Cumulative clients evicted by the snapshot-ring cap.
     pub fn snapshot_evictions(&self) -> usize {
         self.snapshot_evictions
+    }
+
+    /// Cumulative uploads dropped by arrival-time churn (`cfg.trace =
+    /// "churn"`; always 0 otherwise).
+    pub fn churned_uploads(&self) -> usize {
+        self.churned_total
+    }
+
+    /// Clients of `participants` the coordinator can reach at virtual
+    /// time `now` under `cfg.trace`. The common `trace = "none"` path
+    /// returns the list untouched.
+    fn available_participants(&self, participants: Vec<usize>, now: f64) -> Vec<usize> {
+        if self.trace == AvailabilityTrace::None {
+            return participants;
+        }
+        let n_clients = self.clients.len();
+        participants
+            .into_iter()
+            .filter(|&n| {
+                self.trace.is_available(n, n_clients, now, self.cfg.trace_period_s)
+            })
+            .collect()
     }
 
     /// Enforce `cfg.snapshot_ring_cap` on the live snapshot ring
@@ -761,7 +798,13 @@ impl FedRun {
         let full_broadcast = self.is_full_broadcast(t);
 
         // ---- 0. participants + dropout rates ----
+        // Selection runs first (consuming its usual RNG), then the
+        // availability trace removes the clients the coordinator cannot
+        // reach at the round-start instant — the server schedules blind
+        // to availability, exactly like a real parameter server timing
+        // out unreachable devices.
         let (participants, dropout) = self.round_participants(t)?;
+        let participants = self.available_participants(participants, self.clock.now());
         let n_parts = participants.len();
 
         // ---- 1+2+3. train / select / fold, sharded + micro-batched ----
@@ -850,6 +893,7 @@ impl FedRun {
             participants: n_parts,
             stragglers: 0,
             mean_staleness: 0.0,
+            churned: 0,
             client_state_bytes: self.client_state_bytes(),
             sim_state_bytes: self.sim_state_bytes(),
             data_state_bytes: self.data_state_bytes,
@@ -874,6 +918,10 @@ impl FedRun {
 
         // ---- 0. participants + dropout over the whole fleet ----
         let (participants, dropout) = self.round_participants(t)?;
+        // The availability trace gates dispatch the same way it gates the
+        // sync barrier: an offline client is simply unreachable this
+        // round (its own in-flight work, if any, still arrives).
+        let participants = self.available_participants(participants, round_start);
 
         // ---- 1. dispatch idle participants (micro-batched) ----
         // Clients still uploading a previous round's update are skipped —
@@ -929,6 +977,7 @@ impl FedRun {
                 participants: 0,
                 stragglers: 0,
                 mean_staleness: 0.0,
+                churned: 0,
                 client_state_bytes: self.client_state_bytes(),
                 sim_state_bytes: self.sim_state_bytes(),
                 data_state_bytes: self.data_state_bytes,
@@ -946,6 +995,32 @@ impl FedRun {
         let t_close = t_quorum.min(t_deadline);
         let mut arrivals = self.events.pop_until(t_close);
         let stragglers = self.events.len();
+        // Mid-round churn (`cfg.trace = "churn"`): some arrivals are
+        // observed disconnects instead of uploads. The dropped upload
+        // still occupied its link until the arrival instant — so it
+        // counted toward the quorum close time above — but it is never
+        // folded, the client keeps its pre-dispatch base, and it
+        // reconnects idle (its clock frees at the same instant). The
+        // verdict is a pure hash of (seed, client, dispatch round)
+        // (`simnet::churn_drops`), so no engine RNG state is consumed and
+        // replays stay bitwise-identical for every worker count.
+        let mut churned = 0usize;
+        if self.trace == AvailabilityTrace::Churn && cfg.churn_rate > 0.0 {
+            arrivals.retain(|ev| {
+                if churn_drops(cfg.seed, ev.client, ev.dispatch_round, cfg.churn_rate) {
+                    let pu = self
+                        .pending
+                        .remove(&ev.client)
+                        .expect("churned arrival without a pending upload");
+                    recycle_wire_upload(pu.wire);
+                    churned += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        self.churned_total += churned;
         // Deterministic fold order: ascending client index within the
         // round (Eq. 4's f32 accumulation is order-sensitive).
         arrivals.sort_by_key(|e| e.client);
@@ -1052,6 +1127,7 @@ impl FedRun {
             participants: folded,
             stragglers,
             mean_staleness,
+            churned,
             client_state_bytes: self.client_state_bytes(),
             sim_state_bytes: self.sim_state_bytes(),
             data_state_bytes: self.data_state_bytes,
@@ -1116,6 +1192,7 @@ impl FedRun {
                 full_broadcast: out.full_broadcast,
                 stragglers: out.stragglers,
                 mean_staleness: out.mean_staleness,
+                churned: out.churned,
                 client_state_bytes: out.client_state_bytes,
                 sim_state_bytes: out.sim_state_bytes,
                 data_state_bytes: out.data_state_bytes,

@@ -639,7 +639,7 @@ fn fig21(base: &ExpConfig, out_dir: &Path) -> anyhow::Result<()> {
                 .last()
                 .map(|e| e.per_class_accuracy.clone())
                 .unwrap_or_default();
-            let rare_mean = pca.iter().take(3).sum::<f64>() / 3.0;
+            let rare_mean = r.rare_class_accuracy(&[0, 1, 2]).unwrap_or(0.0);
             println!(
                 "fig21 {ds} {scheme}: rare-class acc {rare_mean:.3}, overall {:.3}",
                 r.final_accuracy().unwrap_or(0.0)

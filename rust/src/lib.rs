@@ -69,6 +69,19 @@
 //! `fleet` preset and `rust/benches/fleet.rs`), bitwise-identical to the
 //! dense representation (`rust/tests/fleet_virtualization.rs`).
 //!
+//! # Scenario matrix (`scenarios`)
+//!
+//! `feddd matrix` runs a registry of documented evaluation scenarios
+//! (geo testbed, class imbalance, heterogeneous fleet, diurnal /
+//! flash-crowd availability traces, mid-round churn) crossed with
+//! schemes × seeds at smoke/small/medium tiers, emits per-cell JSON +
+//! Markdown reports under `reports/`, and compares two reports
+//! regression-only (`--compare`, mirrored by `ci/matrix_diff.py`). The
+//! catalogue lives in `docs/SCENARIOS.md`; see [`scenarios`] and
+//! DESIGN.md §Scenario-Matrix. Dropout-family baselines for context:
+//! Federated Dropout (Caldas et al., arXiv:1812.07210) and Adaptive
+//! Federated Dropout (Bouacida et al., arXiv:2011.04050).
+//!
 //! See `DESIGN.md` for the experiment index mapping every paper figure and
 //! table to a module and a `feddd figure <id>` command.
 
@@ -83,6 +96,7 @@ pub mod figures;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod scenarios;
 pub mod selection;
 pub mod simnet;
 pub mod solver;

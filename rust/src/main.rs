@@ -5,6 +5,9 @@
 //!   experiment and write results JSON.
 //! * `figure <figN|all> [--preset ...] [--out results/]` — regenerate a
 //!   paper figure's experiment matrix (DESIGN.md §5).
+//! * `matrix [--tier smoke] | --list | --compare A.json B.json` — run the
+//!   scenario-matrix harness (`feddd::scenarios`, docs/SCENARIOS.md) and
+//!   emit per-cell reports, or diff two reports regression-only.
 //! * `inspect models|config|manifest` — print registry/config/manifest.
 //! * `help`
 
@@ -15,6 +18,7 @@ use feddd::config::ExpConfig;
 use feddd::coordinator::run_experiment;
 use feddd::figures;
 use feddd::model::{all_model_names, ModelSpec};
+use feddd::scenarios;
 use feddd::util::json;
 use feddd::util::logging;
 
@@ -24,6 +28,10 @@ feddd — FedDD (differential parameter dropout FL) coordinator
 USAGE:
   feddd train   [--preset smoke|table4|testbed|fleet] [--key value ...] [--out results/]
   feddd figure  <fig2..fig21|all> [--preset ...] [--key value ...] [--out results/]
+  feddd matrix  [--tier smoke|small|medium] [--scenarios a,b] [--schemes x,y]
+                [--seeds 17,18] [--label name] [--workers N] [--out reports/]
+  feddd matrix  --list
+  feddd matrix  --compare BASELINE.json CURRENT.json [--tol_acc 0.01] [--out diff.md]
   feddd inspect models|config|manifest [--preset ...]
   feddd help
 
@@ -31,7 +39,8 @@ Config keys (see `feddd inspect config`): seed dataset partition model
 width_pct n_clients rounds local_steps batch lr scheme selection d_max
 a_server delta h train_per_client test_n fleet eval_every agg_backend
 rare_classes rare_ratio artifacts_dir oort_alpha alloc workers
-round_mode quorum deadline_s staleness_beta.
+round_mode quorum deadline_s staleness_beta codec data_mode
+snapshot_ring_cap trace trace_period_s churn_rate.
 
 `--workers N` fans the per-client round phases (training, mask selection,
 sharded aggregation) over N threads (0 = one per core); results are
@@ -43,6 +52,13 @@ of in-flight uploads, default 0.7) arrivals are in or `--deadline_s`
 elapses; stragglers stay in flight and fold into a later round with the
 `--staleness_beta` discount (1+s)^-beta. `--round_mode sync` (default)
 is bitwise-identical to the classic engine.
+
+`feddd matrix` crosses the registered scenarios (docs/SCENARIOS.md) with
+schemes x seeds at a tier, writes one-line-per-cell JSON + a Markdown
+table per run into --out (default reports/) and regenerates
+reports/INDEX.md; `--compare` prints only regressions between two
+reports and exits non-zero when any are found (mirrored in CI by
+ci/matrix_diff.py). Every cell is deterministic: same spec, same bytes.
 
 Fleet size is the `--n_clients` knob; client state is virtualized
 (snapshot ring + sparse residuals, DESIGN.md Fleet-Virtualization), so
@@ -71,6 +87,7 @@ fn real_main() -> anyhow::Result<()> {
         }
         "train" => cmd_train(&args),
         "figure" => cmd_figure(&args),
+        "matrix" => cmd_matrix(&args),
         "inspect" => cmd_inspect(&args),
         other => anyhow::bail!("unknown command {other:?}\n{HELP}"),
     }
@@ -130,6 +147,93 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     } else {
         figures::run_figure(&id, &cfg, &out_dir)
     }
+}
+
+fn cmd_matrix(args: &Args) -> anyhow::Result<()> {
+    if args.has_flag("list") {
+        println!("{:<16} {:<28} title", "scenario", "claim");
+        for sc in scenarios::registry() {
+            println!("{:<16} {:<28} {}", sc.name, sc.claim, sc.title);
+        }
+        println!("\nschemes: {}   tiers: smoke small medium", scenarios::MATRIX_SCHEMES.join(" "));
+        println!("catalogue: docs/SCENARIOS.md");
+        return Ok(());
+    }
+    if let Some(baseline) = args.get("compare") {
+        let current = args
+            .positionals
+            .first()
+            .ok_or_else(|| anyhow::anyhow!("usage: feddd matrix --compare BASE.json CUR.json"))?;
+        let base = scenarios::MatrixReport::load(Path::new(baseline))?;
+        let cur = scenarios::MatrixReport::load(Path::new(current))?;
+        let tol_acc = args.get_f64("tol_acc")?.unwrap_or(0.01);
+        let diff = scenarios::compare_reports(&base, &cur, tol_acc);
+        let md = diff.markdown();
+        print!("{md}");
+        if let Some(out) = args.get("out") {
+            std::fs::write(out, &md)?;
+            println!("wrote {out}");
+        }
+        anyhow::ensure!(
+            !diff.has_failures(),
+            "{} matrix regression(s) vs {}",
+            diff.regressions.len(),
+            baseline
+        );
+        return Ok(());
+    }
+    let tier = scenarios::Tier::by_name(args.get_or("tier", "smoke"))?;
+    let split = |key: &str| -> Vec<String> {
+        let mut out = Vec::new();
+        if let Some(v) = args.get(key) {
+            for part in v.split(',') {
+                if !part.is_empty() {
+                    out.push(part.to_string());
+                }
+            }
+        }
+        out
+    };
+    let mut seeds: Vec<u64> = Vec::new();
+    if let Some(v) = args.get("seeds") {
+        for part in v.split(',') {
+            if part.is_empty() {
+                continue;
+            }
+            let seed = part.parse().map_err(|e| anyhow::anyhow!("--seeds: {e}"))?;
+            seeds.push(seed);
+        }
+    } else {
+        seeds.push(17);
+    }
+    let out_dir = Path::new(args.get_or("out", "reports")).to_path_buf();
+    // The smoke matrix must run on hosts with no compiled artifacts: fall
+    // back to an on-the-fly native-exec manifest for the FC stack.
+    let mut artifacts_dir = feddd::runtime::default_artifacts_dir();
+    if !artifacts_dir.join("manifest.json").exists() {
+        let native = out_dir.join("native_artifacts");
+        feddd::runtime::write_native_manifest(&native, &[("mlp", 1.0), ("mlp", 0.25)], 16, 64)?;
+        log::info!("no compiled artifacts; using native manifest at {}", native.display());
+        artifacts_dir = native;
+    }
+    let spec = scenarios::MatrixSpec {
+        tier,
+        label: args.get_or("label", "local").to_string(),
+        scenarios: split("scenarios"),
+        schemes: split("schemes"),
+        seeds,
+        workers: args.get_usize("workers")?.unwrap_or(1),
+        artifacts_dir: artifacts_dir.to_string_lossy().into_owned(),
+    };
+    let report = scenarios::run_matrix(&spec)?;
+    let json_path = scenarios::write_report(&out_dir, &report)?;
+    println!(
+        "wrote {} ({} cells) + Markdown + {}",
+        json_path.display(),
+        report.cells.len(),
+        out_dir.join("INDEX.md").display()
+    );
+    Ok(())
 }
 
 fn cmd_inspect(args: &Args) -> anyhow::Result<()> {

@@ -38,6 +38,9 @@ pub struct RoundRecord {
     /// Mean staleness, in rounds, of the uploads folded this round
     /// (0 when every fold was fresh — in particular in sync mode).
     pub mean_staleness: f64,
+    /// Uploads dropped by arrival-time churn this round (`trace =
+    /// "churn"` under semi-async rounds; always 0 otherwise).
+    pub churned: usize,
     /// Fleet state footprint at the end of the round: Σ per-client
     /// residual bytes + live shared snapshots (each counted once) +
     /// in-flight buffered uploads (semi-async pending; 0 in sync mode) —
@@ -151,6 +154,37 @@ impl RunResult {
         }
     }
 
+    /// Mean participants (folded uploads) per round.
+    pub fn mean_participants(&self) -> f64 {
+        if self.rounds.is_empty() {
+            0.0
+        } else {
+            self.rounds.iter().map(|r| r.participants as f64).sum::<f64>()
+                / self.rounds.len() as f64
+        }
+    }
+
+    /// Total uploads dropped by arrival-time churn across the run.
+    pub fn total_churned(&self) -> usize {
+        self.rounds.iter().map(|r| r.churned).sum()
+    }
+
+    /// Mean accuracy of the *final* evaluation over the given rare-class
+    /// indices — the §6.7 "generalization to data of rare classes" column
+    /// (Fig. 21). `None` when no eval ran or no listed class exists.
+    pub fn rare_class_accuracy(&self, rare: &[usize]) -> Option<f64> {
+        let e = self.evals.last()?;
+        let vals: Vec<f64> = rare
+            .iter()
+            .filter_map(|&c| e.per_class_accuracy.get(c).copied())
+            .collect();
+        if vals.is_empty() {
+            None
+        } else {
+            Some(vals.iter().sum::<f64>() / vals.len() as f64)
+        }
+    }
+
     /// Mean staleness over all rounds' folded uploads.
     pub fn mean_staleness(&self) -> f64 {
         if self.rounds.is_empty() {
@@ -211,6 +245,7 @@ impl RunResult {
                                 ("full_broadcast", Json::Bool(r.full_broadcast)),
                                 ("stragglers", Json::Num(r.stragglers as f64)),
                                 ("mean_staleness", Json::Num(r.mean_staleness)),
+                                ("churned", Json::Num(r.churned as f64)),
                                 (
                                     "client_state_bytes",
                                     Json::Num(r.client_state_bytes as f64),
@@ -340,6 +375,7 @@ mod tests {
                 full_broadcast: i % 5 == 0,
                 stragglers: i,
                 mean_staleness: i as f64 * 0.5,
+                churned: i % 2,
                 client_state_bytes: 100 * (5 - i),
                 sim_state_bytes: 50 + 10 * i,
                 data_state_bytes: 7777,
@@ -370,9 +406,12 @@ mod tests {
     #[test]
     fn staleness_and_speedup_accounting() {
         let r = sample_run();
-        // sample_run: stragglers 0..4, mean_staleness 0,0.5,..,2.0
+        // sample_run: stragglers 0..4, mean_staleness 0,0.5,..,2.0,
+        // churned 0,1,0,1,0, participants 10 flat
         assert!((r.mean_stragglers() - 2.0).abs() < 1e-12);
         assert!((r.mean_staleness() - 1.0).abs() < 1e-12);
+        assert_eq!(r.total_churned(), 2);
+        assert!((r.mean_participants() - 10.0).abs() < 1e-12);
         assert_eq!(r.final_v_time(), 50.0);
         let mut faster = sample_run();
         for rec in faster.rounds.iter_mut() {
@@ -427,6 +466,20 @@ mod tests {
         let text = j.to_string_pretty();
         let back = crate::util::json::parse(&text).unwrap();
         assert_eq!(back.req_arr("evals").unwrap().len(), 5);
+    }
+
+    #[test]
+    fn rare_class_accuracy_reads_the_final_eval() {
+        let mut r = sample_run();
+        // last eval's per-class vector is all 0.5
+        assert_eq!(r.rare_class_accuracy(&[0, 1, 2]), Some(0.5));
+        r.evals.last_mut().unwrap().per_class_accuracy = vec![0.2, 0.4, 0.9];
+        assert!((r.rare_class_accuracy(&[0, 1]).unwrap() - 0.3).abs() < 1e-12);
+        // out-of-range classes are skipped; all-missing and empty → None
+        assert!((r.rare_class_accuracy(&[2, 99]).unwrap() - 0.9).abs() < 1e-12);
+        assert_eq!(r.rare_class_accuracy(&[99]), None);
+        assert_eq!(r.rare_class_accuracy(&[]), None);
+        assert_eq!(RunResult::new("x", "y").rare_class_accuracy(&[0]), None);
     }
 
     #[test]

@@ -1,0 +1,908 @@
+//! Scenario-matrix evaluation harness: a registry of named evaluation
+//! scenarios crossed with schemes × seeds at smoke/small/medium tiers,
+//! a per-cell report emitter (one-line-per-cell JSON + Markdown +
+//! auto-regenerated `reports/INDEX.md`) and a regression-only compare
+//! mode (`feddd matrix --compare A.json B.json`, mirrored by
+//! `ci/matrix_diff.py`).
+//!
+//! Every registered scenario is documented in `docs/SCENARIOS.md` — the
+//! catalogue and the registry are kept in lockstep by
+//! `rust/tests/scenario_matrix.rs`, which fails when a registered name
+//! has no catalogue heading. The matrix is where FedDD's multi-scenario
+//! claims (Table 4/5, the §6.7 rare-class result) meet the
+//! dropout-family baselines: random Federated Dropout (Caldas et al.,
+//! arXiv:1812.07210) and Adaptive Federated Dropout (Bouacida et al.,
+//! arXiv:2011.04050) only become comparable-at-a-glance once every
+//! scenario × scheme × seed cell lands in one report with
+//! accuracy / wire-bytes / virtual-time / staleness columns.
+//!
+//! # Determinism contract (DESIGN.md §Scenario-Matrix)
+//!
+//! Every cell runs on the virtual-clock/bitwise-replay machinery: a cell
+//! is a pure function of `(scenario, scheme, seed, tier)`. The cell
+//! record holds **only deterministic columns** — the nondeterministic
+//! `wall_seconds` never enters a report — and serializes through the
+//! sorted-key [`Json`] writer, so a report is byte-identical across
+//! worker counts, runs and hosts (golden-tested for workers {1, 4}).
+
+use std::path::{Path, PathBuf};
+
+use crate::config::ExpConfig;
+use crate::coordinator::run_experiment;
+use crate::metrics::RunResult;
+use crate::util::json::{self, Json};
+
+/// The schemes every matrix cell row is crossed with by default: FedDD
+/// plus the selection baselines sharing its codec/simnet stack.
+pub const MATRIX_SCHEMES: &[&str] = &["feddd", "fedavg", "fedcs", "oort"];
+
+/// Matrix scale tier. The tier sets the *scale* knobs (fleet size,
+/// rounds, per-client data); the scenario then sets the *shape* knobs on
+/// top. Smoke keeps every cell on the FC/`mlp` stack so the whole matrix
+/// runs on the pure-Rust native executor (no compiled artifacts needed);
+/// small/medium may substitute the paper-exact conv models where the
+/// traced table demands them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Smoke,
+    Small,
+    Medium,
+}
+
+impl Tier {
+    pub fn by_name(name: &str) -> anyhow::Result<Tier> {
+        match name {
+            "smoke" => Ok(Tier::Smoke),
+            "small" => Ok(Tier::Small),
+            "medium" => Ok(Tier::Medium),
+            _ => anyhow::bail!("unknown tier {name:?} (smoke|small|medium)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Smoke => "smoke",
+            Tier::Small => "small",
+            Tier::Medium => "medium",
+        }
+    }
+
+    /// Apply this tier's scale knobs to a default config.
+    fn apply(&self, cfg: &mut ExpConfig) {
+        match self {
+            Tier::Smoke => {
+                cfg.n_clients = 8;
+                cfg.rounds = 6;
+                cfg.local_steps = 2;
+                cfg.train_per_client = 48;
+                cfg.test_n = 128;
+                cfg.eval_every = 3;
+            }
+            Tier::Small => {
+                cfg.n_clients = 20;
+                cfg.rounds = 30;
+                cfg.local_steps = 4;
+                cfg.train_per_client = 120;
+                cfg.test_n = 384;
+                cfg.eval_every = 5;
+            }
+            Tier::Medium => {
+                cfg.n_clients = 50;
+                cfg.rounds = 80;
+                cfg.local_steps = 4;
+                cfg.train_per_client = 240;
+                cfg.test_n = 640;
+                cfg.eval_every = 10;
+            }
+        }
+    }
+
+    pub fn all() -> [Tier; 3] {
+        [Tier::Smoke, Tier::Small, Tier::Medium]
+    }
+}
+
+/// One registered evaluation scenario: a named config transform applied
+/// on top of the tier's scale knobs. See `docs/SCENARIOS.md` for the
+/// catalogue entry every scenario must have (knobs, paper claim,
+/// expected signal, per-tier run lines).
+#[derive(Clone, Copy)]
+pub struct Scenario {
+    /// Registry key (also the `docs/SCENARIOS.md` heading).
+    pub name: &'static str,
+    /// One-line human description for `feddd matrix --list`.
+    pub title: &'static str,
+    /// Paper table/claim this scenario traces to, or "beyond-paper".
+    pub claim: &'static str,
+    apply: fn(&mut ExpConfig, Tier),
+}
+
+impl Scenario {
+    /// The full cell config for this scenario at a tier and seed:
+    /// defaults → tier scale → scenario shape.
+    pub fn config(&self, tier: Tier, seed: u64) -> ExpConfig {
+        let mut cfg = ExpConfig::default();
+        cfg.seed = seed;
+        tier.apply(&mut cfg);
+        (self.apply)(&mut cfg, tier);
+        cfg
+    }
+}
+
+fn apply_baseline_iid(_cfg: &mut ExpConfig, _tier: Tier) {
+    // Table 4 defaults at tier scale: IID partition, simulated fleet,
+    // synchronous rounds. The reference point every other cell is read
+    // against.
+}
+
+fn apply_geo_testbed(cfg: &mut ExpConfig, tier: Tier) {
+    cfg.fleet = "testbed".into();
+    cfg.n_clients = 10; // the Table 5 fleet is exactly 10 geo profiles
+    cfg.h = 1;
+    if tier == Tier::Medium {
+        // Paper-exact Table 5 stack (needs compiled conv artifacts).
+        cfg.dataset = "cifar10".into();
+        cfg.model = "cnn2".into();
+        cfg.lr = 0.02;
+        cfg.local_steps = 3;
+    }
+}
+
+fn apply_class_imbalance(cfg: &mut ExpConfig, _tier: Tier) {
+    cfg.partition = "noniid_b".into();
+    cfg.rare_classes = vec![0, 1, 2];
+    cfg.rare_ratio = 0.4;
+    cfg.a_server = 0.2;
+    cfg.d_max = 0.85;
+}
+
+fn apply_hetero_fleet(cfg: &mut ExpConfig, tier: Tier) {
+    cfg.n_clients = 10;
+    if tier != Tier::Smoke {
+        // Model heterogeneity proper: het_b sub-models 1..5 round-robin
+        // (needs compiled conv artifacts); smoke keeps the homogeneous
+        // mlp and exercises only the device heterogeneity + plumbing.
+        cfg.dataset = "cifar10".into();
+        cfg.model = "het_b".into();
+        cfg.width_pct = 25;
+        cfg.lr = 0.02;
+    }
+}
+
+fn semi_async_base(cfg: &mut ExpConfig) {
+    cfg.round_mode = "semi_async".into();
+    cfg.quorum = 0.7;
+    cfg.staleness_beta = 0.5;
+}
+
+fn apply_diurnal(cfg: &mut ExpConfig, _tier: Tier) {
+    semi_async_base(cfg);
+    cfg.trace = "diurnal".into();
+    cfg.trace_period_s = 600.0;
+}
+
+fn apply_flash_crowd(cfg: &mut ExpConfig, _tier: Tier) {
+    semi_async_base(cfg);
+    cfg.trace = "flash_crowd".into();
+    cfg.trace_period_s = 600.0;
+}
+
+fn apply_churn(cfg: &mut ExpConfig, _tier: Tier) {
+    semi_async_base(cfg);
+    cfg.trace = "churn".into();
+    cfg.churn_rate = 0.2;
+}
+
+/// The scenario registry. Order is report order. Every entry must have a
+/// `docs/SCENARIOS.md` heading (`## \`name\``) — enforced by
+/// `rust/tests/scenario_matrix.rs::catalogue_covers_every_scenario`.
+pub fn registry() -> &'static [Scenario] {
+    const REGISTRY: &[Scenario] = &[
+        Scenario {
+            name: "baseline_iid",
+            title: "IID / simulated fleet / sync rounds (the reference cell)",
+            claim: "Table 4 simulation defaults",
+            apply: apply_baseline_iid,
+        },
+        Scenario {
+            name: "geo_testbed",
+            title: "10-client geo-distributed testbed fleet, h=1",
+            claim: "Table 5 / Fig. 18",
+            apply: apply_geo_testbed,
+        },
+        Scenario {
+            name: "class_imbalance",
+            title: "non-IID(b) with rare classes {0,1,2} at 40% share",
+            claim: "Fig. 21 / §6.7 rare-class generalization",
+            apply: apply_class_imbalance,
+        },
+        Scenario {
+            name: "hetero_fleet",
+            title: "heterogeneous fleet (het_b sub-models above smoke tier)",
+            claim: "Fig. 9-10 model-heterogeneous setting",
+            apply: apply_hetero_fleet,
+        },
+        Scenario {
+            name: "diurnal",
+            title: "semi-async with a rolling half of the fleet offline",
+            claim: "beyond-paper (availability dynamics)",
+            apply: apply_diurnal,
+        },
+        Scenario {
+            name: "flash_crowd",
+            title: "semi-async; ~10% vanguard, whole fleet joins at t=period",
+            claim: "beyond-paper (arrival burst)",
+            apply: apply_flash_crowd,
+        },
+        Scenario {
+            name: "churn",
+            title: "semi-async with 20% of in-flight uploads dropping mid-round",
+            claim: "beyond-paper (mid-round churn/reconnection)",
+            apply: apply_churn,
+        },
+    ];
+    REGISTRY
+}
+
+/// Look up a registered scenario by name.
+pub fn by_name(name: &str) -> anyhow::Result<&'static Scenario> {
+    registry().iter().find(|s| s.name == name).ok_or_else(|| {
+        let names: Vec<&str> = registry().iter().map(|s| s.name).collect();
+        anyhow::anyhow!("unknown scenario {name:?} (one of: {})", names.join(", "))
+    })
+}
+
+/// The shared config shape the `examples/*.rs` wrappers run: a registry
+/// scenario at a tier, seeded with the repo default, fanned over all
+/// cores, against the default artifacts directory. Keeping the examples
+/// on this single entry point is what makes scenario configs live in
+/// exactly one place.
+pub fn example_config(scenario: &str, tier: Tier) -> anyhow::Result<ExpConfig> {
+    let mut cfg = by_name(scenario)?.config(tier, 17);
+    cfg.workers = 0; // one worker per core
+    let dir = crate::runtime::default_artifacts_dir();
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    Ok(cfg)
+}
+
+/// One matrix cell: the deterministic summary of a single
+/// `(scenario, scheme, seed, tier)` run. Never includes wall-clock time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cell {
+    pub scenario: String,
+    pub scheme: String,
+    pub tier: String,
+    pub seed: u64,
+    pub rounds: usize,
+    /// Final-eval overall accuracy.
+    pub accuracy: f64,
+    /// Final-eval mean accuracy over the scenario's rare classes
+    /// (`None` when the scenario has no rare-class holdout).
+    pub rare_accuracy: Option<f64>,
+    /// Total masked payload bytes uploaded across the run.
+    pub uploaded_bytes: usize,
+    /// Total realized wire bytes across the run.
+    pub wire_bytes: usize,
+    /// Virtual time at the end of the run (seconds).
+    pub v_time: f64,
+    pub mean_staleness: f64,
+    pub mean_stragglers: f64,
+    /// Mean folded uploads per round.
+    pub mean_participants: f64,
+    /// Total uploads dropped by arrival-time churn.
+    pub churned: usize,
+    pub peak_client_state_bytes: usize,
+}
+
+impl Cell {
+    /// Build the cell from a finished run and the config that produced it.
+    pub fn from_run(cfg: &ExpConfig, tier: Tier, scenario: &str, r: &RunResult) -> Cell {
+        Cell {
+            scenario: scenario.to_string(),
+            scheme: cfg.scheme.clone(),
+            tier: tier.name().to_string(),
+            seed: cfg.seed,
+            rounds: cfg.rounds,
+            accuracy: r.final_accuracy().unwrap_or(0.0),
+            rare_accuracy: if cfg.rare_classes.is_empty() {
+                None
+            } else {
+                r.rare_class_accuracy(&cfg.rare_classes)
+            },
+            uploaded_bytes: r.total_uploaded(),
+            wire_bytes: r.total_wire_bytes(),
+            v_time: r.final_v_time(),
+            mean_staleness: r.mean_staleness(),
+            mean_stragglers: r.mean_stragglers(),
+            mean_participants: r.mean_participants(),
+            churned: r.total_churned(),
+            peak_client_state_bytes: r.peak_client_state_bytes(),
+        }
+    }
+
+    /// The compare-mode identity of this cell.
+    pub fn key(&self) -> String {
+        format!("{}/{}/seed{}/{}", self.scenario, self.scheme, self.seed, self.tier)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::s(&self.scenario)),
+            ("scheme", Json::s(&self.scheme)),
+            ("tier", Json::s(&self.tier)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("accuracy", Json::Num(self.accuracy)),
+            ("rare_accuracy", self.rare_accuracy.map_or(Json::Null, Json::Num)),
+            ("uploaded_bytes", Json::Num(self.uploaded_bytes as f64)),
+            ("wire_bytes", Json::Num(self.wire_bytes as f64)),
+            ("v_time", Json::Num(self.v_time)),
+            ("mean_staleness", Json::Num(self.mean_staleness)),
+            ("mean_stragglers", Json::Num(self.mean_stragglers)),
+            ("mean_participants", Json::Num(self.mean_participants)),
+            ("churned", Json::Num(self.churned as f64)),
+            ("peak_client_state_bytes", Json::Num(self.peak_client_state_bytes as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Cell> {
+        Ok(Cell {
+            scenario: j.req_str("scenario")?.to_string(),
+            scheme: j.req_str("scheme")?.to_string(),
+            tier: j.req_str("tier")?.to_string(),
+            seed: j.req_f64("seed")? as u64,
+            rounds: j.req_usize("rounds")?,
+            accuracy: j.req_f64("accuracy")?,
+            rare_accuracy: j.get("rare_accuracy").and_then(|v| v.as_f64()),
+            uploaded_bytes: j.req_usize("uploaded_bytes")?,
+            wire_bytes: j.req_usize("wire_bytes")?,
+            v_time: j.req_f64("v_time")?,
+            mean_staleness: j.req_f64("mean_staleness")?,
+            mean_stragglers: j.req_f64("mean_stragglers")?,
+            mean_participants: j.req_f64("mean_participants")?,
+            churned: j.req_usize("churned")?,
+            peak_client_state_bytes: j.req_usize("peak_client_state_bytes")?,
+        })
+    }
+}
+
+/// What to run: the matrix cross product and the execution knobs.
+#[derive(Clone, Debug)]
+pub struct MatrixSpec {
+    pub tier: Tier,
+    /// Report label (part of the output filename).
+    pub label: String,
+    /// Scenario names to run; empty = the whole registry.
+    pub scenarios: Vec<String>,
+    /// Schemes to cross with; empty = [`MATRIX_SCHEMES`].
+    pub schemes: Vec<String>,
+    pub seeds: Vec<u64>,
+    /// Worker threads per cell run (cells run one at a time; the
+    /// parallelism lives inside the round engine).
+    pub workers: usize,
+    pub artifacts_dir: String,
+}
+
+/// One finished matrix run: the spec echo plus every cell, in
+/// (registry, scheme, seed) order.
+#[derive(Clone, Debug)]
+pub struct MatrixReport {
+    pub tier: String,
+    pub label: String,
+    pub scenarios: Vec<String>,
+    pub schemes: Vec<String>,
+    pub seeds: Vec<u64>,
+    pub cells: Vec<Cell>,
+}
+
+impl MatrixReport {
+    /// Report filename stem (`MATRIX_<tier>_<label>`), label sanitized to
+    /// `[A-Za-z0-9_-]`.
+    pub fn file_stem(&self) -> String {
+        let label: String = self
+            .label
+            .chars()
+            .map(|c| {
+                if c.is_ascii_alphanumeric() || c == '_' || c == '-' {
+                    c
+                } else {
+                    '-'
+                }
+            })
+            .collect();
+        format!("MATRIX_{}_{}", self.tier, label)
+    }
+
+    /// One-line-per-cell JSON: a `matrix` meta object, then each cell as
+    /// one compact line inside `cells`. Valid JSON for any parser; the
+    /// line-per-cell layout keeps text diffs readable cell by cell.
+    pub fn to_json_string(&self) -> String {
+        let scenarios: Vec<Json> = self.scenarios.iter().map(|s| Json::s(s)).collect();
+        let schemes: Vec<Json> = self.schemes.iter().map(|s| Json::s(s)).collect();
+        let seeds: Vec<Json> = self.seeds.iter().map(|&s| Json::Num(s as f64)).collect();
+        let meta = Json::obj(vec![
+            ("tier", Json::s(&self.tier)),
+            ("label", Json::s(&self.label)),
+            ("scenarios", Json::Arr(scenarios)),
+            ("schemes", Json::Arr(schemes)),
+            ("seeds", Json::Arr(seeds)),
+        ]);
+        let mut out = String::new();
+        out.push_str("{\"matrix\":");
+        out.push_str(&meta.to_string_compact());
+        out.push_str(",\n\"cells\":[\n");
+        for (i, c) in self.cells.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&c.to_json().to_string_compact());
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<MatrixReport> {
+        let meta = j.req("matrix")?;
+        let strs = |key: &str| -> Vec<String> {
+            let mut out = Vec::new();
+            if let Some(arr) = meta.get(key).and_then(|v| v.as_arr()) {
+                for x in arr {
+                    if let Some(s) = x.as_str() {
+                        out.push(s.to_string());
+                    }
+                }
+            }
+            out
+        };
+        let mut seeds = Vec::new();
+        if let Some(arr) = meta.get("seeds").and_then(|v| v.as_arr()) {
+            for x in arr {
+                if let Some(v) = x.as_f64() {
+                    seeds.push(v as u64);
+                }
+            }
+        }
+        let mut cells = Vec::new();
+        for c in j.req_arr("cells")? {
+            cells.push(Cell::from_json(c)?);
+        }
+        Ok(MatrixReport {
+            tier: meta.req_str("tier")?.to_string(),
+            label: meta.req_str("label")?.to_string(),
+            scenarios: strs("scenarios"),
+            schemes: strs("schemes"),
+            seeds,
+            cells,
+        })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<MatrixReport> {
+        Self::from_json(&json::from_file(path)?)
+    }
+
+    /// The per-run Markdown table (every cell, report order).
+    pub fn markdown(&self) -> String {
+        let mut out = format!(
+            "# Scenario matrix — tier `{}`, label `{}`\n\n\
+             {} cells: {} scenario(s) × {} scheme(s) × {} seed(s).\n\n",
+            self.tier,
+            self.label,
+            self.cells.len(),
+            self.scenarios.len(),
+            self.schemes.len(),
+            self.seeds.len(),
+        );
+        out.push_str(
+            "| scenario | scheme | seed | acc | rare acc | wire KiB | v-time s \
+             | staleness | stragglers | churned |\n\
+             |---|---|---|---|---|---|---|---|---|---|\n",
+        );
+        for c in &self.cells {
+            let rare = match c.rare_accuracy {
+                Some(v) => format!("{v:.4}"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "| {} | {} | {} | {:.4} | {} | {:.1} | {:.1} | {:.2} | {:.2} | {} |\n",
+                c.scenario,
+                c.scheme,
+                c.seed,
+                c.accuracy,
+                rare,
+                c.wire_bytes as f64 / 1024.0,
+                c.v_time,
+                c.mean_staleness,
+                c.mean_stragglers,
+                c.churned,
+            ));
+        }
+        out
+    }
+}
+
+/// Run the matrix: every requested scenario × scheme × seed at the
+/// spec's tier, sequentially (the worker pool parallelizes inside each
+/// cell). Cells are pure functions of their key, so a spec always
+/// produces the same report bytes.
+pub fn run_matrix(spec: &MatrixSpec) -> anyhow::Result<MatrixReport> {
+    let scenario_names: Vec<String> = if spec.scenarios.is_empty() {
+        registry().iter().map(|s| s.name.to_string()).collect()
+    } else {
+        spec.scenarios.clone()
+    };
+    let schemes: Vec<String> = if spec.schemes.is_empty() {
+        MATRIX_SCHEMES.iter().map(|s| s.to_string()).collect()
+    } else {
+        spec.schemes.clone()
+    };
+    anyhow::ensure!(!spec.seeds.is_empty(), "matrix needs at least one seed");
+    let mut cells = Vec::new();
+    for name in &scenario_names {
+        let sc = by_name(name)?;
+        for scheme in &schemes {
+            for &seed in &spec.seeds {
+                let mut cfg = sc.config(spec.tier, seed);
+                cfg.scheme = scheme.clone();
+                cfg.workers = spec.workers;
+                cfg.artifacts_dir = spec.artifacts_dir.clone();
+                let r = run_experiment(cfg.clone())?;
+                let cell = Cell::from_run(&cfg, spec.tier, name, &r);
+                println!(
+                    "matrix cell {}: acc={:.4} wire={}KiB vt={:.1}s",
+                    cell.key(),
+                    cell.accuracy,
+                    cell.wire_bytes / 1024,
+                    cell.v_time,
+                );
+                cells.push(cell);
+            }
+        }
+    }
+    Ok(MatrixReport {
+        tier: spec.tier.name().to_string(),
+        label: spec.label.clone(),
+        scenarios: scenario_names,
+        schemes,
+        seeds: spec.seeds.clone(),
+        cells,
+    })
+}
+
+/// Write a report's JSON + Markdown into `out_dir` and regenerate
+/// `out_dir/INDEX.md` from every `MATRIX_*.json` present. Returns the
+/// JSON path.
+pub fn write_report(out_dir: &Path, report: &MatrixReport) -> anyhow::Result<PathBuf> {
+    std::fs::create_dir_all(out_dir)?;
+    let stem = report.file_stem();
+    let json_path = out_dir.join(format!("{stem}.json"));
+    std::fs::write(&json_path, report.to_json_string())?;
+    std::fs::write(out_dir.join(format!("{stem}.md")), report.markdown())?;
+    write_index(out_dir)?;
+    Ok(json_path)
+}
+
+/// Regenerate `INDEX.md` by scanning `out_dir` for matrix reports. Rows
+/// are filename-sorted, so the index is deterministic for a given set of
+/// reports (no timestamps).
+pub fn write_index(out_dir: &Path) -> anyhow::Result<()> {
+    let mut files: Vec<String> = std::fs::read_dir(out_dir)?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("MATRIX_") && n.ends_with(".json"))
+        .collect();
+    files.sort();
+    let mut out = String::from(
+        "# Matrix report index\n\n\
+         Auto-generated by `feddd matrix` — regenerated on every report \
+         write; do not edit by hand.\n\n\
+         | report | tier | label | cells | scenarios | schemes | seeds |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    for f in &files {
+        let r = MatrixReport::load(&out_dir.join(f))?;
+        out.push_str(&format!(
+            "| [{stem}]({stem}.md) | {} | {} | {} | {} | {} | {} |\n",
+            r.tier,
+            r.label,
+            r.cells.len(),
+            r.scenarios.len(),
+            r.schemes.len(),
+            r.seeds.len(),
+            stem = f.trim_end_matches(".json"),
+        ));
+    }
+    std::fs::write(out_dir.join("INDEX.md"), out)?;
+    Ok(())
+}
+
+/// Compare verdict for a baseline/current report pair.
+#[derive(Clone, Debug, Default)]
+pub struct MatrixDiff {
+    /// Hard failures: metric regressions and vanished cells.
+    pub regressions: Vec<String>,
+    /// Informational notes (new cells). Never fatal.
+    pub notes: Vec<String>,
+}
+
+impl MatrixDiff {
+    pub fn has_failures(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+
+    /// Regression-only report: failures and notes, never the full table.
+    pub fn markdown(&self) -> String {
+        let mut out = String::from("# Matrix diff\n\n");
+        if self.regressions.is_empty() {
+            out.push_str("No regressions.\n");
+        } else {
+            out.push_str(&format!("{} regression(s):\n\n", self.regressions.len()));
+            for r in &self.regressions {
+                out.push_str(&format!("- FAIL {r}\n"));
+            }
+        }
+        if !self.notes.is_empty() {
+            out.push('\n');
+            for n in &self.notes {
+                out.push_str(&format!("- note: {n}\n"));
+            }
+        }
+        out
+    }
+}
+
+/// Compare two reports, printing only regressions (the rules are
+/// mirrored exactly by `ci/matrix_diff.py`; DESIGN.md §Scenario-Matrix):
+///
+/// * cells match on `(scenario, scheme, seed, tier)`;
+/// * accuracy may not drop by more than `tol_acc` (absolute);
+/// * the deterministic byte totals (`wire_bytes`, `uploaded_bytes`) may
+///   not grow at all;
+/// * a cell present only in the current report is a **note** — there is
+///   no baseline, so no delta or ratio is ever computed for it (the
+///   undefined-division rule);
+/// * a cell that vanished from the current report is a **failure**: a
+///   gate that silently stops covering a cell is itself a regression.
+pub fn compare_reports(
+    baseline: &MatrixReport,
+    current: &MatrixReport,
+    tol_acc: f64,
+) -> MatrixDiff {
+    let mut diff = MatrixDiff::default();
+    if current.cells.is_empty() {
+        diff.regressions.push("current report has no cells".to_string());
+        return diff;
+    }
+    let cur: std::collections::BTreeMap<String, &Cell> =
+        current.cells.iter().map(|c| (c.key(), c)).collect();
+    let base: std::collections::BTreeMap<String, &Cell> =
+        baseline.cells.iter().map(|c| (c.key(), c)).collect();
+    for (key, b) in &base {
+        let Some(c) = cur.get(key) else {
+            diff.regressions.push(format!(
+                "{key}: cell vanished from the current report — its gate would be \
+                 silently disarmed"
+            ));
+            continue;
+        };
+        if c.accuracy < b.accuracy - tol_acc {
+            diff.regressions.push(format!(
+                "{key}: accuracy {:.4} -> {:.4} (drop {:.4} > tol {tol_acc})",
+                b.accuracy,
+                c.accuracy,
+                b.accuracy - c.accuracy,
+            ));
+        }
+        if c.wire_bytes > b.wire_bytes {
+            diff.regressions.push(format!(
+                "{key}: wire_bytes {} -> {} (deterministic byte total may not grow)",
+                b.wire_bytes,
+                c.wire_bytes,
+            ));
+        }
+        if c.uploaded_bytes > b.uploaded_bytes {
+            diff.regressions.push(format!(
+                "{key}: uploaded_bytes {} -> {} (deterministic byte total may not grow)",
+                b.uploaded_bytes,
+                c.uploaded_bytes,
+            ));
+        }
+    }
+    for key in cur.keys() {
+        if !base.contains_key(key) {
+            diff.notes.push(format!("new cell {key} — no baseline, no delta computed"));
+        }
+    }
+    diff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_scenario_validates_at_every_tier() {
+        for sc in registry() {
+            for tier in Tier::all() {
+                let cfg = sc.config(tier, 17);
+                cfg.validate().unwrap_or_else(|e| {
+                    panic!("scenario {} invalid at {}: {e}", sc.name, tier.name())
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn smoke_tier_stays_on_the_native_fc_stack() {
+        // The CI matrix leg runs without compiled artifacts: every smoke
+        // cell must stay on the mlp family the native executor supports.
+        for sc in registry() {
+            let cfg = sc.config(Tier::Smoke, 17);
+            assert_eq!(cfg.model, "mlp", "scenario {} leaves the FC stack at smoke", sc.name);
+            assert_eq!(cfg.dataset, "mnist");
+        }
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let mut names: Vec<&str> = registry().iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), registry().len(), "duplicate scenario name");
+        for sc in registry() {
+            assert_eq!(by_name(sc.name).unwrap().name, sc.name);
+        }
+        assert!(by_name("nope").is_err());
+    }
+
+    fn sample_cell() -> Cell {
+        Cell {
+            scenario: "baseline_iid".into(),
+            scheme: "feddd".into(),
+            tier: "smoke".into(),
+            seed: 17,
+            rounds: 6,
+            accuracy: 0.8125,
+            rare_accuracy: None,
+            uploaded_bytes: 123_456,
+            wire_bytes: 130_000,
+            v_time: 901.5,
+            mean_staleness: 0.25,
+            mean_stragglers: 1.5,
+            mean_participants: 7.0,
+            churned: 0,
+            peak_client_state_bytes: 40_000,
+        }
+    }
+
+    #[test]
+    fn cell_round_trips_through_json() {
+        let c = sample_cell();
+        let text = c.to_json().to_string_compact();
+        let back = Cell::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(c, back);
+        // rare_accuracy: Some survives too, via the Null-vs-Num encoding
+        let mut r = sample_cell();
+        r.rare_accuracy = Some(0.625);
+        let text = r.to_json().to_string_compact();
+        let back = Cell::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(r, back);
+    }
+
+    fn sample_report(cells: Vec<Cell>) -> MatrixReport {
+        MatrixReport {
+            tier: "smoke".into(),
+            label: "test".into(),
+            scenarios: vec!["baseline_iid".into()],
+            schemes: vec!["feddd".into()],
+            seeds: vec![17],
+            cells,
+        }
+    }
+
+    #[test]
+    fn report_round_trips_and_is_one_line_per_cell() {
+        let mut c2 = sample_cell();
+        c2.scheme = "fedavg".into();
+        let rep = sample_report(vec![sample_cell(), c2]);
+        let text = rep.to_json_string();
+        // one line per cell: both cell objects sit on their own lines
+        let mut cell_lines = 0;
+        for l in text.lines() {
+            if l.trim_start().starts_with("{\"accuracy\"") {
+                cell_lines += 1;
+            }
+        }
+        assert_eq!(cell_lines, 2, "cells must serialize one per line:\n{text}");
+        let back = MatrixReport::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.cells, rep.cells);
+        assert_eq!(back.tier, "smoke");
+        assert_eq!(back.label, "test");
+        assert_eq!(back.seeds, vec![17]);
+    }
+
+    #[test]
+    fn markdown_has_a_row_per_cell() {
+        let rep = sample_report(vec![sample_cell()]);
+        let md = rep.markdown();
+        assert!(md.contains("| scenario | scheme |"));
+        assert!(md.contains("| baseline_iid | feddd | 17 | 0.8125 | - |"), "{md}");
+    }
+
+    #[test]
+    fn compare_green_on_identical_reports() {
+        let rep = sample_report(vec![sample_cell()]);
+        let diff = compare_reports(&rep, &rep, 0.01);
+        assert!(!diff.has_failures(), "{:?}", diff.regressions);
+        assert!(diff.notes.is_empty());
+    }
+
+    #[test]
+    fn compare_fails_on_accuracy_drop_beyond_tol() {
+        let base = sample_report(vec![sample_cell()]);
+        let mut worse = sample_cell();
+        worse.accuracy -= 0.05;
+        let cur = sample_report(vec![worse]);
+        let diff = compare_reports(&base, &cur, 0.01);
+        assert!(diff.has_failures());
+        assert!(diff.regressions[0].contains("accuracy"), "{:?}", diff.regressions);
+        // within tolerance passes
+        let mut ok = sample_cell();
+        ok.accuracy -= 0.005;
+        assert!(!compare_reports(&base, &sample_report(vec![ok]), 0.01).has_failures());
+    }
+
+    #[test]
+    fn compare_fails_on_any_byte_growth() {
+        let base = sample_report(vec![sample_cell()]);
+        let mut fat = sample_cell();
+        fat.wire_bytes += 1;
+        let diff = compare_reports(&base, &sample_report(vec![fat]), 0.01);
+        assert!(diff.has_failures());
+        assert!(diff.regressions[0].contains("wire_bytes"));
+        let mut fat = sample_cell();
+        fat.uploaded_bytes += 1;
+        assert!(compare_reports(&base, &sample_report(vec![fat]), 0.01).has_failures());
+        // shrinking is fine
+        let mut lean = sample_cell();
+        lean.wire_bytes -= 1;
+        assert!(!compare_reports(&base, &sample_report(vec![lean]), 0.01).has_failures());
+    }
+
+    #[test]
+    fn compare_new_cell_is_a_note_vanished_is_fatal() {
+        let base = sample_report(vec![sample_cell()]);
+        let mut extra = sample_cell();
+        extra.scheme = "oort".into();
+        let cur = sample_report(vec![sample_cell(), extra]);
+        let diff = compare_reports(&base, &cur, 0.01);
+        assert!(!diff.has_failures(), "{:?}", diff.regressions);
+        assert_eq!(diff.notes.len(), 1);
+        assert!(diff.notes[0].contains("new cell"));
+        // the reverse direction: the cell vanished — fatal
+        let diff = compare_reports(&cur, &base, 0.01);
+        assert!(diff.has_failures());
+        assert!(diff.regressions[0].contains("vanished"));
+        // empty current report is fatal outright
+        assert!(compare_reports(&base, &sample_report(vec![]), 0.01).has_failures());
+    }
+
+    #[test]
+    fn diff_markdown_prints_only_regressions() {
+        let base = sample_report(vec![sample_cell()]);
+        let mut worse = sample_cell();
+        worse.accuracy = 0.1;
+        let diff = compare_reports(&base, &sample_report(vec![worse]), 0.01);
+        let md = diff.markdown();
+        assert!(md.contains("FAIL"));
+        assert!(!md.contains("| scenario |"), "diff must not dump the full table");
+        let green = compare_reports(&base, &base, 0.01).markdown();
+        assert!(green.contains("No regressions."));
+    }
+
+    #[test]
+    fn file_stem_sanitizes_labels() {
+        let mut rep = sample_report(vec![]);
+        rep.label = "pr 7/diff".into();
+        assert_eq!(rep.file_stem(), "MATRIX_smoke_pr-7-diff");
+    }
+}

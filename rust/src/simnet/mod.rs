@@ -85,6 +85,72 @@ pub fn downlink_bytes(full_broadcast: bool, model_bytes: usize, payload_bytes: u
     }
 }
 
+/// Client-availability trace (DESIGN.md §Scenario-Matrix): which clients
+/// the coordinator can reach at a given virtual instant. Availability is a
+/// **pure function** of `(client, virtual time)` — no RNG stream is
+/// consumed and no mutable state exists — so a traced run stays
+/// bitwise-identical for every worker count and across replays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AvailabilityTrace {
+    /// Every client reachable at all times (the default).
+    None,
+    /// A rolling half of the fleet is offline: client `n` of `N` is online
+    /// iff `fract(now/period + n/N) < 0.5`, i.e. each client keeps a
+    /// day/night cycle of length `period`, phase-shifted so exactly half
+    /// the phases fall in the online window at any instant.
+    Diurnal,
+    /// Flash crowd: only a ~10% vanguard (`10·n < N`, always including
+    /// client 0) is online before `period`; at `now >= period` the whole
+    /// fleet arrives at once.
+    FlashCrowd,
+    /// Every client reachable, but in-flight uploads may drop mid-round —
+    /// see [`churn_drops`]. Dispatch-side availability is unrestricted.
+    Churn,
+}
+
+impl AvailabilityTrace {
+    pub fn by_name(name: &str) -> anyhow::Result<AvailabilityTrace> {
+        match name {
+            "none" => Ok(AvailabilityTrace::None),
+            "diurnal" => Ok(AvailabilityTrace::Diurnal),
+            "flash_crowd" => Ok(AvailabilityTrace::FlashCrowd),
+            "churn" => Ok(AvailabilityTrace::Churn),
+            _ => anyhow::bail!("unknown trace {name:?} (none|diurnal|flash_crowd|churn)"),
+        }
+    }
+
+    /// Can the coordinator reach client `n` (of `n_clients`) at virtual
+    /// time `now`, under a trace of period `period` seconds?
+    pub fn is_available(self, n: usize, n_clients: usize, now: f64, period: f64) -> bool {
+        match self {
+            AvailabilityTrace::None | AvailabilityTrace::Churn => true,
+            AvailabilityTrace::Diurnal => {
+                let phase = (now / period + n as f64 / n_clients.max(1) as f64).fract();
+                phase < 0.5
+            }
+            AvailabilityTrace::FlashCrowd => now >= period || n * 10 < n_clients.max(1),
+        }
+    }
+}
+
+/// Does the upload client `n` dispatched in `dispatch_round` churn
+/// (connection drops before the server receives it)? A pure splitmix-style
+/// hash of `(seed, client, dispatch round)` mapped to `[0, 1)` and compared
+/// against `rate` — deterministic, engine-RNG-free, worker-count invariant.
+pub fn churn_drops(seed: u64, n: usize, dispatch_round: usize, rate: f64) -> bool {
+    if rate <= 0.0 {
+        return false;
+    }
+    let mut z = seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((n as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+        .wrapping_add((dispatch_round as u64).wrapping_mul(0x94D0_49BB_1331_11EB));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    ((z >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < rate
+}
+
 /// A fleet of client profiles.
 #[derive(Clone, Debug)]
 pub struct Fleet {
@@ -448,6 +514,78 @@ mod tests {
         assert_eq!(q.mem_bytes(), std::mem::size_of::<ArrivalEvent>());
         let clocks = ClientClocks::new(100);
         assert_eq!(clocks.mem_bytes(), 100 * std::mem::size_of::<f64>());
+    }
+
+    #[test]
+    fn diurnal_trace_keeps_a_rolling_half_online() {
+        let t = AvailabilityTrace::Diurnal;
+        let (n_clients, period) = (8usize, 600.0);
+        for &now in &[0.0, 150.0, 300.0, 450.0, 599.0, 601.0, 1234.5] {
+            let online = (0..n_clients)
+                .filter(|&n| t.is_available(n, n_clients, now, period))
+                .count();
+            assert_eq!(online, 4, "exactly half the phases sit in the window at t={now}");
+        }
+        // a full period later every client is back in the same state
+        for n in 0..n_clients {
+            assert_eq!(
+                t.is_available(n, n_clients, 123.0, period),
+                t.is_available(n, n_clients, 123.0 + period, period)
+            );
+        }
+        // each client is offline at some instant (the trace is not a no-op)
+        for n in 0..n_clients {
+            assert!((0..12).any(|k| !t.is_available(n, n_clients, k as f64 * 50.0, period)));
+        }
+    }
+
+    #[test]
+    fn flash_crowd_vanguard_then_everyone() {
+        let t = AvailabilityTrace::FlashCrowd;
+        let (n_clients, period) = (20usize, 600.0);
+        let before: Vec<usize> =
+            (0..n_clients).filter(|&n| t.is_available(n, n_clients, 10.0, period)).collect();
+        assert_eq!(before, vec![0, 1], "~10% vanguard online before the crowd");
+        let after = (0..n_clients).filter(|&n| t.is_available(n, n_clients, 600.0, period)).count();
+        assert_eq!(after, n_clients, "whole fleet online at the arrival instant");
+        // client 0 is always in the vanguard, even in tiny fleets
+        assert!(t.is_available(0, 3, 0.0, period));
+    }
+
+    #[test]
+    fn none_and_churn_traces_never_gate_dispatch() {
+        for t in [AvailabilityTrace::None, AvailabilityTrace::Churn] {
+            for n in 0..5 {
+                assert!(t.is_available(n, 5, 1e6, 600.0));
+            }
+        }
+    }
+
+    #[test]
+    fn trace_names_round_trip() {
+        for name in ["none", "diurnal", "flash_crowd", "churn"] {
+            AvailabilityTrace::by_name(name).unwrap();
+        }
+        assert!(AvailabilityTrace::by_name("weekend").is_err());
+    }
+
+    #[test]
+    fn churn_drops_is_deterministic_and_rate_bounded() {
+        // pure function: same inputs, same verdict
+        for n in 0..50 {
+            for r in 1..4 {
+                assert_eq!(churn_drops(17, n, r, 0.3), churn_drops(17, n, r, 0.3));
+            }
+        }
+        // rate 0 never drops
+        assert!((0..200).all(|n| !churn_drops(17, n, 1, 0.0)));
+        // the empirical drop fraction tracks the rate over many draws
+        let hits = (0..2000).filter(|&n| churn_drops(17, n, 1, 0.25)).count();
+        assert!((300..700).contains(&hits), "drop fraction off: {hits}/2000 at rate 0.25");
+        // distinct seeds decorrelate the pattern
+        let a: Vec<bool> = (0..64).map(|n| churn_drops(17, n, 1, 0.5)).collect();
+        let b: Vec<bool> = (0..64).map(|n| churn_drops(18, n, 1, 0.5)).collect();
+        assert_ne!(a, b);
     }
 
     #[test]

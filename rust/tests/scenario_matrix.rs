@@ -1,0 +1,181 @@
+//! Scenario-matrix harness battery: golden worker-count determinism of
+//! the report bytes, report/INDEX emission, the registry ↔
+//! `docs/SCENARIOS.md` catalogue lockstep, and the availability-trace
+//! scenarios actually shaping runs (diurnal thins sync rounds,
+//! flash-crowd gates the early fleet, churn drops in-flight uploads).
+//! Everything runs on the native-exec FC manifest — no compiled
+//! artifacts required.
+
+use std::path::PathBuf;
+
+use feddd::coordinator::run_experiment;
+use feddd::runtime::write_native_manifest;
+use feddd::scenarios::{
+    by_name, registry, run_matrix, write_report, Cell, MatrixReport, MatrixSpec, Tier,
+};
+
+fn native_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "feddd_scenario_matrix_{}_{tag}",
+        std::process::id()
+    ));
+    write_native_manifest(&dir, &[("mlp", 1.0)], 16, 64).unwrap();
+    dir
+}
+
+fn smoke_spec(dir: &PathBuf, workers: usize) -> MatrixSpec {
+    MatrixSpec {
+        tier: Tier::Smoke,
+        label: "golden".into(),
+        scenarios: vec!["baseline_iid".into(), "churn".into()],
+        schemes: vec!["feddd".into()],
+        seeds: vec![17],
+        workers,
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+    }
+}
+
+#[test]
+fn report_bytes_are_identical_across_worker_counts() {
+    // The determinism contract from DESIGN.md §Scenario-Matrix: a cell is
+    // a pure function of (scenario, scheme, seed, tier), so the whole
+    // report — JSON bytes included — must not depend on the worker count.
+    let dir = native_dir("golden");
+    let a = run_matrix(&smoke_spec(&dir, 1)).unwrap();
+    let b = run_matrix(&smoke_spec(&dir, 4)).unwrap();
+    assert_eq!(a.cells.len(), 2);
+    let ja = a.to_json_string();
+    let jb = b.to_json_string();
+    assert_eq!(ja, jb, "matrix report bytes differ between workers 1 and 4");
+    // and the bytes round-trip: parse back to the same cells
+    let back = MatrixReport::from_json(&feddd::util::json::parse(&ja).unwrap()).unwrap();
+    assert_eq!(back.cells, a.cells);
+    // a smoke run actually trains: the baseline cell beats chance
+    assert!(a.cells[0].accuracy > 0.15, "baseline cell at chance: {}", a.cells[0].accuracy);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn write_report_emits_json_markdown_and_regenerates_index() {
+    let out = std::env::temp_dir().join(format!("feddd_matrix_reports_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out);
+    let cell = Cell {
+        scenario: "baseline_iid".into(),
+        scheme: "feddd".into(),
+        tier: "smoke".into(),
+        seed: 17,
+        rounds: 6,
+        accuracy: 0.5,
+        rare_accuracy: None,
+        uploaded_bytes: 100,
+        wire_bytes: 120,
+        v_time: 10.0,
+        mean_staleness: 0.0,
+        mean_stragglers: 0.0,
+        mean_participants: 8.0,
+        churned: 0,
+        peak_client_state_bytes: 1000,
+    };
+    let mk = |label: &str| MatrixReport {
+        tier: "smoke".into(),
+        label: label.into(),
+        scenarios: vec!["baseline_iid".into()],
+        schemes: vec!["feddd".into()],
+        seeds: vec![17],
+        cells: vec![cell.clone()],
+    };
+    let p1 = write_report(&out, &mk("beta")).unwrap();
+    assert!(p1.exists());
+    assert!(out.join("MATRIX_smoke_beta.md").exists());
+    let idx = std::fs::read_to_string(out.join("INDEX.md")).unwrap();
+    assert!(idx.contains("MATRIX_smoke_beta"), "{idx}");
+    // a second report regenerates the index with both rows, filename-sorted
+    write_report(&out, &mk("alpha")).unwrap();
+    let idx = std::fs::read_to_string(out.join("INDEX.md")).unwrap();
+    let a = idx.find("MATRIX_smoke_alpha").expect("alpha row");
+    let b = idx.find("MATRIX_smoke_beta").expect("beta row");
+    assert!(a < b, "index rows not filename-sorted:\n{idx}");
+    // loading what we wrote gives back the same cells
+    let back = MatrixReport::load(&p1).unwrap();
+    assert_eq!(back.cells, vec![cell]);
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn catalogue_documents_every_registered_scenario() {
+    // docs/SCENARIOS.md and the registry move in lockstep: every
+    // registered name must have a `## \`name\`` heading in the catalogue.
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("docs/SCENARIOS.md");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing catalogue {}: {e}", path.display()));
+    for sc in registry() {
+        let heading = format!("## `{}`", sc.name);
+        assert!(
+            text.contains(&heading),
+            "scenario {:?} is registered but has no {heading:?} entry in docs/SCENARIOS.md",
+            sc.name
+        );
+    }
+}
+
+#[test]
+fn diurnal_trace_thins_sync_rounds_without_emptying_them() {
+    // The diurnal trace keeps a rolling half of the fleet online; under
+    // the sync engine that caps every round's participants strictly
+    // between 0 and n_clients.
+    let dir = native_dir("diurnal");
+    let mut cfg = by_name("diurnal").unwrap().config(Tier::Smoke, 17);
+    cfg.round_mode = "sync".into();
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    let res = run_experiment(cfg.clone()).unwrap();
+    for r in &res.rounds {
+        assert!(r.participants > 0, "round {} went empty", r.round);
+        assert!(
+            r.participants < cfg.n_clients,
+            "round {} saw the full fleet despite the diurnal trace",
+            r.round
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn flash_crowd_gates_the_early_fleet_to_the_vanguard() {
+    // Before v-time reaches the trace period only the ~10% vanguard is
+    // online: the first round can fold at most that many uploads.
+    let dir = native_dir("flash");
+    let mut cfg = by_name("flash_crowd").unwrap().config(Tier::Smoke, 17);
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    let vanguard = (0..cfg.n_clients).filter(|n| n * 10 < cfg.n_clients).count();
+    let res = run_experiment(cfg.clone()).unwrap();
+    let first = res.rounds.first().unwrap();
+    assert!(
+        first.participants <= vanguard,
+        "round 1 folded {} uploads with a {vanguard}-client vanguard",
+        first.participants
+    );
+    assert!(first.participants < cfg.n_clients);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn churn_trace_drops_in_flight_uploads() {
+    let dir = native_dir("churn");
+    let mut cfg = by_name("churn").unwrap().config(Tier::Smoke, 17);
+    cfg.churn_rate = 0.9; // aggressive so a 6-round smoke run must see drops
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    let res = run_experiment(cfg).unwrap();
+    assert!(
+        res.total_churned() > 0,
+        "no uploads churned at rate 0.9 over {} rounds",
+        res.rounds.len()
+    );
+    // churn at the default 20% stays deterministic run-to-run (same seed)
+    let mut c2 = by_name("churn").unwrap().config(Tier::Smoke, 17);
+    c2.artifacts_dir = dir.to_string_lossy().into_owned();
+    let a = run_experiment(c2.clone()).unwrap();
+    let b = run_experiment(c2).unwrap();
+    assert_eq!(a.total_churned(), b.total_churned());
+    assert_eq!(a.final_accuracy().unwrap().to_bits(), b.final_accuracy().unwrap().to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
