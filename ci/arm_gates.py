@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Arm the CI regression gates from a green run's artifacts.
+
+The committed baselines under ``BENCH_baseline/`` (and the matrix
+baseline ``reports/baseline_smoke.json``) start life as
+``"bootstrap": true`` placeholders: the diff gates validate shape but
+skip every numeric comparison. This tool promotes a green run's fresh
+``BENCH_round.json`` / ``BENCH_fleet.json`` / ``MATRIX_*.json``
+artifacts into those baseline slots — after which every ns/round mean,
+byte total and matrix cell is gated — while **refusing any promotion
+that would disarm an armed gate**:
+
+* a fresh artifact that is itself a ``"bootstrap": true`` placeholder is
+  rejected — a bootstrap -> bootstrap copy arms nothing;
+* a fresh bench run missing a gated run-level key (``wire_*`` /
+  ``payload_*`` / ``plane_*`` / ``client_state*`` / ``sim_state*`` /
+  ``data_state*``) that the armed baseline records is rejected — key
+  renames must edit the committed baseline explicitly;
+* a fresh matrix report missing a cell the armed baseline covers is
+  rejected — shrinking the matrix silently disarms that cell's gate;
+* empty case/cell lists and unreadable files are rejected.
+
+Every input is validated before anything is written, so a failed run
+never leaves a half-armed baseline behind.
+
+Usage (the CI arm-gates job; see BENCH_baseline/README.md):
+    python3 ci/arm_gates.py --bench bench-out/BENCH_round.json \
+        --bench bench-out/BENCH_fleet.json \
+        --matrix matrix-out/MATRIX_smoke_ci.json \
+        --dest BENCH_baseline --matrix-dest reports/baseline_smoke.json
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# Single source of truth for what the gates key on.
+from bench_diff import run_level_bytes
+from matrix_diff import cells_by_key
+
+
+def load(path, errors):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        errors.append(f"cannot read {path}: {e}")
+        return None
+
+
+def load_optional(path):
+    """The current baseline slot, or None when absent/unreadable (a
+    missing slot is armable; a broken one is replaced wholesale)."""
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def validate_bench(fresh, path, baseline, errors):
+    if fresh.get("bootstrap"):
+        errors.append(
+            f"{path}: fresh artifact is itself a bootstrap placeholder — "
+            "a bootstrap -> bootstrap copy arms nothing; feed it a real "
+            "green run")
+        return
+    cases = [c for c in fresh.get("cases", []) or []
+             if isinstance(c, dict) and isinstance(c.get("case"), str)]
+    if not cases:
+        errors.append(f"{path}: no cases — this run produced no bench output")
+    if baseline is not None and not baseline.get("bootstrap"):
+        fresh_keys = run_level_bytes(fresh)
+        for key in sorted(run_level_bytes(baseline)):
+            if key not in fresh_keys:
+                errors.append(
+                    f"{path}: gated key {key} is in the armed baseline but "
+                    "missing from the fresh run — promoting would silently "
+                    "disarm it (edit the baseline explicitly if the key "
+                    "legitimately changed)")
+
+
+def validate_matrix(fresh, path, baseline, errors):
+    if fresh.get("bootstrap"):
+        errors.append(
+            f"{path}: fresh matrix report is itself a bootstrap placeholder "
+            "— a bootstrap -> bootstrap copy arms nothing")
+        return
+    cells = cells_by_key(fresh)
+    if not cells:
+        errors.append(f"{path}: no cells — the matrix did not run")
+    if baseline is not None and not baseline.get("bootstrap"):
+        for key in sorted(cells_by_key(baseline)):
+            if key not in cells:
+                errors.append(
+                    f"{path}: cell {key} is in the armed baseline but "
+                    "missing from the fresh report — promoting would "
+                    "silently disarm it")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", action="append", default=[],
+                    help="fresh BENCH_*.json to promote (repeatable)")
+    ap.add_argument("--matrix", default=None,
+                    help="fresh MATRIX_*.json to promote as the matrix baseline")
+    ap.add_argument("--dest", default="BENCH_baseline",
+                    help="baseline directory for bench artifacts")
+    ap.add_argument("--matrix-dest", default="reports/baseline_smoke.json",
+                    help="baseline path for the matrix report")
+    args = ap.parse_args()
+
+    if not args.bench and args.matrix is None:
+        sys.exit("arm_gates: nothing to promote (pass --bench and/or --matrix)")
+
+    errors = []
+    writes = []  # (dest_path, fresh_doc)
+
+    for path in args.bench:
+        fresh = load(path, errors)
+        if fresh is None:
+            continue
+        dest = os.path.join(args.dest, os.path.basename(path))
+        validate_bench(fresh, path, load_optional(dest), errors)
+        writes.append((dest, fresh))
+
+    if args.matrix is not None:
+        fresh = load(args.matrix, errors)
+        if fresh is not None:
+            validate_matrix(
+                fresh, args.matrix, load_optional(args.matrix_dest), errors)
+            writes.append((args.matrix_dest, fresh))
+
+    if errors:
+        for e in errors:
+            print(f"arm_gates: REFUSED: {e}", file=sys.stderr)
+        sys.exit(1)
+
+    for dest, doc in writes:
+        parent = os.path.dirname(dest)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(dest, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"arm_gates: armed {dest}")
+    print(f"arm_gates: {len(writes)} baseline(s) armed — commit them to "
+          "finish arming the gates")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,12 @@ baseline in BENCH_baseline/, and exits non-zero when the run regressed:
   a fixed-seed, fixed-round-count run, so at equal config (= equal
   dropout schedule) they are exactly reproducible and any growth is a
   real encoding, client-state, simulation-runtime or data-plane
-  regression, not noise.
+  regression, not noise;
+* **plane mix**: run-level ``plane_`` keys (the per-plane layer counts
+  of the value-plane sweep) are gated with zero tolerance — any change,
+  up or down, fails. A deterministic layer count that moved means the
+  auto-pick quantizer changed behaviour at equal config; shrinking wire
+  bytes show up in the ``wire_`` keys, never as a mix drift.
 
 Cases present on only one side are reported but never fail the gate
 (benches come and go); timing *improvements* are reported so maintainers
@@ -56,7 +61,8 @@ def cases_by_name(doc):
 
 
 def run_level_bytes(doc):
-    gated = ("wire_", "payload_", "client_state", "sim_state", "data_state")
+    gated = ("wire_", "payload_", "client_state", "sim_state", "data_state",
+             "plane_")
     return {
         k: v
         for k, v in doc.items()
@@ -148,6 +154,15 @@ def main():
                 continue
             if bv is None:
                 lines.append(f"| {key} | — | {cv:.0f} | new — ok |")
+                continue
+            if key.startswith("plane_"):
+                if cv != bv:
+                    failures.append(
+                        f"{key}: {cv:.0f} != baseline {bv:.0f} "
+                        "(plane-mix counts are deterministic and gated exactly)")
+                    lines.append(f"| {key} | {bv:.0f} | {cv:.0f} | **REGRESSION** |")
+                else:
+                    lines.append(f"| {key} | {bv:.0f} | {cv:.0f} | ok |")
                 continue
             if cv > bv:
                 failures.append(

@@ -20,6 +20,11 @@ report regressed. The rules mirror the in-binary compare mode
   silently stops covering a cell is itself a regression;
 * an empty current report fails outright.
 
+A baseline marked ``"bootstrap": true`` (the committed placeholder in
+``reports/baseline_smoke.json``) skips the per-cell gates, still fails an
+empty current report, and exits 0 with a loud reminder to promote a green
+run's ``MATRIX_*.json`` via ``ci/arm_gates.py`` as the real baseline.
+
 Only regressions (and new-cell notes) are printed — never the full table.
 
 Usage:
@@ -68,13 +73,21 @@ def main():
                     help="write a markdown diff report here (PR artifact)")
     args = ap.parse_args()
 
-    base = cells_by_key(load(args.baseline))
+    base_doc = load(args.baseline)
+    base = cells_by_key(base_doc)
     cur = cells_by_key(load(args.current))
 
     failures = []
     notes = []
     if not cur:
         failures.append("current report has no cells — the matrix did not run")
+
+    if base_doc.get("bootstrap"):
+        notes.append(
+            "baseline is a bootstrap placeholder — per-cell gates skipped. "
+            "Promote a green run's MATRIX report with ci/arm_gates.py to arm "
+            "the gate.")
+        base = {}
 
     for key in sorted(base):
         b = base[key]
@@ -98,9 +111,10 @@ def main():
                         f"{key}: {field} {bv:.0f} -> {cv:.0f} "
                         "(deterministic byte total may not grow)")
 
-    for key in sorted(cur):
-        if key not in base:
-            notes.append(f"new cell {key} — no baseline, no delta computed")
+    if not base_doc.get("bootstrap"):
+        for key in sorted(cur):
+            if key not in base:
+                notes.append(f"new cell {key} — no baseline, no delta computed")
 
     lines = ["# Matrix diff", ""]
     lines.append(f"baseline: `{args.baseline}`  ·  current: `{args.current}`")

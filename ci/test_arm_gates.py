@@ -1,0 +1,227 @@
+#!/usr/bin/env python3
+"""Unit tests for the gate-arming tool (``ci/arm_gates.py``).
+
+Arming is the one moment the baselines are rewritten wholesale, so its
+refusal paths matter more than its happy path: a promotion that silently
+disarmed a gate would undo what the diff gates exist for. Exercised
+end-to-end by invoking the script as a subprocess on synthetic
+artifacts:
+
+* green: arming bootstrap slots from a green run, re-arming an armed
+  baseline (ratchet), arming a missing slot, matrix promotion;
+* red: a fresh artifact that is itself bootstrap (bootstrap -> bootstrap
+  copy), a vanished gated run-level key vs the armed baseline, a
+  vanished matrix cell, empty case/cell lists, unreadable inputs — and
+  in every red case **nothing is written** (no half-armed baselines).
+
+Stdlib only; run with ``python3 ci/test_arm_gates.py -v`` (the CI step).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SCRIPT = os.path.join(HERE, "arm_gates.py")
+
+
+def bench_doc(cases=None, **run_level):
+    body = {
+        "bench": "round",
+        "cases": [
+            {"case": name, "mean_ns": ns}
+            for name, ns in sorted((cases or {"step_round": 1000.0}).items())
+        ],
+    }
+    body.update(run_level)
+    return body
+
+
+def matrix_doc(cells):
+    return {"matrix": {"tier": "smoke", "label": "test"}, "cells": cells}
+
+
+def cell(**overrides):
+    body = {"scenario": "baseline_iid", "scheme": "feddd", "tier": "smoke",
+            "seed": 17, "accuracy": 0.8125, "wire_bytes": 130000,
+            "uploaded_bytes": 123456}
+    body.update(overrides)
+    return body
+
+
+class ArmHarness(unittest.TestCase):
+    """Builds a scratch repo layout per test and runs the tool in it."""
+
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.root = self._tmp.name
+        self.dest = os.path.join(self.root, "BENCH_baseline")
+        os.makedirs(self.dest)
+        self.matrix_dest = os.path.join(self.root, "reports",
+                                        "baseline_smoke.json")
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def write(self, relpath, doc):
+        path = os.path.join(self.root, relpath)
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(doc, f)
+        return path
+
+    def read(self, path):
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+
+    def arm(self, *extra):
+        return subprocess.run(
+            [sys.executable, SCRIPT, "--dest", self.dest,
+             "--matrix-dest", self.matrix_dest, *extra],
+            capture_output=True, text=True, check=False, cwd=self.root,
+        )
+
+
+class GreenPaths(ArmHarness):
+    def test_arms_bootstrap_bench_slots(self):
+        self.write("BENCH_baseline/BENCH_round.json",
+                   {"bootstrap": True, "bench": "round", "cases": []})
+        fresh = bench_doc(wire_bytes_sync_8r=4096, plane_i8_layers_auto_8r=240)
+        fp = self.write("bench-out/BENCH_round.json", fresh)
+        proc = self.arm("--bench", fp)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("armed", proc.stdout)
+        armed = self.read(os.path.join(self.dest, "BENCH_round.json"))
+        self.assertEqual(armed, fresh)
+        self.assertNotIn("bootstrap", armed)
+
+    def test_arms_a_missing_slot(self):
+        fp = self.write("bench-out/BENCH_fleet.json",
+                        bench_doc(client_state_peak_bytes_1k_h5_3r=500))
+        proc = self.arm("--bench", fp)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertTrue(
+            os.path.exists(os.path.join(self.dest, "BENCH_fleet.json")))
+
+    def test_rearms_armed_baseline_with_same_keys(self):
+        self.write("BENCH_baseline/BENCH_round.json",
+                   bench_doc(wire_bytes_sync_8r=5000))
+        fp = self.write("bench-out/BENCH_round.json",
+                        bench_doc(wire_bytes_sync_8r=4096))
+        proc = self.arm("--bench", fp)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        armed = self.read(os.path.join(self.dest, "BENCH_round.json"))
+        self.assertEqual(armed["wire_bytes_sync_8r"], 4096)
+
+    def test_promotes_a_matrix_report(self):
+        self.write("reports/baseline_smoke.json",
+                   {"bootstrap": True, "cells": []})
+        fp = self.write("matrix-out/MATRIX_smoke_ci.json",
+                        matrix_doc([cell()]))
+        proc = self.arm("--matrix", fp)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        armed = self.read(self.matrix_dest)
+        self.assertEqual(len(armed["cells"]), 1)
+        self.assertNotIn("bootstrap", armed)
+
+    def test_fresh_run_may_add_new_keys_and_cases(self):
+        self.write("BENCH_baseline/BENCH_round.json",
+                   bench_doc(wire_bytes_sync_8r=5000))
+        fp = self.write(
+            "bench-out/BENCH_round.json",
+            bench_doc({"step_round": 900.0, "brand_new_case": 10.0},
+                      wire_bytes_sync_8r=4096,
+                      wire_i8_bytes_auto_8r=123))
+        self.assertEqual(self.arm("--bench", fp).returncode, 0)
+
+
+class RedPaths(ArmHarness):
+    def test_bootstrap_fresh_artifact_is_refused(self):
+        self.write("BENCH_baseline/BENCH_round.json",
+                   {"bootstrap": True, "bench": "round", "cases": []})
+        fp = self.write("bench-out/BENCH_round.json",
+                        {"bootstrap": True, "bench": "round", "cases": []})
+        proc = self.arm("--bench", fp)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("bootstrap", proc.stderr)
+        # the slot is untouched
+        self.assertTrue(
+            self.read(os.path.join(self.dest, "BENCH_round.json"))["bootstrap"])
+
+    def test_vanished_gated_key_is_refused(self):
+        self.write("BENCH_baseline/BENCH_round.json",
+                   bench_doc(wire_bytes_sync_8r=5000,
+                             payload_bytes_sync_8r=900))
+        fp = self.write("bench-out/BENCH_round.json",
+                        bench_doc(wire_bytes_sync_8r=4096))
+        proc = self.arm("--bench", fp)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("payload_bytes_sync_8r", proc.stderr)
+        self.assertIn("disarm", proc.stderr)
+        armed = self.read(os.path.join(self.dest, "BENCH_round.json"))
+        self.assertEqual(armed["wire_bytes_sync_8r"], 5000)
+
+    def test_empty_case_list_is_refused(self):
+        fp = self.write("bench-out/BENCH_round.json",
+                        {"bench": "round", "cases": []})
+        proc = self.arm("--bench", fp)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("no cases", proc.stderr)
+
+    def test_unreadable_input_is_refused(self):
+        missing = os.path.join(self.root, "bench-out", "nope.json")
+        proc = self.arm("--bench", missing)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("cannot read", proc.stderr)
+
+    def test_bootstrap_matrix_report_is_refused(self):
+        fp = self.write("matrix-out/MATRIX_smoke_ci.json",
+                        {"bootstrap": True, "cells": []})
+        proc = self.arm("--matrix", fp)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("bootstrap", proc.stderr)
+
+    def test_vanished_matrix_cell_is_refused(self):
+        self.write("reports/baseline_smoke.json",
+                   matrix_doc([cell(), cell(scheme="oort")]))
+        fp = self.write("matrix-out/MATRIX_smoke_ci.json",
+                        matrix_doc([cell()]))
+        proc = self.arm("--matrix", fp)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("baseline_iid/oort/seed17/smoke", proc.stderr)
+        armed = self.read(self.matrix_dest)
+        self.assertEqual(len(armed["cells"]), 2)
+
+    def test_empty_matrix_cells_are_refused(self):
+        fp = self.write("matrix-out/MATRIX_smoke_ci.json", matrix_doc([]))
+        proc = self.arm("--matrix", fp)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("no cells", proc.stderr)
+
+    def test_one_bad_input_blocks_every_write(self):
+        # Validate-all-then-write-all: a good bench artifact next to a
+        # bad one must leave both slots untouched.
+        good = self.write("bench-out/BENCH_round.json",
+                          bench_doc(wire_bytes_sync_8r=4096))
+        bad = self.write("bench-out/BENCH_fleet.json",
+                         {"bootstrap": True, "bench": "fleet", "cases": []})
+        proc = self.arm("--bench", good, "--bench", bad)
+        self.assertEqual(proc.returncode, 1)
+        self.assertFalse(
+            os.path.exists(os.path.join(self.dest, "BENCH_round.json")))
+        self.assertFalse(
+            os.path.exists(os.path.join(self.dest, "BENCH_fleet.json")))
+
+    def test_no_inputs_is_an_error(self):
+        proc = self.arm()
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("nothing to promote", proc.stderr)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -10,9 +10,10 @@ as a subprocess on synthetic baseline/current JSON pairs:
 * green: equal runs, sub-threshold timing growth, timing improvements,
   byte decreases, new cases/keys, bootstrap placeholders;
 * red: >20% ns/round growth, a single extra ``wire_*`` /
-  ``client_state*`` / ``sim_state*`` / ``data_state*`` byte, a vanished
-  wire key (silent disarm), an empty current run, an all-incomparable
-  case set.
+  ``client_state*`` / ``sim_state*`` / ``data_state*`` byte, any change
+  at all in a ``plane_*`` layer count (exact-match gate, both
+  directions), a vanished wire or plane key (silent disarm), an empty
+  current run, an all-incomparable case set.
 
 Stdlib only; run with ``python3 ci/test_bench_diff.py -v`` (the CI step).
 """
@@ -159,6 +160,33 @@ class RedPaths(unittest.TestCase):
             data_state_bytes_100k_h1_2r=9000,
         )
         self.assertEqual(run_gate(d, d).returncode, 0)
+
+    def test_plane_key_equality_passes(self):
+        d = doc({"step_round": 1000.0}, plane_i8_layers_auto_8r=240)
+        self.assertEqual(run_gate(d, d).returncode, 0)
+
+    def test_plane_key_increase_fails(self):
+        base = doc({"step_round": 1000.0}, plane_i8_layers_auto_8r=240)
+        cur = doc({"step_round": 1000.0}, plane_i8_layers_auto_8r=241)
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("plane_i8_layers_auto_8r", proc.stdout)
+
+    def test_plane_key_decrease_also_fails(self):
+        # Unlike the byte totals, the plane mix is gated exactly: fewer
+        # i8 layers is not an "improvement", it is a quantizer drift.
+        base = doc({"step_round": 1000.0}, plane_i8_layers_auto_8r=240)
+        cur = doc({"step_round": 1000.0}, plane_i8_layers_auto_8r=239)
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("gated exactly", proc.stdout)
+
+    def test_vanished_plane_key_fails(self):
+        base = doc({"step_round": 1000.0}, plane_f16_layers_auto_8r=0)
+        cur = doc({"step_round": 1000.0})
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("silently disarmed", proc.stdout)
 
     def test_vanished_wire_key_fails(self):
         # A renamed/dropped byte key would silently disarm the

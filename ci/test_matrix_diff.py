@@ -6,10 +6,12 @@ gate that never fires is worse than none. Exercised end-to-end by
 invoking the script as a subprocess on synthetic report pairs:
 
 * green: identical reports, accuracy drop within tolerance, byte
-  decreases, accuracy improvements, new cells (reported, never fatal);
+  decreases, accuracy improvements, new cells (reported, never fatal),
+  a ``"bootstrap": true`` baseline placeholder (per-cell gates skipped
+  with a loud arming reminder);
 * red: accuracy drop beyond tolerance, a single extra ``wire_bytes`` /
   ``uploaded_bytes`` byte, a vanished cell (silent disarm), an empty
-  current report.
+  current report (even against a bootstrap baseline).
 
 Stdlib only; run with ``python3 ci/test_matrix_diff.py -v`` (the CI
 step).
@@ -107,6 +109,17 @@ class GreenPaths(unittest.TestCase):
         self.assertIn("no delta computed", proc.stdout)
 
 
+    def test_bootstrap_baseline_skips_per_cell_gates(self):
+        base = {"bootstrap": True, "cells": []}
+        # Numbers that would fail an armed gate sail through bootstrap...
+        cur = doc([cell(accuracy=0.01, wire_bytes=10**9)])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        # ...with a loud reminder to promote a green run's report.
+        self.assertIn("bootstrap placeholder", proc.stdout)
+        self.assertIn("arm_gates.py", proc.stdout)
+
+
 class RedPaths(unittest.TestCase):
     def test_accuracy_regression_beyond_tolerance_fails(self):
         base = doc([cell(accuracy=0.8125)])
@@ -147,6 +160,13 @@ class RedPaths(unittest.TestCase):
 
     def test_empty_current_report_fails(self):
         base = doc([cell()])
+        cur = doc([])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("no cells", proc.stdout)
+
+    def test_empty_current_report_fails_even_against_bootstrap(self):
+        base = {"bootstrap": True, "cells": []}
         cur = doc([])
         proc = run_gate(base, cur)
         self.assertEqual(proc.returncode, 1)

@@ -36,6 +36,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
+use feddd::codec::PlaneMix;
 use feddd::config::ExpConfig;
 use feddd::coordinator::FedRun;
 use feddd::runtime::write_native_manifest;
@@ -76,6 +77,8 @@ struct FleetStats {
     data_bytes: usize,
     /// One client's dense model size (the yardstick unit).
     model_bytes: usize,
+    /// Wire value-plane mix over every upload of the run.
+    planes: PlaneMix,
     wall_s: f64,
 }
 
@@ -104,6 +107,7 @@ fn deterministic_fleet(
         peak_sim: 0,
         data_bytes: run.data_state_bytes(),
         model_bytes,
+        planes: PlaneMix::default(),
         wall_s: 0.0,
     };
     // Bitwise digest of the run: per-round loss/duration bits (the
@@ -115,6 +119,7 @@ fn deterministic_fleet(
         stats.final_state = out.client_state_bytes;
         stats.peak_residual = stats.peak_residual.max(run.client_residual_bytes());
         stats.peak_sim = stats.peak_sim.max(out.sim_state_bytes);
+        stats.planes.merge(out.planes);
         digest.push(out.mean_loss.to_bits());
         digest.push(out.duration.to_bits());
     }
@@ -194,6 +199,16 @@ fn main() {
     b.annotate_run("sim_state_peak_bytes_1k_h5_3r", Json::Num(s1k.peak_sim as f64));
     b.annotate_run("data_state_bytes_1k_h5_3r", Json::Num(s1k.data_bytes as f64));
     b.annotate_run("dense_state_bytes_1k", Json::Num(dense_1k as f64));
+    // Fleet preset default keeps the wire at full precision; the layer
+    // count is deterministic and gated byte-exactly (`plane_` prefix).
+    b.annotate_run("plane_f32_layers_1k_h5_3r", Json::Num(s1k.planes.f32_layers as f64));
+    if s1k.planes.f16_layers + s1k.planes.i8_layers != 0 {
+        gate_failures.push(format!(
+            "fleet preset default encoded {} f16 / {} i8 layers — the default wire \
+             must stay full-precision f32",
+            s1k.planes.f16_layers, s1k.planes.i8_layers
+        ));
+    }
     if s1k.peak_residual == 0 {
         gate_failures
             .push("sparse rounds left no residual — the delta path never ran".into());

@@ -11,11 +11,14 @@
 //! totals that `ci/bench_diff.py` gates against `BENCH_baseline/`). The
 //! bench also **gates** inline: on the skewed Table-4 fleet, semi-async
 //! quorum rounds must finish the same round count in strictly less
-//! virtual time than the synchronous barrier, or the process exits
-//! non-zero (CI fails).
+//! virtual time than the synchronous barrier, and a `value_plane=auto`
+//! run must realize a strictly smaller wire total than the f32 run on
+//! the same config (with the i8 plane actually engaging), or the
+//! process exits non-zero (CI fails).
 
 use std::path::PathBuf;
 
+use feddd::codec::PlaneMix;
 use feddd::config::ExpConfig;
 use feddd::coordinator::FedRun;
 use feddd::runtime::{default_artifacts_dir, write_native_manifest, Runtime};
@@ -62,18 +65,27 @@ fn cfg(scheme: &str, workers: usize, round_mode: &str, dir: &PathBuf) -> ExpConf
 /// whose iteration counts depend on the host), so `ci/bench_diff.py`
 /// gates on these byte totals *exactly*: any increase at the same config
 /// (= same dropout schedule) fails CI.
-fn deterministic_run(round_mode: &str, rounds: usize, dir: &PathBuf) -> (f64, usize, usize, usize) {
-    let mut run = FedRun::new(cfg("feddd", 1, round_mode, dir)).unwrap();
+fn deterministic_run(
+    round_mode: &str,
+    plane: &str,
+    rounds: usize,
+    dir: &PathBuf,
+) -> (f64, usize, usize, usize, PlaneMix) {
+    let mut c = cfg("feddd", 1, round_mode, dir);
+    c.value_plane = plane.into();
+    let mut run = FedRun::new(c).unwrap();
     let mut wire = 0usize;
     let mut payload = 0usize;
     let mut peak_state = 0usize;
+    let mut planes = PlaneMix::default();
     for _ in 0..rounds {
         let out = run.step_round().unwrap();
         wire += out.wire_bytes;
         payload += out.uploaded_bytes;
         peak_state = peak_state.max(out.client_state_bytes);
+        planes.merge(out.planes);
     }
-    (run.clock.now(), wire, payload, peak_state)
+    (run.clock.now(), wire, payload, peak_state, planes)
 }
 
 fn main() {
@@ -148,9 +160,10 @@ fn main() {
     // barrier. This is deterministic (seeded), so a violation is a real
     // scheduler regression, not noise.
     let rounds = 8;
-    let (vt_sync, wire_sync, payload_sync, state_sync) = deterministic_run("sync", rounds, &dir);
-    let (vt_semi, wire_semi, payload_semi, state_semi) =
-        deterministic_run("semi_async", rounds, &dir);
+    let (vt_sync, wire_sync, payload_sync, state_sync, _) =
+        deterministic_run("sync", "f32", rounds, &dir);
+    let (vt_semi, wire_semi, payload_semi, state_semi, _) =
+        deterministic_run("semi_async", "f32", rounds, &dir);
     let speedup = vt_sync / vt_semi;
     println!(
         "round::virtual_time_{rounds}r  sync {vt_sync:.1}s  \
@@ -173,6 +186,41 @@ fn main() {
     // snapshots), gated like the wire totals: any increase fails CI.
     b.annotate_run("client_state_peak_bytes_sync_8r", Json::Num(state_sync as f64));
     b.annotate_run("client_state_peak_bytes_semi_async_8r", Json::Num(state_semi as f64));
+
+    // ---- value-plane sweep (DESIGN.md §Codec) ----
+    // Same config and seed as the sync f32 run above, but value_plane =
+    // auto: per layer the codec picks the smallest plane whose realized
+    // quantization error stays within plane_error · max|value|. All
+    // totals below are deterministic; ci/bench_diff.py gates the
+    // `wire_*` keys no-increase and the `plane_*` keys byte-exactly.
+    let (_, wire_auto, payload_auto, _, mix_auto) =
+        deterministic_run("sync", "auto", rounds, &dir);
+    println!(
+        "round::plane_mix_{rounds}r  f32 {wire_sync}B  auto {wire_auto}B \
+         (payload {payload_auto}B)  layers f32 {} f16 {} i8 {}",
+        mix_auto.f32_layers, mix_auto.f16_layers, mix_auto.i8_layers
+    );
+    b.annotate_run("wire_bytes_auto_sync_8r", Json::Num(wire_auto as f64));
+    b.annotate_run("payload_bytes_auto_sync_8r", Json::Num(payload_auto as f64));
+    b.annotate_run("wire_f32_bytes_auto_8r", Json::Num(mix_auto.f32_bytes as f64));
+    b.annotate_run("wire_f16_bytes_auto_8r", Json::Num(mix_auto.f16_bytes as f64));
+    b.annotate_run("wire_i8_bytes_auto_8r", Json::Num(mix_auto.i8_bytes as f64));
+    b.annotate_run("plane_f32_layers_auto_8r", Json::Num(mix_auto.f32_layers as f64));
+    b.annotate_run("plane_f16_layers_auto_8r", Json::Num(mix_auto.f16_layers as f64));
+    b.annotate_run("plane_i8_layers_auto_8r", Json::Num(mix_auto.i8_layers as f64));
+    if wire_auto >= wire_sync {
+        gate_failures.push(format!(
+            "value_plane=auto wire total {wire_auto}B is not strictly below the \
+             f32 run's {wire_sync}B on the same config"
+        ));
+    }
+    if mix_auto.i8_layers == 0 {
+        gate_failures.push(
+            "value_plane=auto never picked the i8 plane on the smoke fleet — \
+             the quantizer is not engaging"
+                .into(),
+        );
+    }
     // Total OS threads the whole bench process ever spawned — a fixed
     // function of the swept worker counts (2+4 twice), never of round or
     // micro-batch counts. Observability only: the per-case gates above

@@ -162,7 +162,12 @@ impl Aggregator {
                 self.global_shapes[bi].len() == 1 && self.global_shapes[bi][0] >= lw.out_dim,
                 "layer {l}: bias geometry mismatch"
             );
-            // Weight tensor scatter (global layout: conv OIHW, fc (in, out)).
+            // Weight tensor accumulate (global layout: conv OIHW, fc
+            // (in, out)), arranged so the inner loops run over contiguous
+            // slices. Every global position is touched at most once per
+            // upload (units are distinct), so reordering the unit/row
+            // loops is bitwise-free — each position's accumulation chain
+            // across uploads is unchanged.
             match gshape.len() {
                 4 => {
                     let (out_g, in_g) = (gshape[0], gshape[1]);
@@ -177,12 +182,28 @@ impl Aggregator {
                         let k = k as usize;
                         anyhow::ensure!(k < lw.out_dim, "layer {l}: unit {k} out of range");
                         let vals = &lw.values[ui * chunk..ui * chunk + lw.group];
-                        for i in 0..lw.in_dim {
-                            let g0 = (k * in_g + i) * k2;
-                            let s0 = i * k2;
-                            for t in 0..k2 {
-                                num[g0 + t] += m_n * vals[s0 + t];
-                                den[g0 + t] += m_n;
+                        if lw.in_dim == in_g {
+                            // Homogeneous client: the unit's whole kernel
+                            // block is one contiguous OIHW run.
+                            let g0 = k * in_g * k2;
+                            for (o, &v) in num[g0..g0 + lw.group].iter_mut().zip(vals) {
+                                *o += m_n * v;
+                            }
+                            for o in den[g0..g0 + lw.group].iter_mut() {
+                                *o += m_n;
+                            }
+                        } else {
+                            // Hetero sub-model: k2-contiguous run per
+                            // retained input channel.
+                            for i in 0..lw.in_dim {
+                                let g0 = (k * in_g + i) * k2;
+                                let sv = &vals[i * k2..(i + 1) * k2];
+                                for (o, &v) in num[g0..g0 + k2].iter_mut().zip(sv) {
+                                    *o += m_n * v;
+                                }
+                                for o in den[g0..g0 + k2].iter_mut() {
+                                    *o += m_n;
+                                }
                             }
                         }
                     }
@@ -193,15 +214,25 @@ impl Aggregator {
                         lw.out_dim <= out_g && lw.in_dim <= in_g && lw.group == lw.in_dim,
                         "layer {l}: fc geometry mismatch"
                     );
+                    for &k in &lw.units {
+                        anyhow::ensure!(
+                            (k as usize) < lw.out_dim,
+                            "layer {l}: unit {k} out of range"
+                        );
+                    }
                     let num = self.num[wi].data_mut();
                     let den = self.den[wi].data_mut();
-                    for (ui, &k) in lw.units.iter().enumerate() {
-                        let k = k as usize;
-                        anyhow::ensure!(k < lw.out_dim, "layer {l}: unit {k} out of range");
-                        let vals = &lw.values[ui * chunk..ui * chunk + lw.group];
-                        for (j, &v) in vals.iter().enumerate() {
-                            num[j * out_g + k] += m_n * v;
-                            den[j * out_g + k] += m_n;
+                    // Row sweep: visit each global input row once and
+                    // write the selected units in ascending order within
+                    // that contiguous row, instead of walking one unit's
+                    // out_g-strided column at a time.
+                    for j in 0..lw.group {
+                        let nrow = &mut num[j * out_g..(j + 1) * out_g];
+                        let drow = &mut den[j * out_g..(j + 1) * out_g];
+                        for (ui, &k) in lw.units.iter().enumerate() {
+                            let k = k as usize;
+                            nrow[k] += m_n * lw.values[ui * chunk + j];
+                            drow[k] += m_n;
                         }
                     }
                 }

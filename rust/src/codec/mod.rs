@@ -21,6 +21,16 @@
 //! a magic/version header, per-layer geometry records and a trailing
 //! FNV-1a 64 checksum over everything before it.
 //!
+//! Orthogonally to the index layout, each layer carries a **value
+//! plane** ([`ValuePlane`]): its kept values travel as f32 (4 B/value,
+//! the default), IEEE half floats (2 B) or scaled int8 (1 B + one f32
+//! scale in the layer header). Quantization is applied at *encode*
+//! time — `values` always holds the already-dequantized f32s the
+//! aggregator folds — so the f32 plane is bitwise-identical to the
+//! pre-plane codec and lossy planes round-trip the wire byte for byte
+//! ([`encode_upload_planes`], `PlaneMode::Auto` picks the smallest
+//! plane whose realized error stays under a relative bound).
+//!
 //! The aggregation side never re-densifies: `Aggregator::absorb_wire`
 //! folds bitmap/COO payloads straight into the Eq. 4 num/den partials
 //! (see `aggregation`), bitwise-identical to the dense mask path.
@@ -79,12 +89,13 @@ pub fn wire_scratch_len() -> usize {
 
 /// Serialized-form magic bytes ("FedDD Wire Upload").
 pub const WIRE_MAGIC: [u8; 4] = *b"FDWU";
-/// Serialized-form version.
-pub const WIRE_VERSION: u16 = 1;
+/// Serialized-form version (2 since the value-plane record was added).
+pub const WIRE_VERSION: u16 = 2;
 /// Global header: magic + version (u16) + layer count (u16).
 pub const GLOBAL_HEADER_BYTES: usize = 8;
-/// Per-layer header: encoding tag (u8) + in_dim/out_dim/n_sel/group (u32).
-pub const LAYER_HEADER_BYTES: usize = 17;
+/// Per-layer header: encoding tag (u8) + plane tag (u8) +
+/// in_dim/out_dim/n_sel/group (u32) + plane scale (f32; 0.0 unless i8).
+pub const LAYER_HEADER_BYTES: usize = 22;
 /// Trailing FNV-1a 64 checksum.
 pub const CHECKSUM_BYTES: usize = 8;
 
@@ -150,6 +161,216 @@ impl EncodingMix {
     pub fn total(&self) -> usize {
         self.dense + self.bitmap + self.coo
     }
+}
+
+/// How one layer's kept values travel on the wire, orthogonal to the
+/// index layout. `values` in the decoded [`LayerWire`] always holds the
+/// **dequantized f32s** (quantize→dequantize happens at encode time), so
+/// aggregation never sees a plane — only the serialized width and the
+/// layer header differ.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ValuePlane {
+    /// Full-precision f32 values, 4 B each (the default; bitwise
+    /// identical to the pre-plane wire, modulo the version bump).
+    F32,
+    /// IEEE binary16 values, 2 B each. Encode rounds to nearest-even and
+    /// saturates overflow to ±65504 (never injects infinities); the
+    /// stored f32s are exactly f16-representable, so re-encoding is
+    /// idempotent.
+    F16,
+    /// Scaled int8: `q = round(v / scale)` clamped to ±127, 1 B each;
+    /// `scale = max|v| / 127` travels in the layer header. Stored f32s
+    /// are `q · scale`, so re-quantizing with the carried scale
+    /// reproduces every `q` exactly.
+    I8 { scale: f32 },
+}
+
+impl ValuePlane {
+    /// Serialized bytes per value under this plane.
+    pub fn width(self) -> usize {
+        match self {
+            ValuePlane::F32 => 4,
+            ValuePlane::F16 => 2,
+            ValuePlane::I8 { .. } => 1,
+        }
+    }
+
+    fn tag(self) -> u8 {
+        match self {
+            ValuePlane::F32 => 0,
+            ValuePlane::F16 => 1,
+            ValuePlane::I8 { .. } => 2,
+        }
+    }
+
+    fn scale(self) -> f32 {
+        match self {
+            ValuePlane::I8 { scale } => scale,
+            _ => 0.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ValuePlane::F32 => "f32",
+            ValuePlane::F16 => "f16",
+            ValuePlane::I8 { .. } => "i8",
+        }
+    }
+}
+
+/// Per-plane layer counts and serialized value bytes — the plane-mix
+/// column of round records and the bench JSON (`wire_f32/f16/i8_bytes`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlaneMix {
+    pub f32_layers: usize,
+    pub f16_layers: usize,
+    pub i8_layers: usize,
+    /// Serialized value bytes per plane (excluding indices and headers).
+    pub f32_bytes: usize,
+    pub f16_bytes: usize,
+    pub i8_bytes: usize,
+}
+
+impl PlaneMix {
+    pub fn count(&mut self, plane: ValuePlane, n_values: usize) {
+        match plane {
+            ValuePlane::F32 => {
+                self.f32_layers += 1;
+                self.f32_bytes += n_values * 4;
+            }
+            ValuePlane::F16 => {
+                self.f16_layers += 1;
+                self.f16_bytes += n_values * 2;
+            }
+            ValuePlane::I8 { .. } => {
+                self.i8_layers += 1;
+                self.i8_bytes += n_values;
+            }
+        }
+    }
+
+    pub fn merge(&mut self, other: PlaneMix) {
+        self.f32_layers += other.f32_layers;
+        self.f16_layers += other.f16_layers;
+        self.i8_layers += other.i8_layers;
+        self.f32_bytes += other.f32_bytes;
+        self.f16_bytes += other.f16_bytes;
+        self.i8_bytes += other.i8_bytes;
+    }
+
+    pub fn total_layers(&self) -> usize {
+        self.f32_layers + self.f16_layers + self.i8_layers
+    }
+}
+
+/// Value-plane policy (`value_plane` config knob): force one plane on
+/// every layer, or `Auto` — the smallest plane whose *realized* max
+/// quantization error stays within `plane_error · max|v|` per layer
+/// (tried in width order i8 → f16 → f32; f32 always qualifies).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlaneMode {
+    F32,
+    F16,
+    I8,
+    Auto,
+}
+
+impl PlaneMode {
+    pub fn by_name(name: &str) -> anyhow::Result<PlaneMode> {
+        Ok(match name {
+            "f32" => PlaneMode::F32,
+            "f16" => PlaneMode::F16,
+            "i8" => PlaneMode::I8,
+            "auto" => PlaneMode::Auto,
+            _ => anyhow::bail!("unknown value plane {name:?} (f32|f16|i8|auto)"),
+        })
+    }
+
+    /// Widest bytes-per-value this mode can realize — what the
+    /// `upload_bound` estimate must budget for (`Auto` may fall back to
+    /// f32 on any layer).
+    pub fn bound_width(self) -> usize {
+        match self {
+            PlaneMode::F32 | PlaneMode::Auto => 4,
+            PlaneMode::F16 => 2,
+            PlaneMode::I8 => 1,
+        }
+    }
+}
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even. Overflow (and ±inf)
+/// saturates to the max finite half ±65504 so a forced f16 plane never
+/// injects infinities into the model; NaN becomes the canonical quiet
+/// NaN. No `half` crate — the conversion must be dependency-free and
+/// bit-stable across hosts.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        return if mant != 0 { 0x7e00 } else { sign | 0x7bff };
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7bff;
+    }
+    if e >= -14 {
+        // Normal half: keep 10 mantissa bits, round to nearest even. The
+        // round-up may carry into the exponent — correct for RN — but a
+        // carry past the largest finite half saturates instead.
+        let mant16 = mant >> 13;
+        let rest = mant & 0x1fff;
+        let mut h = sign as u32 | (((e + 15) as u32) << 10) | mant16;
+        if rest > 0x1000 || (rest == 0x1000 && mant16 & 1 == 1) {
+            h += 1;
+        }
+        if h & 0x7fff >= 0x7c00 {
+            h = sign as u32 | 0x7bff;
+        }
+        return h as u16;
+    }
+    if e >= -24 {
+        // Subnormal half.
+        let m = mant | 0x0080_0000;
+        let shift = (13 - 14 - e) as u32; // 13 + (-14 - e), in 14..=23
+        let mant16 = m >> shift;
+        let rest = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = sign as u32 | mant16;
+        if rest > half || (rest == half && mant16 & 1 == 1) {
+            h += 1;
+        }
+        return h as u16;
+    }
+    sign
+}
+
+/// IEEE binary16 bits → f32 (exact; every half is f32-representable).
+pub fn f16_bits_to_f32(bits: u16) -> f32 {
+    let sign = ((bits & 0x8000) as u32) << 16;
+    let exp = ((bits >> 10) & 0x1f) as u32;
+    let mant = (bits & 0x3ff) as u32;
+    let out = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal half: normalize into an f32 exponent.
+            let mut e = 113u32; // f32 biased exponent of 2^-14
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(out)
 }
 
 /// Encoder policy: `Auto` picks the smallest layout per layer (always
@@ -273,13 +494,21 @@ pub fn index_overhead(out_dim: usize, n_sel: usize) -> usize {
 /// values + the cheaper index overhead per layer, *whether or not* the
 /// layer is fully kept (a fully-kept layer encodes dense, with zero index
 /// overhead, so the bound is not tight there). `ChannelMask::upload_bytes`
-/// delegates here; `encode_upload` debug-asserts the bound.
+/// delegates here; `encode_upload` debug-asserts the bound. f32 values
+/// assumed — see [`upload_bound_with`] for other value planes.
 pub fn upload_bound(mask: &ChannelMask, spec: &ModelSpec) -> usize {
+    upload_bound_with(mask, spec, 4)
+}
+
+/// [`upload_bound`] with an explicit serialized width per value
+/// (`PlaneMode::bound_width()`): fp16 halves, int8 quarters the value
+/// term; headers and index overhead are plane-independent.
+pub fn upload_bound_with(mask: &ChannelMask, spec: &ModelSpec, bytes_per_value: usize) -> usize {
     let mut total = GLOBAL_HEADER_BYTES + CHECKSUM_BYTES;
     for (layer, sel) in spec.layers.iter().zip(&mask.per_layer) {
         let n_sel = sel.iter().filter(|&&b| b).count();
         total += LAYER_HEADER_BYTES
-            + n_sel * (unit_group(layer) + 1) * 4
+            + n_sel * (unit_group(layer) + 1) * bytes_per_value
             + index_overhead(layer.out_dim, n_sel);
     }
     total
@@ -293,6 +522,9 @@ pub fn upload_bound(mask: &ChannelMask, spec: &ModelSpec) -> usize {
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayerWire {
     pub encoding: Encoding,
+    /// How the values serialize ([`ValuePlane`]). `values` always holds
+    /// the already-dequantized f32s regardless of the plane.
+    pub plane: ValuePlane,
     /// Client-side layer input dimension (conv in-channels / FC inputs).
     pub in_dim: usize,
     /// Client-side unit count of the layer.
@@ -310,9 +542,9 @@ impl LayerWire {
         self.units.len()
     }
 
-    /// Serialized body bytes of this layer under its encoding.
+    /// Serialized body bytes of this layer under its encoding and plane.
     pub fn body_bytes(&self) -> usize {
-        let vals = self.values.len() * 4;
+        let vals = self.values.len() * self.plane.width();
         match self.encoding {
             Encoding::Dense => vals,
             Encoding::Bitmap => self.out_dim.div_ceil(8) + vals,
@@ -336,10 +568,15 @@ impl WireUpload {
         GLOBAL_HEADER_BYTES + CHECKSUM_BYTES + body
     }
 
-    /// Bytes of the masked f32 values alone (no indices, no headers) —
-    /// the budget-accounting payload, `ChannelMask::payload_bytes`.
+    /// Bytes of the masked values alone as serialized (no indices, no
+    /// headers) — the budget-accounting payload. Matches
+    /// `ChannelMask::payload_bytes` on the f32 plane; lossy planes
+    /// shrink it by their width ratio.
     pub fn payload_bytes(&self) -> usize {
-        self.layers.iter().map(|l| l.values.len() * 4).sum()
+        self.layers
+            .iter()
+            .map(|l| l.values.len() * l.plane.width())
+            .sum()
     }
 
     /// Heap bytes of the *decoded* upload held in memory (unit ids +
@@ -363,6 +600,15 @@ impl WireUpload {
         mix
     }
 
+    /// Per-plane layer counts and serialized value bytes of this upload.
+    pub fn plane_mix(&self) -> PlaneMix {
+        let mut mix = PlaneMix::default();
+        for l in &self.layers {
+            mix.count(l.plane, l.values.len());
+        }
+        mix
+    }
+
     /// Serialize to the self-describing wire form (DESIGN.md §8).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_len());
@@ -371,10 +617,12 @@ impl WireUpload {
         out.extend_from_slice(&(self.layers.len() as u16).to_le_bytes());
         for l in &self.layers {
             out.push(l.encoding.tag());
+            out.push(l.plane.tag());
             out.extend_from_slice(&(l.in_dim as u32).to_le_bytes());
             out.extend_from_slice(&(l.out_dim as u32).to_le_bytes());
             out.extend_from_slice(&(l.units.len() as u32).to_le_bytes());
             out.extend_from_slice(&(l.group as u32).to_le_bytes());
+            out.extend_from_slice(&l.plane.scale().to_le_bytes());
         }
         for l in &self.layers {
             match l.encoding {
@@ -392,8 +640,28 @@ impl WireUpload {
                     }
                 }
             }
-            for &v in &l.values {
-                out.extend_from_slice(&v.to_le_bytes());
+            // `values` holds already-dequantized f32s: re-quantizing with
+            // the stored plane parameters is exact (f16 values are
+            // f16-representable; i8 values are q·scale, and
+            // round(q·scale/scale) == q at f32 precision), so
+            // encode→decode→encode is byte-identical.
+            match l.plane {
+                ValuePlane::F32 => {
+                    for &v in &l.values {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                ValuePlane::F16 => {
+                    for &v in &l.values {
+                        out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+                    }
+                }
+                ValuePlane::I8 { scale } => {
+                    for &v in &l.values {
+                        let q = (v / scale).round().clamp(-127.0, 127.0) as i8;
+                        out.push(q as u8);
+                    }
+                }
             }
         }
         let sum = fnv1a64(&out);
@@ -422,13 +690,37 @@ impl WireUpload {
         let n_layers = read_u16(bytes, &mut off)? as usize;
         let mut heads = Vec::with_capacity(n_layers);
         for l in 0..n_layers {
-            anyhow::ensure!(off < body_end, "layer {l}: truncated header");
+            anyhow::ensure!(off + 1 < body_end, "layer {l}: truncated header");
             let enc = Encoding::from_tag(bytes[off])?;
-            off += 1;
+            let plane_tag = bytes[off + 1];
+            off += 2;
             let in_dim = read_u32(bytes, &mut off)? as usize;
             let out_dim = read_u32(bytes, &mut off)? as usize;
             let n_sel = read_u32(bytes, &mut off)? as usize;
             let group = read_u32(bytes, &mut off)? as usize;
+            anyhow::ensure!(off + 4 <= body_end, "layer {l}: truncated header");
+            let scale = f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            off += 4;
+            // The scale field is canonical: exactly +0.0 unless the
+            // plane is i8 (so re-encoding a decoded upload reproduces
+            // the original bytes), finite and positive when it is.
+            let plane = match plane_tag {
+                0 | 1 => {
+                    anyhow::ensure!(
+                        scale.to_bits() == 0,
+                        "layer {l}: nonzero scale on a non-i8 plane"
+                    );
+                    if plane_tag == 0 { ValuePlane::F32 } else { ValuePlane::F16 }
+                }
+                2 => {
+                    anyhow::ensure!(
+                        scale.is_finite() && scale > 0.0,
+                        "layer {l}: bad i8 scale {scale}"
+                    );
+                    ValuePlane::I8 { scale }
+                }
+                t => anyhow::bail!("layer {l}: unknown value-plane tag {t}"),
+            };
             anyhow::ensure!(out_dim >= 1, "layer {l}: zero out_dim");
             anyhow::ensure!(in_dim >= 1, "layer {l}: zero in_dim");
             anyhow::ensure!(n_sel <= out_dim, "layer {l}: n_sel {n_sel} > out_dim {out_dim}");
@@ -437,7 +729,7 @@ impl WireUpload {
                 enc != Encoding::Dense || n_sel == out_dim,
                 "layer {l}: dense encoding with partial selection"
             );
-            heads.push((enc, in_dim, out_dim, n_sel, group));
+            heads.push((enc, plane, in_dim, out_dim, n_sel, group));
         }
         // Bound every allocation by the actual message size before
         // trusting any header geometry: the declared bodies must tile the
@@ -445,10 +737,10 @@ impl WireUpload {
         // crafted header could otherwise demand multi-GB unit/value
         // buffers from a tiny message.)
         let mut expected: usize = 0;
-        for (l, &(enc, _, out_dim, n_sel, group)) in heads.iter().enumerate() {
+        for (l, &(enc, plane, _, out_dim, n_sel, group)) in heads.iter().enumerate() {
             let val_bytes = n_sel
                 .checked_mul(group + 1)
-                .and_then(|n| n.checked_mul(4))
+                .and_then(|n| n.checked_mul(plane.width()))
                 .ok_or_else(|| anyhow::anyhow!("layer {l}: value byte count overflows"))?;
             let idx_bytes = match enc {
                 Encoding::Dense => 0,
@@ -465,7 +757,7 @@ impl WireUpload {
             "declared bodies ({expected} bytes) do not tile the message body"
         );
         let mut layers = Vec::with_capacity(n_layers);
-        for (l, (enc, in_dim, out_dim, n_sel, group)) in heads.into_iter().enumerate() {
+        for (l, (enc, plane, in_dim, out_dim, n_sel, group)) in heads.into_iter().enumerate() {
             let units: Vec<u32> = match enc {
                 Encoding::Dense => (0..out_dim as u32).collect(),
                 Encoding::Bitmap => {
@@ -516,18 +808,39 @@ impl WireUpload {
                 .checked_mul(group + 1)
                 .ok_or_else(|| anyhow::anyhow!("layer {l}: value count overflows"))?;
             let val_bytes = n_vals
-                .checked_mul(4)
+                .checked_mul(plane.width())
                 .ok_or_else(|| anyhow::anyhow!("layer {l}: value byte count overflows"))?;
             anyhow::ensure!(
                 off <= body_end && body_end - off >= val_bytes,
                 "layer {l}: truncated values"
             );
             let mut values = Vec::with_capacity(n_vals);
-            for _ in 0..n_vals {
-                values.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
-                off += 4;
+            match plane {
+                ValuePlane::F32 => {
+                    for _ in 0..n_vals {
+                        values.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+                        off += 4;
+                    }
+                }
+                ValuePlane::F16 => {
+                    for _ in 0..n_vals {
+                        let h = u16::from_le_bytes(bytes[off..off + 2].try_into().unwrap());
+                        values.push(f16_bits_to_f32(h));
+                        off += 2;
+                    }
+                }
+                ValuePlane::I8 { scale } => {
+                    for _ in 0..n_vals {
+                        let q = bytes[off] as i8;
+                        // The encoder clamps to ±127; -128 has no
+                        // round-trippable preimage, so reject it.
+                        anyhow::ensure!(q != i8::MIN, "layer {l}: out-of-range i8 value");
+                        values.push(q as f32 * scale);
+                        off += 1;
+                    }
+                }
             }
-            layers.push(LayerWire { encoding: enc, in_dim, out_dim, group, units, values });
+            layers.push(LayerWire { encoding: enc, plane, in_dim, out_dim, group, units, values });
         }
         anyhow::ensure!(off == body_end, "trailing bytes after last layer");
         Ok(WireUpload { layers })
@@ -535,18 +848,98 @@ impl WireUpload {
 }
 
 /// Encode a client's masked upload with the auto-pick rule: dense when a
-/// layer is fully kept, else the cheaper of bitmap and COO.
+/// layer is fully kept, else the cheaper of bitmap and COO. f32 values.
 pub fn encode_upload(mask: &ChannelMask, params: &[Tensor], spec: &ModelSpec) -> WireUpload {
     encode_upload_with(mask, params, spec, CodecMode::Auto)
 }
 
 /// Encode with an explicit [`CodecMode`] (benches/ablations force an
-/// index layout; `Auto` is the production rule).
+/// index layout; `Auto` is the production rule). f32 values — the plane
+/// generalisation is [`encode_upload_planes`].
 pub fn encode_upload_with(
     mask: &ChannelMask,
     params: &[Tensor],
     spec: &ModelSpec,
     mode: CodecMode,
+) -> WireUpload {
+    encode_upload_planes(mask, params, spec, mode, PlaneMode::F32, 0.0)
+}
+
+/// Scaled-int8 trial for one layer's gathered values: the carried scale
+/// and the realized max absolute quantization error (both 0-cost to
+/// compute; nothing is mutated). Empty or all-zero layers get the exact
+/// scale 1.0.
+fn i8_trial(values: &[f32]) -> (f32, f32) {
+    let mut max_abs = 0.0f32;
+    for &v in values {
+        let a = v.abs();
+        if a > max_abs {
+            max_abs = a;
+        }
+    }
+    let scale = if max_abs > 0.0 && max_abs.is_finite() { max_abs / 127.0 } else { 1.0 };
+    let mut max_err = 0.0f32;
+    for &v in values {
+        let q = (v / scale).round().clamp(-127.0, 127.0);
+        let err = (q * scale - v).abs();
+        if !err.is_finite() {
+            return (scale, f32::INFINITY); // NaN/inf input fails the trial
+        }
+        if err > max_err {
+            max_err = err;
+        }
+    }
+    (scale, max_err)
+}
+
+/// f16 trial: realized max absolute round-trip error, nothing mutated.
+fn f16_trial(values: &[f32]) -> f32 {
+    let mut max_err = 0.0f32;
+    for &v in values {
+        let err = (f16_bits_to_f32(f32_to_f16_bits(v)) - v).abs();
+        if !err.is_finite() {
+            return f32::INFINITY;
+        }
+        if err > max_err {
+            max_err = err;
+        }
+    }
+    max_err
+}
+
+/// Quantize→dequantize one layer's values in place for the chosen
+/// plane, so the in-memory f32s are exactly what the decoder will
+/// reconstruct (and aggregation on both ends folds identical numbers).
+fn apply_plane(plane: ValuePlane, values: &mut [f32]) {
+    match plane {
+        ValuePlane::F32 => {}
+        ValuePlane::F16 => {
+            for v in values {
+                *v = f16_bits_to_f32(f32_to_f16_bits(*v));
+            }
+        }
+        ValuePlane::I8 { scale } => {
+            for v in values {
+                let q = (*v / scale).round().clamp(-127.0, 127.0);
+                *v = q as f32 * scale;
+            }
+        }
+    }
+}
+
+/// Full encoder: index layout per [`CodecMode`], value plane per
+/// [`PlaneMode`]. `Auto` picks, per layer, the narrowest plane whose
+/// realized max quantization error is ≤ `plane_error · max|v|` of that
+/// layer (tried i8 → f16 → f32; non-finite values fail every trial and
+/// fall back to f32). Forced lossy planes apply unconditionally.
+/// `plane_error` is ignored outside `Auto`.
+pub fn encode_upload_planes(
+    mask: &ChannelMask,
+    params: &[Tensor],
+    spec: &ModelSpec,
+    mode: CodecMode,
+    plane_mode: PlaneMode,
+    plane_error: f64,
 ) -> WireUpload {
     assert_eq!(params.len(), spec.layers.len() * 2, "params arity");
     assert_eq!(mask.per_layer.len(), spec.layers.len(), "mask arity");
@@ -583,8 +976,36 @@ pub fn encode_upload_with(
                 }
             }
         };
+        let plane = match plane_mode {
+            PlaneMode::F32 => ValuePlane::F32,
+            PlaneMode::F16 => ValuePlane::F16,
+            PlaneMode::I8 => {
+                let (scale, _) = i8_trial(&values);
+                ValuePlane::I8 { scale }
+            }
+            PlaneMode::Auto => {
+                let mut max_abs = 0.0f32;
+                for &v in &values {
+                    let a = v.abs();
+                    if a > max_abs {
+                        max_abs = a;
+                    }
+                }
+                let bound = plane_error as f32 * max_abs;
+                let (scale, i8_err) = i8_trial(&values);
+                if i8_err <= bound {
+                    ValuePlane::I8 { scale }
+                } else if f16_trial(&values) <= bound {
+                    ValuePlane::F16
+                } else {
+                    ValuePlane::F32
+                }
+            }
+        };
+        apply_plane(plane, &mut values);
         layers.push(LayerWire {
             encoding,
+            plane,
             in_dim: layer.in_dim,
             out_dim: layer.out_dim,
             group,
@@ -593,9 +1014,10 @@ pub fn encode_upload_with(
         });
     }
     let up = WireUpload { layers };
-    // The upload_bytes bound covers the auto-pick only: forcing the
-    // dearer index layout (e.g. COO on a fully-kept layer) can exceed it
-    // by construction.
+    // The upload_bytes bound covers the auto index pick only: forcing
+    // the dearer index layout (e.g. COO on a fully-kept layer) can
+    // exceed it by construction. The f32-width bound stays valid for
+    // every plane mode — planes only ever shrink the value term.
     debug_assert!(
         mode != CodecMode::Auto || up.wire_len() <= mask.upload_bytes(spec),
         "auto-picked wire_len {} exceeds the upload_bytes bound {}",
@@ -926,5 +1348,193 @@ mod tests {
         // Standard FNV-1a 64 test vectors.
         assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn f16_conversion_vectors_and_exhaustive_roundtrip() {
+        // Spot vectors.
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff);
+        // Overflow and infinities saturate to the max finite half.
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7bff);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7bff);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfbff);
+        assert_eq!(f32_to_f16_bits(f32::NAN), 0x7e00);
+        // Smallest subnormal half and below.
+        assert_eq!(f32_to_f16_bits(5.960_464_5e-8), 0x0001);
+        assert_eq!(f32_to_f16_bits(1.0e-9), 0x0000);
+        // Round-to-nearest-even at the halfway point: 1 + 2^-11 is
+        // exactly between 1.0 and the next half 1.0009766 -> even (1.0);
+        // 1 + 3·2^-12 rounds up to odd-neighbour's even.
+        assert_eq!(f32_to_f16_bits(1.0 + 0.000_488_281_25), 0x3c00);
+        assert_eq!(f32_to_f16_bits(1.0 + 0.000_976_562_5), 0x3c01);
+        // Every finite half round-trips bit for bit through f32.
+        for h in 0u16..=0xffff {
+            if (h >> 10) & 0x1f == 0x1f {
+                continue; // inf/NaN payloads do not round-trip by design
+            }
+            let back = f32_to_f16_bits(f16_bits_to_f32(h));
+            assert_eq!(back, h, "half {h:#06x} failed the round-trip");
+        }
+    }
+
+    #[test]
+    fn f32_plane_is_bitwise_identical_to_legacy_encode() {
+        let spec = ModelSpec::get("mlp", 0.5).unwrap();
+        let mut rng = Rng::new(11);
+        let before = spec.init_params(&mut rng);
+        let after = spec.init_params(&mut rng);
+        let m = select_mask(Policy::Random, &spec, &before, &after, None, 0.4, &mut rng);
+        let legacy = encode_upload(&m, &after, &spec);
+        let planes = encode_upload_planes(&m, &after, &spec, CodecMode::Auto, PlaneMode::F32, 0.5);
+        assert_eq!(planes, legacy);
+        assert_eq!(planes.to_bytes(), legacy.to_bytes());
+        let mix = planes.plane_mix();
+        assert_eq!(mix.f32_layers, spec.layers.len());
+        assert_eq!(mix.f16_layers + mix.i8_layers, 0);
+        assert_eq!(mix.f32_bytes, planes.payload_bytes());
+    }
+
+    #[test]
+    fn lossy_planes_roundtrip_bitwise_and_reencode_identically() {
+        // For every plane mode: decode(bytes) equals the encoded struct
+        // exactly (values are dequantized at encode time), and
+        // re-serializing the decoded upload reproduces the bytes — the
+        // quantizers are idempotent.
+        check("plane round-trip", 10, |rng| {
+            for name in ["mlp", "cnn1"] {
+                let spec = ModelSpec::get(name, 0.5).unwrap();
+                let before = spec.init_params(rng);
+                let after = spec.init_params(rng);
+                let d = rng.range_f64(0.0, 0.9);
+                let m = select_mask(Policy::Random, &spec, &before, &after, None, d, rng);
+                for pm in [PlaneMode::F32, PlaneMode::F16, PlaneMode::I8, PlaneMode::Auto] {
+                    let up =
+                        encode_upload_planes(&m, &after, &spec, CodecMode::Auto, pm, 0.005);
+                    let bytes = up.to_bytes();
+                    if bytes.len() != up.wire_len() {
+                        return Err(format!("{pm:?}: wire_len != serialized length"));
+                    }
+                    let back = WireUpload::from_bytes(&bytes)
+                        .map_err(|e| format!("{pm:?}: decode failed: {e}"))?;
+                    if back != up {
+                        return Err(format!("{pm:?}: struct round-trip mismatch"));
+                    }
+                    if back.to_bytes() != bytes {
+                        return Err(format!("{pm:?}: re-encode not idempotent"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantization_error_stays_within_the_bound() {
+        // Forced i8: realized error ≤ max_abs/254 + slack per layer.
+        // Auto: realized error ≤ plane_error · max_abs by construction.
+        let spec = ModelSpec::get("mlp", 0.5).unwrap();
+        let mut rng = Rng::new(12);
+        let params = spec.init_params(&mut rng);
+        let m = ChannelMask::full(&spec);
+        let exact = encode_upload(&m, &params, &spec);
+        let bound = 0.005f32;
+        let auto = encode_upload_planes(&m, &params, &spec, CodecMode::Auto, PlaneMode::Auto, 0.005);
+        for (lq, lx) in auto.layers.iter().zip(&exact.layers) {
+            let max_abs = lx.values.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            for (q, x) in lq.values.iter().zip(&lx.values) {
+                assert!(
+                    (q - x).abs() <= bound * max_abs,
+                    "auto plane error {} beyond {}",
+                    (q - x).abs(),
+                    bound * max_abs
+                );
+            }
+        }
+        // The default bound admits i8 on every layer (guaranteed i8
+        // error ≤ max_abs/254 ≈ 0.0039·max_abs < 0.005·max_abs).
+        assert_eq!(auto.plane_mix().i8_layers, spec.layers.len());
+        // A zero bound forces f32 everywhere (random weights never
+        // quantize exactly).
+        let strict =
+            encode_upload_planes(&m, &params, &spec, CodecMode::Auto, PlaneMode::Auto, 0.0);
+        assert_eq!(strict, exact);
+    }
+
+    #[test]
+    fn quantized_planes_shrink_payload_and_wire() {
+        let spec = ModelSpec::get("mlp", 1.0).unwrap();
+        let mut rng = Rng::new(13);
+        let params = spec.init_params(&mut rng);
+        let m = ChannelMask::full(&spec);
+        let f32p = encode_upload_planes(&m, &params, &spec, CodecMode::Auto, PlaneMode::F32, 0.0);
+        let f16p = encode_upload_planes(&m, &params, &spec, CodecMode::Auto, PlaneMode::F16, 0.0);
+        let i8p = encode_upload_planes(&m, &params, &spec, CodecMode::Auto, PlaneMode::I8, 0.0);
+        assert_eq!(f16p.payload_bytes() * 2, f32p.payload_bytes());
+        assert_eq!(i8p.payload_bytes() * 4, f32p.payload_bytes());
+        assert!(i8p.wire_len() < f16p.wire_len());
+        assert!(f16p.wire_len() < f32p.wire_len());
+        // The plane-width bound tracks the narrower planes.
+        assert!(f16p.wire_len() <= upload_bound_with(&m, &spec, 2));
+        assert!(i8p.wire_len() <= upload_bound_with(&m, &spec, 1));
+        // mem_bytes is plane-independent: the decoded form is f32.
+        assert_eq!(i8p.mem_bytes(), f32p.mem_bytes());
+    }
+
+    #[test]
+    fn corruption_in_quantized_planes_is_detected() {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(14);
+        let before = spec.init_params(&mut rng);
+        let after = spec.init_params(&mut rng);
+        let m = select_mask(Policy::Random, &spec, &before, &after, None, 0.5, &mut rng);
+        for pm in [PlaneMode::F16, PlaneMode::I8] {
+            let up = encode_upload_planes(&m, &after, &spec, CodecMode::Auto, pm, 0.0);
+            let bytes = up.to_bytes();
+            assert!(WireUpload::from_bytes(&bytes).is_ok());
+            // Flip a byte squarely inside the value planes (the message
+            // tail before the checksum is value data).
+            let mut bad = bytes.clone();
+            let pos = bytes.len() - CHECKSUM_BYTES - 2;
+            bad[pos] ^= 0x04;
+            assert!(
+                WireUpload::from_bytes(&bad).is_err(),
+                "{pm:?}: flipped value byte undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn non_canonical_plane_headers_are_rejected() {
+        // A nonzero scale on an f32/f16 plane, a bad i8 scale, or an
+        // unknown plane tag must be rejected even when re-checksummed —
+        // canonical headers are what make re-encoding byte-stable.
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(15);
+        let params = spec.init_params(&mut rng);
+        let m = ChannelMask::full(&spec);
+        let up = encode_upload_planes(&m, &params, &spec, CodecMode::Auto, PlaneMode::F32, 0.0);
+        let bytes = up.to_bytes();
+        let reseal = |mut b: Vec<u8>| {
+            let end = b.len() - CHECKSUM_BYTES;
+            let sum = fnv1a64(&b[..end]);
+            b[end..].copy_from_slice(&sum.to_le_bytes());
+            b
+        };
+        // Layer 0 header: enc tag, plane tag, 4×u32, scale f32.
+        let plane_off = GLOBAL_HEADER_BYTES + 1;
+        let scale_off = GLOBAL_HEADER_BYTES + 2 + 16;
+        let mut bad = bytes.clone();
+        bad[scale_off..scale_off + 4].copy_from_slice(&1.0f32.to_le_bytes());
+        assert!(WireUpload::from_bytes(&reseal(bad)).is_err(), "nonzero f32 scale accepted");
+        let mut bad = bytes.clone();
+        bad[plane_off] = 9;
+        assert!(WireUpload::from_bytes(&reseal(bad)).is_err(), "unknown plane tag accepted");
+        let mut bad = bytes.clone();
+        bad[plane_off] = 2; // i8 with the zero scale still in the header
+        assert!(WireUpload::from_bytes(&reseal(bad)).is_err(), "zero i8 scale accepted");
     }
 }

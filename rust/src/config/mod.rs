@@ -90,6 +90,16 @@ pub struct ExpConfig {
     /// "coo" (ablations and benches; dense cannot represent a partial
     /// layer, so it is not forcible).
     pub codec: String,
+    /// Upload value plane (DESIGN.md §Codec): "f32" (full precision, the
+    /// default — bitwise-identical rounds), "f16" / "i8" (force that
+    /// plane on every layer) or "auto" (per layer, the narrowest plane
+    /// whose realized quantization error stays ≤ `plane_error · max|v|`).
+    pub value_plane: String,
+    /// Relative per-layer error bound for `value_plane = "auto"`, as a
+    /// fraction of the layer's max |value|. The default 0.005 admits int8
+    /// (guaranteed error ≤ max|v|/254); tighter bounds fall back to fp16
+    /// and then f32.
+    pub plane_error: f64,
     /// Train-set storage: "lazy" (the default — samples are regenerated
     /// on demand from the dataset seed, O(prototypes) resident) or
     /// "eager" (materialize every sample up front; A/B toggle for the
@@ -154,6 +164,8 @@ impl Default for ExpConfig {
             deadline_s: 0.0,
             staleness_beta: 0.5,
             codec: "auto".into(),
+            value_plane: "f32".into(),
+            plane_error: 0.005,
             data_mode: "lazy".into(),
             snapshot_ring_cap: 0,
             trace: "none".into(),
@@ -324,6 +336,16 @@ impl ExpConfig {
             self.codec
         );
         anyhow::ensure!(
+            ["f32", "f16", "i8", "auto"].contains(&self.value_plane.as_str()),
+            "unknown value_plane {:?} (f32|f16|i8|auto)",
+            self.value_plane
+        );
+        anyhow::ensure!(
+            self.plane_error.is_finite() && self.plane_error >= 0.0,
+            "plane_error {} must be finite and >= 0",
+            self.plane_error
+        );
+        anyhow::ensure!(
             ["lazy", "eager"].contains(&self.data_mode.as_str()),
             "unknown data_mode {:?} (lazy|eager)",
             self.data_mode
@@ -397,6 +419,8 @@ impl ExpConfig {
             ("deadline_s", Json::Num(self.deadline_s)),
             ("staleness_beta", Json::Num(self.staleness_beta)),
             ("codec", Json::s(&self.codec)),
+            ("value_plane", Json::s(&self.value_plane)),
+            ("plane_error", Json::Num(self.plane_error)),
             ("data_mode", Json::s(&self.data_mode)),
             ("snapshot_ring_cap", Json::Num(self.snapshot_ring_cap as f64)),
             ("trace", Json::s(&self.trace)),
@@ -451,6 +475,8 @@ impl ExpConfig {
             deadline_s: gn("deadline_s", d.deadline_s),
             staleness_beta: gn("staleness_beta", d.staleness_beta),
             codec: gs("codec", &d.codec),
+            value_plane: gs("value_plane", &d.value_plane),
+            plane_error: gn("plane_error", d.plane_error),
             data_mode: gs("data_mode", &d.data_mode),
             snapshot_ring_cap: gn("snapshot_ring_cap", d.snapshot_ring_cap as f64)
                 as usize,
@@ -503,6 +529,8 @@ impl ExpConfig {
             "deadline_s" => self.deadline_s = value.parse()?,
             "staleness_beta" => self.staleness_beta = value.parse()?,
             "codec" => self.codec = value.into(),
+            "value_plane" => self.value_plane = value.into(),
+            "plane_error" => self.plane_error = value.parse()?,
             "data_mode" => self.data_mode = value.into(),
             "snapshot_ring_cap" => self.snapshot_ring_cap = value.parse()?,
             "trace" => self.trace = value.into(),
@@ -646,6 +674,30 @@ mod tests {
         c.codec = "dense".into(); // dense cannot represent partial layers
         assert!(c.validate().is_err());
         c.codec = "gzip".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn plane_knobs_roundtrip_and_validate() {
+        let mut c = ExpConfig::smoke();
+        assert_eq!(c.value_plane, "f32"); // full precision stays the default
+        assert_eq!(c.plane_error, 0.005);
+        c.set("value_plane", "auto").unwrap();
+        c.set("plane_error", "0.001").unwrap();
+        c.validate().unwrap();
+        let back = ExpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.value_plane, "auto");
+        assert_eq!(back.plane_error, 0.001);
+        for p in ["f16", "i8", "f32"] {
+            c.value_plane = p.into();
+            c.validate().unwrap();
+        }
+        c.value_plane = "f64".into();
+        assert!(c.validate().is_err());
+        c.value_plane = "auto".into();
+        c.plane_error = -0.1;
+        assert!(c.validate().is_err());
+        c.plane_error = f64::NAN;
         assert!(c.validate().is_err());
     }
 

@@ -80,7 +80,10 @@ use std::time::Instant;
 
 use crate::aggregation::{staleness_weight, AggBackend, Aggregator};
 use crate::baselines;
-use crate::codec::{encode_upload_with, recycle_wire_upload, CodecMode, EncodingMix, WireUpload};
+use crate::codec::{
+    encode_upload_planes, recycle_wire_upload, CodecMode, EncodingMix, PlaneMix, PlaneMode,
+    WireUpload,
+};
 use crate::config::ExpConfig;
 use crate::data::{FedDataset, Partition, PartitionKind, SynthSpec};
 use crate::metrics::{EvalAccumulator, EvalRecord, RoundRecord, RunResult};
@@ -150,6 +153,9 @@ pub struct RoundOutcome {
     pub wire_bytes: usize,
     /// Per-layout layer counts over the folded uploads.
     pub encodings: EncodingMix,
+    /// Per-value-plane layer counts and serialized value bytes over the
+    /// folded uploads (`cfg.value_plane`; all-f32 by default).
+    pub planes: PlaneMix,
     /// Clients whose uploads were folded into this round's aggregation.
     pub participants: usize,
     /// Uploads still in flight when the round closed (semi-async; 0 in
@@ -192,6 +198,11 @@ pub struct FedRun {
     backend: AggBackend,
     /// Wire-codec layout policy (`cfg.codec`): auto-pick or forced.
     codec: CodecMode,
+    /// Upload value-plane policy (`cfg.value_plane`): f32 (default),
+    /// forced f16/i8, or per-layer auto under `plane_error`.
+    plane: PlaneMode,
+    /// Relative error bound for `PlaneMode::Auto` (`cfg.plane_error`).
+    plane_error: f64,
     /// Persistent worker pool for the per-client round phases
     /// (`cfg.workers`): threads are spawned once here and live for the
     /// whole run, so per-worker scratch arenas (`coordinator::scratch`,
@@ -328,6 +339,8 @@ impl FedRun {
         let policy = Policy::by_name(&cfg.selection)?;
         let backend = AggBackend::by_name(&cfg.agg_backend)?;
         let codec = CodecMode::by_name(&cfg.codec)?;
+        let plane = PlaneMode::by_name(&cfg.value_plane)?;
+        let plane_error = cfg.plane_error;
         let trace = AvailabilityTrace::by_name(&cfg.trace)?;
         let pool = ThreadPool::new(cfg.workers);
         let n = clients.len();
@@ -346,6 +359,8 @@ impl FedRun {
             policy,
             backend,
             codec,
+            plane,
+            plane_error,
             pool,
             snapshots,
             events: EventQueue::new(),
@@ -610,6 +625,8 @@ impl FedRun {
         let gp = &self.global_params;
         let policy = self.policy;
         let codec = self.codec;
+        let plane = self.plane;
+        let plane_error = self.plane_error;
         // Gather the disjoint `&mut ClientState` items by walking the
         // fleet slice once over the (ascending) subset — O(subset), not
         // O(fleet): with micro-batching this runs many times per round,
@@ -687,11 +704,15 @@ impl FedRun {
                     } else {
                         ChannelMask::full(&c.spec)
                     };
-                    let uploaded = mask.payload_bytes(&c.spec);
                     // Client-side encode: the bytes this upload really
                     // puts on the wire (debug-asserted <= the
                     // upload_bytes bound).
-                    let wire = encode_upload_with(&mask, &s.params, &c.spec, codec);
+                    let wire =
+                        encode_upload_planes(&mask, &s.params, &c.spec, codec, plane, plane_error);
+                    // Budget-accounting payload: the serialized value
+                    // bytes under the realized planes (== the f32
+                    // `mask.payload_bytes` on the default plane).
+                    let uploaded = wire.payload_bytes();
                     // Post-merge state handoff: nothing after a full
                     // broadcast; else the complement-of-mask residual
                     // (the channels the Eq. 5 download will not
@@ -706,8 +727,12 @@ impl FedRun {
                     // broadcast, else the Eq. 5 masked values only — the
                     // mask is the client's own upload echoed back, so
                     // its index/framing bytes are never re-billed
-                    // (DESIGN.md §6).
-                    let down = downlink_bytes(full_bc, c.u_bytes(), uploaded) as f64;
+                    // (DESIGN.md §6). The echo is always full-precision
+                    // f32 (the server merged the dequantized values), so
+                    // the sparse charge stays `mask.payload_bytes`
+                    // whatever the upload plane was.
+                    let down =
+                        downlink_bytes(full_bc, c.u_bytes(), mask.payload_bytes(&c.spec)) as f64;
                     let timing = RoundTiming {
                         t_down: c.profile.t_down(down),
                         t_cmp: c
@@ -812,6 +837,7 @@ impl FedRun {
         let mut uploaded = 0usize;
         let mut wire_bytes = 0usize;
         let mut encodings = EncodingMix::default();
+        let mut planes = PlaneMix::default();
         // The round clock only needs max_n(t_n), and `f64::max` is
         // order-independent — a running fold replaces the old O(fleet)
         // timing buffer without moving a bit of the result.
@@ -839,6 +865,7 @@ impl FedRun {
                     uploaded += o.uploaded;
                     wire_bytes += o.wire.wire_len();
                     encodings.merge(o.wire.mix());
+                    planes.merge(o.wire.plane_mix());
                     shards[pos / shard_len].absorb_wire(&o.wire, o.m_n)?;
                     // The upload is folded; its buffers go back to the
                     // encode freelist for the next micro-batch.
@@ -890,6 +917,7 @@ impl FedRun {
             uploaded_bytes: uploaded,
             wire_bytes,
             encodings,
+            planes,
             participants: n_parts,
             stragglers: 0,
             mean_staleness: 0.0,
@@ -974,6 +1002,7 @@ impl FedRun {
                 uploaded_bytes: 0,
                 wire_bytes: 0,
                 encodings: EncodingMix::default(),
+                planes: PlaneMix::default(),
                 participants: 0,
                 stragglers: 0,
                 mean_staleness: 0.0,
@@ -1032,6 +1061,7 @@ impl FedRun {
         let mut uploaded = 0usize;
         let mut wire_bytes = 0usize;
         let mut encodings = EncodingMix::default();
+        let mut planes = PlaneMix::default();
         let mut staleness_sum = 0usize;
         let mut loss_sum = 0.0;
         {
@@ -1046,6 +1076,7 @@ impl FedRun {
                 uploaded += pu.uploaded;
                 wire_bytes += pu.wire.wire_len();
                 encodings.merge(pu.wire.mix());
+                planes.merge(pu.wire.plane_mix());
                 staleness_sum += s;
                 loss_sum += pu.loss;
                 if s == 0 {
@@ -1124,6 +1155,7 @@ impl FedRun {
             uploaded_bytes: uploaded,
             wire_bytes,
             encodings,
+            planes,
             participants: folded,
             stragglers,
             mean_staleness,
@@ -1186,6 +1218,7 @@ impl FedRun {
                 uploaded_bytes: out.uploaded_bytes,
                 wire_bytes: out.wire_bytes,
                 encodings: out.encodings,
+                planes: out.planes,
                 budget_bytes: budget,
                 participants: out.participants,
                 mean_dropout: out.mean_dropout,

@@ -39,8 +39,15 @@ Config keys (see `feddd inspect config`): seed dataset partition model
 width_pct n_clients rounds local_steps batch lr scheme selection d_max
 a_server delta h train_per_client test_n fleet eval_every agg_backend
 rare_classes rare_ratio artifacts_dir oort_alpha alloc workers
-round_mode quorum deadline_s staleness_beta codec data_mode
-snapshot_ring_cap trace trace_period_s churn_rate.
+round_mode quorum deadline_s staleness_beta codec value_plane
+plane_error data_mode snapshot_ring_cap trace trace_period_s
+churn_rate.
+
+`--value_plane f32|f16|i8|auto` picks the wire value plane for uploads
+(README §Codec): `auto` chooses the smallest plane per layer whose
+realized quantization error stays within `--plane_error` (relative to
+the layer's max |value|, default 0.005). The downlink echo is always
+full-precision f32.
 
 `--workers N` fans the per-client round phases (training, mask selection,
 sharded aggregation) over N threads (0 = one per core); results are

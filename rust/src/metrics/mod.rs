@@ -1,7 +1,7 @@
 //! Run metrics: per-round records, accuracy / time-to-accuracy (T2A)
 //! tracking, per-class accuracy (Fig. 21), JSON + CSV writers.
 
-use crate::codec::EncodingMix;
+use crate::codec::{EncodingMix, PlaneMix};
 use crate::util::json::Json;
 
 /// One synchronous round's accounting.
@@ -23,6 +23,9 @@ pub struct RoundRecord {
     /// Per-layout layer counts over this round's folded uploads
     /// (dense / bitmap / COO — the encoding-mix column).
     pub encodings: EncodingMix,
+    /// Per-value-plane layer counts and serialized value bytes over this
+    /// round's folded uploads (f32 / f16 / i8 — the plane-mix column).
+    pub planes: PlaneMix,
     /// The byte budget the scheme was allowed (A_server · Σ U_n).
     pub budget_bytes: usize,
     /// Participating clients.
@@ -121,6 +124,15 @@ impl RunResult {
         let mut mix = EncodingMix::default();
         for r in &self.rounds {
             mix.merge(r.encodings);
+        }
+        mix
+    }
+
+    /// Value-plane mix summed over every round's folded uploads.
+    pub fn plane_mix(&self) -> PlaneMix {
+        let mut mix = PlaneMix::default();
+        for r in &self.rounds {
+            mix.merge(r.planes);
         }
         mix
     }
@@ -239,6 +251,9 @@ impl RunResult {
                                 ("enc_dense", Json::Num(r.encodings.dense as f64)),
                                 ("enc_bitmap", Json::Num(r.encodings.bitmap as f64)),
                                 ("enc_coo", Json::Num(r.encodings.coo as f64)),
+                                ("plane_f32", Json::Num(r.planes.f32_layers as f64)),
+                                ("plane_f16", Json::Num(r.planes.f16_layers as f64)),
+                                ("plane_i8", Json::Num(r.planes.i8_layers as f64)),
                                 ("budget_bytes", Json::Num(r.budget_bytes as f64)),
                                 ("participants", Json::Num(r.participants as f64)),
                                 ("mean_dropout", Json::Num(r.mean_dropout)),
@@ -369,6 +384,14 @@ mod tests {
                 uploaded_bytes: 1000,
                 wire_bytes: 900,
                 encodings: EncodingMix { dense: 1, bitmap: 2, coo: 0 },
+                planes: PlaneMix {
+                    f32_layers: 2,
+                    f16_layers: 1,
+                    i8_layers: 0,
+                    f32_bytes: 800,
+                    f16_bytes: 100,
+                    i8_bytes: 0,
+                },
                 budget_bytes: 1200,
                 participants: 10,
                 mean_dropout: 0.4,
@@ -401,6 +424,12 @@ mod tests {
         assert_eq!(r.total_uploaded(), 5000);
         assert_eq!(r.total_wire_bytes(), 4500);
         assert_eq!(r.encoding_mix(), EncodingMix { dense: 5, bitmap: 10, coo: 0 });
+        let planes = r.plane_mix();
+        assert_eq!(planes.f32_layers, 10);
+        assert_eq!(planes.f16_layers, 5);
+        assert_eq!(planes.f32_bytes, 4000);
+        assert_eq!(planes.f16_bytes, 500);
+        assert_eq!(planes.total_layers(), 15);
     }
 
     #[test]

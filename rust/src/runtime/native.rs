@@ -14,6 +14,22 @@
 //! which worker thread executes it — the property the parallel round
 //! engine's `workers=N ≡ workers=1` guarantee rests on.
 //!
+//! # Blocked kernels (DESIGN.md §Kernels)
+//!
+//! The FC forward/backward run as blocked kernels: batch rows are
+//! processed in blocks of [`MR`] so a weight row loaded from memory is
+//! reused across the block (the W matrix streams through the cache once
+//! per MR samples instead of once per sample), and the per-row inner
+//! loops are elementwise axpys over contiguous slices, tiled in
+//! fixed-size [`NR`]-wide chunks ([`axpy`]) that the autovectorizer
+//! turns into SIMD lanes. The blocking never touches numerics: it only
+//! reorders *independent* output elements, while the reduction chain
+//! feeding each individual element keeps its original order (forward
+//! output `o[i,k]`: j ascending; weight gradient `dw[j,k]`: i ascending;
+//! input gradient dot products: k ascending, single accumulator) — so
+//! the blocked kernels are bitwise-identical to the scalar loops they
+//! replaced, and the `workers=N ≡ workers=1` battery holds unchanged.
+//!
 //! # Per-thread buffer pool
 //!
 //! The forward/backward working set (activations, logit gradients, dW /
@@ -57,6 +73,44 @@ fn take_copy(src: &[f32]) -> Vec<f32> {
 /// Return a buffer to this thread's pool for reuse.
 fn give_back(v: Vec<f32>) {
     BUF_POOL.with(|p| p.borrow_mut().push(v));
+}
+
+/// Batch-row block of the kernels: weight rows loaded once serve MR
+/// samples. Small enough that MR delta/activation rows stay cache-hot.
+const MR: usize = 4;
+
+/// Inner-tile width of [`axpy`]: fixed-size chunks with compile-time
+/// bounds let the autovectorizer emit full-width SIMD adds/FMAs.
+const NR: usize = 8;
+
+/// `acc[k] += a · xs[k]` — elementwise, so any tiling is bitwise-neutral
+/// (each element owns its accumulation chain; nothing is reassociated).
+/// The fixed NR-wide exact chunks vectorize; the tail runs scalar.
+#[inline]
+fn axpy(acc: &mut [f32], a: f32, xs: &[f32]) {
+    debug_assert_eq!(acc.len(), xs.len());
+    let mut ac = acc.chunks_exact_mut(NR);
+    let mut xc = xs.chunks_exact(NR);
+    for (at, xt) in (&mut ac).zip(&mut xc) {
+        for t in 0..NR {
+            at[t] += a * xt[t];
+        }
+    }
+    for (o, &v) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o += a * v;
+    }
+}
+
+/// Strict-order dot product: a single accumulator walked k-ascending.
+/// Deliberately *not* lane-split — the reduction order is part of the
+/// executor's bitwise contract (see the module docs).
+#[inline]
+fn dot_ordered(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
 }
 
 /// Test support: fill every idle pooled buffer with NaN sentinels (in
@@ -147,48 +201,58 @@ impl NativeExec {
         let (loss_sum, mut delta) = softmax_ce_grad(acts.last().unwrap(), y, b, k)?;
 
         // Backward + SGD, layer by layer from the top. Each layer's input
-        // gradient is computed against its pre-update weights.
+        // gradient is computed against its pre-update weights. Blocked
+        // over batch rows (MR): within a block, dW runs j-outer so each
+        // contiguous dw row is the axpy target for every row of the
+        // block — the chain feeding any dw[j,k] is still i ascending
+        // (blocks ascending, rows ascending within a block), bitwise
+        // what the row-outer scalar loop produced.
         let n_layers = dims.len() - 1;
         for l in (0..n_layers).rev() {
             let (d_in, d_out) = (dims[l], dims[l + 1]);
             let input = &acts[l];
             let mut dw = take_zeroed(d_in * d_out);
             let mut db = take_zeroed(d_out);
-            for i in 0..b {
-                let drow = &delta[i * d_out..(i + 1) * d_out];
-                let xrow = &input[i * d_in..(i + 1) * d_in];
-                for (dbv, &dv) in db.iter_mut().zip(drow) {
-                    *dbv += dv;
-                }
-                for (j, &xv) in xrow.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
+            for ib in (0..b).step_by(MR) {
+                let ie = (ib + MR).min(b);
+                for i in ib..ie {
+                    let drow = &delta[i * d_out..(i + 1) * d_out];
+                    for (dbv, &dv) in db.iter_mut().zip(drow) {
+                        *dbv += dv;
                     }
-                    let wrow = &mut dw[j * d_out..(j + 1) * d_out];
-                    for (wv, &dv) in wrow.iter_mut().zip(drow) {
-                        *wv += xv * dv;
+                }
+                for j in 0..d_in {
+                    let dwrow = &mut dw[j * d_out..(j + 1) * d_out];
+                    for i in ib..ie {
+                        let xv = input[i * d_in + j];
+                        // Skipped zero activations (sparse post-ReLU
+                        // inputs) contribute nothing; the skip is the
+                        // sparsity fast path, same as the forward.
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        axpy(dwrow, xv, &delta[i * d_out..(i + 1) * d_out]);
                     }
                 }
             }
             if l > 0 {
                 // dprev = (delta @ Wᵀ) ⊙ relu'(input); relu' from the
-                // post-relu activation (0 ⇔ inactive unit).
+                // post-relu activation (0 ⇔ inactive unit). j-outer so a
+                // loaded weight row serves the whole row block; each dot
+                // keeps its strict k-ascending single-accumulator order.
                 let w = params[2 * l].data();
                 let mut dprev = take_zeroed(b * d_in);
-                for i in 0..b {
-                    let drow = &delta[i * d_out..(i + 1) * d_out];
-                    let xrow = &input[i * d_in..(i + 1) * d_in];
-                    let prow = &mut dprev[i * d_in..(i + 1) * d_in];
+                for ib in (0..b).step_by(MR) {
+                    let ie = (ib + MR).min(b);
                     for j in 0..d_in {
-                        if xrow[j] <= 0.0 {
-                            continue;
-                        }
                         let wrow = &w[j * d_out..(j + 1) * d_out];
-                        let mut s = 0.0f32;
-                        for (wv, dv) in wrow.iter().zip(drow) {
-                            s += wv * dv;
+                        for i in ib..ie {
+                            if input[i * d_in + j] <= 0.0 {
+                                continue;
+                            }
+                            dprev[i * d_in + j] =
+                                dot_ordered(wrow, &delta[i * d_out..(i + 1) * d_out]);
                         }
-                        prow[j] = s;
                     }
                 }
                 give_back(std::mem::replace(&mut delta, dprev));
@@ -292,18 +356,27 @@ fn forward(dims: &[usize], params: &[Tensor], x: &[f32], b: usize) -> Vec<Vec<f3
         let bias = params[2 * l + 1].data();
         let mut out = take_zeroed(b * d_out);
         {
+            // Blocked matmul: batch rows in MR-row blocks, j-outer within
+            // a block so one loaded weight row feeds every row of the
+            // block via a contiguous NR-tiled axpy. Each output element's
+            // accumulation chain is still bias-init then j ascending —
+            // bitwise identical to the row-at-a-time scalar loop.
             let input = &acts[l];
-            for i in 0..b {
-                let orow = &mut out[i * d_out..(i + 1) * d_out];
-                orow.copy_from_slice(bias);
-                let xrow = &input[i * d_in..(i + 1) * d_in];
-                for (j, &xv) in xrow.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
+            for ib in (0..b).step_by(MR) {
+                let ie = (ib + MR).min(b);
+                for i in ib..ie {
+                    out[i * d_out..(i + 1) * d_out].copy_from_slice(bias);
+                }
+                for j in 0..d_in {
                     let wrow = &w[j * d_out..(j + 1) * d_out];
-                    for (o, &wv) in orow.iter_mut().zip(wrow) {
-                        *o += xv * wv;
+                    for i in ib..ie {
+                        let xv = input[i * d_in + j];
+                        // Post-ReLU inputs are sparse; skipping exact
+                        // zeros is the dominant fast path.
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        axpy(&mut out[i * d_out..(i + 1) * d_out], xv, wrow);
                     }
                 }
             }

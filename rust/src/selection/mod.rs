@@ -74,17 +74,26 @@ impl ChannelMask {
 
     /// Masked value payload in bytes: the f32 elements under the mask,
     /// with no wire framing. This is the budget-accounting quantity
-    /// (A_server budgets are value bytes) and the `uploaded_bytes`
-    /// round-record column; the uplink is charged for the *realized*
-    /// `codec::WireUpload::wire_len()` instead.
+    /// (A_server budgets are value bytes) and the Eq. 5 sparse-download
+    /// charge (the server echoes full-precision values); the uplink is
+    /// charged for the *realized* `codec::WireUpload::wire_len()`
+    /// instead, and an upload's realized payload under a lossy value
+    /// plane is `WireUpload::payload_bytes` ([`payload_bytes_with`]).
     pub fn payload_bytes(&self, spec: &ModelSpec) -> usize {
+        self.payload_bytes_with(spec, 4)
+    }
+
+    /// [`payload_bytes`] with an explicit serialized width per value
+    /// (`codec::PlaneMode::bound_width()`): the masked-value payload
+    /// under a forced fp16 (2 B) or int8 (1 B) plane.
+    pub fn payload_bytes_with(&self, spec: &ModelSpec, bytes_per_value: usize) -> usize {
         let mut total = 0usize;
         for (layer, sel) in spec.layers.iter().zip(&self.per_layer) {
             let group = crate::codec::unit_group(layer);
             let n_sel = sel.iter().filter(|&&b| b).count();
             total += n_sel * (group + 1); // + bias element
         }
-        total * 4
+        total * bytes_per_value
     }
 
     /// Documented **upper bound** on the auto-picked encoded upload size
@@ -94,9 +103,18 @@ impl ChannelMask {
     /// Not used on any timing path — `encode_upload` debug-asserts
     /// `wire_len() <= upload_bytes()` for the auto mode and the simnet
     /// charges `wire_len()`. Forced `codec=bitmap|coo` runs can exceed
-    /// the bound by construction.
+    /// the bound by construction. f32 values assumed — see
+    /// [`upload_bytes_with`] for the plane-width variant.
     pub fn upload_bytes(&self, spec: &ModelSpec) -> usize {
         crate::codec::upload_bound(self, spec)
+    }
+
+    /// [`upload_bytes`] with an explicit serialized width per value:
+    /// the bound under a forced fp16/int8 plane
+    /// (`codec::upload_bound_with`). Keeps Eq. 9 `t_up` budgeting honest
+    /// when a run forces a narrow plane.
+    pub fn upload_bytes_with(&self, spec: &ModelSpec, bytes_per_value: usize) -> usize {
+        crate::codec::upload_bound_with(self, spec, bytes_per_value)
     }
 }
 
@@ -368,6 +386,18 @@ mod tests {
             // the documented wire bound sits above the raw payload
             if m.upload_bytes(&spec) < m.payload_bytes(&spec) {
                 return Err("upload_bytes bound below payload".into());
+            }
+            // plane widths thread through the accounting linearly
+            if m.payload_bytes_with(&spec, 2) * 2 != m.payload_bytes(&spec) {
+                return Err("f16 payload width mismatch".into());
+            }
+            if m.payload_bytes_with(&spec, 1) * 4 != m.payload_bytes(&spec) {
+                return Err("i8 payload width mismatch".into());
+            }
+            if m.upload_bytes_with(&spec, 1) >= m.upload_bytes(&spec)
+                && m.payload_bytes(&spec) > 0
+            {
+                return Err("i8 upload bound not below f32 bound".into());
             }
             Ok(())
         });

@@ -1,0 +1,237 @@
+//! Quantized wire-plane guarantees (DESIGN.md §Codec): fp16/int8 value
+//! planes round-trip within the documented error bound and re-encode
+//! idempotently; engine runs under every plane × round mode stay
+//! bitwise worker-invariant (the golden digest is the workers=1 run);
+//! lossy planes actually change the wire (and shrink it) without ever
+//! escaping the frame checksum when corrupted.
+
+use std::path::PathBuf;
+
+use feddd::codec::{encode_upload_planes, CodecMode, PlaneMode, ValuePlane, WireUpload};
+use feddd::config::ExpConfig;
+use feddd::coordinator::FedRun;
+use feddd::model::ModelSpec;
+use feddd::runtime::write_native_manifest;
+use feddd::selection::{select_mask, ChannelMask, Policy};
+use feddd::tensor::Tensor;
+use feddd::util::proptest::check;
+use feddd::util::rng::Rng;
+
+fn perturbed(p: &[Tensor], rng: &mut Rng, s: f32) -> Vec<Tensor> {
+    p.iter()
+        .map(|t| {
+            let d: Vec<f32> = t.data().iter().map(|&x| x + rng.normal_f32(0.0, s)).collect();
+            Tensor::new(t.shape().to_vec(), d)
+        })
+        .collect()
+}
+
+fn scheme_mask(spec: &ModelSpec, prev: &[Tensor], after: &[Tensor], rng: &mut Rng) -> ChannelMask {
+    match rng.below(4) {
+        0 => ChannelMask::full(spec),
+        _ => {
+            let d = rng.range_f64(0.05, 0.9);
+            select_mask(Policy::Importance, spec, prev, after, None, d, rng)
+        }
+    }
+}
+
+#[test]
+fn lossy_planes_roundtrip_within_bound_and_reencode_identically() {
+    // Property: every plane mode survives encode → bytes → decode →
+    // re-encode with identical bytes, and the realized per-value error
+    // vs the exact f32 encode respects each plane's bound (auto: the
+    // configured plane_error · max|value| per layer).
+    check("plane roundtrip", 12, |rng| {
+        for name in ["mlp", "cnn1"] {
+            let spec = ModelSpec::get(name, 0.5).unwrap();
+            let prev = spec.init_params(rng);
+            let after = perturbed(&prev, rng, 0.05);
+            let mask = scheme_mask(&spec, &prev, &after, rng);
+            let exact = encode_upload_planes(
+                &mask, &after, &spec, CodecMode::Auto, PlaneMode::F32, 0.0,
+            );
+            for plane in [PlaneMode::F16, PlaneMode::I8, PlaneMode::Auto] {
+                let up = encode_upload_planes(
+                    &mask, &after, &spec, CodecMode::Auto, plane, 0.005,
+                );
+                let bytes = up.to_bytes();
+                let dec = WireUpload::from_bytes(&bytes)
+                    .map_err(|e| format!("{name} {plane:?}: decode failed: {e}"))?;
+                if dec != up {
+                    return Err(format!("{name} {plane:?}: decode != encode"));
+                }
+                if dec.to_bytes() != bytes {
+                    return Err(format!("{name} {plane:?}: re-encode not idempotent"));
+                }
+                for (l, (lw, le)) in up.layers.iter().zip(&exact.layers).enumerate() {
+                    let max_abs = le
+                        .values
+                        .iter()
+                        .fold(0.0f32, |a, &v| a.max(v.abs()));
+                    for (&q, &v) in lw.values.iter().zip(&le.values) {
+                        let err = (q - v).abs();
+                        let ok = match (plane, lw.plane) {
+                            (_, ValuePlane::F32) => err == 0.0,
+                            // f16 RNE: half-ulp relative in the normal
+                            // range plus the subnormal absolute step.
+                            (PlaneMode::F16, ValuePlane::F16) => {
+                                err <= v.abs() * 4.9e-4 + 6.0e-8
+                            }
+                            // i8: half a quantization step (+ f32 slack).
+                            (PlaneMode::I8, ValuePlane::I8 { scale }) => {
+                                err <= 0.5001 * scale + 1.0e-7
+                            }
+                            // auto: the configured relative bound.
+                            (PlaneMode::Auto, _) => err <= 0.005 * max_abs,
+                            (m, p) => {
+                                return Err(format!(
+                                    "{name} layer {l}: mode {m:?} produced plane {p:?}"
+                                ))
+                            }
+                        };
+                        if !ok {
+                            return Err(format!(
+                                "{name} {plane:?} layer {l}: err {err} too large \
+                                 (value {v}, max_abs {max_abs})"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupted_quantized_value_plane_fails_the_frame_checksum() {
+    // A flipped byte inside an f16/i8 value plane must fail the frame
+    // checksum — quantized bodies get the same integrity seal as f32.
+    let mut rng = Rng::new(77);
+    let spec = ModelSpec::get("mlp", 0.5).unwrap();
+    let prev = spec.init_params(&mut rng);
+    let after = perturbed(&prev, &mut rng, 0.05);
+    let mask = scheme_mask(&spec, &prev, &after, &mut rng);
+    for plane in [PlaneMode::F16, PlaneMode::I8] {
+        let up = encode_upload_planes(&mask, &after, &spec, CodecMode::Auto, plane, 0.005);
+        let bytes = up.to_bytes();
+        assert!(WireUpload::from_bytes(&bytes).is_ok(), "{plane:?}: clean decode");
+        let mut bad = bytes.clone();
+        // Last body byte: the final quantized value, just before the
+        // 8-byte trailing checksum.
+        let i = bad.len() - 9;
+        bad[i] ^= 0x40;
+        assert!(
+            WireUpload::from_bytes(&bad).is_err(),
+            "{plane:?}: corrupted value plane decoded"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine level: golden digests per plane × round mode × worker count.
+// ---------------------------------------------------------------------
+
+fn native_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "feddd_quant_planes_{}_{tag}",
+        std::process::id()
+    ));
+    write_native_manifest(&dir, &[("mlp", 1.0)], 16, 64).unwrap();
+    dir
+}
+
+fn cfg(plane: &str, round_mode: &str, workers: usize, dir: &PathBuf) -> ExpConfig {
+    let mut cfg = ExpConfig::smoke();
+    cfg.scheme = "feddd".into();
+    cfg.n_clients = 5;
+    cfg.rounds = 3;
+    cfg.local_steps = 2;
+    cfg.test_n = 128;
+    cfg.train_per_client = 60;
+    cfg.eval_every = 3;
+    cfg.workers = workers;
+    cfg.round_mode = round_mode.into();
+    cfg.value_plane = plane.into();
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    cfg
+}
+
+/// FNV-1a 64 over the bit patterns of every global parameter.
+fn digest(params: &[Tensor]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in params {
+        for &v in t.data() {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1_0000_0001_b3);
+            }
+        }
+    }
+    h
+}
+
+#[test]
+fn golden_digests_per_plane_are_worker_and_mode_invariant() {
+    // For every plane × round mode, the workers=1 run is the golden:
+    // higher worker counts must reproduce its global parameters bit for
+    // bit (quantization happens per client, before any fan-out, so
+    // determinism cannot decay). Lossy planes must also *change* the
+    // digest vs f32 — otherwise the quantizer never engaged.
+    let dir = native_dir("digests");
+    for round_mode in ["sync", "semi_async"] {
+        let mut by_plane: Vec<(&str, u64)> = Vec::new();
+        for plane in ["f32", "f16", "i8", "auto"] {
+            let run_once = |workers: usize| {
+                let mut run = FedRun::new(cfg(plane, round_mode, workers, &dir)).unwrap();
+                run.run().unwrap();
+                digest(&run.global_params)
+            };
+            let golden = run_once(1);
+            for workers in [2usize, 4] {
+                assert_eq!(
+                    run_once(workers),
+                    golden,
+                    "{plane}/{round_mode}: workers={workers} diverged from the golden"
+                );
+            }
+            by_plane.push((plane, golden));
+        }
+        let f32_digest = by_plane[0].1;
+        for &(plane, d) in &by_plane[1..] {
+            assert_ne!(
+                d, f32_digest,
+                "{plane}/{round_mode}: lossy run equals the f32 run — quantizer inert"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn auto_plane_shrinks_the_wire_end_to_end() {
+    // Same config and seed, value_plane auto vs f32: the realized wire
+    // total must be strictly smaller, the i8 plane must actually engage,
+    // and the payload/wire invariant survives the narrower planes.
+    let dir = native_dir("shrink");
+    let run_with = |plane: &str| {
+        let mut run = FedRun::new(cfg(plane, "sync", 2, &dir)).unwrap();
+        run.run().unwrap()
+    };
+    let f32_res = run_with("f32");
+    let auto_res = run_with("auto");
+    assert!(
+        auto_res.total_wire_bytes() < f32_res.total_wire_bytes(),
+        "auto wire {} !< f32 wire {}",
+        auto_res.total_wire_bytes(),
+        f32_res.total_wire_bytes()
+    );
+    let mix = auto_res.plane_mix();
+    assert!(mix.i8_layers > 0, "auto never picked i8: {mix:?}");
+    for r in &auto_res.rounds {
+        assert!(r.wire_bytes >= r.uploaded_bytes, "round {}: wire below payload", r.round);
+        assert!(r.train_loss.is_finite(), "round {}: loss diverged", r.round);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
