@@ -36,8 +36,19 @@ import os
 import sys
 
 # Single source of truth for what the gates key on.
-from bench_diff import run_level_bytes
+from bench_diff import run_level_bytes, serve_level
 from matrix_diff import cells_by_key
+
+
+def gated_serve_keys(doc):
+    """The serve keys the diff gate enforces (byte totals and latency
+    percentiles); ``serve_conns_per_s``-style keys are report-only and
+    free to come and go."""
+    return {
+        k: v
+        for k, v in serve_level(doc).items()
+        if "bytes" in k or k.endswith("_ns")
+    }
 
 
 def load(path, errors):
@@ -72,7 +83,10 @@ def validate_bench(fresh, path, baseline, errors):
         errors.append(f"{path}: no cases — this run produced no bench output")
     if baseline is not None and not baseline.get("bootstrap"):
         fresh_keys = run_level_bytes(fresh)
-        for key in sorted(run_level_bytes(baseline)):
+        fresh_keys.update(gated_serve_keys(fresh))
+        gated = dict(run_level_bytes(baseline))
+        gated.update(gated_serve_keys(baseline))
+        for key in sorted(gated):
             if key not in fresh_keys:
                 errors.append(
                     f"{path}: gated key {key} is in the armed baseline but "

@@ -19,6 +19,12 @@ baseline in BENCH_baseline/, and exits non-zero when the run regressed:
   up or down, fails. A deterministic layer count that moved means the
   auto-pick quantizer changed behaviour at equal config; shrinking wire
   bytes show up in the ``wire_`` keys, never as a mix drift.
+* **serve transport**: run-level ``serve_`` keys from BENCH_serve.json.
+  Keys containing ``bytes`` are deterministic loopback totals — any
+  increase fails, and a vanished key is refused like the wire keys.
+  Keys ending ``_ns`` are round-close latency percentiles, gated at
+  --max-regress like the case timings (also with missing-key refusal).
+  Everything else (``serve_conns_per_s``) is report-only.
 
 Cases present on only one side are reported but never fail the gate
 (benches come and go); timing *improvements* are reported so maintainers
@@ -67,6 +73,14 @@ def run_level_bytes(doc):
         k: v
         for k, v in doc.items()
         if k.startswith(gated) and isinstance(v, (int, float))
+    }
+
+
+def serve_level(doc):
+    return {
+        k: v
+        for k, v in doc.items()
+        if k.startswith("serve_") and isinstance(v, (int, float))
     }
 
 
@@ -172,6 +186,50 @@ def main():
             else:
                 note = "ok" if cv == bv else "improved"
                 lines.append(f"| {key} | {bv:.0f} | {cv:.0f} | {note} |")
+
+        base_serve = serve_level(base)
+        cur_serve = serve_level(cur)
+        if base_serve or cur_serve:
+            lines.append("")
+            lines.append("| serve key | baseline | current | verdict |")
+            lines.append("|---|---|---|---|")
+        for key in sorted(set(base_serve) | set(cur_serve)):
+            bv, cv = base_serve.get(key), cur_serve.get(key)
+            gated = "bytes" in key or key.endswith("_ns")
+            if cv is None:
+                if gated:
+                    failures.append(
+                        f"{key}: present in baseline but missing from the "
+                        "current run — serve gate would be silently disarmed "
+                        "(update BENCH_baseline/ if the key legitimately "
+                        "changed)")
+                    lines.append(f"| {key} | {bv:.0f} | — | **MISSING** |")
+                else:
+                    lines.append(f"| {key} | {bv:.0f} | — | removed — ok |")
+                continue
+            if bv is None:
+                lines.append(f"| {key} | — | {cv:.0f} | new — ok |")
+                continue
+            if "bytes" in key:
+                if cv > bv:
+                    failures.append(
+                        f"{key}: {cv:.0f} B > baseline {bv:.0f} B (loopback "
+                        "serve byte totals are deterministic and may never "
+                        "increase at equal config)")
+                    lines.append(f"| {key} | {bv:.0f} | {cv:.0f} | **REGRESSION** |")
+                else:
+                    note = "ok" if cv == bv else "improved"
+                    lines.append(f"| {key} | {bv:.0f} | {cv:.0f} | {note} |")
+            elif key.endswith("_ns"):
+                if bv and cv / bv > 1.0 + args.max_regress:
+                    failures.append(
+                        f"{key}: {cv:.0f} ns vs baseline {bv:.0f} ns "
+                        f"({cv / bv - 1.0:+.1%} > +{args.max_regress:.0%})")
+                    lines.append(f"| {key} | {bv:.0f} | {cv:.0f} | **REGRESSION** |")
+                else:
+                    lines.append(f"| {key} | {bv:.0f} | {cv:.0f} | ok |")
+            else:
+                lines.append(f"| {key} | {bv:.0f} | {cv:.0f} | report-only |")
 
     lines.append("")
     if failures:

@@ -1,0 +1,73 @@
+#!/usr/bin/env bash
+# Loopback serve smoke: one real `feddd serve` process plus two `feddd
+# agent` processes on 127.0.0.1 must complete a short run end-to-end and
+# write serve.json. This exercises the CLI wiring (ephemeral-port bind,
+# serve_addr.txt publication, slot-range handshake, DONE shutdown) as
+# separate OS processes — the bitwise-equivalence claims are covered
+# in-process by rust/tests/serve_loopback.rs.
+#
+# Usage: ci/serve_smoke.sh [out-dir]   (FEDDD_BIN overrides the binary)
+set -euo pipefail
+
+BIN="${FEDDD_BIN:-target/release/feddd}"
+OUT="${1:-serve-smoke-out}"
+ROUNDS=3
+rm -rf "$OUT"
+mkdir -p "$OUT"
+
+"$BIN" serve --n_clients 4 --rounds "$ROUNDS" --local_steps 2 \
+    --train_per_client 60 --test_n 64 --eval_every "$ROUNDS" --workers 1 \
+    --listen 127.0.0.1:0 --out "$OUT" >"$OUT/serve.log" 2>&1 &
+SERVE_PID=$!
+trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+
+# The server publishes the resolved ephemeral address before accepting.
+for _ in $(seq 1 100); do
+    [ -s "$OUT/serve_addr.txt" ] && break
+    if ! kill -0 "$SERVE_PID" 2>/dev/null; then
+        echo "serve exited before binding:" >&2
+        cat "$OUT/serve.log" >&2
+        exit 1
+    fi
+    sleep 0.1
+done
+ADDR="$(tr -d '[:space:]' <"$OUT/serve_addr.txt")"
+echo "serve listening on $ADDR"
+
+"$BIN" agent --connect "$ADDR" --slot_start 0 --slot_count 2 \
+    >"$OUT/agent0.log" 2>&1 &
+AGENT0=$!
+"$BIN" agent --connect "$ADDR" --slot_start 2 \
+    >"$OUT/agent1.log" 2>&1 &
+AGENT1=$!
+
+fail() {
+    echo "$1" >&2
+    for f in serve agent0 agent1; do
+        echo "---- $f.log ----" >&2
+        cat "$OUT/$f.log" >&2 || true
+    done
+    exit 1
+}
+
+wait "$AGENT0" || fail "agent 0 failed"
+wait "$AGENT1" || fail "agent 1 failed"
+wait "$SERVE_PID" || fail "serve failed"
+trap - EXIT
+
+[ -s "$OUT/serve.json" ] || fail "serve.json missing"
+python3 - "$OUT/serve.json" "$ROUNDS" <<'EOF'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+want = int(sys.argv[2])
+rounds = doc["result"]["rounds"]
+assert len(rounds) == want, f"expected {want} rounds, got {len(rounds)}"
+assert all(r["participants"] > 0 for r in rounds), "a round had no uploads"
+assert all(r["wire_bytes"] > 0 for r in rounds), "a round moved no wire bytes"
+evals = doc["result"]["evals"]
+assert evals, "no eval records"
+assert 0.0 <= evals[-1]["accuracy"] <= 1.0, evals[-1]
+print(f"serve smoke OK: {want} rounds, final accuracy {evals[-1]['accuracy']:.4f}")
+EOF
+grep -q "agent done" "$OUT/agent0.log" || fail "agent 0 never reported completion"
+grep -q "agent done" "$OUT/agent1.log" || fail "agent 1 never reported completion"

@@ -166,6 +166,30 @@ class RedPaths(ArmHarness):
         armed = self.read(os.path.join(self.dest, "BENCH_round.json"))
         self.assertEqual(armed["wire_bytes_sync_8r"], 5000)
 
+    def test_vanished_gated_serve_key_is_refused(self):
+        self.write("BENCH_baseline/BENCH_serve.json",
+                   bench_doc(serve_wire_bytes_loopback_8r=4096,
+                             serve_round_close_p99_ns=5e6,
+                             serve_conns_per_s=900.0))
+        # The gated byte + latency keys vanished; only the report-only
+        # throughput key survives — refuse.
+        fp = self.write("bench-out/BENCH_serve.json",
+                        bench_doc(serve_conns_per_s=950.0))
+        proc = self.arm("--bench", fp)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("serve_wire_bytes_loopback_8r", proc.stderr)
+        self.assertIn("serve_round_close_p99_ns", proc.stderr)
+        armed = self.read(os.path.join(self.dest, "BENCH_serve.json"))
+        self.assertEqual(armed["serve_wire_bytes_loopback_8r"], 4096)
+
+    def test_vanished_report_only_serve_key_is_promotable(self):
+        self.write("BENCH_baseline/BENCH_serve.json",
+                   bench_doc(serve_wire_bytes_loopback_8r=4096,
+                             serve_conns_per_s=900.0))
+        fp = self.write("bench-out/BENCH_serve.json",
+                        bench_doc(serve_wire_bytes_loopback_8r=4096))
+        self.assertEqual(self.arm("--bench", fp).returncode, 0)
+
     def test_empty_case_list_is_refused(self):
         fp = self.write("bench-out/BENCH_round.json",
                         {"bench": "round", "cases": []})

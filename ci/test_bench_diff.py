@@ -13,7 +13,11 @@ as a subprocess on synthetic baseline/current JSON pairs:
   ``client_state*`` / ``sim_state*`` / ``data_state*`` byte, any change
   at all in a ``plane_*`` layer count (exact-match gate, both
   directions), a vanished wire or plane key (silent disarm), an empty
-  current run, an all-incomparable case set.
+  current run, an all-incomparable case set;
+* serve keys (BENCH_serve.json): a ``serve_*bytes*`` increase or a
+  vanished gated serve key fails, a >20% ``serve_*_ns`` latency growth
+  fails, while ``serve_conns_per_s`` swings and vanishing report-only
+  keys stay green.
 
 Stdlib only; run with ``python3 ci/test_bench_diff.py -v`` (the CI step).
 """
@@ -210,6 +214,67 @@ class RedPaths(unittest.TestCase):
         base = doc({"old_name": 1000.0})
         cur = doc({"new_name": 1000.0})
         self.assertEqual(run_gate(base, cur).returncode, 1)
+
+
+class ServeKeys(unittest.TestCase):
+    def test_equal_serve_run_passes(self):
+        d = doc(
+            {"serve_round_close": 1000.0},
+            serve_wire_bytes_loopback_8r=4096,
+            serve_round_close_p99_ns=5e6,
+            serve_conns_per_s=900.0,
+        )
+        proc = run_gate(d, d)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+
+    def test_serve_byte_increase_fails(self):
+        base = doc({"c": 1000.0}, serve_wire_bytes_loopback_8r=4096)
+        cur = doc({"c": 1000.0}, serve_wire_bytes_loopback_8r=4097)
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("serve_wire_bytes_loopback_8r", proc.stdout)
+
+    def test_serve_byte_decrease_passes(self):
+        base = doc({"c": 1000.0}, serve_payload_bytes_loopback_8r=4096)
+        cur = doc({"c": 1000.0}, serve_payload_bytes_loopback_8r=4000)
+        self.assertEqual(run_gate(base, cur).returncode, 0)
+
+    def test_serve_latency_regression_fails(self):
+        base = doc({"c": 1000.0}, serve_round_close_p99_ns=1e6)
+        cur = doc({"c": 1000.0}, serve_round_close_p99_ns=1.25e6)  # +25%
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("serve_round_close_p99_ns", proc.stdout)
+
+    def test_serve_latency_within_threshold_passes(self):
+        base = doc({"c": 1000.0}, serve_round_close_p50_ns=1e6)
+        cur = doc({"c": 1000.0}, serve_round_close_p50_ns=1.19e6)  # +19%
+        self.assertEqual(run_gate(base, cur).returncode, 0)
+        # The custom threshold applies to serve latency keys too.
+        self.assertEqual(
+            run_gate(base, cur, ("--max-regress", "0.10")).returncode, 1
+        )
+
+    def test_serve_conns_per_s_is_report_only(self):
+        # Connection throughput is host noise: a 10x collapse reports but
+        # never fails.
+        base = doc({"c": 1000.0}, serve_conns_per_s=1000.0)
+        cur = doc({"c": 1000.0}, serve_conns_per_s=100.0)
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 0)
+        self.assertIn("report-only", proc.stdout)
+
+    def test_vanished_gated_serve_key_fails(self):
+        base = doc({"c": 1000.0}, serve_wire_bytes_loopback_8r=4096)
+        cur = doc({"c": 1000.0})
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("silently disarmed", proc.stdout)
+
+    def test_vanished_report_only_serve_key_passes(self):
+        base = doc({"c": 1000.0}, serve_conns_per_s=1000.0)
+        cur = doc({"c": 1000.0})
+        self.assertEqual(run_gate(base, cur).returncode, 0)
 
 
 class ReportOutput(unittest.TestCase):

@@ -1,0 +1,210 @@
+//! Serve-mode transport bench: what the socket seam costs and what it
+//! must never change. Three measurements on 127.0.0.1:
+//!
+//! * **handshake throughput** — sequential connect → HELLO → CONFIG
+//!   round trips against a live acceptor, reported as
+//!   `serve_conns_per_s` (report-only; loopback accept rates are too
+//!   host-dependent to gate);
+//! * **round-close latency** — a timed loopback run (two agent threads
+//!   hosting a four-client fleet) stepping full rounds through the
+//!   socket transport; the per-round close latencies land as
+//!   `serve_round_close_p50_ns` / `serve_round_close_p99_ns`, which
+//!   `ci/bench_diff.py` gates against the baseline at `--max-regress`;
+//! * **loopback equivalence** — a fixed-seed, fixed-round-count serve
+//!   run whose wire/payload totals and virtual clock must match the
+//!   in-process run *exactly*. Gated twice: inline (any mismatch exits
+//!   non-zero) and across commits via the `serve_*bytes*` keys in
+//!   `BENCH_serve.json`.
+//!
+//! With `FEDDD_BENCH_JSON=<dir>` the harness writes `BENCH_serve.json`
+//! there, like every other bench.
+
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::thread;
+use std::time::Instant;
+
+use feddd::config::ExpConfig;
+use feddd::coordinator::FedRun;
+use feddd::runtime::write_native_manifest;
+use feddd::transport::frame::{read_frame, write_frame, ConfigFrame, Hello, FT_CONFIG, FT_HELLO};
+use feddd::transport::{run_agent, AgentOpts, BoundServer, ServeOpts};
+use feddd::util::bench::{black_box, Bencher};
+use feddd::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    // Fixed name (not pid-suffixed): repeated bench runs reuse the same
+    // directory instead of leaking one per invocation.
+    let tmp = std::env::temp_dir().join("feddd_serve_bench_native");
+    write_native_manifest(&tmp, &[("mlp", 1.0)], 16, 64).expect("native manifest");
+    tmp
+}
+
+fn cfg(dir: &PathBuf) -> ExpConfig {
+    let mut cfg = ExpConfig::smoke();
+    cfg.scheme = "feddd".into();
+    cfg.rounds = 1000; // stepped manually
+    cfg.n_clients = 4;
+    cfg.local_steps = 2;
+    cfg.batch = 16;
+    cfg.test_n = 64;
+    cfg.train_per_client = 60;
+    cfg.workers = 1;
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    cfg
+}
+
+/// Bind, spawn one agent thread per split, accept, and hand back the
+/// socket-driven run (step it manually; `shutdown_transport` releases
+/// the agents with DONE).
+fn start_loopback(cfg: &ExpConfig) -> (FedRun, Vec<thread::JoinHandle<()>>) {
+    let mut opts = ServeOpts::from_config(cfg);
+    opts.listen = "127.0.0.1:0".into();
+    let bound = BoundServer::bind(&opts).unwrap();
+    let addr = bound.local_addr.to_string();
+    let handles = [(0usize, Some(2usize)), (2, None)]
+        .into_iter()
+        .map(|(slot_start, slot_count)| {
+            let agent = AgentOpts {
+                connect: addr.clone(),
+                slot_start,
+                slot_count,
+                overrides: Vec::new(),
+            };
+            thread::spawn(move || {
+                run_agent(&agent).unwrap();
+            })
+        })
+        .collect();
+    let coordinator = bound.accept_agents(&opts, cfg).unwrap();
+    let run = FedRun::with_transport(cfg.clone(), Box::new(coordinator)).unwrap();
+    (run, handles)
+}
+
+/// Sequential connect → HELLO → CONFIG round trips against a live
+/// acceptor speaking the real frame layer; returns connections/second.
+fn handshake_throughput(cfg_json: &str) -> f64 {
+    const CONNS: usize = 256;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let cfg_json = cfg_json.to_string();
+    let server = thread::spawn(move || {
+        for _ in 0..CONNS {
+            let (mut s, _) = listener.accept().unwrap();
+            s.set_nodelay(true).ok();
+            let (ty, payload) = read_frame(&mut s, 64).unwrap();
+            assert_eq!(ty, FT_HELLO);
+            let hello = Hello::decode(&payload).unwrap();
+            write_frame(
+                &mut s,
+                FT_CONFIG,
+                &ConfigFrame::encode_parts(hello.slot_start, 1, &cfg_json),
+            )
+            .unwrap();
+        }
+    });
+    let t0 = Instant::now();
+    for _ in 0..CONNS {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_nodelay(true).ok();
+        write_frame(&mut s, FT_HELLO, &Hello { slot_start: 0, slot_count: 1 }.encode()).unwrap();
+        let (ty, _) = read_frame(&mut s, 1 << 20).unwrap();
+        assert_eq!(ty, FT_CONFIG);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    server.join().unwrap();
+    CONNS as f64 / dt
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    let dir = artifacts_dir();
+    let mut b = Bencher::new("serve");
+    let mut gate_failures: Vec<String> = Vec::new();
+
+    // ---- handshake throughput (report-only) ----
+    let conns_per_s = handshake_throughput(&cfg(&dir).to_json().to_string_compact());
+    println!("serve::handshake_throughput  {conns_per_s:>28.0} conns/s");
+
+    // ---- round-close latency over the socket transport ----
+    let (mut run, handles) = start_loopback(&cfg(&dir));
+    run.step_round().unwrap(); // warm caches & pass round 1 (full upload)
+    let mut latencies = Vec::new();
+    b.bench("serve_round_close_loopback_mlp_4c_2agents", || {
+        let t = Instant::now();
+        black_box(run.step_round().unwrap());
+        latencies.push(t.elapsed().as_secs_f64());
+    });
+    run.shutdown_transport().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    latencies.sort_by(f64::total_cmp);
+    let p50 = pct(&latencies, 0.50);
+    let p99 = pct(&latencies, 0.99);
+    b.annotate("agents", Json::Num(2.0));
+    b.annotate_run("serve_round_close_p50_ns", Json::Num(p50 * 1e9));
+    b.annotate_run("serve_round_close_p99_ns", Json::Num(p99 * 1e9));
+    b.annotate_run("serve_conns_per_s", Json::Num(conns_per_s));
+
+    // ---- loopback equivalence (inline gate + baseline keys) ----
+    // Fixed seed, fixed round count: the socket transport must realize
+    // the same wire/payload totals and the same virtual clock as the
+    // in-process run, to the byte and to the bit.
+    let rounds = 8;
+    let (mut run, handles) = start_loopback(&cfg(&dir));
+    let (mut wire_serve, mut payload_serve) = (0usize, 0usize);
+    for _ in 0..rounds {
+        let out = run.step_round().unwrap();
+        wire_serve += out.wire_bytes;
+        payload_serve += out.uploaded_bytes;
+    }
+    let vt_serve = run.clock.now();
+    run.shutdown_transport().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut run = FedRun::new(cfg(&dir)).unwrap();
+    let (mut wire_local, mut payload_local) = (0usize, 0usize);
+    for _ in 0..rounds {
+        let out = run.step_round().unwrap();
+        wire_local += out.wire_bytes;
+        payload_local += out.uploaded_bytes;
+    }
+    let vt_local = run.clock.now();
+    println!(
+        "serve::loopback_equivalence_{rounds}r  serve {wire_serve}B (payload {payload_serve}B)  \
+         in-process {wire_local}B (payload {payload_local}B)"
+    );
+    b.annotate_run("serve_wire_bytes_loopback_8r", Json::Num(wire_serve as f64));
+    b.annotate_run("serve_payload_bytes_loopback_8r", Json::Num(payload_serve as f64));
+    if wire_serve != wire_local || payload_serve != payload_local {
+        gate_failures.push(format!(
+            "loopback serve realized {wire_serve}B wire / {payload_serve}B payload, \
+             in-process realized {wire_local}B / {payload_local}B — the transport \
+             changed what goes over the wire"
+        ));
+    }
+    if vt_serve.to_bits() != vt_local.to_bits() {
+        gate_failures.push(format!(
+            "loopback virtual clock {vt_serve}s != in-process {vt_local}s — the \
+             transport perturbed the simulation"
+        ));
+    }
+
+    b.finish();
+    if !gate_failures.is_empty() {
+        for f in &gate_failures {
+            eprintln!("GATE FAILED: {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -27,6 +27,11 @@ pub fn full_round_time(c: &ClientState, cfg: &ExpConfig) -> f64 {
 }
 
 /// FedCS: fastest clients first while full uploads fit the budget.
+///
+/// All orderings in this module use [`f64::total_cmp`]: a NaN round-time
+/// or utility (e.g. a degenerate device profile) sorts deterministically
+/// to the end instead of panicking mid-selection, so FedCS/Oort have a
+/// documented total order on any input.
 pub fn fedcs_select(
     clients: &[ClientState],
     cfg: &ExpConfig,
@@ -34,9 +39,7 @@ pub fn fedcs_select(
 ) -> Vec<usize> {
     let mut order: Vec<usize> = (0..clients.len()).collect();
     order.sort_by(|&a, &b| {
-        full_round_time(&clients[a], cfg)
-            .partial_cmp(&full_round_time(&clients[b], cfg))
-            .unwrap()
+        full_round_time(&clients[a], cfg).total_cmp(&full_round_time(&clients[b], cfg))
     });
     let mut selected = Vec::new();
     let mut used = 0usize;
@@ -52,9 +55,7 @@ pub fn fedcs_select(
         // (the fastest), as FedCS would extend the deadline.
         let fastest = (0..clients.len())
             .min_by(|&a, &b| {
-                full_round_time(&clients[a], cfg)
-                    .partial_cmp(&full_round_time(&clients[b], cfg))
-                    .unwrap()
+                full_round_time(&clients[a], cfg).total_cmp(&full_round_time(&clients[b], cfg))
             })
             .unwrap();
         selected.push(fastest);
@@ -74,7 +75,7 @@ pub fn oort_select(
     // Preferred round duration: median full-round time.
     let mut times: Vec<f64> = clients.iter().map(|c| full_round_time(c, cfg)).collect();
     let mut sorted = times.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     let t_pref = sorted[sorted.len() / 2];
 
     // Statistical utility m_n · loss_n; unexplored clients get the current
@@ -100,7 +101,8 @@ pub fn oort_select(
     let eps = 0.2 * 0.98f64.powi(round as i32 - 1);
 
     let mut order: Vec<usize> = (0..clients.len()).collect();
-    order.sort_by(|&a, &b| utils[b].partial_cmp(&utils[a]).unwrap());
+    // Descending utility; total_cmp keeps the order total (NaN sorts low).
+    order.sort_by(|&a, &b| utils[b].total_cmp(&utils[a]));
 
     let mut selected = Vec::new();
     let mut used = 0usize;
@@ -136,7 +138,7 @@ fn order_first_by_util(utils: &[f64]) -> usize {
     utils
         .iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0)
 }

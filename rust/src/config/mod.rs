@@ -127,6 +127,18 @@ pub struct ExpConfig {
     /// `trace = "churn"` under `round_mode = "semi_async"`; decided by a
     /// pure hash of (seed, client, dispatch round).
     pub churn_rate: f64,
+    /// `feddd serve` listen address, `host:port` (DESIGN.md §Serve).
+    /// Port 0 binds an ephemeral port (the resolved address is printed
+    /// and written to `<out>/serve_addr.txt` for agents to pick up).
+    pub listen: String,
+    /// Maximum agent connections `feddd serve` accepts; a connection
+    /// beyond this is refused during the handshake.
+    pub max_conns: usize,
+    /// Bound of the serve-mode ingest queue, in decoded uploads: the
+    /// per-connection reader threads block once this many uploads are
+    /// waiting to be folded, so a slow server exerts TCP backpressure on
+    /// its agents instead of buffering unboundedly (DESIGN.md §Serve).
+    pub ingest_queue: usize,
 }
 
 impl Default for ExpConfig {
@@ -171,6 +183,9 @@ impl Default for ExpConfig {
             trace: "none".into(),
             trace_period_s: 600.0,
             churn_rate: 0.0,
+            listen: "127.0.0.1:7070".into(),
+            max_conns: 64,
+            ingest_queue: 64,
         }
     }
 }
@@ -371,6 +386,21 @@ impl ExpConfig {
             "churn_rate {} must be in [0, 1)",
             self.churn_rate
         );
+        anyhow::ensure!(
+            self.listen.contains(':'),
+            "listen {:?} must be a host:port address",
+            self.listen
+        );
+        anyhow::ensure!(
+            (1..=4096).contains(&self.max_conns),
+            "max_conns {} must be in 1..=4096",
+            self.max_conns
+        );
+        anyhow::ensure!(
+            (1..=65536).contains(&self.ingest_queue),
+            "ingest_queue {} must be in 1..=65536",
+            self.ingest_queue
+        );
         let known_family =
             ["mlp", "cnn1", "cnn2", "het_a", "het_b"].contains(&self.model.as_str());
         // Specific sub-models (e.g. "het_a_3") run homogeneously (Fig. 3).
@@ -426,6 +456,9 @@ impl ExpConfig {
             ("trace", Json::s(&self.trace)),
             ("trace_period_s", Json::Num(self.trace_period_s)),
             ("churn_rate", Json::Num(self.churn_rate)),
+            ("listen", Json::s(&self.listen)),
+            ("max_conns", Json::Num(self.max_conns as f64)),
+            ("ingest_queue", Json::Num(self.ingest_queue as f64)),
         ])
     }
 
@@ -483,6 +516,9 @@ impl ExpConfig {
             trace: gs("trace", &d.trace),
             trace_period_s: gn("trace_period_s", d.trace_period_s),
             churn_rate: gn("churn_rate", d.churn_rate),
+            listen: gs("listen", &d.listen),
+            max_conns: gn("max_conns", d.max_conns as f64) as usize,
+            ingest_queue: gn("ingest_queue", d.ingest_queue as f64) as usize,
         };
         Ok(cfg)
     }
@@ -536,6 +572,9 @@ impl ExpConfig {
             "trace" => self.trace = value.into(),
             "trace_period_s" => self.trace_period_s = value.parse()?,
             "churn_rate" => self.churn_rate = value.parse()?,
+            "listen" => self.listen = value.into(),
+            "max_conns" => self.max_conns = value.parse()?,
+            "ingest_queue" => self.ingest_queue = value.parse()?,
             "rare_classes" => {
                 self.rare_classes = value
                     .split(',')
@@ -762,6 +801,36 @@ mod tests {
         assert!(c.validate().is_err());
         c.churn_rate = 0.999;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn serve_knobs_roundtrip_and_validate() {
+        let mut c = ExpConfig::smoke();
+        assert_eq!(c.listen, "127.0.0.1:7070"); // loopback stays the default
+        assert_eq!(c.max_conns, 64);
+        assert_eq!(c.ingest_queue, 64);
+        c.set("listen", "0.0.0.0:9000").unwrap();
+        c.set("max_conns", "8").unwrap();
+        c.set("ingest_queue", "256").unwrap();
+        assert_eq!(c.listen, "0.0.0.0:9000");
+        assert_eq!(c.max_conns, 8);
+        assert_eq!(c.ingest_queue, 256);
+        c.validate().unwrap();
+        let back = ExpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+        c.listen = "no-port-here".into();
+        assert!(c.validate().is_err());
+        c.listen = "127.0.0.1:0".into(); // ephemeral port is fine
+        c.validate().unwrap();
+        c.max_conns = 0;
+        assert!(c.validate().is_err());
+        c.max_conns = 5000;
+        assert!(c.validate().is_err());
+        c.max_conns = 64;
+        c.ingest_queue = 0; // an unbounded (or zero-capacity) queue is never valid
+        assert!(c.validate().is_err());
+        c.ingest_queue = 1 << 20;
+        assert!(c.validate().is_err());
     }
 
     #[test]

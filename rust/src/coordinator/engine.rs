@@ -74,67 +74,50 @@
 //!   `m_n ← m_n · (1+s_n)^{-β}` ([`staleness_weight`]). With
 //!   `quorum = 1` and no deadline the fold degenerates to the
 //!   synchronous aggregation (asserted by `rust/tests/semi_async.rs`).
+//!
+//! # Transports (`coordinator::ingest`)
+//!
+//! Both drivers consume uploads through the run's [`UploadSource`]: the
+//! staging phase above lives behind the [`LocalTransport`] default, and
+//! serve mode swaps in a socket-backed source
+//! (`transport::ServeCoordinator`) without the drivers changing a line.
+//! The drivers keep everything transport-independent — scheduling,
+//! quorum/deadline close, the Eq. 4 folds, snapshot rebasing — and the
+//! ingest contract (envelopes delivered in ascending client order) keeps
+//! every transport bitwise-identical to the in-process path.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::aggregation::{staleness_weight, AggBackend, Aggregator};
 use crate::baselines;
-use crate::codec::{
-    encode_upload_planes, recycle_wire_upload, CodecMode, EncodingMix, PlaneMix, PlaneMode,
-    WireUpload,
-};
+use crate::codec::{recycle_wire_upload, CodecMode, EncodingMix, PlaneMix, PlaneMode, WireUpload};
 use crate::config::ExpConfig;
 use crate::data::{FedDataset, Partition, PartitionKind, SynthSpec};
 use crate::metrics::{EvalAccumulator, EvalRecord, RoundRecord, RunResult};
-use crate::model::{coverage_rates, extract_params_into, ModelId, ModelSpec};
+use crate::model::{coverage_rates, ModelId, ModelSpec};
 use crate::runtime::Runtime;
-use crate::selection::{select_mask, ChannelMask, Policy};
+use crate::selection::Policy;
 use crate::simnet::{
-    churn_drops, downlink_bytes, ArrivalEvent, AvailabilityTrace, ClientClocks, DeviceProfile,
-    EventQueue, Fleet, RoundTiming, VirtualClock,
+    churn_drops, AvailabilityTrace, ClientClocks, DeviceProfile, EventQueue, Fleet, VirtualClock,
 };
 use crate::solver::{allocate_fast, AllocInput, AllocParams};
-use crate::tensor::{copy_tensors_into, Tensor};
+use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
 use super::client::{ClientState, PendingUpdate};
+use super::ingest::{
+    drive_subset, AgentPending, CloseNote, DispatchSink, LocalTransport, RoundCall, SyncFold,
+    UploadSink, UploadSource,
+};
 use super::scratch;
-use super::state::{ClientParams, SnapshotRing, SparseResidual};
+use super::state::{ClientParams, SnapshotRing};
 
 /// Upper bound on aggregation shards per round. Fixed (worker-independent)
 /// so the merge tree — and therefore the f32 summation order — is a pure
 /// function of the participant list.
 pub const AGG_SHARDS: usize = 8;
-
-/// Per-participant output of the parallel stage (client order): the
-/// encoded wire upload (the bytes the uplink is charged for, folded by
-/// `absorb_wire` without any dense expansion), the Eq. 7–12 timing, and
-/// the post-round state handoff (the complement-of-mask residual). Dense
-/// parameters never leave the worker — a micro-batch's outputs are folded
-/// and dropped before the next micro-batch trains, so neither dense
-/// models nor encoded uploads ever accumulate fleet-wide.
-struct ClientRoundOutput {
-    /// Client index.
-    slot: usize,
-    loss: f64,
-    /// Masked value payload bytes (`ChannelMask::payload_bytes`) — the
-    /// budget-accounting column and the Eq. 5 sparse-download charge.
-    uploaded: usize,
-    /// Aggregation weight m_n (the client's sample count).
-    m_n: f32,
-    /// The encoded upload; `wire.wire_len()` is the realized wire bytes.
-    wire: WireUpload,
-    /// The residual this client keeps once its download merges (`None` ⇒
-    /// collapse to `Synced`).
-    residual: Option<SparseResidual>,
-    /// Whether this client's download was charged as a full broadcast
-    /// (the round's phase, or forced for a first-ever dispatch).
-    full_broadcast: bool,
-    /// Eq. 7–12 latencies of this dispatch.
-    timing: RoundTiming,
-}
 
 /// Outcome of a single round (for tests / tracing).
 #[derive(Clone, Debug)]
@@ -235,12 +218,34 @@ pub struct FedRun {
     trace: AvailabilityTrace,
     /// Cumulative uploads dropped by churn at arrival time.
     churned_total: usize,
+    /// Where round uploads come from: the in-process [`LocalTransport`]
+    /// by default, or a socket-backed source ([`Self::with_transport`]).
+    transport: Box<dyn UploadSource>,
+    /// Close notifications from the most recent round — every slot whose
+    /// upload left flight (folded or churned), ascending. Handed to the
+    /// transport with the next round's dispatch so remote agents rebase
+    /// their replicas; the in-process transport ignores them (the driver
+    /// already rebased the shared `ClientState`s directly).
+    last_close: Vec<CloseNote>,
 }
 
 impl FedRun {
     /// Build the full experiment from a config: dataset, partition, fleet,
-    /// clients, global model, runtime.
+    /// clients, global model, runtime. Uploads stage in-process
+    /// ([`LocalTransport`]).
     pub fn new(cfg: ExpConfig) -> anyhow::Result<FedRun> {
+        Self::with_transport(cfg, Box::new(LocalTransport))
+    }
+
+    /// [`Self::new`] with an explicit upload transport — serve mode
+    /// injects its socket-backed `transport::ServeCoordinator` here. The
+    /// run itself is built identically either way (same RNG splits, same
+    /// fleet, same initial global), which is what lets a remote agent
+    /// hold a bitwise replica of the server's fleet from the same config.
+    pub fn with_transport(
+        cfg: ExpConfig,
+        transport: Box<dyn UploadSource>,
+    ) -> anyhow::Result<FedRun> {
         cfg.validate()?;
         let mut rng = Rng::new(cfg.seed);
         // Dataset (with optional §6.7 class imbalance).
@@ -370,7 +375,16 @@ impl FedRun {
             snapshot_evictions: 0,
             trace,
             churned_total: 0,
+            transport,
+            last_close: Vec::new(),
         })
+    }
+
+    /// Tear down the run's upload transport: serve mode sends DONE to
+    /// every agent and joins its reader threads; the in-process default
+    /// is a no-op. Call after [`Self::run`] so agents exit cleanly.
+    pub fn shutdown_transport(&mut self) -> anyhow::Result<()> {
+        self.transport.shutdown()
     }
 
     /// Resolved worker count of this run's persistent pool (`cfg.workers`
@@ -586,175 +600,6 @@ impl FedRun {
         }
     }
 
-    /// Micro-batch size of the per-client worker stage: enough items to
-    /// keep every worker busy, small enough that the transient dense
-    /// models and encoded uploads stay O(micro), never O(fleet). Numerics
-    /// are independent of this value (each client is a pure function of
-    /// its own state, and all downstream accumulations run in ascending
-    /// client order regardless of the batch partition).
-    fn micro_batch(&self) -> usize {
-        (self.pool.workers() * 4).max(32)
-    }
-
-    /// Local training + mask selection for the given clients, fanned over
-    /// the worker pool; outputs come back in ascending client order.
-    ///
-    /// Every listed client is an independent work item: it owns a disjoint
-    /// `&mut ClientState` (its virtualized params, RNG stream, loss
-    /// bookkeeping), materializes its dense model (FedDD: snapshot +
-    /// residual; baselines: re-extracted from the current global), trains
-    /// against the shared thread-safe runtime, selects its upload mask,
-    /// encodes the wire upload, gathers its post-round residual and
-    /// computes its Eq. 7–12 timing. `scoped_map` returns outputs in
-    /// input (= ascending client) order, so downstream f64 accumulations
-    /// run in the same order for every worker count.
-    fn train_and_select(
-        &mut self,
-        t: usize,
-        subset: &[usize],
-        dropout: &[f64],
-        round_full_broadcast: bool,
-    ) -> anyhow::Result<Vec<ClientRoundOutput>> {
-        let cfg_ref = &self.cfg;
-        let is_feddd = cfg_ref.scheme == "feddd";
-        let hetero = cfg_ref.is_hetero();
-        let round_label = t as u64;
-        let rt = &self.runtime;
-        let ds = &self.ds;
-        let cr = &self.cr;
-        let gp = &self.global_params;
-        let policy = self.policy;
-        let codec = self.codec;
-        let plane = self.plane;
-        let plane_error = self.plane_error;
-        // Gather the disjoint `&mut ClientState` items by walking the
-        // fleet slice once over the (ascending) subset — O(subset), not
-        // O(fleet): with micro-batching this runs many times per round,
-        // so a fleet-wide scan per call would be O(fleet²/micro).
-        let mut items: Vec<(usize, &mut ClientState)> = Vec::with_capacity(subset.len());
-        let mut rest: &mut [ClientState] = self.clients.as_mut_slice();
-        let mut base = 0usize;
-        for &n in subset {
-            // Release-mode assert: the walk's `n - base` would otherwise
-            // wrap on an unsorted subset and die far from the cause.
-            assert!(n >= base, "subset must be strictly ascending (got {n} after {base})");
-            let taken = std::mem::take(&mut rest);
-            let (_, tail) = taken.split_at_mut(n - base);
-            let (c, after) = tail.split_first_mut().expect("subset id out of range");
-            items.push((n, c));
-            rest = after;
-            base = n + 1;
-        }
-        self.pool.scoped_try_map(
-            items,
-            |(n, c): (usize, &mut ClientState)| -> anyhow::Result<ClientRoundOutput> {
-                // The whole job runs against the worker's persistent
-                // scratch arena: the dense materialization target, the
-                // pre-training copy and the batch buffers are reused
-                // across micro-batches and rounds (every consumer fully
-                // overwrites what it reads — see `coordinator::scratch`;
-                // `pool_determinism.rs` sentinel-poisons the arenas
-                // between rounds to prove no stale byte leaks through).
-                scratch::with_scratch(|s| -> anyhow::Result<ClientRoundOutput> {
-                    // A first-ever dispatch always downloads the full
-                    // model: the client has never held the global, so a
-                    // mask-sparse slice would merge into nothing. A
-                    // ring-cap-evicted client is in the same boat — its
-                    // base snapshot is gone, so it is force-re-synced
-                    // with a full download charged to its link.
-                    let evicted = matches!(c.params, ClientParams::Evicted);
-                    let full_bc =
-                        round_full_broadcast || c.participations == 0 || evicted;
-                    // Materialize the dense model for this round only
-                    // (the baselines re-sync to the current global at
-                    // dispatch and never select, so they skip the
-                    // pre-training copy; an evicted FedDD client re-syncs
-                    // from the live global like a baseline would).
-                    if is_feddd {
-                        if evicted {
-                            extract_params_into(gp, &c.spec, &mut s.params);
-                        } else {
-                            c.params.materialize_into(&c.spec, &mut s.params);
-                        }
-                        copy_tensors_into(&s.params, &mut s.params_before);
-                    } else {
-                        extract_params_into(gp, &c.spec, &mut s.params);
-                    }
-                    let loss = c.train_local(
-                        rt,
-                        ds,
-                        cfg_ref.local_steps,
-                        cfg_ref.batch,
-                        cfg_ref.lr,
-                        &mut s.params,
-                        &mut s.x,
-                        &mut s.y,
-                    )?;
-                    let mask = if is_feddd {
-                        let mut sel_rng = c.rng.split(round_label);
-                        select_mask(
-                            policy,
-                            &c.spec,
-                            &s.params_before,
-                            &s.params,
-                            if hetero { Some(cr.as_slice()) } else { None },
-                            dropout[n],
-                            &mut sel_rng,
-                        )
-                    } else {
-                        ChannelMask::full(&c.spec)
-                    };
-                    // Client-side encode: the bytes this upload really
-                    // puts on the wire (debug-asserted <= the
-                    // upload_bytes bound).
-                    let wire =
-                        encode_upload_planes(&mask, &s.params, &c.spec, codec, plane, plane_error);
-                    // Budget-accounting payload: the serialized value
-                    // bytes under the realized planes (== the f32
-                    // `mask.payload_bytes` on the default plane).
-                    let uploaded = wire.payload_bytes();
-                    // Post-merge state handoff: nothing after a full
-                    // broadcast; else the complement-of-mask residual
-                    // (the channels the Eq. 5 download will not
-                    // overwrite).
-                    let residual = if !is_feddd || full_bc {
-                        None
-                    } else {
-                        SparseResidual::complement_of(&mask, &s.params, &c.spec)
-                    };
-                    // Eq. 7–12: the uplink is charged the *realized*
-                    // encoded bytes; the downlink the full model on
-                    // broadcast, else the Eq. 5 masked values only — the
-                    // mask is the client's own upload echoed back, so
-                    // its index/framing bytes are never re-billed
-                    // (DESIGN.md §6). The echo is always full-precision
-                    // f32 (the server merged the dequantized values), so
-                    // the sparse charge stays `mask.payload_bytes`
-                    // whatever the upload plane was.
-                    let down =
-                        downlink_bytes(full_bc, c.u_bytes(), mask.payload_bytes(&c.spec)) as f64;
-                    let timing = RoundTiming {
-                        t_down: c.profile.t_down(down),
-                        t_cmp: c
-                            .profile
-                            .t_cmp(c.samples_per_round(cfg_ref.local_steps, cfg_ref.batch)),
-                        t_up: c.profile.t_up(wire.wire_len() as f64),
-                    };
-                    Ok(ClientRoundOutput {
-                        slot: n,
-                        loss,
-                        uploaded,
-                        m_n: c.m_n() as f32,
-                        wire,
-                        residual,
-                        full_broadcast: full_bc,
-                        timing,
-                    })
-                })
-            },
-        )
-    }
-
     /// Full-model broadcast round? Round 1 always broadcasts — no client
     /// has ever received the global model, so there is nothing for a
     /// mask-sparse download to merge into — then every h-th round for
@@ -768,7 +613,7 @@ impl FedRun {
     /// truth for both round modes — the sync fold and the semi-async
     /// fresh-arrival fold must chunk identically or the cross-mode
     /// bitwise-equivalence claim breaks.
-    fn shard_len(n_items: usize) -> usize {
+    pub(crate) fn shard_len(n_items: usize) -> usize {
         debug_assert!(n_items > 0, "shard partition of zero items");
         n_items.div_ceil(AGG_SHARDS.min(n_items))
     }
@@ -809,13 +654,14 @@ impl FedRun {
     ///
     /// The shard partition over the participant list is the same pure
     /// function as ever (≤ [`AGG_SHARDS`] contiguous chunks, folded in
-    /// ascending client order, merged pairwise), but the round now trains
-    /// **micro-batch by micro-batch over the whole participant list**:
-    /// a full-width batch of clients trains in parallel, each wire upload
-    /// is absorbed into its position's shard aggregator and dropped, and
-    /// only then does the next batch materialize. Peak transient memory
-    /// is O(micro · model) while the f32/f64 summation order — hence the
-    /// result, bit for bit — is unchanged.
+    /// ascending client order, merged pairwise), and the staging +
+    /// folding now flows through the run's transport: the driver hands
+    /// a [`RoundCall`] to its [`UploadSource`] with a [`SyncFold`] sink,
+    /// and every envelope is absorbed into its position's shard
+    /// aggregator the moment it is delivered. For [`LocalTransport`]
+    /// that is exactly the old micro-batch streaming loop — peak
+    /// transient memory stays O(micro · model) and the f32/f64 summation
+    /// order (hence the result, bit for bit) is unchanged.
     fn step_round_sync(&mut self) -> anyhow::Result<RoundOutcome> {
         self.round += 1;
         let t = self.round;
@@ -832,54 +678,35 @@ impl FedRun {
         let participants = self.available_participants(participants, self.clock.now());
         let n_parts = participants.len();
 
-        // ---- 1+2+3. train / select / fold, sharded + micro-batched ----
-        let mut loss_sum = 0.0;
-        let mut uploaded = 0usize;
-        let mut wire_bytes = 0usize;
-        let mut encodings = EncodingMix::default();
-        let mut planes = PlaneMix::default();
-        // The round clock only needs max_n(t_n), and `f64::max` is
-        // order-independent — a running fold replaces the old O(fleet)
-        // timing buffer without moving a bit of the result.
-        let mut slowest = 0.0f64;
-        let mut rebases: Vec<(usize, Option<SparseResidual>)> = Vec::with_capacity(n_parts);
-        // Micro-batches span the *whole* participant list (full training
-        // fan-out width regardless of the shard partition); each output
-        // is routed to its shard aggregator by participant position, so
-        // every shard still receives exactly its contiguous range in
-        // ascending order — the same fold [`Self::shard_len`] prescribes
-        // for the semi-async fresh path.
-        let shards: Vec<Aggregator> = if n_parts == 0 {
-            vec![Aggregator::new(&self.global_spec, self.backend)]
-        } else {
-            let shard_len = Self::shard_len(n_parts);
-            let micro = self.micro_batch();
-            let mut shards: Vec<Aggregator> = (0..n_parts.div_ceil(shard_len))
-                .map(|_| Aggregator::new(&self.global_spec, self.backend))
-                .collect();
-            let mut pos = 0usize; // position in participant order
-            for micro_ids in participants.chunks(micro) {
-                let outs = self.train_and_select(t, micro_ids, &dropout, full_broadcast)?;
-                for o in outs {
-                    loss_sum += o.loss;
-                    uploaded += o.uploaded;
-                    wire_bytes += o.wire.wire_len();
-                    encodings.merge(o.wire.mix());
-                    planes.merge(o.wire.plane_mix());
-                    shards[pos / shard_len].absorb_wire(&o.wire, o.m_n)?;
-                    // The upload is folded; its buffers go back to the
-                    // encode freelist for the next micro-batch.
-                    recycle_wire_upload(o.wire);
-                    pos += 1;
-                    slowest = slowest.max(o.timing.total());
-                    rebases.push((o.slot, o.residual));
-                }
-            }
-            shards
+        // ---- 1+2+3. train / select / fold, through the transport ----
+        // The previous round's close notes ride along with the dispatch
+        // (remote agents rebase on them; the local transport has nothing
+        // to do — the driver already rebased the shared states below).
+        let notes = std::mem::take(&mut self.last_close);
+        let mut fold = SyncFold::new(&participants, &self.global_spec, self.backend);
+        let call = RoundCall {
+            round: t,
+            subset: &participants,
+            dropout: &dropout,
+            full_broadcast,
+            notes: &notes,
+            cfg: &cfg,
+            runtime: &self.runtime,
+            ds: &self.ds,
+            cr: &self.cr,
+            global: &self.global_params,
+            policy: self.policy,
+            codec: self.codec,
+            plane: self.plane,
+            plane_error: self.plane_error,
+            pool: &self.pool,
+            clients: &mut self.clients,
         };
-        let agg = Aggregator::merge(shards)?;
-        self.global_params = agg.finalize(&self.global_params, Some(&self.runtime))?;
-        let mean_loss = loss_sum / n_parts.max(1) as f64;
+        self.transport.round_uploads(call, &mut fold)?;
+        let fold = fold.finish()?;
+        self.global_params = fold.agg.finalize(&self.global_params, Some(&self.runtime))?;
+        let mean_loss = fold.loss_sum / n_parts.max(1) as f64;
+        let uploaded = fold.uploaded;
 
         // ---- 4. download merge (Eq. 5 / Eq. 6) as a state rebase ----
         // Publishing the end-of-round snapshot and handing every
@@ -893,14 +720,20 @@ impl FedRun {
         // last-participation round).
         if cfg.scheme == "feddd" {
             let snap = self.snapshots.publish(t, &self.global_params);
-            for (slot, residual) in rebases {
+            for (slot, residual) in fold.rebases {
                 self.clients[slot].params =
                     ClientParams::after_download(snap.clone(), residual);
             }
             self.enforce_ring_cap();
         }
+        // Close notes for the next dispatch: the barrier folded every
+        // participant's upload, none churned.
+        self.last_close = participants
+            .iter()
+            .map(|&slot| CloseNote { slot, churned: false })
+            .collect();
 
-        let duration = self.clock.advance_round_by(slowest);
+        let duration = self.clock.advance_round_by(fold.slowest);
 
         // Realized dropout: the byte fraction the masks actually saved.
         let mean_dropout = if cfg.scheme == "feddd" && t > 1 {
@@ -915,9 +748,9 @@ impl FedRun {
             mean_dropout,
             full_broadcast,
             uploaded_bytes: uploaded,
-            wire_bytes,
-            encodings,
-            planes,
+            wire_bytes: fold.wire_bytes,
+            encodings: fold.encodings,
+            planes: fold.planes,
             participants: n_parts,
             stragglers: 0,
             mean_staleness: 0.0,
@@ -968,24 +801,39 @@ impl FedRun {
         } else {
             0.0
         };
-        let micro = self.micro_batch();
-        for micro_ids in dispatch.chunks(micro) {
-            let outs = self.train_and_select(t, micro_ids, &dropout, full_broadcast)?;
-            for o in outs {
-                let finish = round_start + o.timing.total();
-                self.events.push(ArrivalEvent { finish, client: o.slot, dispatch_round: t });
-                self.client_clocks.dispatch(o.slot, finish);
-                self.pending.insert(
-                    o.slot,
-                    PendingUpdate {
-                        wire: o.wire,
-                        residual: o.residual,
-                        loss: o.loss,
-                        uploaded: o.uploaded,
-                        full_broadcast: o.full_broadcast,
-                    },
-                );
-            }
+        // Stage through the transport with a `DispatchSink`: every
+        // delivered envelope becomes an arrival event on the virtual
+        // clock plus a buffered `PendingUpdate` — the close logic below
+        // never knows where the upload came from. The previous round's
+        // close notes ride along (remote agents rebase on them).
+        let notes = std::mem::take(&mut self.last_close);
+        {
+            let call = RoundCall {
+                round: t,
+                subset: &dispatch,
+                dropout: &dropout,
+                full_broadcast,
+                notes: &notes,
+                cfg: &cfg,
+                runtime: &self.runtime,
+                ds: &self.ds,
+                cr: &self.cr,
+                global: &self.global_params,
+                policy: self.policy,
+                codec: self.codec,
+                plane: self.plane,
+                plane_error: self.plane_error,
+                pool: &self.pool,
+                clients: &mut self.clients,
+            };
+            let mut sink = DispatchSink {
+                round: t,
+                round_start,
+                events: &mut self.events,
+                clocks: &mut self.client_clocks,
+                pending: &mut self.pending,
+            };
+            self.transport.round_uploads(call, &mut sink)?;
         }
 
         // ---- 2. close the round: arrival quorum K or deadline ----
@@ -1034,6 +882,7 @@ impl FedRun {
         // (`simnet::churn_drops`), so no engine RNG state is consumed and
         // replays stay bitwise-identical for every worker count.
         let mut churned = 0usize;
+        let mut churned_slots: Vec<usize> = Vec::new();
         if self.trace == AvailabilityTrace::Churn && cfg.churn_rate > 0.0 {
             arrivals.retain(|ev| {
                 if churn_drops(cfg.seed, ev.client, ev.dispatch_round, cfg.churn_rate) {
@@ -1043,6 +892,7 @@ impl FedRun {
                         .expect("churned arrival without a pending upload");
                     recycle_wire_upload(pu.wire);
                     churned += 1;
+                    churned_slots.push(ev.client);
                     false
                 } else {
                     true
@@ -1137,6 +987,17 @@ impl FedRun {
             }
         }
 
+        // Close notes for the next dispatch: everything that left flight
+        // this round — folded arrivals plus churn drops — ascending by
+        // slot (a slot cannot be both: churn removed it from `arrivals`).
+        let mut closes: Vec<CloseNote> = arrivals
+            .iter()
+            .map(|ev| CloseNote { slot: ev.client, churned: false })
+            .collect();
+        closes.extend(churned_slots.into_iter().map(|slot| CloseNote { slot, churned: true }));
+        closes.sort_unstable_by_key(|c| c.slot);
+        self.last_close = closes;
+
         // ---- 5. advance the server clock to the close time ----
         let duration = self.clock.advance_to(t_close);
         let folded = arrivals.len();
@@ -1197,6 +1058,110 @@ impl FedRun {
             delta: self.cfg.delta,
         };
         Ok(allocate_fast(&inputs, &params)?.d)
+    }
+
+    /// Agent side of serve mode, step 1 of a dispatch: install the
+    /// server's post-close global (the round-`round` download base),
+    /// then apply the relayed close notes — each noted slot's upload
+    /// left flight on the server at the end of round `round - 1`, so the
+    /// local replica rebases exactly as the in-process engine would
+    /// have. A churned note just drops the pending record (the client
+    /// keeps its pre-dispatch base); a folded note rebases onto the
+    /// incoming global, which *is* the snapshot the server published at
+    /// that close. Serve mode pins `snapshot_ring_cap == 0`, so no
+    /// eviction pass runs here.
+    ///
+    /// `pendings` is the agent's record of its own dispatched-but-open
+    /// uploads, keyed by slot (see [`AgentPending`]).
+    pub fn install_dispatch_base(
+        &mut self,
+        round: usize,
+        global: Vec<Tensor>,
+        notes: &[CloseNote],
+        pendings: &mut BTreeMap<usize, AgentPending>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            global.len() == self.global_params.len(),
+            "dispatch global has {} tensors, model has {}",
+            global.len(),
+            self.global_params.len()
+        );
+        for (got, have) in global.iter().zip(&self.global_params) {
+            anyhow::ensure!(
+                got.shape() == have.shape(),
+                "dispatch tensor shape {:?} != model shape {:?}",
+                got.shape(),
+                have.shape()
+            );
+        }
+        self.global_params = global;
+        if notes.is_empty() {
+            return Ok(());
+        }
+        let rebase = self.cfg.scheme == "feddd" && notes.iter().any(|n| !n.churned);
+        let snap =
+            rebase.then(|| self.snapshots.publish(round.saturating_sub(1), &self.global_params));
+        for note in notes {
+            let Some(p) = pendings.remove(&note.slot) else {
+                anyhow::bail!("close note for slot {} without a pending dispatch", note.slot);
+            };
+            if note.churned {
+                continue;
+            }
+            if let Some(snap) = &snap {
+                self.clients[note.slot].params = if p.full_broadcast {
+                    ClientParams::synced(snap.clone())
+                } else {
+                    ClientParams::after_download(snap.clone(), p.residual)
+                };
+            }
+        }
+        Ok(())
+    }
+
+    /// Agent side of serve mode, step 2 of a dispatch: train the
+    /// dispatched subset of locally hosted slots and deliver the
+    /// envelopes to `sink` (which ships them to the server and records
+    /// each one's [`AgentPending`]), staged by the exact code
+    /// [`LocalTransport`] runs in-process — same micro-batching, same
+    /// RNG streams, same ascending order.
+    pub fn stage_for_dispatch(
+        &mut self,
+        round: usize,
+        full_broadcast: bool,
+        subset: &[usize],
+        dropout: &[f64],
+        sink: &mut dyn UploadSink,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            dropout.len() == self.clients.len(),
+            "dropout vector has {} rates for {} clients",
+            dropout.len(),
+            self.clients.len()
+        );
+        if let Some(&last) = subset.last() {
+            anyhow::ensure!(last < self.clients.len(), "dispatched slot {last} out of range");
+        }
+        let cfg = self.cfg.clone();
+        let mut call = RoundCall {
+            round,
+            subset,
+            dropout,
+            full_broadcast,
+            notes: &[],
+            cfg: &cfg,
+            runtime: &self.runtime,
+            ds: &self.ds,
+            cr: &self.cr,
+            global: &self.global_params,
+            policy: self.policy,
+            codec: self.codec,
+            plane: self.plane,
+            plane_error: self.plane_error,
+            pool: &self.pool,
+            clients: &mut self.clients,
+        };
+        drive_subset(&mut call, sink)
     }
 
     /// Run the full experiment.

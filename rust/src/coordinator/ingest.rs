@@ -1,0 +1,500 @@
+//! The ingest layer: everything between "the driver picked a participant
+//! set" and "the driver folds uploads" lives behind the
+//! [`UploadSource`]/[`UploadSink`] trait pair, so the round drivers in
+//! `engine.rs` never know whether a client trained on a worker thread in
+//! this process ([`LocalTransport`]) or shipped its checksummed
+//! `WireUpload` over a TCP connection (`transport::ServeCoordinator`).
+//!
+//! # Contract
+//!
+//! Per round the driver builds a [`RoundCall`] — the participant subset
+//! (strictly ascending), the Eq. 16/17 dropout rates, the broadcast
+//! phase, the previous round's [`CloseNote`]s and the shared stage
+//! context — and hands it to the run's [`UploadSource`] together with a
+//! [`UploadSink`]. The source produces one [`UploadEnvelope`] per subset
+//! slot and **must deliver them in ascending client order**: every
+//! downstream f32/f64 accumulation (the Eq. 4 shard folds, the loss sum)
+//! runs in delivery order, so ascending delivery is what makes a round
+//! bitwise identical across transports, worker counts and arrival
+//! interleavings. [`LocalTransport`] gets the order for free from
+//! [`ThreadPool::scoped_try_map`]; a socket transport must reorder
+//! arrivals before delivering.
+//!
+//! The two driver-side sinks mirror the two round modes: `SyncFold`
+//! absorbs each envelope into its Eq. 4 shard aggregator the moment it is
+//! delivered (micro-batch streaming — encoded uploads never accumulate
+//! fleet-wide), `DispatchSink` turns each envelope into an arrival event
+//! on the virtual clock (DESIGN.md §7). Both replicate the pre-split
+//! accumulation order operation for operation; the determinism batteries
+//! (`parallel_round`, `semi_async`, `pool_determinism`,
+//! `wire_equivalence`) are the acceptance test.
+
+use std::collections::BTreeMap;
+
+use crate::aggregation::{AggBackend, Aggregator};
+use crate::codec::{
+    encode_upload_planes, recycle_wire_upload, CodecMode, EncodingMix, PlaneMix, PlaneMode,
+    WireUpload,
+};
+use crate::config::ExpConfig;
+use crate::data::FedDataset;
+use crate::model::{extract_params_into, ModelSpec};
+use crate::runtime::Runtime;
+use crate::selection::{select_mask, ChannelMask, Policy};
+use crate::simnet::{downlink_bytes, ArrivalEvent, ClientClocks, EventQueue, RoundTiming};
+use crate::tensor::{copy_tensors_into, Tensor};
+use crate::util::threadpool::ThreadPool;
+
+use super::client::{ClientState, PendingUpdate};
+use super::engine::FedRun;
+use super::scratch;
+use super::state::{ClientParams, SparseResidual};
+
+/// Per-participant output of the client stage, in transit from a
+/// transport to the round driver: the encoded wire upload (the bytes the
+/// uplink is charged for, folded by `absorb_wire` without any dense
+/// expansion), the Eq. 7–12 timing, and the post-round state handoff
+/// (the complement-of-mask residual). Envelopes decoded off a socket
+/// carry `residual: None` — the residual stays on the agent that
+/// trained, which rebases from its own copy (see `transport::agent`).
+#[derive(Debug)]
+pub struct UploadEnvelope {
+    /// Client index.
+    pub slot: usize,
+    pub loss: f64,
+    /// Masked value payload bytes (`ChannelMask::payload_bytes`) — the
+    /// budget-accounting column and the Eq. 5 sparse-download charge.
+    pub uploaded: usize,
+    /// Aggregation weight m_n (the client's sample count).
+    pub m_n: f32,
+    /// The encoded upload; `wire.wire_len()` is the realized wire bytes.
+    pub wire: WireUpload,
+    /// The residual this client keeps once its download merges (`None` ⇒
+    /// collapse to `Synced`; always `None` off the wire).
+    pub residual: Option<SparseResidual>,
+    /// Whether this client's download was charged as a full broadcast
+    /// (the round's phase, or forced for a first-ever dispatch).
+    pub full_broadcast: bool,
+    /// Eq. 7–12 latencies of this dispatch.
+    pub timing: RoundTiming,
+}
+
+/// End-of-round notification for one client whose upload the previous
+/// round folded (or dropped to churn). A remote transport relays these
+/// on the next dispatch so agents rebase their replicas exactly when an
+/// in-process client would; [`LocalTransport`] ignores them (the driver
+/// already rebased the shared `ClientState`s directly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CloseNote {
+    /// Client index whose pending upload left flight.
+    pub slot: usize,
+    /// `true` ⇒ the upload was dropped by arrival-time churn: the client
+    /// keeps its pre-dispatch base instead of rebasing.
+    pub churned: bool,
+}
+
+/// One round's staging request: everything a transport needs to produce
+/// the subset's [`UploadEnvelope`]s, borrowed disjointly from the
+/// [`FedRun`] for the duration of the call.
+pub struct RoundCall<'a> {
+    /// Round number `t` (1-based; also the mask-selection RNG label).
+    pub round: usize,
+    /// Participants to stage, strictly ascending client ids.
+    pub subset: &'a [usize],
+    /// Eq. 16/17 dropout rates indexed by **absolute** client id.
+    pub dropout: &'a [f64],
+    /// Whether this round's download phase is a full-model broadcast.
+    pub full_broadcast: bool,
+    /// Close notifications from the previous round (ascending by slot).
+    pub notes: &'a [CloseNote],
+    pub cfg: &'a ExpConfig,
+    pub runtime: &'a Runtime,
+    pub ds: &'a FedDataset,
+    /// Coverage rates CR(k) per (layer, unit) of the global model.
+    pub cr: &'a [Vec<f32>],
+    /// The current global parameters (the round's download base).
+    pub global: &'a [Tensor],
+    pub policy: Policy,
+    pub codec: CodecMode,
+    pub plane: PlaneMode,
+    pub plane_error: f64,
+    pub pool: &'a ThreadPool,
+    pub clients: &'a mut [ClientState],
+}
+
+/// Where a transport pushes staged uploads, one envelope per subset slot,
+/// **in ascending client order** (see the module docs for why the order
+/// is load-bearing).
+pub trait UploadSink {
+    fn deliver(&mut self, env: UploadEnvelope) -> anyhow::Result<()>;
+}
+
+/// A round-upload transport: given one round's [`RoundCall`], produce the
+/// subset's envelopes and deliver them to the sink in ascending client
+/// order. Implementations: [`LocalTransport`] (in-process, the default)
+/// and `transport::ServeCoordinator` (TCP agents).
+pub trait UploadSource: Send {
+    fn round_uploads(
+        &mut self,
+        call: RoundCall<'_>,
+        sink: &mut dyn UploadSink,
+    ) -> anyhow::Result<()>;
+
+    /// Tear down transport resources (connections, acceptor threads) at
+    /// the end of a run. The in-process default has nothing to close.
+    fn shutdown(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// The default in-process transport: trains the subset on the run's own
+/// worker pool, micro-batch by micro-batch, and delivers each envelope
+/// as it is produced. Bitwise-identical to the pre-split engine — the
+/// staging closure, the micro-batch partition and the delivery order are
+/// all unchanged.
+pub struct LocalTransport;
+
+impl UploadSource for LocalTransport {
+    fn round_uploads(
+        &mut self,
+        mut call: RoundCall<'_>,
+        sink: &mut dyn UploadSink,
+    ) -> anyhow::Result<()> {
+        drive_subset(&mut call, sink)
+    }
+}
+
+/// Micro-batch size of the per-client worker stage: enough items to keep
+/// every worker busy, small enough that the transient dense models and
+/// encoded uploads stay O(micro), never O(fleet). Numerics are
+/// independent of this value (each client is a pure function of its own
+/// state, and all downstream accumulations run in ascending client order
+/// regardless of the batch partition).
+pub(crate) fn micro_batch(pool: &ThreadPool) -> usize {
+    (pool.workers() * 4).max(32)
+}
+
+/// Stage the whole subset micro-batch by micro-batch, delivering each
+/// envelope in ascending client order. Shared by [`LocalTransport`] and
+/// the agent side of the socket transport ([`FedRun::stage_for_dispatch`]).
+pub(crate) fn drive_subset(
+    call: &mut RoundCall<'_>,
+    sink: &mut dyn UploadSink,
+) -> anyhow::Result<()> {
+    let subset = call.subset;
+    let micro = micro_batch(call.pool);
+    for chunk in subset.chunks(micro) {
+        for env in stage_clients(call, chunk)? {
+            sink.deliver(env)?;
+        }
+    }
+    Ok(())
+}
+
+/// Local training + mask selection for the given clients, fanned over
+/// the worker pool; outputs come back in ascending client order.
+///
+/// Every listed client is an independent work item: it owns a disjoint
+/// `&mut ClientState` (its virtualized params, RNG stream, loss
+/// bookkeeping), materializes its dense model (FedDD: snapshot +
+/// residual; baselines: re-extracted from the current global), trains
+/// against the shared thread-safe runtime, selects its upload mask,
+/// encodes the wire upload, gathers its post-round residual and
+/// computes its Eq. 7–12 timing. `scoped_try_map` returns outputs in
+/// input (= ascending client) order, so downstream f64 accumulations
+/// run in the same order for every worker count.
+pub(crate) fn stage_clients(
+    call: &mut RoundCall<'_>,
+    subset: &[usize],
+) -> anyhow::Result<Vec<UploadEnvelope>> {
+    let cfg = call.cfg;
+    let is_feddd = cfg.scheme == "feddd";
+    let hetero = cfg.is_hetero();
+    let round_label = call.round as u64;
+    let rt = call.runtime;
+    let ds = call.ds;
+    let cr = call.cr;
+    let gp = call.global;
+    let policy = call.policy;
+    let codec = call.codec;
+    let plane = call.plane;
+    let plane_error = call.plane_error;
+    let dropout = call.dropout;
+    let round_full_broadcast = call.full_broadcast;
+    // Gather the disjoint `&mut ClientState` items by walking the fleet
+    // slice once over the (ascending) subset — O(subset), not O(fleet):
+    // with micro-batching this runs many times per round, so a
+    // fleet-wide scan per call would be O(fleet²/micro).
+    let mut items: Vec<(usize, &mut ClientState)> = Vec::with_capacity(subset.len());
+    let mut rest: &mut [ClientState] = &mut *call.clients;
+    let mut base = 0usize;
+    for &n in subset {
+        // Release-mode assert: the walk's `n - base` would otherwise
+        // wrap on an unsorted subset and die far from the cause.
+        assert!(n >= base, "subset must be strictly ascending (got {n} after {base})");
+        let taken = std::mem::take(&mut rest);
+        let (_, tail) = taken.split_at_mut(n - base);
+        let (c, after) = tail.split_first_mut().expect("subset id out of range");
+        items.push((n, c));
+        rest = after;
+        base = n + 1;
+    }
+    call.pool.scoped_try_map(
+        items,
+        |(n, c): (usize, &mut ClientState)| -> anyhow::Result<UploadEnvelope> {
+            // The whole job runs against the worker's persistent
+            // scratch arena: the dense materialization target, the
+            // pre-training copy and the batch buffers are reused
+            // across micro-batches and rounds (every consumer fully
+            // overwrites what it reads — see `coordinator::scratch`;
+            // `pool_determinism.rs` sentinel-poisons the arenas
+            // between rounds to prove no stale byte leaks through).
+            scratch::with_scratch(|s| -> anyhow::Result<UploadEnvelope> {
+                // A first-ever dispatch always downloads the full
+                // model: the client has never held the global, so a
+                // mask-sparse slice would merge into nothing. A
+                // ring-cap-evicted client is in the same boat — its
+                // base snapshot is gone, so it is force-re-synced
+                // with a full download charged to its link.
+                let evicted = matches!(c.params, ClientParams::Evicted);
+                let full_bc = round_full_broadcast || c.participations == 0 || evicted;
+                // Materialize the dense model for this round only
+                // (the baselines re-sync to the current global at
+                // dispatch and never select, so they skip the
+                // pre-training copy; an evicted FedDD client re-syncs
+                // from the live global like a baseline would).
+                if is_feddd {
+                    if evicted {
+                        extract_params_into(gp, &c.spec, &mut s.params);
+                    } else {
+                        c.params.materialize_into(&c.spec, &mut s.params);
+                    }
+                    copy_tensors_into(&s.params, &mut s.params_before);
+                } else {
+                    extract_params_into(gp, &c.spec, &mut s.params);
+                }
+                let loss = c.train_local(
+                    rt,
+                    ds,
+                    cfg.local_steps,
+                    cfg.batch,
+                    cfg.lr,
+                    &mut s.params,
+                    &mut s.x,
+                    &mut s.y,
+                )?;
+                let mask = if is_feddd {
+                    let mut sel_rng = c.rng.split(round_label);
+                    select_mask(
+                        policy,
+                        &c.spec,
+                        &s.params_before,
+                        &s.params,
+                        if hetero { Some(cr) } else { None },
+                        dropout[n],
+                        &mut sel_rng,
+                    )
+                } else {
+                    ChannelMask::full(&c.spec)
+                };
+                // Client-side encode: the bytes this upload really
+                // puts on the wire (debug-asserted <= the
+                // upload_bytes bound).
+                let wire =
+                    encode_upload_planes(&mask, &s.params, &c.spec, codec, plane, plane_error);
+                // Budget-accounting payload: the serialized value
+                // bytes under the realized planes (== the f32
+                // `mask.payload_bytes` on the default plane).
+                let uploaded = wire.payload_bytes();
+                // Post-merge state handoff: nothing after a full
+                // broadcast; else the complement-of-mask residual
+                // (the channels the Eq. 5 download will not
+                // overwrite).
+                let residual = if !is_feddd || full_bc {
+                    None
+                } else {
+                    SparseResidual::complement_of(&mask, &s.params, &c.spec)
+                };
+                // Eq. 7–12: the uplink is charged the *realized*
+                // encoded bytes; the downlink the full model on
+                // broadcast, else the Eq. 5 masked values only — the
+                // mask is the client's own upload echoed back, so
+                // its index/framing bytes are never re-billed
+                // (DESIGN.md §6). The echo is always full-precision
+                // f32 (the server merged the dequantized values), so
+                // the sparse charge stays `mask.payload_bytes`
+                // whatever the upload plane was.
+                let down =
+                    downlink_bytes(full_bc, c.u_bytes(), mask.payload_bytes(&c.spec)) as f64;
+                let timing = RoundTiming {
+                    t_down: c.profile.t_down(down),
+                    t_cmp: c.profile.t_cmp(c.samples_per_round(cfg.local_steps, cfg.batch)),
+                    t_up: c.profile.t_up(wire.wire_len() as f64),
+                };
+                Ok(UploadEnvelope {
+                    slot: n,
+                    loss,
+                    uploaded,
+                    m_n: c.m_n() as f32,
+                    wire,
+                    residual,
+                    full_broadcast: full_bc,
+                    timing,
+                })
+            })
+        },
+    )
+}
+
+/// The synchronous driver's sink: absorbs every delivered envelope into
+/// its position's Eq. 4 shard aggregator the moment it arrives and
+/// recycles the wire buffers, replicating the pre-split fold loop
+/// operation for operation (loss/byte sums, encoding/plane mixes, the
+/// running `max` round clock, the rebase list — all in delivery order).
+pub(crate) struct SyncFold<'a> {
+    subset: &'a [usize],
+    shard_len: usize,
+    shards: Vec<Aggregator>,
+    /// Position in subset order (== deliveries so far).
+    pos: usize,
+    loss_sum: f64,
+    uploaded: usize,
+    wire_bytes: usize,
+    encodings: EncodingMix,
+    planes: PlaneMix,
+    slowest: f64,
+    rebases: Vec<(usize, Option<SparseResidual>)>,
+}
+
+/// What [`SyncFold::finish`] hands back to the driver.
+pub(crate) struct SyncFoldOut {
+    pub(crate) agg: Aggregator,
+    pub(crate) loss_sum: f64,
+    pub(crate) uploaded: usize,
+    pub(crate) wire_bytes: usize,
+    pub(crate) encodings: EncodingMix,
+    pub(crate) planes: PlaneMix,
+    pub(crate) slowest: f64,
+    pub(crate) rebases: Vec<(usize, Option<SparseResidual>)>,
+}
+
+impl<'a> SyncFold<'a> {
+    pub(crate) fn new(subset: &'a [usize], spec: &ModelSpec, backend: AggBackend) -> SyncFold<'a> {
+        // Empty round: a single empty aggregator, merged and finalized
+        // like always (finalize keeps the previous global untouched).
+        let (n_shards, shard_len) = if subset.is_empty() {
+            (1, 1)
+        } else {
+            let len = FedRun::shard_len(subset.len());
+            (subset.len().div_ceil(len), len)
+        };
+        SyncFold {
+            subset,
+            shard_len,
+            shards: (0..n_shards).map(|_| Aggregator::new(spec, backend)).collect(),
+            pos: 0,
+            loss_sum: 0.0,
+            uploaded: 0,
+            wire_bytes: 0,
+            encodings: EncodingMix::default(),
+            planes: PlaneMix::default(),
+            slowest: 0.0,
+            rebases: Vec::with_capacity(subset.len()),
+        }
+    }
+
+    pub(crate) fn finish(self) -> anyhow::Result<SyncFoldOut> {
+        anyhow::ensure!(
+            self.pos == self.subset.len(),
+            "sync round closed with {} of {} uploads delivered",
+            self.pos,
+            self.subset.len()
+        );
+        Ok(SyncFoldOut {
+            agg: Aggregator::merge(self.shards)?,
+            loss_sum: self.loss_sum,
+            uploaded: self.uploaded,
+            wire_bytes: self.wire_bytes,
+            encodings: self.encodings,
+            planes: self.planes,
+            slowest: self.slowest,
+            rebases: self.rebases,
+        })
+    }
+}
+
+impl UploadSink for SyncFold<'_> {
+    fn deliver(&mut self, env: UploadEnvelope) -> anyhow::Result<()> {
+        let expected = self.subset.get(self.pos).copied();
+        anyhow::ensure!(
+            expected == Some(env.slot),
+            "upload for slot {} delivered at position {} (expected {:?}) — \
+             sources must deliver the subset in ascending order",
+            env.slot,
+            self.pos,
+            expected
+        );
+        self.loss_sum += env.loss;
+        self.uploaded += env.uploaded;
+        self.wire_bytes += env.wire.wire_len();
+        self.encodings.merge(env.wire.mix());
+        self.planes.merge(env.wire.plane_mix());
+        self.shards[self.pos / self.shard_len].absorb_wire(&env.wire, env.m_n)?;
+        // The upload is folded; its buffers go back to the encode
+        // freelist for the next micro-batch.
+        recycle_wire_upload(env.wire);
+        self.pos += 1;
+        self.slowest = self.slowest.max(env.timing.total());
+        self.rebases.push((env.slot, env.residual));
+        Ok(())
+    }
+}
+
+/// The semi-asynchronous driver's sink: every delivered envelope becomes
+/// an arrival event on the virtual clock (DESIGN.md §7) — the client's
+/// own finish instant on the min-heap, a busy-until mark on its clock,
+/// and a buffered [`PendingUpdate`] for the fold at whichever round's
+/// close observes the arrival.
+pub(crate) struct DispatchSink<'a> {
+    /// Dispatch round `t`.
+    pub(crate) round: usize,
+    /// Virtual time the round opened at.
+    pub(crate) round_start: f64,
+    pub(crate) events: &'a mut EventQueue,
+    pub(crate) clocks: &'a mut ClientClocks,
+    pub(crate) pending: &'a mut BTreeMap<usize, PendingUpdate>,
+}
+
+impl UploadSink for DispatchSink<'_> {
+    fn deliver(&mut self, env: UploadEnvelope) -> anyhow::Result<()> {
+        let finish = self.round_start + env.timing.total();
+        self.events.push(ArrivalEvent {
+            finish,
+            client: env.slot,
+            dispatch_round: self.round,
+        });
+        self.clocks.dispatch(env.slot, finish);
+        self.pending.insert(
+            env.slot,
+            PendingUpdate {
+                wire: env.wire,
+                residual: env.residual,
+                loss: env.loss,
+                uploaded: env.uploaded,
+                full_broadcast: env.full_broadcast,
+            },
+        );
+        Ok(())
+    }
+}
+
+/// Agent-side record of a dispatched-but-unclosed upload (serve mode):
+/// the residual and broadcast flag the agent's replica needs to rebase
+/// itself when the close note arrives — the exact payload a
+/// [`PendingUpdate`] carries for the in-process engine, minus the wire
+/// (which shipped to the server).
+#[derive(Debug)]
+pub struct AgentPending {
+    pub residual: Option<SparseResidual>,
+    pub full_broadcast: bool,
+}

@@ -11,6 +11,11 @@
 
 mod client;
 mod engine;
+// The transport-agnostic ingest layer: round drivers consume uploads
+// through the `UploadSource`/`UploadSink` traits, with `LocalTransport`
+// (in-process staging) as the default implementation and the socket
+// transport (`crate::transport`) as the serve-mode one.
+mod ingest;
 // Per-worker scratch arenas are module-internal: jobs reach them through
 // `scratch::with_scratch` on their own thread, and tests poison them
 // through `FedRun::poison_worker_scratch` (which covers *every* worker —
@@ -20,4 +25,5 @@ mod state;
 
 pub use client::*;
 pub use engine::*;
+pub use ingest::*;
 pub use state::*;

@@ -82,6 +82,18 @@
 //! Federated Dropout (Caldas et al., arXiv:1812.07210) and Adaptive
 //! Federated Dropout (Bouacida et al., arXiv:2011.04050).
 //!
+//! # Serve mode (`transport`)
+//!
+//! The round engine is transport-agnostic: drivers consume uploads
+//! through the `coordinator::ingest` trait seam, with the in-process
+//! `LocalTransport` as the default and [`transport`] as the socket-backed
+//! implementation (`std::net` TCP, no new dependencies). `feddd serve`
+//! binds the coordinator, `feddd agent` connects with a slot range,
+//! rebuilds a bitwise replica of the run from the CONFIG frame, and
+//! trains its slots on dispatch; a loopback serve reproduces the
+//! in-process run's losses, accuracies and wire bytes exactly
+//! (`rust/tests/serve_loopback.rs`, DESIGN.md §Serve).
+//!
 //! See `DESIGN.md` for the experiment index mapping every paper figure and
 //! table to a module and a `feddd figure <id>` command.
 
@@ -101,6 +113,7 @@ pub mod selection;
 pub mod simnet;
 pub mod solver;
 pub mod tensor;
+pub mod transport;
 pub mod util;
 
 /// Commonly used items.

@@ -8,6 +8,10 @@
 //! * `matrix [--tier smoke] | --list | --compare A.json B.json` — run the
 //!   scenario-matrix harness (`feddd::scenarios`, docs/SCENARIOS.md) and
 //!   emit per-cell reports, or diff two reports regression-only.
+//! * `serve [--listen host:port ...]` — bind the coordinator on a real
+//!   socket and run the experiment against remote `agent` processes.
+//! * `agent --connect host:port [--slot_start N] [--slot_count N]` — host
+//!   a slot range of the fleet for a `serve` coordinator.
 //! * `inspect models|config|manifest` — print registry/config/manifest.
 //! * `help`
 
@@ -15,7 +19,8 @@ use std::path::Path;
 
 use feddd::cli::Args;
 use feddd::config::ExpConfig;
-use feddd::coordinator::run_experiment;
+use feddd::coordinator::{run_experiment, FedRun};
+use feddd::transport::{run_agent, AgentOpts, BoundServer, ServeOpts};
 use feddd::figures;
 use feddd::model::{all_model_names, ModelSpec};
 use feddd::scenarios;
@@ -32,6 +37,9 @@ USAGE:
                 [--seeds 17,18] [--label name] [--workers N] [--out reports/]
   feddd matrix  --list
   feddd matrix  --compare BASELINE.json CURRENT.json [--tol_acc 0.01] [--out diff.md]
+  feddd serve   [--preset ...] [--key value ...] [--listen 127.0.0.1:7070] [--out results/]
+  feddd agent   --connect HOST:PORT [--slot_start N] [--slot_count N]
+                [--workers N] [--artifacts_dir DIR]
   feddd inspect models|config|manifest [--preset ...]
   feddd help
 
@@ -41,7 +49,7 @@ a_server delta h train_per_client test_n fleet eval_every agg_backend
 rare_classes rare_ratio artifacts_dir oort_alpha alloc workers
 round_mode quorum deadline_s staleness_beta codec value_plane
 plane_error data_mode snapshot_ring_cap trace trace_period_s
-churn_rate.
+churn_rate listen max_conns ingest_queue.
 
 `--value_plane f32|f16|i8|auto` picks the wire value plane for uploads
 (README §Codec): `auto` chooses the smallest plane per layer whose
@@ -73,6 +81,18 @@ Fleet size is the `--n_clients` knob; client state is virtualized
 large-fleet defaults (10k clients, width-25% MLP, h=1); e.g.
 `feddd train --preset fleet --n_clients 50000`.
 
+`feddd serve` binds the coordinator on `--listen` (port 0 = ephemeral;
+the resolved address is written to <out>/serve_addr.txt before
+accepting) and waits until connecting agents cover slots 0..n_clients
+exactly; `feddd agent` connects, receives the config over the wire,
+rebuilds a bitwise replica of the run and trains its slot range
+(`--slot_count` omitted = everything from `--slot_start` up). A
+loopback serve reproduces the in-process run's losses, accuracies and
+wire bytes exactly (DESIGN.md §Serve). `--max_conns` caps connection
+attempts; `--ingest_queue` bounds the server's decoded-upload buffer —
+a slow server blocks agents through TCP backpressure instead of
+buffering without limit. Serve requires snapshot_ring_cap = 0.
+
 Artifacts must be built first (`make artifacts`), or use a native-exec
 manifest (runtime::write_native_manifest) for FC models without XLA.
 ";
@@ -95,6 +115,8 @@ fn real_main() -> anyhow::Result<()> {
         "train" => cmd_train(&args),
         "figure" => cmd_figure(&args),
         "matrix" => cmd_matrix(&args),
+        "serve" => cmd_serve(&args),
+        "agent" => cmd_agent(&args),
         "inspect" => cmd_inspect(&args),
         other => anyhow::bail!("unknown command {other:?}\n{HELP}"),
     }
@@ -239,6 +261,83 @@ fn cmd_matrix(args: &Args) -> anyhow::Result<()> {
         json_path.display(),
         report.cells.len(),
         out_dir.join("INDEX.md").display()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let (mut cfg, leftover) = args.to_config()?;
+    anyhow::ensure!(leftover.is_empty(), "unknown options: {leftover:?}");
+    artifacts_default(&mut cfg);
+    let out_dir = Path::new(args.get_or("out", "results")).to_path_buf();
+    std::fs::create_dir_all(&out_dir)?;
+    // Like the smoke matrix, serve must run on hosts with no compiled
+    // artifacts: fall back to an on-the-fly native-exec manifest.
+    if !Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        let native = out_dir.join("native_artifacts");
+        feddd::runtime::write_native_manifest(&native, &[("mlp", 1.0), ("mlp", 0.25)], 16, 64)?;
+        log::info!("no compiled artifacts; using native manifest at {}", native.display());
+        cfg.artifacts_dir = native.to_string_lossy().into_owned();
+    }
+    anyhow::ensure!(
+        cfg.snapshot_ring_cap == 0,
+        "serve mode requires snapshot_ring_cap = 0 (uncapped); remote replicas rebase from \
+         close notes and must never evict"
+    );
+    cfg.validate()?;
+    let opts = ServeOpts::from_config(&cfg);
+    let bound = BoundServer::bind(&opts)?;
+    // Publish the resolved address *before* accepting, so scripts that
+    // asked for an ephemeral port (`--listen 127.0.0.1:0`) can find us.
+    let addr_path = out_dir.join("serve_addr.txt");
+    std::fs::write(&addr_path, format!("{}\n", bound.local_addr))?;
+    println!("listening on {} ({})", bound.local_addr, addr_path.display());
+    log::info!("config: {}", cfg.to_json().to_string_compact());
+    let coordinator = bound.accept_agents(&opts, &cfg)?;
+    let mut run = FedRun::with_transport(cfg.clone(), Box::new(coordinator))?;
+    let result = run.run()?;
+    run.shutdown_transport()?;
+    println!(
+        "final accuracy: {:.4}  (virtual time {:.1}s, wall {:.1}s)",
+        result.final_accuracy().unwrap_or(0.0),
+        result.evals.last().map(|e| e.v_time).unwrap_or(0.0),
+        result.wall_seconds
+    );
+    let body = feddd::util::json::Json::obj(vec![
+        ("config", cfg.to_json()),
+        ("result", result.to_json()),
+    ]);
+    let path = out_dir.join("serve.json");
+    json::to_file(&path, &body)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_agent(args: &Args) -> anyhow::Result<()> {
+    let connect = args.get("connect").ok_or_else(|| {
+        anyhow::anyhow!("usage: feddd agent --connect HOST:PORT [--slot_start N] [--slot_count N]")
+    })?;
+    let mut overrides = Vec::new();
+    for key in ["workers", "artifacts_dir"] {
+        if let Some(v) = args.get(key) {
+            overrides.push((key.to_string(), v.to_string()));
+        }
+    }
+    let opts = AgentOpts {
+        connect: connect.to_string(),
+        slot_start: args.get_usize("slot_start")?.unwrap_or(0),
+        slot_count: args.get_usize("slot_count")?,
+        overrides,
+    };
+    let report = run_agent(&opts)?;
+    println!(
+        "agent done: slots {}..{}, {} rounds, {} uploads ({} bytes), {} acks",
+        report.slot_start,
+        report.slot_start + report.slot_count,
+        report.rounds,
+        report.uploads,
+        report.upload_bytes,
+        report.acks
     );
     Ok(())
 }

@@ -1,0 +1,167 @@
+//! Serve-mode agent: connect, receive the experiment config, build a
+//! bitwise replica of the server's run, then train dispatched slots and
+//! stream the uploads back (DESIGN.md §Serve).
+//!
+//! The agent never advances rounds itself — the server's DISPATCH frames
+//! are the clock. Each one carries the fresh global, the previous
+//! round's close notes for this agent's slots (rebased through
+//! `FedRun::install_dispatch_base`) and the dispatch list (staged through
+//! `FedRun::stage_for_dispatch`, the exact code the in-process transport
+//! runs). Residuals never cross the wire: they wait in the agent's
+//! [`AgentPending`] ledger until their close note arrives.
+
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+
+use crate::codec::recycle_wire_upload;
+use crate::config::ExpConfig;
+use crate::coordinator::{AgentPending, FedRun, UploadEnvelope, UploadSink};
+use crate::util::json;
+
+use super::frame::{
+    read_frame, write_frame, AckFrame, ConfigFrame, DispatchFrame, Hello, UploadFrame, FT_ACK,
+    FT_CONFIG, FT_DISPATCH, FT_DONE, FT_HELLO, FT_UPLOAD, MAX_FRAME_BYTES,
+};
+
+/// Client-side knobs for [`run_agent`].
+#[derive(Clone, Debug)]
+pub struct AgentOpts {
+    /// Server `host:port`.
+    pub connect: String,
+    /// First slot this agent volunteers to host.
+    pub slot_start: usize,
+    /// Slots to host; `None` claims everything from `slot_start` through
+    /// the end of the fleet.
+    pub slot_count: Option<usize>,
+    /// `ExpConfig::set` overrides applied to the received config before
+    /// the replica is built. Only host-local knobs (`workers`,
+    /// `artifacts_dir`) are safe: anything that changes the experiment
+    /// desynchronizes the replica, and the server's m_n cross-check will
+    /// refuse the uploads.
+    pub overrides: Vec<(String, String)>,
+}
+
+/// What [`run_agent`] did, for logs and the CLI summary line.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AgentReport {
+    pub slot_start: usize,
+    pub slot_count: usize,
+    /// DISPATCH frames processed (one per server round).
+    pub rounds: usize,
+    /// Uploads sent.
+    pub uploads: usize,
+    /// Total UPLOAD frame payload bytes written.
+    pub upload_bytes: usize,
+    /// Server receipts seen (trails `uploads` only if the run ends with
+    /// acks still in flight).
+    pub acks: usize,
+}
+
+/// Streams staged envelopes straight onto the socket, keeping each
+/// slot's residual in the pending ledger for the close note to come.
+struct AgentSink<'a> {
+    stream: &'a mut TcpStream,
+    round: u32,
+    pendings: &'a mut BTreeMap<usize, AgentPending>,
+    uploads: usize,
+    upload_bytes: usize,
+}
+
+impl UploadSink for AgentSink<'_> {
+    fn deliver(&mut self, env: UploadEnvelope) -> anyhow::Result<()> {
+        let payload = UploadFrame::encode(self.round, &env);
+        write_frame(self.stream, FT_UPLOAD, &payload)?;
+        self.uploads += 1;
+        self.upload_bytes += payload.len();
+        self.pendings.insert(
+            env.slot,
+            AgentPending { residual: env.residual, full_broadcast: env.full_broadcast },
+        );
+        recycle_wire_upload(env.wire);
+        Ok(())
+    }
+}
+
+/// Run one agent to completion: handshake, replicate, then serve
+/// dispatches until the server says DONE.
+pub fn run_agent(opts: &AgentOpts) -> anyhow::Result<AgentReport> {
+    let mut stream = TcpStream::connect(&opts.connect)
+        .map_err(|e| anyhow::anyhow!("connect {}: {e}", opts.connect))?;
+    stream.set_nodelay(true).ok();
+    let hello = Hello {
+        slot_start: opts.slot_start as u32,
+        slot_count: opts.slot_count.unwrap_or(0) as u32,
+    };
+    write_frame(&mut stream, FT_HELLO, &hello.encode())?;
+
+    let (ty, payload) = read_frame(&mut stream, MAX_FRAME_BYTES)?;
+    anyhow::ensure!(ty == FT_CONFIG, "expected CONFIG, got frame type {ty}");
+    let cf = ConfigFrame::decode(&payload)?;
+    let parsed = json::parse(&cf.cfg_json).map_err(|e| anyhow::anyhow!("config json: {e}"))?;
+    let mut cfg = ExpConfig::from_json(&parsed)?;
+    for (k, v) in &opts.overrides {
+        cfg.set(k, v)?;
+    }
+    anyhow::ensure!(
+        cfg.snapshot_ring_cap == 0,
+        "serve mode requires snapshot_ring_cap = 0 (uncapped), got {}",
+        cfg.snapshot_ring_cap
+    );
+    cfg.validate()?;
+    let n_clients = cfg.n_clients;
+    let slot_start = cf.slot_start as usize;
+    let slot_count = cf.slot_count as usize;
+    anyhow::ensure!(
+        slot_count >= 1 && slot_start + slot_count <= n_clients,
+        "assigned slots {slot_start}+{slot_count} do not fit a fleet of {n_clients}"
+    );
+    log::info!(
+        "agent: replicating a fleet of {n_clients} to host slots {slot_start}..{}",
+        slot_start + slot_count
+    );
+    let mut run = FedRun::new(cfg)?;
+    let mut pendings: BTreeMap<usize, AgentPending> = BTreeMap::new();
+    let mut report =
+        AgentReport { slot_start, slot_count, ..AgentReport::default() };
+
+    loop {
+        let (ty, payload) = read_frame(&mut stream, MAX_FRAME_BYTES)?;
+        match ty {
+            FT_DISPATCH => {
+                let d = DispatchFrame::decode(&payload)?;
+                let round = d.round as usize;
+                run.install_dispatch_base(round, d.global, &d.notes, &mut pendings)?;
+                let mut dropout = vec![0.0f64; n_clients];
+                let mut subset = Vec::with_capacity(d.entries.len());
+                for &(slot, rate) in &d.entries {
+                    let slot = slot as usize;
+                    anyhow::ensure!(
+                        slot >= slot_start && slot < slot_start + slot_count,
+                        "dispatched slot {slot} outside this agent's range"
+                    );
+                    dropout[slot] = rate;
+                    subset.push(slot);
+                }
+                let mut sink = AgentSink {
+                    stream: &mut stream,
+                    round: d.round,
+                    pendings: &mut pendings,
+                    uploads: 0,
+                    upload_bytes: 0,
+                };
+                run.stage_for_dispatch(round, d.full_broadcast, &subset, &dropout, &mut sink)?;
+                report.uploads += sink.uploads;
+                report.upload_bytes += sink.upload_bytes;
+                report.rounds += 1;
+            }
+            FT_ACK => {
+                AckFrame::decode(&payload)?;
+                report.acks += 1;
+            }
+            FT_DONE => break,
+            other => anyhow::bail!("unexpected frame type {other} from server"),
+        }
+    }
+    run.shutdown_transport()?;
+    Ok(report)
+}

@@ -1,0 +1,640 @@
+//! Length-prefixed binary framing for serve mode (DESIGN.md §Serve).
+//!
+//! Every frame is `type: u8, len: u32 LE, payload: [u8; len]`. The length
+//! is bounds-checked against a caller-supplied cap *before* any buffer is
+//! allocated, so an adversarial prefix (say `u32::MAX`) is rejected
+//! without reserving four gigabytes. Payload layouts are little-endian
+//! throughout and decoded through [`ByteReader`], which range-checks
+//! every read and refuses trailing bytes — a truncated or padded frame is
+//! an error, never a silent misparse.
+//!
+//! Control plane, in connection order:
+//!
+//! 1. [`Hello`] (agent → server): protocol magic + version + the slot
+//!    range this agent volunteers to host.
+//! 2. [`ConfigFrame`] (server → agent): the resolved slot range plus the
+//!    full experiment config as compact JSON — the agent rebuilds a
+//!    bitwise replica of the server's run from it.
+//! 3. [`DispatchFrame`] (server → agent, once per round, to *every*
+//!    agent): round number, broadcast flag, the previous round's close
+//!    notes for this agent's slots, the current global parameters, and
+//!    the `(slot, dropout)` dispatch list.
+//! 4. [`UploadFrame`] (agent → server): one trained upload — round
+//!    metadata, Eq. 7–9 timing terms, and the checksummed
+//!    [`WireUpload`] byte image.
+//! 5. [`AckFrame`] (server → agent): receipt for one upload.
+//! 6. `DONE` (server → agent, empty payload): the run is over.
+
+use std::io::{self, Read, Write};
+
+use crate::codec::WireUpload;
+use crate::coordinator::{CloseNote, UploadEnvelope};
+use crate::simnet::RoundTiming;
+use crate::tensor::Tensor;
+
+/// Protocol magic opening every HELLO payload.
+pub const MAGIC: [u8; 4] = *b"FDTP";
+/// Protocol version; bumped on any frame-layout change.
+pub const VERSION: u16 = 1;
+
+/// Frame type tags.
+pub const FT_HELLO: u8 = 1;
+pub const FT_CONFIG: u8 = 2;
+pub const FT_DISPATCH: u8 = 3;
+pub const FT_UPLOAD: u8 = 4;
+pub const FT_ACK: u8 = 5;
+pub const FT_DONE: u8 = 6;
+
+/// Default per-frame size cap (guards the length-prefix allocation).
+pub const MAX_FRAME_BYTES: usize = 256 << 20;
+
+/// Write one `type + length + payload` frame and flush it.
+pub fn write_frame(w: &mut dyn Write, ty: u8, payload: &[u8]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        payload.len() <= u32::MAX as usize,
+        "frame payload of {} bytes exceeds the u32 length prefix",
+        payload.len()
+    );
+    let mut head = [0u8; 5];
+    head[0] = ty;
+    head[1..5].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, rejecting any length prefix above `max_len` before
+/// allocating. Blocks until a full frame arrives (or the stream's read
+/// timeout, if any, fires — a mid-frame timeout is an error).
+pub fn read_frame(r: &mut dyn Read, max_len: usize) -> anyhow::Result<(u8, Vec<u8>)> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head)?;
+    read_after_header(r, head, max_len)
+}
+
+/// [`read_frame`] against a stream with a read timeout: `Ok(None)` when
+/// the timeout fires *between* frames (no header byte read yet — a
+/// legitimately idle peer), an error when it fires mid-frame (a stalled,
+/// half-written peer) or on EOF.
+pub fn read_frame_or_idle(
+    r: &mut dyn Read,
+    max_len: usize,
+) -> anyhow::Result<Option<(u8, Vec<u8>)>> {
+    let mut head = [0u8; 5];
+    let mut got = 0usize;
+    while got < head.len() {
+        match r.read(&mut head[got..]) {
+            Ok(0) => {
+                anyhow::ensure!(got == 0, "peer closed mid-frame header ({got}/5 bytes)");
+                anyhow::bail!("peer closed the connection");
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if got == 0 {
+                    return Ok(None);
+                }
+                anyhow::bail!("read timed out mid-frame header ({got}/5 bytes)");
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    read_after_header(r, head, max_len).map(Some)
+}
+
+fn read_after_header(
+    r: &mut dyn Read,
+    head: [u8; 5],
+    max_len: usize,
+) -> anyhow::Result<(u8, Vec<u8>)> {
+    let ty = head[0];
+    let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]) as usize;
+    anyhow::ensure!(
+        len <= max_len,
+        "frame type {ty} declares {len} bytes, above the {max_len}-byte cap"
+    );
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok((ty, payload))
+}
+
+/// Little-endian payload builder.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Range-checked little-endian payload reader.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.buf.len() - self.pos >= n,
+            "frame underrun: need {n} bytes at offset {} of {}",
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn bytes(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        self.take(n)
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    /// Every byte must have been consumed — padding is a protocol error.
+    pub fn done(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.remaining() == 0, "{} trailing bytes in frame", self.remaining());
+        Ok(())
+    }
+}
+
+/// HELLO: the agent volunteers a slot range. `slot_count == 0` claims
+/// "from `slot_start` through the last client of the fleet".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub slot_start: u32,
+    pub slot_count: u32,
+}
+
+impl Hello {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.bytes(&MAGIC);
+        w.u16(VERSION);
+        w.u32(self.slot_start);
+        w.u32(self.slot_count);
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> anyhow::Result<Hello> {
+        let mut r = ByteReader::new(payload);
+        let magic = r.bytes(4)?;
+        anyhow::ensure!(magic == MAGIC, "bad hello magic {magic:02x?}");
+        let version = r.u16()?;
+        anyhow::ensure!(version == VERSION, "protocol version {version}, expected {VERSION}");
+        let h = Hello { slot_start: r.u32()?, slot_count: r.u32()? };
+        r.done()?;
+        Ok(h)
+    }
+}
+
+/// CONFIG: the server's resolved slot assignment plus the experiment
+/// config the agent must replicate, as compact JSON.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConfigFrame {
+    pub slot_start: u32,
+    pub slot_count: u32,
+    pub cfg_json: String,
+}
+
+impl ConfigFrame {
+    pub fn encode_parts(slot_start: u32, slot_count: u32, cfg_json: &str) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u32(slot_start);
+        w.u32(slot_count);
+        w.bytes(cfg_json.as_bytes());
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> anyhow::Result<ConfigFrame> {
+        let mut r = ByteReader::new(payload);
+        let slot_start = r.u32()?;
+        let slot_count = r.u32()?;
+        let rest = r.bytes(r.remaining())?;
+        let cfg_json = String::from_utf8(rest.to_vec())
+            .map_err(|e| anyhow::anyhow!("config frame is not utf-8: {e}"))?;
+        Ok(ConfigFrame { slot_start, slot_count, cfg_json })
+    }
+}
+
+/// Serialize the global-parameter section of a DISPATCH frame once; the
+/// server splices the same bytes into every agent's frame instead of
+/// re-encoding the model per connection.
+pub fn encode_tensor_section(tensors: &[Tensor]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u32(tensors.len() as u32);
+    for t in tensors {
+        let shape = t.shape();
+        w.u8(shape.len() as u8);
+        for &d in shape {
+            w.u32(d as u32);
+        }
+        for &v in t.data() {
+            w.f32(v);
+        }
+    }
+    w.finish()
+}
+
+fn decode_tensor_section(r: &mut ByteReader<'_>) -> anyhow::Result<Vec<Tensor>> {
+    let count = r.u32()? as usize;
+    anyhow::ensure!(count <= 1024, "dispatch declares {count} tensors");
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let ndim = r.u8()? as usize;
+        anyhow::ensure!((1..=8).contains(&ndim), "tensor rank {ndim} out of range");
+        let mut shape = Vec::with_capacity(ndim);
+        let mut numel = 1usize;
+        for _ in 0..ndim {
+            let d = r.u32()? as usize;
+            numel = numel
+                .checked_mul(d)
+                .ok_or_else(|| anyhow::anyhow!("tensor shape product overflows"))?;
+            shape.push(d);
+        }
+        anyhow::ensure!(
+            numel.checked_mul(4).is_some_and(|b| b <= r.remaining()),
+            "tensor of {numel} elements overruns the frame ({} bytes left)",
+            r.remaining()
+        );
+        let raw = r.bytes(numel * 4)?;
+        let mut data = Vec::with_capacity(numel);
+        for c in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        out.push(Tensor::new(shape, data));
+    }
+    Ok(out)
+}
+
+/// DISPATCH: everything an agent needs to run one round for its slots.
+/// Sent to *every* agent every round, even when its dispatch list is
+/// empty — the close notes and the fresh global must still land so the
+/// replica rebases in lockstep with the server.
+#[derive(Debug)]
+pub struct DispatchFrame {
+    pub round: u32,
+    pub full_broadcast: bool,
+    /// Close notes from the previous round, filtered to this agent's
+    /// slots, ascending.
+    pub notes: Vec<CloseNote>,
+    /// The server's current global parameters (the round's download base).
+    pub global: Vec<Tensor>,
+    /// `(slot, dropout rate)` for each dispatched slot of this agent,
+    /// ascending by slot.
+    pub entries: Vec<(u32, f64)>,
+}
+
+impl DispatchFrame {
+    pub fn encode_parts(
+        round: u32,
+        full_broadcast: bool,
+        notes: &[CloseNote],
+        tensor_section: &[u8],
+        entries: &[(u32, f64)],
+    ) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u32(round);
+        w.u8(u8::from(full_broadcast));
+        w.u32(notes.len() as u32);
+        for n in notes {
+            w.u32(n.slot as u32);
+            w.u8(u8::from(n.churned));
+        }
+        w.bytes(tensor_section);
+        w.u32(entries.len() as u32);
+        for &(slot, d) in entries {
+            w.u32(slot);
+            w.f64(d);
+        }
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> anyhow::Result<DispatchFrame> {
+        let mut r = ByteReader::new(payload);
+        let round = r.u32()?;
+        let full_broadcast = r.u8()? != 0;
+        let n_notes = r.u32()? as usize;
+        anyhow::ensure!(
+            n_notes * 5 <= r.remaining(),
+            "dispatch declares {n_notes} close notes in a {}-byte tail",
+            r.remaining()
+        );
+        let mut notes = Vec::with_capacity(n_notes);
+        for _ in 0..n_notes {
+            let slot = r.u32()? as usize;
+            let churned = r.u8()? != 0;
+            notes.push(CloseNote { slot, churned });
+        }
+        let global = decode_tensor_section(&mut r)?;
+        let n_entries = r.u32()? as usize;
+        anyhow::ensure!(
+            n_entries * 12 <= r.remaining(),
+            "dispatch declares {n_entries} entries in a {}-byte tail",
+            r.remaining()
+        );
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let slot = r.u32()?;
+            let d = r.f64()?;
+            entries.push((slot, d));
+        }
+        r.done()?;
+        Ok(DispatchFrame { round, full_broadcast, notes, global, entries })
+    }
+}
+
+/// UPLOAD: one trained client update — the envelope metadata plus the
+/// checksummed [`WireUpload`] byte image. The Eq. 5 residual never
+/// crosses the wire: it stays on the agent (see
+/// [`crate::coordinator::AgentPending`]), and the server folds the
+/// upload with `residual: None`.
+#[derive(Debug)]
+pub struct UploadFrame {
+    pub round: u32,
+    pub slot: u32,
+    pub loss: f64,
+    pub uploaded: u64,
+    pub m_n: f32,
+    pub full_broadcast: bool,
+    pub timing: RoundTiming,
+    pub wire: WireUpload,
+}
+
+impl UploadFrame {
+    pub fn encode(round: u32, env: &UploadEnvelope) -> Vec<u8> {
+        let blob = env.wire.to_bytes();
+        let mut w = ByteWriter::new();
+        w.u32(round);
+        w.u32(env.slot as u32);
+        w.f64(env.loss);
+        w.u64(env.uploaded as u64);
+        w.f32(env.m_n);
+        w.u8(u8::from(env.full_broadcast));
+        w.f64(env.timing.t_down);
+        w.f64(env.timing.t_cmp);
+        w.f64(env.timing.t_up);
+        w.u32(blob.len() as u32);
+        w.bytes(&blob);
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> anyhow::Result<UploadFrame> {
+        let mut r = ByteReader::new(payload);
+        let round = r.u32()?;
+        let slot = r.u32()?;
+        let loss = r.f64()?;
+        let uploaded = r.u64()?;
+        let m_n = r.f32()?;
+        let full_broadcast = r.u8()? != 0;
+        let timing = RoundTiming { t_down: r.f64()?, t_cmp: r.f64()?, t_up: r.f64()? };
+        let blob_len = r.u32()? as usize;
+        let wire = WireUpload::from_bytes(r.bytes(blob_len)?)?;
+        r.done()?;
+        Ok(UploadFrame { round, slot, loss, uploaded, m_n, full_broadcast, timing, wire })
+    }
+
+    /// The round tag plus the ingest-layer envelope this frame carries
+    /// (`residual: None` — it never left the agent).
+    pub fn into_envelope(self) -> (u32, UploadEnvelope) {
+        let env = UploadEnvelope {
+            slot: self.slot as usize,
+            loss: self.loss,
+            uploaded: self.uploaded as usize,
+            m_n: self.m_n,
+            wire: self.wire,
+            residual: None,
+            full_broadcast: self.full_broadcast,
+            timing: self.timing,
+        };
+        (self.round, env)
+    }
+}
+
+/// ACK: the server's receipt for one upload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AckFrame {
+    pub round: u32,
+    pub slot: u32,
+}
+
+impl AckFrame {
+    pub fn encode_parts(round: u32, slot: u32) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u32(round);
+        w.u32(slot);
+        w.finish()
+    }
+
+    pub fn decode(payload: &[u8]) -> anyhow::Result<AckFrame> {
+        let mut r = ByteReader::new(payload);
+        let a = AckFrame { round: r.u32()?, slot: r.u32()? };
+        r.done()?;
+        Ok(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::encode_upload;
+    use crate::model::ModelSpec;
+    use crate::selection::ChannelMask;
+    use crate::util::rng::Rng;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip_over_a_stream() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FT_HELLO, &[1, 2, 3]).unwrap();
+        write_frame(&mut buf, FT_DONE, &[]).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r, 64).unwrap(), (FT_HELLO, vec![1, 2, 3]));
+        assert_eq!(read_frame(&mut r, 64).unwrap(), (FT_DONE, vec![]));
+        // EOF after the last frame.
+        assert!(read_frame(&mut r, 64).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocating() {
+        // type + u32::MAX length, no payload: must fail on the cap check,
+        // not by attempting a 4 GiB read.
+        let mut bytes = vec![FT_UPLOAD];
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(bytes), MAX_FRAME_BYTES).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FT_ACK, &[0u8; 8]).unwrap();
+        buf.truncate(buf.len() - 3); // lose part of the payload
+        assert!(read_frame(&mut Cursor::new(buf), 64).is_err());
+        // And a mid-header cut:
+        assert!(read_frame(&mut Cursor::new(vec![FT_ACK, 1]), 64).is_err());
+    }
+
+    #[test]
+    fn hello_roundtrip_and_garbage_rejection() {
+        let h = Hello { slot_start: 3, slot_count: 9 };
+        assert_eq!(Hello::decode(&h.encode()).unwrap(), h);
+        assert!(Hello::decode(b"GET / HTTP/1.1").is_err());
+        assert!(Hello::decode(&[]).is_err());
+        // Right magic, wrong version.
+        let mut w = ByteWriter::new();
+        w.bytes(&MAGIC);
+        w.u16(VERSION + 1);
+        w.u32(0);
+        w.u32(0);
+        assert!(Hello::decode(&w.finish()).is_err());
+        // Trailing bytes are refused.
+        let mut padded = h.encode();
+        padded.push(0);
+        assert!(Hello::decode(&padded).is_err());
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        let payload = ConfigFrame::encode_parts(2, 5, "{\"seed\":17}");
+        let c = ConfigFrame::decode(&payload).unwrap();
+        assert_eq!(
+            c,
+            ConfigFrame { slot_start: 2, slot_count: 5, cfg_json: "{\"seed\":17}".into() }
+        );
+    }
+
+    #[test]
+    fn dispatch_roundtrip() {
+        let notes = vec![
+            CloseNote { slot: 1, churned: false },
+            CloseNote { slot: 4, churned: true },
+        ];
+        let global = vec![
+            Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 4.25, -0.5]),
+            Tensor::new(vec![3], vec![0.1, 0.2, 0.3]),
+        ];
+        let entries = vec![(1u32, 0.25f64), (4, 0.0)];
+        let section = encode_tensor_section(&global);
+        let payload = DispatchFrame::encode_parts(7, true, &notes, &section, &entries);
+        let d = DispatchFrame::decode(&payload).unwrap();
+        assert_eq!(d.round, 7);
+        assert!(d.full_broadcast);
+        assert_eq!(d.notes, notes);
+        assert_eq!(d.entries, entries);
+        assert_eq!(d.global.len(), 2);
+        for (got, want) in d.global.iter().zip(&global) {
+            assert_eq!(got.shape(), want.shape());
+            assert_eq!(got.data(), want.data());
+        }
+    }
+
+    #[test]
+    fn dispatch_with_corrupt_tensor_section_is_rejected() {
+        let payload = DispatchFrame::encode_parts(1, false, &[], &encode_tensor_section(&[]), &[]);
+        assert!(DispatchFrame::decode(&payload).is_ok());
+        // A tensor section declaring data it does not carry:
+        let mut w = ByteWriter::new();
+        w.u32(1); // round
+        w.u8(0); // full_broadcast
+        w.u32(0); // notes
+        w.u32(1); // one tensor ...
+        w.u8(1); // ... of rank 1 ...
+        w.u32(1_000_000); // ... with a million elements it never ships
+        assert!(DispatchFrame::decode(&w.finish()).is_err());
+    }
+
+    #[test]
+    fn upload_roundtrip_carries_the_wire_image() {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let params = spec.init_params(&mut Rng::new(11));
+        let wire = encode_upload(&ChannelMask::full(&spec), &params, &spec);
+        let env = UploadEnvelope {
+            slot: 6,
+            loss: 1.25,
+            uploaded: wire.payload_bytes(),
+            m_n: 100.0,
+            wire,
+            residual: None,
+            full_broadcast: true,
+            timing: RoundTiming { t_down: 0.5, t_cmp: 1.5, t_up: 2.0 },
+        };
+        let payload = UploadFrame::encode(9, &env);
+        let up = UploadFrame::decode(&payload).unwrap();
+        let (round, back) = up.into_envelope();
+        assert_eq!(round, 9);
+        assert_eq!(back.slot, 6);
+        assert_eq!(back.loss, 1.25);
+        assert_eq!(back.uploaded, env.uploaded);
+        assert_eq!(back.m_n, 100.0);
+        assert!(back.full_broadcast);
+        assert!(back.residual.is_none());
+        assert_eq!(back.timing.total(), env.timing.total());
+        assert_eq!(back.wire.to_bytes(), env.wire.to_bytes());
+        // A flipped payload byte breaks the wire checksum.
+        let mut bad = payload.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xff;
+        assert!(UploadFrame::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn ack_roundtrip() {
+        let a = AckFrame::decode(&AckFrame::encode_parts(3, 12)).unwrap();
+        assert_eq!(a, AckFrame { round: 3, slot: 12 });
+    }
+}

@@ -1,0 +1,34 @@
+//! Serve mode: the round engine over a real socket (DESIGN.md §Serve).
+//!
+//! The engine's transport seam is `coordinator::ingest` — the round
+//! drivers consume uploads through the `UploadSource`/`UploadSink` trait
+//! pair and never know where an envelope came from. This module is the
+//! socket-backed implementation of that seam, dependency-light on
+//! `std::net` TCP:
+//!
+//! * [`frame`]-level: length-prefixed, checksummed binary frames
+//!   (HELLO / CONFIG / DISPATCH / UPLOAD / ACK / DONE) with every length
+//!   bounds-checked before allocation.
+//! * [`ServeCoordinator`] (server): accepts agents until the fleet's
+//!   slot range is exactly covered, then per round sends one DISPATCH to
+//!   every agent and re-orders the incoming uploads into the ascending
+//!   delivery order the ingest contract requires. Reader threads feed a
+//!   *bounded* queue — a slow server blocks agents through TCP instead
+//!   of buffering unboundedly.
+//! * [`run_agent`] (client): rebuilds a bitwise replica of the server's
+//!   run from the CONFIG frame, trains its dispatched slots with the
+//!   exact staging code the in-process transport uses, and keeps each
+//!   upload's Eq. 5 residual local until its close note arrives.
+//!
+//! Both ends deterministically derive everything else — fleet, data
+//! partition, RNG streams — from the shared config, which is what makes
+//! a loopback serve bitwise-identical to `run_experiment` on one
+//! process (`rust/tests/serve_loopback.rs`).
+
+pub mod frame;
+
+mod agent;
+mod server;
+
+pub use agent::{run_agent, AgentOpts, AgentReport};
+pub use server::{BoundServer, ServeCoordinator, ServeOpts};

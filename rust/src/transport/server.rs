@@ -1,0 +1,432 @@
+//! Serve-mode server: the accept/handshake loop, per-connection reader
+//! threads feeding a bounded ingest queue, and [`ServeCoordinator`] — the
+//! socket-backed [`UploadSource`] the round engine drives exactly like
+//! the in-process transport (DESIGN.md §Serve).
+//!
+//! # Backpressure
+//!
+//! Decoded uploads cross from the reader threads to the round driver
+//! through one `std::sync::mpsc::sync_channel(ingest_queue)`. A slow
+//! server blocks the reader on `send`, the kernel socket buffers fill,
+//! and the agent's `write` blocks in turn — at no point does the server
+//! buffer more than `ingest_queue` decoded uploads plus one socket
+//! buffer per connection.
+//!
+//! # Adversarial connections
+//!
+//! The handshake runs under a HELLO read timeout with the frame cap
+//! pinned low; garbage bytes, oversized length prefixes, half-written
+//! frames and silent peers all get the connection dropped while the
+//! accept loop keeps serving real agents. After the handshake, a
+//! malformed or stalled upload kills only that agent's reader, which
+//! reports a `Closed` event — the round driver fails the round with a
+//! diagnostic instead of hanging.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::config::ExpConfig;
+use crate::coordinator::{CloseNote, RoundCall, UploadEnvelope, UploadSink, UploadSource};
+
+use super::frame::{
+    encode_tensor_section, read_frame, read_frame_or_idle, write_frame, AckFrame, ConfigFrame,
+    DispatchFrame, Hello, UploadFrame, FT_ACK, FT_CONFIG, FT_DISPATCH, FT_DONE, FT_HELLO,
+    FT_UPLOAD, MAX_FRAME_BYTES,
+};
+
+/// Server-side knobs. The config-file knobs (`listen`, `max_conns`,
+/// `ingest_queue`) come through [`ServeOpts::from_config`]; the timeouts
+/// have serve defaults and are overridden directly by tests.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// `host:port` to bind; port 0 asks the OS for an ephemeral port
+    /// (read the result from [`BoundServer::local_addr`]).
+    pub listen: String,
+    /// Cap on connection *attempts* during accept — a garbage-spamming
+    /// peer exhausts this and fails the serve instead of looping forever.
+    pub max_conns: usize,
+    /// Bound of the decoded-upload queue between readers and the driver.
+    pub ingest_queue: usize,
+    /// How long `accept_agents` waits for full slot coverage.
+    pub accept_timeout: Duration,
+    /// HELLO deadline for a fresh connection; a peer that sends nothing
+    /// (or half a frame) within it is dropped.
+    pub hello_timeout: Duration,
+    /// Per-read timeout on accepted agent sockets. Idle-between-frames
+    /// is fine (the reader just re-arms); a timeout *mid-frame* closes
+    /// the connection as stalled.
+    pub read_timeout: Duration,
+    /// How long one round may wait for its outstanding uploads.
+    pub round_timeout: Duration,
+    /// Per-frame size cap after the handshake.
+    pub max_frame: usize,
+}
+
+impl ServeOpts {
+    pub fn from_config(cfg: &ExpConfig) -> ServeOpts {
+        ServeOpts {
+            listen: cfg.listen.clone(),
+            max_conns: cfg.max_conns,
+            ingest_queue: cfg.ingest_queue,
+            accept_timeout: Duration::from_secs(120),
+            hello_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(30),
+            round_timeout: Duration::from_secs(300),
+            max_frame: MAX_FRAME_BYTES,
+        }
+    }
+}
+
+/// A bound-but-not-yet-serving listener: bind first (so the resolved
+/// ephemeral port can be published), then [`BoundServer::accept_agents`].
+pub struct BoundServer {
+    listener: TcpListener,
+    pub local_addr: SocketAddr,
+}
+
+/// One accepted agent: the blocking write half (dispatches + acks) and
+/// the slot range it hosts. The read half lives on the reader thread.
+struct AgentConn {
+    stream: TcpStream,
+    slots: Range<usize>,
+}
+
+/// What a reader thread feeds the round driver.
+enum Event {
+    Upload { agent: usize, round: u32, env: UploadEnvelope },
+    Closed { agent: usize, why: String },
+}
+
+impl BoundServer {
+    pub fn bind(opts: &ServeOpts) -> anyhow::Result<BoundServer> {
+        let listener = TcpListener::bind(&opts.listen)
+            .map_err(|e| anyhow::anyhow!("bind {}: {e}", opts.listen))?;
+        let local_addr = listener.local_addr()?;
+        Ok(BoundServer { listener, local_addr })
+    }
+
+    /// Accept agent connections until every slot `0..n_clients` is
+    /// claimed exactly once, handshake each (HELLO in, CONFIG out), then
+    /// spawn the reader threads and return the engine-facing transport.
+    ///
+    /// Connections that fail the handshake — wrong magic or version,
+    /// overlapping or out-of-range slot claims, garbage, silence — are
+    /// dropped and accepting continues; only exceeding `max_conns`
+    /// attempts or the accept deadline fails the serve.
+    pub fn accept_agents(
+        self,
+        opts: &ServeOpts,
+        cfg: &ExpConfig,
+    ) -> anyhow::Result<ServeCoordinator> {
+        anyhow::ensure!(
+            cfg.snapshot_ring_cap == 0,
+            "serve mode requires snapshot_ring_cap = 0 (uncapped): remote replicas rebase \
+             from close notes and must never run the eviction pass"
+        );
+        let n = cfg.n_clients;
+        let cfg_json = cfg.to_json().to_string_compact();
+        self.listener.set_nonblocking(true)?;
+        let deadline = Instant::now() + opts.accept_timeout;
+        let mut covered = vec![false; n];
+        let mut agents: Vec<AgentConn> = Vec::new();
+        let mut attempts = 0usize;
+        while covered.iter().any(|c| !c) {
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "accept timed out with slots {:?}... still unclaimed",
+                uncovered_preview(&covered)
+            );
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    attempts += 1;
+                    anyhow::ensure!(
+                        attempts <= opts.max_conns,
+                        "{attempts} connection attempts exceed max_conns = {}",
+                        opts.max_conns
+                    );
+                    match handshake(stream, opts, n, &covered, &cfg_json) {
+                        Ok(conn) => {
+                            for s in conn.slots.clone() {
+                                covered[s] = true;
+                            }
+                            log::info!(
+                                "agent {peer} hosts slots {}..{}",
+                                conn.slots.start,
+                                conn.slots.end
+                            );
+                            agents.push(conn);
+                        }
+                        Err(e) => log::warn!("rejected connection from {peer}: {e:#}"),
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+
+        // Slots covered: arm the ingest side. Readers share one bounded
+        // channel; their blocking `send` is the backpressure contract.
+        let (tx, rx) = mpsc::sync_channel::<Event>(opts.ingest_queue.max(1));
+        let mut readers = Vec::with_capacity(agents.len());
+        for (i, conn) in agents.iter().enumerate() {
+            let mut stream = conn.stream.try_clone()?;
+            stream.set_read_timeout(Some(opts.read_timeout))?;
+            conn.stream.set_write_timeout(Some(opts.round_timeout))?;
+            let tx = tx.clone();
+            let max_frame = opts.max_frame;
+            readers.push(
+                thread::Builder::new()
+                    .name(format!("feddd-ingest-{i}"))
+                    .spawn(move || reader_loop(i, &mut stream, max_frame, &tx))?,
+            );
+        }
+        drop(tx);
+        Ok(ServeCoordinator {
+            agents,
+            rx: Some(rx),
+            readers,
+            round_timeout: opts.round_timeout,
+            shut: false,
+        })
+    }
+}
+
+/// First eight unclaimed slots, for the accept-timeout diagnostic.
+fn uncovered_preview(covered: &[bool]) -> Vec<usize> {
+    covered
+        .iter()
+        .enumerate()
+        .filter(|&(_, &c)| !c)
+        .map(|(i, _)| i)
+        .take(8)
+        .collect()
+}
+
+/// HELLO in (64-byte frame cap, `hello_timeout` read timeout), slot
+/// range validated against the fleet and prior claims, CONFIG out.
+fn handshake(
+    stream: TcpStream,
+    opts: &ServeOpts,
+    n_clients: usize,
+    covered: &[bool],
+    cfg_json: &str,
+) -> anyhow::Result<AgentConn> {
+    let mut stream = stream;
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(opts.hello_timeout))?;
+    stream.set_nodelay(true).ok();
+    let (ty, payload) = read_frame(&mut stream, 64)?;
+    anyhow::ensure!(ty == FT_HELLO, "expected HELLO, got frame type {ty}");
+    let hello = Hello::decode(&payload)?;
+    let start = hello.slot_start as usize;
+    anyhow::ensure!(start < n_clients, "slot_start {start} out of range (fleet has {n_clients})");
+    let count =
+        if hello.slot_count == 0 { n_clients - start } else { hello.slot_count as usize };
+    anyhow::ensure!(
+        start + count <= n_clients,
+        "slot range {start}+{count} exceeds fleet size {n_clients}"
+    );
+    for (s, claimed) in covered.iter().enumerate().take(start + count).skip(start) {
+        anyhow::ensure!(!claimed, "slot {s} already claimed by another agent");
+    }
+    write_frame(
+        &mut stream,
+        FT_CONFIG,
+        &ConfigFrame::encode_parts(start as u32, count as u32, cfg_json),
+    )?;
+    Ok(AgentConn { stream, slots: start..start + count })
+}
+
+/// Reader-thread body: decode uploads off one agent socket into the
+/// shared bounded queue until the connection dies or the run shuts down.
+fn reader_loop(agent: usize, stream: &mut TcpStream, max_frame: usize, tx: &mpsc::SyncSender<Event>) {
+    loop {
+        match read_frame_or_idle(stream, max_frame) {
+            // Timeout with no frame started: the agent is just idle
+            // (training, or waiting on the next dispatch). Re-arm.
+            Ok(None) => {}
+            Ok(Some((FT_UPLOAD, payload))) => match UploadFrame::decode(&payload) {
+                Ok(up) => {
+                    let (round, env) = up.into_envelope();
+                    // Blocking send on the bounded channel *is* the
+                    // backpressure; Err means the run shut down.
+                    if tx.send(Event::Upload { agent, round, env }).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send(Event::Closed { agent, why: format!("bad upload: {e:#}") });
+                    return;
+                }
+            },
+            Ok(Some((ty, _))) => {
+                let _ = tx.send(Event::Closed { agent, why: format!("unexpected frame type {ty}") });
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send(Event::Closed { agent, why: format!("{e:#}") });
+                return;
+            }
+        }
+    }
+}
+
+/// The socket transport the round engine drives: each `round_uploads`
+/// call dispatches the round to every agent, then collects, validates,
+/// acks and re-orders uploads so the sink sees the subset in ascending
+/// slot order — the same delivery contract `LocalTransport` honors,
+/// which is what keeps a loopback serve bitwise-identical to an
+/// in-process run.
+pub struct ServeCoordinator {
+    agents: Vec<AgentConn>,
+    /// `None` once shut down (dropping it unblocks queued reader sends).
+    rx: Option<mpsc::Receiver<Event>>,
+    readers: Vec<thread::JoinHandle<()>>,
+    round_timeout: Duration,
+    shut: bool,
+}
+
+impl UploadSource for ServeCoordinator {
+    fn round_uploads(
+        &mut self,
+        mut call: RoundCall<'_>,
+        sink: &mut dyn UploadSink,
+    ) -> anyhow::Result<()> {
+        let rx = self.rx.as_ref().ok_or_else(|| anyhow::anyhow!("transport already shut down"))?;
+        let agents = &mut self.agents;
+        let round = call.round as u32;
+
+        // ---- dispatch: one frame per agent, every round ----
+        // Even an agent with no dispatched slot this round gets the
+        // frame: its replica still needs the close notes and the fresh
+        // global to stay in lockstep.
+        let tensor_section = encode_tensor_section(call.global);
+        for conn in agents.iter_mut() {
+            let notes: Vec<CloseNote> =
+                call.notes.iter().filter(|n| conn.slots.contains(&n.slot)).copied().collect();
+            let entries: Vec<(u32, f64)> = call
+                .subset
+                .iter()
+                .filter(|&&s| conn.slots.contains(&s))
+                .map(|&s| (s as u32, call.dropout[s]))
+                .collect();
+            let payload = DispatchFrame::encode_parts(
+                round,
+                call.full_broadcast,
+                &notes,
+                &tensor_section,
+                &entries,
+            );
+            write_frame(&mut conn.stream, FT_DISPATCH, &payload).map_err(|e| {
+                anyhow::anyhow!("dispatch to agent of slots {:?}: {e:#}", conn.slots)
+            })?;
+        }
+
+        // ---- collect: park out-of-order arrivals, deliver ascending ----
+        let subset = call.subset;
+        let expected: BTreeSet<usize> = subset.iter().copied().collect();
+        let mut seen: BTreeSet<usize> = BTreeSet::new();
+        let mut parked: BTreeMap<usize, UploadEnvelope> = BTreeMap::new();
+        let mut next = 0usize;
+        while next < subset.len() {
+            let ev = rx.recv_timeout(self.round_timeout).map_err(|e| {
+                anyhow::anyhow!(
+                    "round {}: gave up waiting for slot {} ({} of {} uploads in): {e}",
+                    call.round,
+                    subset[next],
+                    next,
+                    subset.len()
+                )
+            })?;
+            match ev {
+                Event::Closed { agent, why } => {
+                    anyhow::bail!(
+                        "agent {agent} (slots {:?}) lost mid-round {}: {why}",
+                        agents[agent].slots,
+                        call.round
+                    );
+                }
+                Event::Upload { agent, round: r, env } => {
+                    let slot = env.slot;
+                    anyhow::ensure!(
+                        r == round,
+                        "agent {agent} uploaded for round {r} during round {}",
+                        call.round
+                    );
+                    anyhow::ensure!(
+                        agents[agent].slots.contains(&slot),
+                        "agent {agent} uploaded for slot {slot} outside its range {:?}",
+                        agents[agent].slots
+                    );
+                    anyhow::ensure!(
+                        expected.contains(&slot),
+                        "upload for slot {slot}, which round {} never dispatched",
+                        call.round
+                    );
+                    anyhow::ensure!(seen.insert(slot), "duplicate upload for slot {slot}");
+                    // Replica cross-check: m_n is a pure function of the
+                    // shared config, so a mismatch means the agent is
+                    // running a different experiment.
+                    anyhow::ensure!(
+                        env.m_n == call.clients[slot].m_n() as f32,
+                        "replica mismatch: agent reports m_n = {} for slot {slot}, server \
+                         derives {}",
+                        env.m_n,
+                        call.clients[slot].m_n()
+                    );
+                    // The server replica never trains; mirror the two
+                    // fields `train_local` would have written so the next
+                    // round's Oort utility and Eq. 13 allocation read the
+                    // same values as an in-process run.
+                    call.clients[slot].last_loss = env.loss;
+                    call.clients[slot].participations += 1;
+                    write_frame(
+                        &mut agents[agent].stream,
+                        FT_ACK,
+                        &AckFrame::encode_parts(round, slot as u32),
+                    )?;
+                    parked.insert(slot, env);
+                    while next < subset.len() {
+                        let Some(env) = parked.remove(&subset[next]) else { break };
+                        sink.deliver(env)?;
+                        next += 1;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn shutdown(&mut self) -> anyhow::Result<()> {
+        if self.shut {
+            return Ok(());
+        }
+        self.shut = true;
+        for conn in &mut self.agents {
+            let _ = write_frame(&mut conn.stream, FT_DONE, &[]);
+        }
+        // Unblock the readers: queued sends fail once the receiver drops,
+        // and blocking reads error out once the sockets shut down.
+        drop(self.rx.take());
+        for conn in &self.agents {
+            let _ = conn.stream.shutdown(Shutdown::Both);
+        }
+        for r in self.readers.drain(..) {
+            let _ = r.join();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ServeCoordinator {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}

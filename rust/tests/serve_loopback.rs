@@ -1,0 +1,201 @@
+//! Loopback serve equivalence: a `serve` coordinator plus `agent`
+//! replicas on 127.0.0.1 must reproduce the in-process run **bitwise** —
+//! per-round losses, uploaded/wire bytes, virtual-time accounting, eval
+//! metrics and the final global parameters — under both round modes.
+//!
+//! `client_state_bytes` is deliberately *not* compared: the server-side
+//! replica folds envelopes with `residual: None` (residuals stay on the
+//! agents), so its bookkeeping of virtualized client state differs even
+//! though every model/metric byte matches (DESIGN.md §Serve).
+
+use std::path::PathBuf;
+use std::thread;
+use std::time::Duration;
+
+use feddd::config::ExpConfig;
+use feddd::coordinator::FedRun;
+use feddd::metrics::RunResult;
+use feddd::runtime::write_native_manifest;
+use feddd::tensor::Tensor;
+use feddd::transport::{run_agent, AgentOpts, AgentReport, BoundServer, ServeOpts};
+
+fn native_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "feddd_serve_loopback_{}_{tag}",
+        std::process::id()
+    ));
+    write_native_manifest(&dir, &[("mlp", 1.0)], 16, 64).unwrap();
+    dir
+}
+
+fn cfg(scheme: &str, dir: &PathBuf) -> ExpConfig {
+    let mut cfg = ExpConfig::smoke();
+    cfg.scheme = scheme.into();
+    cfg.n_clients = 4;
+    cfg.rounds = 4;
+    cfg.local_steps = 2;
+    cfg.batch = 16;
+    cfg.test_n = 64;
+    cfg.train_per_client = 60;
+    cfg.eval_every = 2;
+    cfg.workers = 2;
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    cfg
+}
+
+fn serve_opts(cfg: &ExpConfig) -> ServeOpts {
+    let mut opts = ServeOpts::from_config(cfg);
+    opts.listen = "127.0.0.1:0".into();
+    opts.accept_timeout = Duration::from_secs(30);
+    opts.round_timeout = Duration::from_secs(120);
+    opts
+}
+
+/// Run `cfg` through real sockets: bind, spawn one agent thread per
+/// `(slot_start, slot_count)` split, then drive the rounds server-side.
+fn loopback(
+    cfg: &ExpConfig,
+    splits: &[(usize, Option<usize>)],
+) -> (RunResult, Vec<Tensor>, Vec<AgentReport>) {
+    let opts = serve_opts(cfg);
+    let bound = BoundServer::bind(&opts).unwrap();
+    let addr = bound.local_addr.to_string();
+    let handles: Vec<_> = splits
+        .iter()
+        .map(|&(slot_start, slot_count)| {
+            let agent = AgentOpts {
+                connect: addr.clone(),
+                slot_start,
+                slot_count,
+                // Host-local override: a different worker count on the
+                // agent must not change a single bit.
+                overrides: vec![("workers".into(), "1".into())],
+            };
+            thread::spawn(move || run_agent(&agent).unwrap())
+        })
+        .collect();
+    let coordinator = bound.accept_agents(&opts, cfg).unwrap();
+    let mut run = FedRun::with_transport(cfg.clone(), Box::new(coordinator)).unwrap();
+    let result = run.run().unwrap();
+    run.shutdown_transport().unwrap();
+    let reports = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (result, run.global_params.clone(), reports)
+}
+
+fn in_process(cfg: &ExpConfig) -> (RunResult, Vec<Tensor>) {
+    let mut run = FedRun::new(cfg.clone()).unwrap();
+    let result = run.run().unwrap();
+    (result, run.global_params.clone())
+}
+
+fn assert_bitwise_equal(
+    (ra, pa): (&RunResult, &[Tensor]),
+    (rb, pb): (&RunResult, &[Tensor]),
+    ctx: &str,
+) {
+    assert_eq!(ra.rounds.len(), rb.rounds.len(), "{ctx}: round count");
+    for (x, y) in ra.rounds.iter().zip(&rb.rounds) {
+        let t = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{ctx}: round {t} loss");
+        assert_eq!(x.uploaded_bytes, y.uploaded_bytes, "{ctx}: round {t} uploaded");
+        assert_eq!(x.wire_bytes, y.wire_bytes, "{ctx}: round {t} wire bytes");
+        assert_eq!(x.participants, y.participants, "{ctx}: round {t} participants");
+        assert_eq!(x.duration.to_bits(), y.duration.to_bits(), "{ctx}: round {t} duration");
+        assert_eq!(x.v_time.to_bits(), y.v_time.to_bits(), "{ctx}: round {t} v_time");
+        assert_eq!(
+            x.mean_dropout.to_bits(),
+            y.mean_dropout.to_bits(),
+            "{ctx}: round {t} dropout"
+        );
+        assert_eq!(x.full_broadcast, y.full_broadcast, "{ctx}: round {t} broadcast");
+    }
+    assert_eq!(ra.evals.len(), rb.evals.len(), "{ctx}: eval count");
+    for (x, y) in ra.evals.iter().zip(&rb.evals) {
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "{ctx}: eval accuracy");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{ctx}: eval loss");
+    }
+    assert_eq!(pa.len(), pb.len(), "{ctx}: param arity");
+    for (i, (x, y)) in pa.iter().zip(pb).enumerate() {
+        assert_eq!(x.data(), y.data(), "{ctx}: global param tensor {i}");
+    }
+}
+
+#[test]
+fn sync_loopback_matches_in_process_bitwise() {
+    let dir = native_dir("sync");
+    let c = cfg("feddd", &dir);
+    let local = in_process(&c);
+    // Two agents, slots 0-1 and 2-3 (the second claims "the rest").
+    let (result, params, reports) = loopback(&c, &[(0, Some(2)), (2, None)]);
+    assert_bitwise_equal((&local.0, &local.1), (&result, &params), "serve sync");
+    for r in &reports {
+        assert_eq!(r.rounds, c.rounds, "every round dispatches to every agent");
+        // Acks ride the same ordered stream as DONE, so none are lost.
+        assert_eq!(r.acks, r.uploads, "ack per upload");
+        assert!(r.uploads > 0 && r.upload_bytes > 0, "{r:?}");
+    }
+    // Sync barrier: every slot uploads every round.
+    assert_eq!(
+        reports.iter().map(|r| r.uploads).sum::<usize>(),
+        c.n_clients * c.rounds,
+        "{reports:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn semi_async_loopback_matches_in_process_bitwise() {
+    let dir = native_dir("semi");
+    let mut c = cfg("feddd", &dir);
+    c.round_mode = "semi_async".into();
+    c.n_clients = 6;
+    c.quorum = 0.7;
+    c.staleness_beta = 0.5;
+    c.rounds = 5;
+    let local = in_process(&c);
+    let (result, params, _) = loopback(&c, &[(0, Some(3)), (3, None)]);
+    assert_bitwise_equal((&local.0, &local.1), (&result, &params), "serve semi_async");
+    // The straggler machinery must actually engage for this to mean much.
+    assert!(
+        local.0.rounds.iter().any(|r| r.stragglers > 0),
+        "quorum never left a straggler in flight"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn semi_async_churn_loopback_matches_in_process_bitwise() {
+    // Mid-round churn exercises the churned close notes: the agent must
+    // drop the pending residual without rebasing, exactly like the
+    // in-process engine.
+    let dir = native_dir("churn");
+    let mut c = cfg("feddd", &dir);
+    c.round_mode = "semi_async".into();
+    c.n_clients = 6;
+    c.quorum = 0.7;
+    c.staleness_beta = 0.5;
+    c.trace = "churn".into();
+    c.churn_rate = 0.5;
+    c.rounds = 6;
+    let local = in_process(&c);
+    let (result, params, _) = loopback(&c, &[(0, None)]);
+    assert_bitwise_equal((&local.0, &local.1), (&result, &params), "serve churn");
+    assert!(
+        local.0.rounds.iter().any(|r| r.churned > 0),
+        "churn trace never dropped an upload"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn oort_loopback_matches_in_process_bitwise() {
+    // Oort's utility reads last_loss/participations, which the serve
+    // coordinator mirrors at envelope receipt — a drifted mirror changes
+    // the selection and fails this bitwise comparison.
+    let dir = native_dir("oort");
+    let c = cfg("oort", &dir);
+    let local = in_process(&c);
+    let (result, params, _) = loopback(&c, &[(0, Some(1)), (1, Some(3))]);
+    assert_bitwise_equal((&local.0, &local.1), (&result, &params), "serve oort");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,267 @@
+//! Adversarial serve-mode transport tests: garbage, truncated and
+//! oversized frames, half-written stalls and mid-frame disconnects must
+//! each be rejected (or timed out) without killing the server, hanging a
+//! round, or poisoning the run for well-behaved agents.
+//!
+//! Frame-layer rejection (oversized prefixes before allocation,
+//! truncation, trailing bytes) is unit-tested inside
+//! `feddd::transport::frame`; these tests attack a *live* server over
+//! real 127.0.0.1 sockets.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::thread;
+use std::time::Duration;
+
+use feddd::config::ExpConfig;
+use feddd::coordinator::FedRun;
+use feddd::runtime::write_native_manifest;
+use feddd::transport::frame::{
+    read_frame, write_frame, Hello, FT_CONFIG, FT_HELLO, FT_UPLOAD,
+};
+use feddd::transport::{run_agent, AgentOpts, BoundServer, ServeOpts};
+
+fn native_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "feddd_transport_adv_{}_{tag}",
+        std::process::id()
+    ));
+    write_native_manifest(&dir, &[("mlp", 1.0)], 16, 64).unwrap();
+    dir
+}
+
+fn cfg(dir: &PathBuf) -> ExpConfig {
+    let mut cfg = ExpConfig::smoke();
+    cfg.scheme = "feddd".into();
+    cfg.n_clients = 2;
+    cfg.rounds = 2;
+    cfg.local_steps = 2;
+    cfg.test_n = 64;
+    cfg.train_per_client = 60;
+    cfg.eval_every = 2;
+    cfg.workers = 1;
+    cfg.artifacts_dir = dir.to_string_lossy().into_owned();
+    cfg
+}
+
+/// Short timeouts so hostile stalls resolve in test time.
+fn serve_opts(cfg: &ExpConfig) -> ServeOpts {
+    let mut opts = ServeOpts::from_config(cfg);
+    opts.listen = "127.0.0.1:0".into();
+    opts.accept_timeout = Duration::from_secs(30);
+    opts.hello_timeout = Duration::from_millis(400);
+    opts.read_timeout = Duration::from_millis(400);
+    opts.round_timeout = Duration::from_secs(10);
+    opts
+}
+
+#[test]
+fn hostile_connections_do_not_block_a_real_run() {
+    // Five attacks hit the accept loop while one honest agent serves the
+    // whole fleet; the run must complete with correct results anyway.
+    let dir = native_dir("accept");
+    let c = cfg(&dir);
+    let opts = serve_opts(&c);
+    let bound = BoundServer::bind(&opts).unwrap();
+    let addr = bound.local_addr.to_string();
+
+    let attackers: Vec<_> = (0..5)
+        .map(|kind| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let mut s = TcpStream::connect(&addr).unwrap();
+                match kind {
+                    // Plain garbage that is not even a frame.
+                    0 => {
+                        let _ = s.write_all(b"GET / HTTP/1.1\r\n\r\n");
+                    }
+                    // A frame whose length prefix claims u32::MAX bytes.
+                    1 => {
+                        let mut head = vec![FT_HELLO];
+                        head.extend_from_slice(&u32::MAX.to_le_bytes());
+                        let _ = s.write_all(&head);
+                    }
+                    // A truncated HELLO: header promises more than sent.
+                    2 => {
+                        let mut buf = Vec::new();
+                        write_frame(&mut buf, FT_HELLO, &[0u8; 14]).unwrap();
+                        let _ = s.write_all(&buf[..buf.len() - 6]);
+                    }
+                    // A mid-frame disconnect: half a header, then gone.
+                    3 => {
+                        let _ = s.write_all(&[FT_HELLO, 9]);
+                        drop(s);
+                        return;
+                    }
+                    // A silent stall: connect and send nothing at all.
+                    _ => {}
+                }
+                // Keep the socket open past the server's hello timeout so
+                // rejection, not our disconnect, is what frees the slot.
+                thread::sleep(Duration::from_millis(900));
+            })
+        })
+        .collect();
+    // Give the attackers a head start so they really do land first.
+    thread::sleep(Duration::from_millis(50));
+    let honest = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            run_agent(&AgentOpts {
+                connect: addr,
+                slot_start: 0,
+                slot_count: None,
+                overrides: Vec::new(),
+            })
+            .unwrap()
+        })
+    };
+
+    let coordinator = bound.accept_agents(&opts, &c).unwrap();
+    let mut run = FedRun::with_transport(c.clone(), Box::new(coordinator)).unwrap();
+    let result = run.run().unwrap();
+    run.shutdown_transport().unwrap();
+    let report = honest.join().unwrap();
+    for a in attackers {
+        a.join().unwrap();
+    }
+    assert_eq!(result.rounds.len(), c.rounds);
+    assert!(result.rounds.iter().all(|r| r.train_loss.is_finite()));
+    assert_eq!(report.rounds, c.rounds);
+    assert_eq!(report.uploads, c.n_clients * c.rounds);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Handshake as an agent would, without being one: HELLO out, CONFIG in.
+fn fake_handshake(addr: &str) -> TcpStream {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let hello = Hello { slot_start: 0, slot_count: 0 };
+    write_frame(&mut s, FT_HELLO, &hello.encode()).unwrap();
+    let (ty, _) = read_frame(&mut s, 1 << 20).unwrap();
+    assert_eq!(ty, FT_CONFIG);
+    s
+}
+
+#[test]
+fn mid_round_disconnect_fails_the_round_not_the_process() {
+    // A correctly handshaken "agent" that dies mid-upload: the reader
+    // reports the close and the round returns an error instead of
+    // hanging on the barrier or panicking.
+    let dir = native_dir("disconnect");
+    let c = cfg(&dir);
+    let opts = serve_opts(&c);
+    let bound = BoundServer::bind(&opts).unwrap();
+    let addr = bound.local_addr.to_string();
+    let fake = thread::spawn(move || {
+        let mut s = fake_handshake(&addr);
+        // Swallow the round-1 dispatch, answer with half an upload
+        // frame, then vanish.
+        let (_, _) = read_frame(&mut s, 1 << 30).unwrap();
+        let _ = s.write_all(&[FT_UPLOAD, 0xff, 0xff, 0x00, 0x00, 1, 2, 3]);
+        drop(s);
+    });
+    let coordinator = bound.accept_agents(&opts, &c).unwrap();
+    let mut run = FedRun::with_transport(c.clone(), Box::new(coordinator)).unwrap();
+    let err = run.step_round().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("lost mid-round"), "unexpected error: {msg}");
+    run.shutdown_transport().unwrap();
+    fake.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stalled_half_written_upload_times_out_the_round() {
+    // A handshaken "agent" that writes half an upload frame and then
+    // just stops: the per-read timeout must flag the stall (or, at
+    // worst, the round timeout must fire) — the server never hangs.
+    let dir = native_dir("stall");
+    let c = cfg(&dir);
+    let opts = serve_opts(&c);
+    let bound = BoundServer::bind(&opts).unwrap();
+    let addr = bound.local_addr.to_string();
+    let fake = thread::spawn(move || {
+        let mut s = fake_handshake(&addr);
+        let (_, _) = read_frame(&mut s, 1 << 30).unwrap();
+        // Three header bytes of an upload, then silence — but the
+        // socket stays open well past the server's read timeout.
+        let _ = s.write_all(&[FT_UPLOAD, 0x10, 0x00]);
+        thread::sleep(Duration::from_secs(4));
+        drop(s);
+    });
+    let coordinator = bound.accept_agents(&opts, &c).unwrap();
+    let mut run = FedRun::with_transport(c.clone(), Box::new(coordinator)).unwrap();
+    let err = run.step_round().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("mid-frame") || msg.contains("gave up waiting"),
+        "unexpected error: {msg}"
+    );
+    run.shutdown_transport().unwrap();
+    fake.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn overlapping_slot_claims_are_rejected() {
+    // Two claimants for slot 0: the first one in wins, the duplicate is
+    // dropped, and a correct agent for the remaining slot completes the
+    // fleet. (Which attacker-vs-agent order happens first is racy, so
+    // the duplicate here arrives strictly after the honest agent.)
+    let dir = native_dir("overlap");
+    let c = cfg(&dir);
+    let opts = serve_opts(&c);
+    let bound = BoundServer::bind(&opts).unwrap();
+    let addr = bound.local_addr.to_string();
+
+    let honest_first = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            run_agent(&AgentOpts {
+                connect: addr,
+                slot_start: 0,
+                slot_count: Some(1),
+                overrides: Vec::new(),
+            })
+            .unwrap()
+        })
+    };
+    // Wait until slot 0's owner is surely handshaken, then double-claim
+    // it; the server must reject us and keep waiting for slot 1.
+    thread::sleep(Duration::from_millis(300));
+    let dup = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            let hello = Hello { slot_start: 0, slot_count: 1 };
+            write_frame(&mut s, FT_HELLO, &hello.encode()).unwrap();
+            // Rejected: the connection just closes with no CONFIG.
+            assert!(read_frame(&mut s, 1 << 20).is_err());
+        })
+    };
+    let honest_second = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            // Arrive after the duplicate claim.
+            thread::sleep(Duration::from_millis(600));
+            run_agent(&AgentOpts {
+                connect: addr,
+                slot_start: 1,
+                slot_count: None,
+                overrides: Vec::new(),
+            })
+            .unwrap()
+        })
+    };
+
+    let coordinator = bound.accept_agents(&opts, &c).unwrap();
+    let mut run = FedRun::with_transport(c.clone(), Box::new(coordinator)).unwrap();
+    let result = run.run().unwrap();
+    run.shutdown_transport().unwrap();
+    assert_eq!(result.rounds.len(), c.rounds);
+    assert_eq!(honest_first.join().unwrap().uploads, c.rounds);
+    assert_eq!(honest_second.join().unwrap().uploads, c.rounds);
+    dup.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
