@@ -129,6 +129,33 @@ class GreenPaths(ArmHarness):
         self.assertEqual(len(armed["cells"]), 1)
         self.assertNotIn("bootstrap", armed)
 
+    def test_dropout_family_bench_keys_arm_onto_an_existing_baseline(self):
+        # PR adds wire/payload totals for the fed_dropout scheme: fresh
+        # keys are armable without touching the committed baseline first.
+        self.write("BENCH_baseline/BENCH_round.json",
+                   bench_doc(wire_bytes_sync_8r=5000))
+        fp = self.write("bench-out/BENCH_round.json",
+                        bench_doc(wire_bytes_sync_8r=4096,
+                                  wire_bytes_fed_dropout_8r=2048,
+                                  payload_bytes_fed_dropout_8r=1024))
+        proc = self.arm("--bench", fp)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        armed = self.read(os.path.join(self.dest, "BENCH_round.json"))
+        self.assertEqual(armed["wire_bytes_fed_dropout_8r"], 2048)
+
+    def test_matrix_promotion_may_widen_the_scheme_axis(self):
+        # A six-scheme report arms over a four-scheme baseline: new cells
+        # (fed_dropout, afd) widen coverage, which is never a disarm.
+        self.write("reports/baseline_smoke.json",
+                   matrix_doc([cell(), cell(scheme="fedavg")]))
+        fp = self.write("matrix-out/MATRIX_smoke_ci.json",
+                        matrix_doc([cell(), cell(scheme="fedavg"),
+                                    cell(scheme="fed_dropout"),
+                                    cell(scheme="afd")]))
+        proc = self.arm("--matrix", fp)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertEqual(len(self.read(self.matrix_dest)["cells"]), 4)
+
     def test_fresh_run_may_add_new_keys_and_cases(self):
         self.write("BENCH_baseline/BENCH_round.json",
                    bench_doc(wire_bytes_sync_8r=5000))
@@ -165,6 +192,20 @@ class RedPaths(ArmHarness):
         self.assertIn("disarm", proc.stderr)
         armed = self.read(os.path.join(self.dest, "BENCH_round.json"))
         self.assertEqual(armed["wire_bytes_sync_8r"], 5000)
+
+    def test_vanished_fed_dropout_key_is_refused(self):
+        # Once the dropout-family totals are armed they gate like any
+        # other wire_* key: a run that stops emitting them is refused.
+        self.write("BENCH_baseline/BENCH_round.json",
+                   bench_doc(wire_bytes_sync_8r=5000,
+                             wire_bytes_fed_dropout_8r=2048))
+        fp = self.write("bench-out/BENCH_round.json",
+                        bench_doc(wire_bytes_sync_8r=4096))
+        proc = self.arm("--bench", fp)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("wire_bytes_fed_dropout_8r", proc.stderr)
+        armed = self.read(os.path.join(self.dest, "BENCH_round.json"))
+        self.assertEqual(armed["wire_bytes_fed_dropout_8r"], 2048)
 
     def test_vanished_gated_serve_key_is_refused(self):
         self.write("BENCH_baseline/BENCH_serve.json",

@@ -109,6 +109,22 @@ class GreenPaths(unittest.TestCase):
         self.assertIn("no delta computed", proc.stdout)
 
 
+    def test_dropout_family_cells_are_new_cells_not_failures(self):
+        # Widening the scheme axis (fed_dropout, afd) against an armed
+        # four-scheme baseline: the fresh cells are notes with no delta —
+        # the undefined-division rule — and never fail the gate.
+        base = doc([cell(), cell(scheme="fedavg")])
+        cur = doc([
+            cell(),
+            cell(scheme="fedavg"),
+            cell(scheme="fed_dropout", wire_bytes=90000, uploaded_bytes=80000),
+            cell(scheme="afd", wire_bytes=95000, uploaded_bytes=85000),
+        ])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 0, proc.stdout + proc.stderr)
+        self.assertIn("new cell baseline_iid/fed_dropout/seed17/smoke", proc.stdout)
+        self.assertIn("new cell baseline_iid/afd/seed17/smoke", proc.stdout)
+
     def test_bootstrap_baseline_skips_per_cell_gates(self):
         base = {"bootstrap": True, "cells": []}
         # Numbers that would fail an armed gate sail through bootstrap...
@@ -156,6 +172,24 @@ class RedPaths(unittest.TestCase):
         cur = doc([cell()])
         proc = run_gate(base, cur)
         self.assertEqual(proc.returncode, 1)
+        self.assertIn("silently disarmed", proc.stdout)
+
+    def test_armed_dropout_family_cells_gate_like_any_other(self):
+        # Once fed_dropout/afd cells are promoted into the baseline they
+        # gate byte-exactly: one extra wire byte fails, and a cell that
+        # stops being run fails as silently disarmed.
+        base = doc([cell(scheme="fed_dropout", wire_bytes=90000)])
+        cur = doc([cell(scheme="fed_dropout", wire_bytes=90001)])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("baseline_iid/fed_dropout/seed17/smoke", proc.stdout)
+        self.assertIn("wire_bytes", proc.stdout)
+
+        base = doc([cell(), cell(scheme="afd")])
+        cur = doc([cell()])
+        proc = run_gate(base, cur)
+        self.assertEqual(proc.returncode, 1)
+        self.assertIn("baseline_iid/afd/seed17/smoke", proc.stdout)
         self.assertIn("silently disarmed", proc.stdout)
 
     def test_empty_current_report_fails(self):

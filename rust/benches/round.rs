@@ -66,12 +66,13 @@ fn cfg(scheme: &str, workers: usize, round_mode: &str, dir: &PathBuf) -> ExpConf
 /// gates on these byte totals *exactly*: any increase at the same config
 /// (= same dropout schedule) fails CI.
 fn deterministic_run(
+    scheme: &str,
     round_mode: &str,
     plane: &str,
     rounds: usize,
     dir: &PathBuf,
 ) -> (f64, usize, usize, usize, PlaneMix) {
-    let mut c = cfg("feddd", 1, round_mode, dir);
+    let mut c = cfg(scheme, 1, round_mode, dir);
     c.value_plane = plane.into();
     let mut run = FedRun::new(c).unwrap();
     let mut wire = 0usize;
@@ -161,9 +162,9 @@ fn main() {
     // scheduler regression, not noise.
     let rounds = 8;
     let (vt_sync, wire_sync, payload_sync, state_sync, _) =
-        deterministic_run("sync", "f32", rounds, &dir);
+        deterministic_run("feddd", "sync", "f32", rounds, &dir);
     let (vt_semi, wire_semi, payload_semi, state_semi, _) =
-        deterministic_run("semi_async", "f32", rounds, &dir);
+        deterministic_run("feddd", "semi_async", "f32", rounds, &dir);
     let speedup = vt_sync / vt_semi;
     println!(
         "round::virtual_time_{rounds}r  sync {vt_sync:.1}s  \
@@ -194,7 +195,7 @@ fn main() {
     // totals below are deterministic; ci/bench_diff.py gates the
     // `wire_*` keys no-increase and the `plane_*` keys byte-exactly.
     let (_, wire_auto, payload_auto, _, mix_auto) =
-        deterministic_run("sync", "auto", rounds, &dir);
+        deterministic_run("feddd", "sync", "auto", rounds, &dir);
     println!(
         "round::plane_mix_{rounds}r  f32 {wire_sync}B  auto {wire_auto}B \
          (payload {payload_auto}B)  layers f32 {} f16 {} i8 {}",
@@ -220,6 +221,31 @@ fn main() {
              the quantizer is not engaging"
                 .into(),
         );
+    }
+    // ---- dropout-family wire totals (DESIGN.md §Baselines) ----
+    // `fed_dropout` at its default rate 0.5 shrinks both directions of
+    // the wire (random dispatch masks thin the download, masked uploads
+    // thin the return path), so its deterministic total must sit strictly
+    // below `fedavg` on the identical fleet and seed. Both totals are
+    // gated no-increase by ci/bench_diff.py like every other `wire_*` /
+    // `payload_*` key.
+    let (_, wire_fd, payload_fd, _, _) =
+        deterministic_run("fed_dropout", "sync", "f32", rounds, &dir);
+    let (_, wire_avg, payload_avg, _, _) =
+        deterministic_run("fedavg", "sync", "f32", rounds, &dir);
+    println!(
+        "round::dropout_family_{rounds}r  fed_dropout {wire_fd}B (payload {payload_fd}B)  \
+         fedavg {wire_avg}B (payload {payload_avg}B)"
+    );
+    b.annotate_run("wire_bytes_fed_dropout_8r", Json::Num(wire_fd as f64));
+    b.annotate_run("payload_bytes_fed_dropout_8r", Json::Num(payload_fd as f64));
+    b.annotate_run("wire_bytes_fedavg_8r", Json::Num(wire_avg as f64));
+    b.annotate_run("payload_bytes_fedavg_8r", Json::Num(payload_avg as f64));
+    if wire_fd >= wire_avg {
+        gate_failures.push(format!(
+            "fed_dropout wire total {wire_fd}B is not strictly below fedavg's \
+             {wire_avg}B at the default rate"
+        ));
     }
     // Total OS threads the whole bench process ever spawned — a fixed
     // function of the swept worker counts (2+4 twice), never of round or

@@ -1,0 +1,366 @@
+//! Adaptive Federated Dropout (`scheme = afd`), after Bouacida et al.,
+//! "Adaptive Federated Dropout: Improving Communication Efficiency and
+//! Generalization for Federated Learning" (arXiv:2011.04050).
+//!
+//! The server maintains a per-unit **activation-score map** over the
+//! global model: after every aggregated round it scores the global
+//! update's units with the same importance index FedDD's Algorithm 2
+//! uses (`selection::unit_scores` under `Policy::Importance` — the
+//! Eq. 21 elementwise score group-normed per unit) and folds the scores
+//! into an exponential moving average with decay `cfg.afd_ema`. Each
+//! dispatch ships only the highest-scoring units at the current rate
+//! (initially `cfg.fd_rate`), and the rate is **annealed on plateau**:
+//! two consecutive rounds without a new best mean train loss halve it
+//! (flooring to 0 below 1e-3), trading communication savings back for
+//! convergence exactly when progress stalls.
+//!
+//! The score map is server-resident state that never crosses the wire —
+//! the dispatch frames carry only `(slot, rate)` pairs — so `afd` is
+//! **not serveable**: [`Scheme::agent_masks`] returns `None` and
+//! `feddd serve`/`agent` refuse the scheme up front. The map is
+//! JSON-serializable ([`Afd::to_json`]/[`Afd::from_json`]) for
+//! inspection and checkpointing.
+
+use crate::config::ExpConfig;
+use crate::model::ModelSpec;
+use crate::selection::{unit_scores, Policy};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::{DispatchMasks, RoundCtx, RoundPlan, Scheme};
+
+/// Rounds without a new best loss before the rate halves.
+const PLATEAU_ROUNDS: usize = 2;
+/// Rates annealed below this floor snap to 0 (full uploads).
+const RATE_FLOOR: f64 = 1e-3;
+
+/// Adaptive Federated Dropout server state: the activation-score EMA,
+/// the annealed rate, and the plateau detector.
+pub struct Afd {
+    /// EMA decay β (armed from `cfg.afd_ema` at the first plan).
+    pub beta: Option<f64>,
+    /// Current dropout rate (armed from `cfg.fd_rate` at the first plan,
+    /// halved on plateau).
+    pub rate: Option<f64>,
+    /// Activation-score EMA per (global layer, unit); empty until the
+    /// first observed round.
+    pub ema: Vec<Vec<f64>>,
+    /// Best mean train loss seen so far (+∞ before any observation).
+    pub best_loss: f64,
+    /// Consecutive observed rounds without a new best loss.
+    pub plateau: usize,
+}
+
+impl Afd {
+    pub fn new() -> Afd {
+        Afd {
+            beta: None,
+            rate: None,
+            ema: Vec::new(),
+            best_loss: f64::INFINITY,
+            plateau: 0,
+        }
+    }
+
+    /// Serialize the activation map + annealing state. Finiteness is
+    /// preserved by construction: the unset `best_loss = +∞` is *omitted*
+    /// (JSON has no infinity — `Num(inf)` would not round-trip), as are
+    /// the unarmed `beta`/`rate` options.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("scheme", Json::s("afd")),
+            (
+                "ema",
+                Json::Arr(self.ema.iter().map(|l| Json::arr_f64(l)).collect()),
+            ),
+            ("plateau", Json::Num(self.plateau as f64)),
+        ];
+        if let Some(b) = self.beta {
+            pairs.push(("beta", Json::Num(b)));
+        }
+        if let Some(r) = self.rate {
+            pairs.push(("rate", Json::Num(r)));
+        }
+        if self.best_loss.is_finite() {
+            pairs.push(("best_loss", Json::Num(self.best_loss)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Inverse of [`Self::to_json`].
+    pub fn from_json(j: &Json) -> anyhow::Result<Afd> {
+        let ema = j
+            .req_arr("ema")?
+            .iter()
+            .map(|l| {
+                l.as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("afd ema layer is not an array"))?
+                    .iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("afd ema score is not a number"))
+                    })
+                    .collect::<anyhow::Result<Vec<f64>>>()
+            })
+            .collect::<anyhow::Result<Vec<Vec<f64>>>>()?;
+        Ok(Afd {
+            beta: j.get("beta").and_then(|x| x.as_f64()),
+            rate: j.get("rate").and_then(|x| x.as_f64()),
+            ema,
+            best_loss: j.get("best_loss").and_then(|x| x.as_f64()).unwrap_or(f64::INFINITY),
+            plateau: j.req_usize("plateau")?,
+        })
+    }
+}
+
+impl Default for Afd {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheme for Afd {
+    fn name(&self) -> &'static str {
+        "afd"
+    }
+
+    /// Stateful like FedDD: masked downloads leave residual channels.
+    fn stateful(&self) -> bool {
+        true
+    }
+
+    fn reports_round_dropout(&self, _t: usize) -> bool {
+        true
+    }
+
+    fn needs_observation(&self) -> bool {
+        true
+    }
+
+    /// The score map lives on the server only — not reconstructible from
+    /// config, so `afd` cannot ride serve mode's dispatch frames.
+    fn agent_masks(&self, _cfg: &ExpConfig) -> Option<DispatchMasks> {
+        None
+    }
+
+    fn plan_round(&mut self, _t: usize, ctx: &mut RoundCtx<'_>) -> anyhow::Result<RoundPlan> {
+        let n = ctx.clients.len();
+        self.beta.get_or_insert(ctx.cfg.afd_ema);
+        let rate = *self.rate.get_or_insert(ctx.cfg.fd_rate);
+        let (dropout, scores) = if self.ema.is_empty() {
+            // No observed update yet (round 1): ship everything — there
+            // is no signal to rank units by.
+            let zeros = ctx
+                .global_spec
+                .layers
+                .iter()
+                .map(|l| vec![0.0; l.out_dim])
+                .collect();
+            (vec![0.0; n], zeros)
+        } else {
+            (vec![rate; n], self.ema.clone())
+        };
+        Ok(RoundPlan {
+            participants: (0..n).collect(),
+            dropout,
+            masks: DispatchMasks::Scored { scores },
+        })
+    }
+
+    fn observe_round(
+        &mut self,
+        _t: usize,
+        spec: &ModelSpec,
+        before: &[Tensor],
+        after: &[Tensor],
+        mean_loss: f64,
+    ) {
+        let beta = self.beta.unwrap_or(0.9);
+        // Importance scoring never draws from the RNG; the stream is a
+        // formality of the shared `unit_scores` signature.
+        let mut rng = Rng::new(0);
+        let scores: Vec<Vec<f64>> = (0..spec.layers.len())
+            .map(|l| unit_scores(spec, l, Policy::Importance, before, after, &mut rng))
+            .collect();
+        if self.ema.is_empty() {
+            self.ema = scores;
+        } else {
+            for (e_l, s_l) in self.ema.iter_mut().zip(&scores) {
+                for (e, s) in e_l.iter_mut().zip(s_l) {
+                    *e = beta * *e + (1.0 - beta) * s;
+                }
+            }
+        }
+        // Anneal on plateau of round loss.
+        if mean_loss.is_finite() && mean_loss < self.best_loss {
+            self.best_loss = mean_loss;
+            self.plateau = 0;
+        } else {
+            self.plateau += 1;
+            if self.plateau >= PLATEAU_ROUNDS {
+                let halved = self.rate.unwrap_or(0.0) * 0.5;
+                self.rate = Some(if halved < RATE_FLOOR { 0.0 } else { halved });
+                self.plateau = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mlp_update(seed: u64) -> (ModelSpec, Vec<Tensor>, Vec<Tensor>) {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let mut rng = Rng::new(seed);
+        let before = spec.init_params(&mut rng);
+        let after: Vec<Tensor> = before
+            .iter()
+            .map(|t| {
+                let d: Vec<f32> =
+                    t.data().iter().map(|&x| x + rng.normal_f32(0.0, 0.01)).collect();
+                Tensor::new(t.shape().to_vec(), d)
+            })
+            .collect();
+        (spec, before, after)
+    }
+
+    #[test]
+    fn first_observation_seeds_the_ema() {
+        let (spec, before, after) = mlp_update(1);
+        let mut afd = Afd::new();
+        afd.beta = Some(0.9);
+        afd.observe_round(1, &spec, &before, &after, 1.0);
+        assert_eq!(afd.ema.len(), spec.layers.len());
+        for (l, layer) in spec.layers.iter().enumerate() {
+            assert_eq!(afd.ema[l].len(), layer.out_dim);
+        }
+        let mut rng = Rng::new(0);
+        let direct = unit_scores(&spec, 0, Policy::Importance, &before, &after, &mut rng);
+        assert_eq!(afd.ema[0], direct);
+    }
+
+    #[test]
+    fn ema_folds_with_the_configured_decay() {
+        let (spec, before, after) = mlp_update(2);
+        let mut afd = Afd::new();
+        afd.beta = Some(0.75);
+        afd.observe_round(1, &spec, &before, &after, 1.0);
+        let seeded = afd.ema.clone();
+        // Second observation of the *same* update: ema' = 0.75 e + 0.25 s
+        // with e == s, so the map is a fixed point.
+        afd.observe_round(2, &spec, &before, &after, 0.9);
+        assert_eq!(afd.ema, seeded);
+        // A zero update decays the map toward 0 by exactly beta.
+        afd.observe_round(3, &spec, &after, &after, 0.8);
+        for (e_l, s_l) in afd.ema.iter().zip(&seeded) {
+            for (e, s) in e_l.iter().zip(s_l) {
+                assert!((e - 0.75 * s).abs() <= 1e-12 * s.abs().max(1.0), "{e} vs 0.75*{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn rate_anneals_on_loss_plateau_and_resets_on_improvement() {
+        let (spec, before, after) = mlp_update(3);
+        let mut afd = Afd::new();
+        afd.beta = Some(0.9);
+        afd.rate = Some(0.5);
+        afd.observe_round(1, &spec, &before, &after, 1.0); // best = 1.0
+        afd.observe_round(2, &spec, &before, &after, 1.2); // plateau 1
+        assert_eq!(afd.rate, Some(0.5));
+        afd.observe_round(3, &spec, &before, &after, 1.1); // plateau 2 -> halve
+        assert_eq!(afd.rate, Some(0.25));
+        assert_eq!(afd.plateau, 0);
+        afd.observe_round(4, &spec, &before, &after, 0.5); // new best resets
+        assert_eq!(afd.plateau, 0);
+        assert_eq!(afd.rate, Some(0.25));
+        // Annealing floors to zero instead of chasing denormals.
+        afd.rate = Some(1.5e-3);
+        afd.observe_round(5, &spec, &before, &after, 2.0);
+        afd.observe_round(6, &spec, &before, &after, 2.0);
+        assert_eq!(afd.rate, Some(0.0));
+    }
+
+    #[test]
+    fn activation_map_round_trips_through_json() {
+        // Armed, observed state round-trips bit-for-bit.
+        let (spec, before, after) = mlp_update(4);
+        let mut afd = Afd::new();
+        afd.beta = Some(0.9);
+        afd.rate = Some(0.5);
+        afd.observe_round(1, &spec, &before, &after, 1.25);
+        afd.observe_round(2, &spec, &before, &after, 1.5);
+        let j = afd.to_json();
+        let text = j.to_string_compact();
+        let back = Afd::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.beta, afd.beta);
+        assert_eq!(back.rate, afd.rate);
+        assert_eq!(back.ema, afd.ema);
+        assert_eq!(back.best_loss, afd.best_loss);
+        assert_eq!(back.plateau, afd.plateau);
+
+        // The fresh (unarmed) state has best_loss = +inf, which JSON
+        // cannot carry as a number: it must round-trip via omission.
+        let fresh = Afd::new();
+        let text = fresh.to_json().to_string_compact();
+        assert!(!text.contains("best_loss"), "{text}");
+        let back = Afd::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert!(back.best_loss.is_infinite());
+        assert_eq!(back.beta, None);
+        assert_eq!(back.rate, None);
+        assert!(back.ema.is_empty());
+    }
+
+    #[test]
+    fn round_one_plan_ships_everything() {
+        let cfg = {
+            let mut c = ExpConfig::smoke();
+            c.fd_rate = 0.6;
+            c.afd_ema = 0.8;
+            c
+        };
+        let spec = ModelSpec::get("mlp", 1.0).unwrap();
+        let mut afd = Afd::new();
+        // An empty fleet keeps the test free of ClientState scaffolding;
+        // plan_round only reads the fleet's length.
+        let mut rng = Rng::new(5);
+        let mut ctx = RoundCtx {
+            cfg: &cfg,
+            clients: &[],
+            global_spec: &spec,
+            budget_bytes: 0,
+            rng: &mut rng,
+        };
+        let plan = afd.plan_round(1, &mut ctx).unwrap();
+        assert!(plan.dropout.is_empty() && plan.participants.is_empty());
+        match &plan.masks {
+            DispatchMasks::Scored { scores } => {
+                assert_eq!(scores.len(), spec.layers.len());
+                assert!(scores.iter().flatten().all(|&s| s == 0.0));
+            }
+            m => panic!("expected scored masks, got {m:?}"),
+        }
+        // Arming happened even with no clients.
+        assert_eq!(afd.beta, Some(0.8));
+        assert_eq!(afd.rate, Some(0.6));
+        // Once observed, the plan dispatches the armed rate + the EMA.
+        let (pspec, before, after) = mlp_update(6);
+        afd.observe_round(1, &pspec, &before, &after, 1.0);
+        let clients: &[crate::coordinator::ClientState] = &[];
+        let mut rng = Rng::new(6);
+        let mut ctx = RoundCtx {
+            cfg: &cfg,
+            clients,
+            global_spec: &pspec,
+            budget_bytes: 0,
+            rng: &mut rng,
+        };
+        let plan = afd.plan_round(2, &mut ctx).unwrap();
+        match &plan.masks {
+            DispatchMasks::Scored { scores } => assert_eq!(scores, &afd.ema),
+            m => panic!("expected scored masks, got {m:?}"),
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Random Federated Dropout (`scheme = fed_dropout`), after Caldas et
+//! al., "Expanding the Reach of Federated Learning by Reducing Client
+//! Resource Requirements" (arXiv:1812.07210).
+//!
+//! Every round the server drops the *same* uniform fraction
+//! `cfg.fd_rate` of units from every client's sub-model, choosing each
+//! client's mask uniformly at random at dispatch. Both directions
+//! shrink: the Eq. 5 download ships only the masked values on
+//! non-broadcast rounds and the upload carries only the masked units —
+//! charged from the realized masked bytes through the same
+//! `downlink_bytes` / `wire_len()` paths FedDD uses.
+//!
+//! # Determinism / serve compatibility
+//!
+//! The per-(round, client) mask is a **pure function** of
+//! `(cfg.seed, round, client)` via [`dispatch_mask_rng`] — mirroring the
+//! `simnet::churn_drops` pure-hash precedent — so no engine or
+//! per-client RNG state is consumed. That buys two properties at once:
+//! with `fd_rate = 0` a run is byte-for-byte identical to `fedavg`
+//! (every RNG stream in the system advances identically), and a
+//! serve-mode agent recomputes the exact mask from the shared config
+//! while the wire carries only `(slot, rate)` dispatch entries.
+
+use crate::config::ExpConfig;
+use crate::util::rng::Rng;
+
+use super::{DispatchMasks, RoundCtx, RoundPlan, Scheme};
+
+/// The dispatch-mask RNG for one (run, round, client): a SplitMix-style
+/// hash of the triple seeding a fresh stream, so the draw mutates no
+/// shared state (cf. `simnet::churn_drops`).
+pub fn dispatch_mask_rng(seed: u64, round: u64, client: usize) -> Rng {
+    Rng::new(
+        seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(round.wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add((client as u64).wrapping_mul(0x94D0_49BB_1331_11EB)),
+    )
+}
+
+/// Caldas-style random federated dropout: uniform server-chosen rate,
+/// random server-chosen masks, everyone participates.
+pub struct FedDropout;
+
+impl Scheme for FedDropout {
+    fn name(&self) -> &'static str {
+        "fed_dropout"
+    }
+
+    /// Stateful like FedDD: masked downloads leave residual channels, so
+    /// clients keep snapshot + residual state and ride the `cfg.h`
+    /// broadcast schedule.
+    fn stateful(&self) -> bool {
+        true
+    }
+
+    /// The uniform rate applies from round 1 (unlike FedDD's D¹ = 0).
+    fn reports_round_dropout(&self, _t: usize) -> bool {
+        true
+    }
+
+    fn agent_masks(&self, _cfg: &ExpConfig) -> Option<DispatchMasks> {
+        Some(DispatchMasks::Random)
+    }
+
+    fn plan_round(&mut self, _t: usize, ctx: &mut RoundCtx<'_>) -> anyhow::Result<RoundPlan> {
+        let n = ctx.clients.len();
+        Ok(RoundPlan {
+            participants: (0..n).collect(),
+            dropout: vec![ctx.cfg.fd_rate; n],
+            masks: DispatchMasks::Random,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+    use crate::selection::{keep_count, random_mask};
+
+    #[test]
+    fn dispatch_mask_rng_is_a_pure_function_of_the_triple() {
+        let mut a = dispatch_mask_rng(17, 3, 5);
+        let mut b = dispatch_mask_rng(17, 3, 5);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // Any coordinate change moves the stream.
+        for mut other in [
+            dispatch_mask_rng(18, 3, 5),
+            dispatch_mask_rng(17, 4, 5),
+            dispatch_mask_rng(17, 3, 6),
+        ] {
+            let mut base = dispatch_mask_rng(17, 3, 5);
+            assert_ne!(
+                (0..8).map(|_| base.next_u64()).collect::<Vec<_>>(),
+                (0..8).map(|_| other.next_u64()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn masks_are_reproducible_and_sized_by_the_rate() {
+        let spec = ModelSpec::get("mlp", 1.0).unwrap();
+        for &(round, client) in &[(1u64, 0usize), (2, 3), (9, 7)] {
+            let a = random_mask(&spec, 0.6, &mut dispatch_mask_rng(17, round, client));
+            let b = random_mask(&spec, 0.6, &mut dispatch_mask_rng(17, round, client));
+            assert_eq!(a, b);
+            let want: Vec<usize> =
+                spec.unit_counts().iter().map(|&n| keep_count(n, 0.6)).collect();
+            assert_eq!(a.selected_per_layer(), want);
+        }
+        // Different clients in the same round get different masks.
+        let a = random_mask(&spec, 0.6, &mut dispatch_mask_rng(17, 2, 0));
+        let b = random_mask(&spec, 0.6, &mut dispatch_mask_rng(17, 2, 1));
+        assert_ne!(a, b);
+    }
+}

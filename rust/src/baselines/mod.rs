@@ -1,6 +1,10 @@
-//! Client-selection baselines (paper §6.2), run through the same round
-//! engine and under the same per-round uploaded-byte budget
-//! `A_server · Σ U_n` as FedDD:
+//! Baseline schemes (paper §6.2) and the [`Scheme`] seam the round
+//! engine drives every scheme — FedDD included — through.
+//!
+//! Two families run through the same round engine and under the same
+//! per-round uploaded-byte budget `A_server · Σ U_n` as FedDD:
+//!
+//! **Client selection** — which clients upload (full models):
 //!
 //! * **FedAvg** [4] — every client uploads the full model, no budget
 //!   (the paper's reference point for T2A = 1).
@@ -12,10 +16,285 @@
 //!   client is slower than the preferred round time (α = 2 per the
 //!   paper's setup), with optimistic values for unexplored clients and
 //!   ε-greedy exploration.
+//!
+//! **Parameter dropout** — which *units* ship (every client uploads):
+//!
+//! * **fed_dropout** ([`fed_dropout::FedDropout`]) — Caldas-style random
+//!   federated dropout (arXiv:1812.07210): the server picks one uniform
+//!   rate `cfg.fd_rate` and a random unit mask per (round, client) at
+//!   dispatch; sub-model download *and* upload both shrink.
+//! * **afd** ([`afd::Afd`]) — Adaptive Federated Dropout
+//!   (arXiv:2011.04050): a server-maintained per-unit activation-score
+//!   map (an EMA of the global update's importance scores) decides which
+//!   units ship, with the rate annealed on plateau of round loss.
+//!
+//! The engine never string-matches on `cfg.scheme` inside a round:
+//! [`scheme_by_name`] resolves the config to a boxed [`Scheme`] once at
+//! build, [`Scheme::plan_round`] produces the round's participants /
+//! rates / [`DispatchMasks`], and the boolean contract surface
+//! ([`Scheme::stateful`] &c.) drives the broadcast schedule, the rebase
+//! gates and the dropout reporting in both round modes.
+
+pub mod afd;
+pub mod fed_dropout;
+
+pub use afd::Afd;
+pub use fed_dropout::{dispatch_mask_rng, FedDropout};
 
 use crate::config::ExpConfig;
 use crate::coordinator::ClientState;
+use crate::model::ModelSpec;
+use crate::solver::{allocate_fast, AllocInput, AllocParams};
+use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// Every scheme [`scheme_by_name`] resolves, in the order the docs and
+/// the scenario matrix list them. `config::validate` whitelists against
+/// this — one source of truth for "what is a scheme".
+pub const SCHEME_NAMES: &[&str] = &["feddd", "fedavg", "fedcs", "oort", "fed_dropout", "afd"];
+
+/// How the upload masks of one round's dispatch are chosen — the part of
+/// a round plan the ingest stage (`coordinator::ingest::stage_clients`)
+/// consumes. FedDD picks masks client-side *after* training (Algorithm
+/// 2); the dropout-family baselines pick them server-side *at dispatch*,
+/// which is what lets the Eq. 5 download shrink too.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DispatchMasks {
+    /// The client selects its own mask post-training (FedDD Algorithm 2,
+    /// under `cfg.selection` with the client's round-labeled RNG split).
+    ClientChoice,
+    /// Full-model uploads, no masking (FedAvg/FedCS/Oort).
+    Full,
+    /// Server-chosen uniform random mask per (round, client) at the
+    /// dispatched rate. The draw is a *pure function* of
+    /// `(cfg.seed, round, client)` ([`dispatch_mask_rng`]) — no engine or
+    /// client RNG state is consumed, so a serve-mode agent recomputes the
+    /// identical mask from the shared config and the wire carries only
+    /// `(slot, rate)` pairs.
+    Random,
+    /// Server-chosen mask ranked by a per-(layer, unit) score map over
+    /// the *global* model's units (AFD's activation-score map; narrower
+    /// hetero clients index it through the leading-corner prefix).
+    Scored { scores: Vec<Vec<f64>> },
+}
+
+/// What a scheme sees when planning a round: read-only fleet + model
+/// state, the round byte budget, and the engine's RNG (the only
+/// randomness a plan may consume — drawing anywhere else would break the
+/// bitwise-determinism-across-worker-counts contract).
+pub struct RoundCtx<'a> {
+    pub cfg: &'a ExpConfig,
+    pub clients: &'a [ClientState],
+    pub global_spec: &'a ModelSpec,
+    /// Per-round byte budget `A_server · Σ U_n`.
+    pub budget_bytes: usize,
+    pub rng: &'a mut Rng,
+}
+
+/// One round's plan: who participates, at what dropout rate (indexed by
+/// absolute client id), and how upload masks are chosen.
+pub struct RoundPlan {
+    /// Participants, strictly ascending client ids.
+    pub participants: Vec<usize>,
+    /// Dropout rates indexed by **absolute** client id (0 where unused).
+    pub dropout: Vec<f64>,
+    pub masks: DispatchMasks,
+}
+
+/// A federated scheme, as the round engine sees it. One boxed instance
+/// lives on the [`crate::coordinator::FedRun`] for the whole run; any
+/// mutable fields are server-resident scheme state (AFD's score map).
+///
+/// Determinism contract: [`Self::plan_round`] may draw randomness only
+/// from `ctx.rng`, and [`Self::observe_round`] sees only
+/// worker-count-independent inputs (the global before/after and the
+/// round's mean loss) — so every scheme inherits the engine's
+/// bitwise-identical-across-worker-counts guarantee for free.
+pub trait Scheme: Send {
+    /// The `cfg.scheme` string this scheme answers to.
+    fn name(&self) -> &'static str;
+
+    /// Stateful schemes keep virtualized per-client params (snapshot +
+    /// residual), rebase after every round and ride the `cfg.h` sparse /
+    /// broadcast download schedule; stateless baselines re-extract from
+    /// the live global at every dispatch and always broadcast.
+    fn stateful(&self) -> bool {
+        false
+    }
+
+    /// Whether round `t`'s `mean_dropout` column reports this scheme's
+    /// realized/allocated dropout (false ⇒ the column reads 0).
+    fn reports_round_dropout(&self, _t: usize) -> bool {
+        false
+    }
+
+    /// Whether the engine must clone the pre-aggregation global and call
+    /// [`Self::observe_round`] after each fold (AFD's score map).
+    fn needs_observation(&self) -> bool {
+        false
+    }
+
+    /// The [`DispatchMasks`] a serve-mode agent can rebuild from config
+    /// alone, or `None` when the scheme keeps server-resident mask state
+    /// that cannot ride the wire's `(slot, rate)` dispatch entries — such
+    /// a scheme cannot run in serve mode (`feddd serve`/`agent` refuse it
+    /// up front, and `stage_for_dispatch` errors rather than drifting the
+    /// replica).
+    fn agent_masks(&self, cfg: &ExpConfig) -> Option<DispatchMasks>;
+
+    /// Plan round `t`: participants, per-client dropout rates, masks.
+    fn plan_round(&mut self, t: usize, ctx: &mut RoundCtx<'_>) -> anyhow::Result<RoundPlan>;
+
+    /// Post-fold observation hook (only called when
+    /// [`Self::needs_observation`]): the global parameters before and
+    /// after round `t`'s aggregation, plus the round's mean train loss.
+    fn observe_round(
+        &mut self,
+        _t: usize,
+        _spec: &ModelSpec,
+        _before: &[Tensor],
+        _after: &[Tensor],
+        _mean_loss: f64,
+    ) {
+    }
+}
+
+/// Resolve a `cfg.scheme` string to its [`Scheme`] (see [`SCHEME_NAMES`]).
+pub fn scheme_by_name(name: &str) -> anyhow::Result<Box<dyn Scheme>> {
+    Ok(match name {
+        "feddd" => Box::new(FedDd),
+        "fedavg" => Box::new(FedAvg),
+        "fedcs" => Box::new(FedCs),
+        "oort" => Box::new(Oort),
+        "fed_dropout" => Box::new(FedDropout),
+        "afd" => Box::new(Afd::new()),
+        _ => anyhow::bail!("unknown scheme {name:?}"),
+    })
+}
+
+/// FedDD proper: everyone participates, rates from the Eq. 16/17
+/// allocation (or the uniform ablation), masks chosen client-side.
+pub struct FedDd;
+
+impl Scheme for FedDd {
+    fn name(&self) -> &'static str {
+        "feddd"
+    }
+    fn stateful(&self) -> bool {
+        true
+    }
+    fn reports_round_dropout(&self, t: usize) -> bool {
+        t > 1 // Algorithm 1: D^1 = 0
+    }
+    fn agent_masks(&self, _cfg: &ExpConfig) -> Option<DispatchMasks> {
+        Some(DispatchMasks::ClientChoice)
+    }
+    fn plan_round(&mut self, t: usize, ctx: &mut RoundCtx<'_>) -> anyhow::Result<RoundPlan> {
+        let n = ctx.clients.len();
+        let dropout = if t == 1 {
+            vec![0.0; n] // Algorithm 1: D^1 = 0
+        } else {
+            allocate_feddd_dropout(ctx)?
+        };
+        Ok(RoundPlan {
+            participants: (0..n).collect(),
+            dropout,
+            masks: DispatchMasks::ClientChoice,
+        })
+    }
+}
+
+/// Dropout rates for a FedDD round: the Eq. 16/17 optimum, or the
+/// uniform ablation (D_n = 1 − A_server for everyone).
+fn allocate_feddd_dropout(ctx: &RoundCtx<'_>) -> anyhow::Result<Vec<f64>> {
+    let cfg = ctx.cfg;
+    if cfg.alloc == "uniform" {
+        let d = (1.0 - cfg.a_server).min(cfg.d_max);
+        return Ok(vec![d; ctx.clients.len()]);
+    }
+    let m_total: f64 = ctx.clients.iter().map(|c| c.m_n() as f64).sum();
+    let u_global = ctx.global_spec.size_bytes() as f64;
+    let inputs: Vec<AllocInput> = ctx
+        .clients
+        .iter()
+        .map(|c| AllocInput {
+            u_bytes: c.u_bytes() as f64,
+            t_cmp: c.profile.t_cmp(c.samples_per_round(cfg.local_steps, cfg.batch)),
+            sec_per_byte: c.profile.sec_per_byte(),
+            // re_n = (m_n/m)(Σ_c min(C·dis,1))(U_n/U)·loss_n  (Eq. 13)
+            re: (c.m_n() as f64 / m_total)
+                * c.dis_score
+                * (c.u_bytes() as f64 / u_global)
+                * c.last_loss,
+        })
+        .collect();
+    let params = AllocParams {
+        d_max: cfg.d_max,
+        a_server: cfg.a_server,
+        delta: cfg.delta,
+    };
+    Ok(allocate_fast(&inputs, &params)?.d)
+}
+
+/// FedAvg: everyone participates, full uploads.
+pub struct FedAvg;
+
+impl Scheme for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+    fn agent_masks(&self, _cfg: &ExpConfig) -> Option<DispatchMasks> {
+        Some(DispatchMasks::Full)
+    }
+    fn plan_round(&mut self, _t: usize, ctx: &mut RoundCtx<'_>) -> anyhow::Result<RoundPlan> {
+        let n = ctx.clients.len();
+        Ok(RoundPlan {
+            participants: (0..n).collect(),
+            dropout: vec![0.0; n],
+            masks: DispatchMasks::Full,
+        })
+    }
+}
+
+/// FedCS: the fastest clients whose full uploads fit the budget.
+pub struct FedCs;
+
+impl Scheme for FedCs {
+    fn name(&self) -> &'static str {
+        "fedcs"
+    }
+    fn agent_masks(&self, _cfg: &ExpConfig) -> Option<DispatchMasks> {
+        Some(DispatchMasks::Full)
+    }
+    fn plan_round(&mut self, _t: usize, ctx: &mut RoundCtx<'_>) -> anyhow::Result<RoundPlan> {
+        let sel = fedcs_select(ctx.clients, ctx.cfg, ctx.budget_bytes);
+        Ok(RoundPlan {
+            participants: sel,
+            dropout: vec![0.0; ctx.clients.len()],
+            masks: DispatchMasks::Full,
+        })
+    }
+}
+
+/// Oort: top statistical×system utility under the budget.
+pub struct Oort;
+
+impl Scheme for Oort {
+    fn name(&self) -> &'static str {
+        "oort"
+    }
+    fn agent_masks(&self, _cfg: &ExpConfig) -> Option<DispatchMasks> {
+        Some(DispatchMasks::Full)
+    }
+    fn plan_round(&mut self, t: usize, ctx: &mut RoundCtx<'_>) -> anyhow::Result<RoundPlan> {
+        let sel = oort_select(ctx.clients, ctx.cfg, ctx.budget_bytes, t, ctx.rng);
+        Ok(RoundPlan {
+            participants: sel,
+            dropout: vec![0.0; ctx.clients.len()],
+            masks: DispatchMasks::Full,
+        })
+    }
+}
 
 /// Estimated full-model round time for a client (download + train +
 /// upload, Eq. 12 inner term).
@@ -31,16 +310,25 @@ pub fn full_round_time(c: &ClientState, cfg: &ExpConfig) -> f64 {
 /// All orderings in this module use [`f64::total_cmp`]: a NaN round-time
 /// or utility (e.g. a degenerate device profile) sorts deterministically
 /// to the end instead of panicking mid-selection, so FedCS/Oort have a
-/// documented total order on any input.
+/// documented total order on any input. An empty fleet selects nothing —
+/// selection sits downstream of the serve ingest path, which must fail a
+/// round with an error, never panic the process (DESIGN.md §Serve).
 pub fn fedcs_select(
     clients: &[ClientState],
     cfg: &ExpConfig,
     budget_bytes: usize,
 ) -> Vec<usize> {
+    if clients.is_empty() {
+        return Vec::new();
+    }
     let mut order: Vec<usize> = (0..clients.len()).collect();
     order.sort_by(|&a, &b| {
         full_round_time(&clients[a], cfg).total_cmp(&full_round_time(&clients[b], cfg))
     });
+    // The sort is stable, so `order[0]` is exactly the client a
+    // first-minimum scan would find — kept for the budget-too-small
+    // fallback below without a second pass.
+    let fastest = order[0];
     let mut selected = Vec::new();
     let mut used = 0usize;
     for n in order {
@@ -53,11 +341,6 @@ pub fn fedcs_select(
     if selected.is_empty() {
         // budget smaller than the smallest model: still run one client
         // (the fastest), as FedCS would extend the deadline.
-        let fastest = (0..clients.len())
-            .min_by(|&a, &b| {
-                full_round_time(&clients[a], cfg).total_cmp(&full_round_time(&clients[b], cfg))
-            })
-            .unwrap();
         selected.push(fastest);
     }
     selected.sort_unstable();
@@ -72,11 +355,21 @@ pub fn oort_select(
     round: usize,
     rng: &mut Rng,
 ) -> Vec<usize> {
-    // Preferred round duration: median full-round time.
-    let mut times: Vec<f64> = clients.iter().map(|c| full_round_time(c, cfg)).collect();
+    if clients.is_empty() {
+        return Vec::new();
+    }
+    // Preferred round duration: median full-round time (midpoint mean of
+    // the two central values for an even fleet — `sorted[len/2]` alone
+    // would take the *upper* median and under-penalize).
+    let times: Vec<f64> = clients.iter().map(|c| full_round_time(c, cfg)).collect();
     let mut sorted = times.clone();
     sorted.sort_by(f64::total_cmp);
-    let t_pref = sorted[sorted.len() / 2];
+    let m = sorted.len();
+    let t_pref = if m % 2 == 0 {
+        (sorted[m / 2 - 1] + sorted[m / 2]) / 2.0
+    } else {
+        sorted[m / 2]
+    };
 
     // Statistical utility m_n · loss_n; unexplored clients get the current
     // max (optimistic prior), so everyone is tried early.
@@ -91,20 +384,26 @@ pub fn oort_select(
         }
     }
     // System penalty.
-    for (u, t) in utils.iter_mut().zip(&mut times) {
+    for (u, t) in utils.iter_mut().zip(&times) {
         if *t > t_pref {
             *u *= (t_pref / *t).powf(cfg.oort_alpha);
         }
     }
     // ε-greedy exploration: a decaying fraction of the budget goes to
-    // random clients (Oort §5; ε0=0.2, ×0.98 per round).
-    let eps = 0.2 * 0.98f64.powi(round as i32 - 1);
+    // random clients (Oort §5; ε0=0.2, ×0.98 per round). The exponent is
+    // clamped at 0: `powi(round - 1)` alone would *grow* ε above ε0 at
+    // round 0 (powi(-1) = 1/0.98).
+    let eps = 0.2 * 0.98f64.powi((round as i32 - 1).max(0));
 
     let mut order: Vec<usize> = (0..clients.len()).collect();
     // Descending utility; total_cmp keeps the order total (NaN sorts low).
     order.sort_by(|&a, &b| utils[b].total_cmp(&utils[a]));
 
     let mut selected = Vec::new();
+    // O(1) membership for the exploitation loop's dedup against the
+    // exploration picks (a `selected.contains` scan would be O(n²) over
+    // the fleet).
+    let mut picked = vec![false; clients.len()];
     let mut used = 0usize;
     // exploration picks first
     let explore_budget = (budget_bytes as f64 * eps) as usize;
@@ -114,16 +413,18 @@ pub fn oort_select(
         let u = clients[n].u_bytes();
         if used + u <= explore_budget {
             used += u;
+            picked[n] = true;
             selected.push(n);
         }
     }
     for n in order {
-        if selected.contains(&n) {
+        if picked[n] {
             continue;
         }
         let u = clients[n].u_bytes();
         if used + u <= budget_bytes {
             used += u;
+            picked[n] = true;
             selected.push(n);
         }
     }
@@ -201,6 +502,18 @@ mod tests {
     }
 
     #[test]
+    fn empty_fleet_selects_nothing_instead_of_panicking() {
+        // Both selectors sit downstream of the serve ingest path: a
+        // degenerate (empty) fleet must yield an empty selection, not an
+        // index panic (FedCS's old `min_by(..).unwrap()`) or an
+        // empty-slice index (Oort's old `sorted[len / 2]`).
+        let (cs, cfg) = clients(0);
+        assert!(fedcs_select(&cs, &cfg, 1_000_000).is_empty());
+        let mut rng = Rng::new(3);
+        assert!(oort_select(&cs, &cfg, 1_000_000, 1, &mut rng).is_empty());
+    }
+
+    #[test]
     fn oort_respects_budget_and_explores() {
         let (mut cs, cfg) = clients(10);
         let u = cs[0].u_bytes();
@@ -218,6 +531,11 @@ mod tests {
 
     #[test]
     fn oort_penalizes_stragglers() {
+        // NOTE: with 6 clients this test used to pin the *upper*-median
+        // `t_pref = sorted[3]` (penalizing clients 4 and 5); the
+        // even-midpoint fix moves `t_pref` to `(sorted[2] + sorted[3])/2`,
+        // which penalizes client 3 as well — strictly harder on
+        // stragglers, so the assertion is unchanged.
         let (mut cs, cfg) = clients(6);
         for c in cs.iter_mut() {
             c.participations = 1;
@@ -228,5 +546,193 @@ mod tests {
         let mut rng = Rng::new(9);
         let sel = oort_select(&cs, &cfg, 3 * u, 10, &mut rng);
         assert!(!sel.contains(&5), "straggler selected: {sel:?}");
+    }
+
+    #[test]
+    fn oort_t_pref_uses_even_midpoint() {
+        // Two clients: 0 fast, 1 ~100× slower but with higher statistical
+        // utility. The upper median `sorted[1]` equals client 1's own
+        // round time, so the old code never penalized it and picked {1};
+        // the midpoint median sits halfway, the straggler penalty
+        // (≈ 0.505² ≈ 0.25) collapses client 1's utility below client
+        // 0's, and {0} wins.
+        let (mut cs, cfg) = clients(2);
+        for c in cs.iter_mut() {
+            c.participations = 1;
+        }
+        cs[0].last_loss = 1.0;
+        cs[1].last_loss = 1.5;
+        cs[1].profile.up_bps = cs[0].profile.up_bps / 1000.0; // ~100× round time
+        let u = cs[0].u_bytes();
+        let mut rng = Rng::new(11);
+        let sel = oort_select(&cs, &cfg, u, 10, &mut rng);
+        assert_eq!(sel, vec![0], "midpoint t_pref must penalize the straggler");
+    }
+
+    #[test]
+    fn oort_round_zero_exploration_is_clamped() {
+        // ε must satisfy ε(0) = ε0 = 0.2, not 0.2/0.98: with a budget of
+        // 4.95·u the exploration budget is 0.99·u under the clamp (admits
+        // nobody) but 1.01·u under the old `powi(-1)` (admits the one
+        // unexplored client). Client 5 is unexplored *and* the slowest —
+        // penalized to the bottom of the exploitation order — so the old
+        // code selected {0,1,2,5} at round 0 and {0,1,2,3} at round 1,
+        // while the clamp makes round 0 identical to round 1.
+        let (mut cs, cfg) = clients(6);
+        for c in cs.iter_mut().take(5) {
+            c.participations = 1;
+            c.last_loss = 1.0;
+        }
+        cs[5].participations = 0;
+        let u = cs[0].u_bytes();
+        let budget = (4.95 * u as f64) as usize;
+        let sel0 = oort_select(&cs, &cfg, budget, 0, &mut Rng::new(13));
+        let sel1 = oort_select(&cs, &cfg, budget, 1, &mut Rng::new(13));
+        assert_eq!(sel0, sel1, "ε(0) must equal ε(1) = ε0");
+        assert!(!sel0.contains(&5), "round-0 over-exploration: {sel0:?}");
+        assert_eq!(sel0, vec![0, 1, 2, 3]);
+    }
+
+    /// Verbatim copy of [`oort_select`]'s selection loops with the old
+    /// O(n²) `selected.contains` dedup — the reference the membership-
+    /// mask rewrite must match output-for-output.
+    fn oort_select_contains_dedup(
+        clients: &[ClientState],
+        cfg: &ExpConfig,
+        budget_bytes: usize,
+        round: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        if clients.is_empty() {
+            return Vec::new();
+        }
+        let times: Vec<f64> = clients.iter().map(|c| full_round_time(c, cfg)).collect();
+        let mut sorted = times.clone();
+        sorted.sort_by(f64::total_cmp);
+        let m = sorted.len();
+        let t_pref = if m % 2 == 0 {
+            (sorted[m / 2 - 1] + sorted[m / 2]) / 2.0
+        } else {
+            sorted[m / 2]
+        };
+        let mut utils: Vec<f64> = clients
+            .iter()
+            .map(|c| c.m_n() as f64 * c.last_loss.max(0.0))
+            .collect();
+        let max_util = utils.iter().cloned().fold(f64::MIN, f64::max).max(1e-9);
+        for (u, c) in utils.iter_mut().zip(clients) {
+            if c.participations == 0 {
+                *u = max_util;
+            }
+        }
+        for (u, t) in utils.iter_mut().zip(&times) {
+            if *t > t_pref {
+                *u *= (t_pref / *t).powf(cfg.oort_alpha);
+            }
+        }
+        let eps = 0.2 * 0.98f64.powi((round as i32 - 1).max(0));
+        let mut order: Vec<usize> = (0..clients.len()).collect();
+        order.sort_by(|&a, &b| utils[b].total_cmp(&utils[a]));
+        let mut selected = Vec::new();
+        let mut used = 0usize;
+        let explore_budget = (budget_bytes as f64 * eps) as usize;
+        let mut perm: Vec<usize> = rng.permutation(clients.len());
+        perm.retain(|&n| clients[n].participations == 0);
+        for &n in &perm {
+            let u = clients[n].u_bytes();
+            if used + u <= explore_budget {
+                used += u;
+                selected.push(n);
+            }
+        }
+        for n in order {
+            if selected.contains(&n) {
+                continue;
+            }
+            let u = clients[n].u_bytes();
+            if used + u <= budget_bytes {
+                used += u;
+                selected.push(n);
+            }
+        }
+        if selected.is_empty() {
+            selected.push(order_first_by_util(&utils));
+        }
+        selected.sort_unstable();
+        selected
+    }
+
+    #[test]
+    fn oort_dedup_rewrite_is_bitwise_identical() {
+        // The O(n²)→O(n) dedup must change nothing observable: same
+        // selections, same RNG consumption, over fleets that exercise the
+        // explore/exploit overlap (mixed participation, varied budgets
+        // and rounds).
+        for n in [1usize, 2, 5, 12, 30] {
+            let (mut cs, cfg) = clients(n);
+            for (i, c) in cs.iter_mut().enumerate() {
+                c.participations = (i % 3 == 0) as usize; // mix of (un)explored
+            }
+            let u = cs[0].u_bytes();
+            for round in [0usize, 1, 5, 40] {
+                for budget_u in [1usize, 3, n, 4 * n] {
+                    let budget = budget_u * u;
+                    let seed = (n * 1000 + round * 10 + budget_u) as u64;
+                    let a = oort_select(&cs, &cfg, budget, round, &mut Rng::new(seed));
+                    let b = oort_select_contains_dedup(
+                        &cs,
+                        &cfg,
+                        budget,
+                        round,
+                        &mut Rng::new(seed),
+                    );
+                    assert_eq!(a, b, "n={n} round={round} budget={budget_u}u");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scheme_registry_covers_every_name() {
+        for &name in SCHEME_NAMES {
+            let s = scheme_by_name(name).unwrap();
+            assert_eq!(s.name(), name);
+        }
+        assert!(scheme_by_name("nope").is_err());
+        // Serve compatibility: exactly the schemes whose masks are a pure
+        // function of config can ride the wire's (slot, rate) dispatches.
+        let cfg = ExpConfig::smoke();
+        for &name in SCHEME_NAMES {
+            let serveable = scheme_by_name(name).unwrap().agent_masks(&cfg).is_some();
+            assert_eq!(serveable, name != "afd", "{name}");
+        }
+    }
+
+    #[test]
+    fn schemes_plan_rounds_within_the_fleet() {
+        let (cs, cfg) = clients(6);
+        let spec = ModelSpec::get("mlp", 1.0).unwrap();
+        let total: usize = cs.iter().map(|c| c.u_bytes()).sum();
+        for &name in SCHEME_NAMES {
+            let mut scheme = scheme_by_name(name).unwrap();
+            let mut rng = Rng::new(21);
+            let mut ctx = RoundCtx {
+                cfg: &cfg,
+                clients: &cs,
+                global_spec: &spec,
+                budget_bytes: (cfg.a_server * total as f64).round() as usize,
+                rng: &mut rng,
+            };
+            let plan = scheme.plan_round(1, &mut ctx).unwrap();
+            assert!(!plan.participants.is_empty(), "{name}");
+            assert!(plan.participants.windows(2).all(|w| w[0] < w[1]), "{name}");
+            assert!(plan.participants.iter().all(|&p| p < cs.len()), "{name}");
+            assert_eq!(plan.dropout.len(), cs.len(), "{name}");
+            assert!(
+                plan.dropout.iter().all(|&d| (0.0..=1.0).contains(&d)),
+                "{name}: {:?}",
+                plan.dropout
+            );
+        }
     }
 }

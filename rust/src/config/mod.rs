@@ -26,7 +26,8 @@ pub struct ExpConfig {
     /// Train batch (must equal the artifact's compiled batch).
     pub batch: usize,
     pub lr: f32,
-    /// "feddd" | "fedavg" | "fedcs" | "oort".
+    /// "feddd" | "fedavg" | "fedcs" | "oort" | "fed_dropout" | "afd"
+    /// (`baselines::SCHEME_NAMES`).
     pub scheme: String,
     /// Upload-parameter selection for FedDD: "importance" | "random" |
     /// "max" | "delta" | "ordered".
@@ -139,6 +140,14 @@ pub struct ExpConfig {
     /// waiting to be folded, so a slow server exerts TCP backpressure on
     /// its agents instead of buffering unboundedly (DESIGN.md §Serve).
     pub ingest_queue: usize,
+    /// Uniform server-chosen dropout rate for `scheme = "fed_dropout"`
+    /// (Caldas-style random federated dropout), and the initial rate AFD
+    /// anneals from. In [0, 1); 0 reproduces `fedavg` byte-for-byte.
+    pub fd_rate: f64,
+    /// EMA decay β of `scheme = "afd"`'s per-unit activation-score map:
+    /// `score ← β·score + (1−β)·importance`. In [0, 1); higher = a
+    /// longer memory of which units mattered.
+    pub afd_ema: f64,
 }
 
 impl Default for ExpConfig {
@@ -186,6 +195,8 @@ impl Default for ExpConfig {
             listen: "127.0.0.1:7070".into(),
             max_conns: 64,
             ingest_queue: 64,
+            fd_rate: 0.5,
+            afd_ema: 0.9,
         }
     }
 }
@@ -300,9 +311,10 @@ impl ExpConfig {
             self.partition
         );
         anyhow::ensure!(
-            ["feddd", "fedavg", "fedcs", "oort"].contains(&self.scheme.as_str()),
-            "unknown scheme {:?}",
-            self.scheme
+            crate::baselines::SCHEME_NAMES.contains(&self.scheme.as_str()),
+            "unknown scheme {:?} (one of {:?})",
+            self.scheme,
+            crate::baselines::SCHEME_NAMES
         );
         anyhow::ensure!(
             ["importance", "random", "max", "delta", "ordered"]
@@ -401,6 +413,16 @@ impl ExpConfig {
             "ingest_queue {} must be in 1..=65536",
             self.ingest_queue
         );
+        anyhow::ensure!(
+            self.fd_rate.is_finite() && (0.0..1.0).contains(&self.fd_rate),
+            "fd_rate {} must be in [0, 1)",
+            self.fd_rate
+        );
+        anyhow::ensure!(
+            self.afd_ema.is_finite() && (0.0..1.0).contains(&self.afd_ema),
+            "afd_ema {} must be in [0, 1)",
+            self.afd_ema
+        );
         let known_family =
             ["mlp", "cnn1", "cnn2", "het_a", "het_b"].contains(&self.model.as_str());
         // Specific sub-models (e.g. "het_a_3") run homogeneously (Fig. 3).
@@ -459,6 +481,8 @@ impl ExpConfig {
             ("listen", Json::s(&self.listen)),
             ("max_conns", Json::Num(self.max_conns as f64)),
             ("ingest_queue", Json::Num(self.ingest_queue as f64)),
+            ("fd_rate", Json::Num(self.fd_rate)),
+            ("afd_ema", Json::Num(self.afd_ema)),
         ])
     }
 
@@ -519,6 +543,8 @@ impl ExpConfig {
             listen: gs("listen", &d.listen),
             max_conns: gn("max_conns", d.max_conns as f64) as usize,
             ingest_queue: gn("ingest_queue", d.ingest_queue as f64) as usize,
+            fd_rate: gn("fd_rate", d.fd_rate),
+            afd_ema: gn("afd_ema", d.afd_ema),
         };
         Ok(cfg)
     }
@@ -575,6 +601,8 @@ impl ExpConfig {
             "listen" => self.listen = value.into(),
             "max_conns" => self.max_conns = value.parse()?,
             "ingest_queue" => self.ingest_queue = value.parse()?,
+            "fd_rate" => self.fd_rate = value.parse()?,
+            "afd_ema" => self.afd_ema = value.parse()?,
             "rare_classes" => {
                 self.rare_classes = value
                     .split(',')
@@ -831,6 +859,31 @@ mod tests {
         assert!(c.validate().is_err());
         c.ingest_queue = 1 << 20;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dropout_family_knobs_roundtrip_and_validate() {
+        let mut c = ExpConfig::smoke();
+        assert_eq!(c.fd_rate, 0.5);
+        assert_eq!(c.afd_ema, 0.9);
+        c.set("scheme", "fed_dropout").unwrap();
+        c.set("fd_rate", "0.25").unwrap();
+        c.set("afd_ema", "0.8").unwrap();
+        c.validate().unwrap();
+        let back = ExpConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+        c.scheme = "afd".into();
+        c.fd_rate = 0.0; // rate 0 is the fedavg-equivalence point
+        c.validate().unwrap();
+        for bad in [-0.1, 1.0, f64::NAN] {
+            c.fd_rate = bad;
+            assert!(c.validate().is_err(), "fd_rate {bad} must be rejected");
+        }
+        c.fd_rate = 0.5;
+        for bad in [-0.1, 1.0, f64::NAN] {
+            c.afd_ema = bad;
+            assert!(c.validate().is_err(), "afd_ema {bad} must be rejected");
+        }
     }
 
     #[test]

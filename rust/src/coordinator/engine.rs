@@ -90,7 +90,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::aggregation::{staleness_weight, AggBackend, Aggregator};
-use crate::baselines;
+use crate::baselines::{self, RoundCtx, RoundPlan, Scheme};
 use crate::codec::{recycle_wire_upload, CodecMode, EncodingMix, PlaneMix, PlaneMode, WireUpload};
 use crate::config::ExpConfig;
 use crate::data::{FedDataset, Partition, PartitionKind, SynthSpec};
@@ -101,7 +101,6 @@ use crate::selection::Policy;
 use crate::simnet::{
     churn_drops, AvailabilityTrace, ClientClocks, DeviceProfile, EventQueue, Fleet, VirtualClock,
 };
-use crate::solver::{allocate_fast, AllocInput, AllocParams};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
@@ -178,6 +177,12 @@ pub struct FedRun {
     rng: Rng,
     round: usize,
     policy: Policy,
+    /// The scheme (`cfg.scheme`) as a strategy object: participant
+    /// selection, dropout-rate allocation and the dispatch-mask policy
+    /// all come from [`Scheme::plan_round`], and the drivers consult the
+    /// trait's capability hooks (`stateful`, `reports_round_dropout`,
+    /// `needs_observation`) instead of string-matching scheme names.
+    scheme: Box<dyn Scheme>,
     backend: AggBackend,
     /// Wire-codec layout policy (`cfg.codec`): auto-pick or forced.
     codec: CodecMode,
@@ -347,6 +352,10 @@ impl FedRun {
         let plane = PlaneMode::by_name(&cfg.value_plane)?;
         let plane_error = cfg.plane_error;
         let trace = AvailabilityTrace::by_name(&cfg.trace)?;
+        // The scheme strategy object (`baselines::Scheme`). Construction
+        // draws no RNG — the split sequence above (data, partition,
+        // fleet, init, per-client) is part of the replica contract.
+        let scheme = baselines::scheme_by_name(&cfg.scheme)?;
         let pool = ThreadPool::new(cfg.workers);
         let n = clients.len();
         Ok(FedRun {
@@ -362,6 +371,7 @@ impl FedRun {
             rng,
             round: 0,
             policy,
+            scheme,
             backend,
             codec,
             plane,
@@ -571,41 +581,30 @@ impl FedRun {
         }
     }
 
-    /// Step 0 of a round: the participant set and the dropout-rate vector
-    /// (indexed by absolute client id) for round `t`, per the scheme.
-    fn round_participants(&mut self, t: usize) -> anyhow::Result<(Vec<usize>, Vec<f64>)> {
-        let n = self.clients.len();
-        match self.cfg.scheme.as_str() {
-            "feddd" => {
-                let d = if t == 1 {
-                    vec![0.0; n] // Algorithm 1: D^1 = 0
-                } else {
-                    self.allocate_dropout()?
-                };
-                Ok(((0..n).collect(), d))
-            }
-            "fedavg" => Ok(((0..n).collect(), vec![0.0; n])),
-            "fedcs" => {
-                let budget = self.budget_bytes();
-                let sel = baselines::fedcs_select(&self.clients, &self.cfg, budget);
-                Ok((sel, vec![0.0; n]))
-            }
-            "oort" => {
-                let budget = self.budget_bytes();
-                let sel =
-                    baselines::oort_select(&self.clients, &self.cfg, budget, t, &mut self.rng);
-                Ok((sel, vec![0.0; n]))
-            }
-            s => anyhow::bail!("unknown scheme {s:?}"),
-        }
+    /// Step 0 of a round: the scheme's [`RoundPlan`] for round `t` —
+    /// participants, per-client dropout rates and the dispatch-mask
+    /// policy. The context hands the scheme exactly the inputs the old
+    /// string-matched arms consumed (fleet, budget, engine RNG), so each
+    /// scheme's RNG draws land on the same stream as before.
+    fn plan_round(&mut self, t: usize) -> anyhow::Result<RoundPlan> {
+        let budget_bytes = self.budget_bytes();
+        let mut ctx = RoundCtx {
+            cfg: &self.cfg,
+            clients: &self.clients,
+            global_spec: &self.global_spec,
+            budget_bytes,
+            rng: &mut self.rng,
+        };
+        self.scheme.plan_round(t, &mut ctx)
     }
 
     /// Full-model broadcast round? Round 1 always broadcasts — no client
     /// has ever received the global model, so there is nothing for a
     /// mask-sparse download to merge into — then every h-th round for
-    /// FedDD; the baselines always download the full model.
+    /// the stateful schemes (FedDD, fed_dropout, afd); the stateless
+    /// selection baselines always download the full model.
     fn is_full_broadcast(&self, t: usize) -> bool {
-        t <= 1 || t % self.cfg.h == 0 || self.cfg.scheme != "feddd"
+        t <= 1 || t % self.cfg.h == 0 || !self.scheme.stateful()
     }
 
     /// Shard length of the Eq. 4 fold partition over `n_items` ordered
@@ -674,9 +673,13 @@ impl FedRun {
         // reach at the round-start instant — the server schedules blind
         // to availability, exactly like a real parameter server timing
         // out unreachable devices.
-        let (participants, dropout) = self.round_participants(t)?;
-        let participants = self.available_participants(participants, self.clock.now());
+        let plan = self.plan_round(t)?;
+        let (dropout, masks) = (plan.dropout, plan.masks);
+        let participants = self.available_participants(plan.participants, self.clock.now());
         let n_parts = participants.len();
+        // Schemes that score the global update (AFD's activation map)
+        // need the pre-round parameters after the fold overwrites them.
+        let before = self.scheme.needs_observation().then(|| self.global_params.clone());
 
         // ---- 1+2+3. train / select / fold, through the transport ----
         // The previous round's close notes ride along with the dispatch
@@ -688,6 +691,7 @@ impl FedRun {
             round: t,
             subset: &participants,
             dropout: &dropout,
+            masks: &masks,
             full_broadcast,
             notes: &notes,
             cfg: &cfg,
@@ -707,18 +711,22 @@ impl FedRun {
         self.global_params = fold.agg.finalize(&self.global_params, Some(&self.runtime))?;
         let mean_loss = fold.loss_sum / n_parts.max(1) as f64;
         let uploaded = fold.uploaded;
+        if let Some(before) = before {
+            self.scheme
+                .observe_round(t, &self.global_spec, &before, &self.global_params, mean_loss);
+        }
 
         // ---- 4. download merge (Eq. 5 / Eq. 6) as a state rebase ----
         // Publishing the end-of-round snapshot and handing every
         // participant a reference *is* the download: a broadcast client
         // collapses to `Synced`, a sparse client keeps only its residual.
         // The previous round's snapshot dies with its last reference.
-        // Baselines never rebase at all — they re-extract from the live
-        // global at every dispatch and never read their virtualized
-        // params, so the whole fleet keeps sharing the round-0 snapshot
-        // (rebasing them would pin one snapshot per distinct
-        // last-participation round).
-        if cfg.scheme == "feddd" {
+        // Stateless schemes never rebase at all — they re-extract from
+        // the live global at every dispatch and never read their
+        // virtualized params, so the whole fleet keeps sharing the
+        // round-0 snapshot (rebasing them would pin one snapshot per
+        // distinct last-participation round).
+        if self.scheme.stateful() {
             let snap = self.snapshots.publish(t, &self.global_params);
             for (slot, residual) in fold.rebases {
                 self.clients[slot].params =
@@ -736,7 +744,7 @@ impl FedRun {
         let duration = self.clock.advance_round_by(fold.slowest);
 
         // Realized dropout: the byte fraction the masks actually saved.
-        let mean_dropout = if cfg.scheme == "feddd" && t > 1 {
+        let mean_dropout = if self.scheme.reports_round_dropout(t) {
             1.0 - uploaded as f64 / self.clients.iter().map(|c| c.u_bytes()).sum::<usize>() as f64
         } else {
             0.0
@@ -778,11 +786,12 @@ impl FedRun {
         let full_broadcast = self.is_full_broadcast(t);
 
         // ---- 0. participants + dropout over the whole fleet ----
-        let (participants, dropout) = self.round_participants(t)?;
+        let plan = self.plan_round(t)?;
+        let (dropout, masks) = (plan.dropout, plan.masks);
         // The availability trace gates dispatch the same way it gates the
         // sync barrier: an offline client is simply unreachable this
         // round (its own in-flight work, if any, still arrives).
-        let participants = self.available_participants(participants, round_start);
+        let participants = self.available_participants(plan.participants, round_start);
 
         // ---- 1. dispatch idle participants (micro-batched) ----
         // Clients still uploading a previous round's update are skipped —
@@ -796,7 +805,7 @@ impl FedRun {
             .filter(|&n| !self.client_clocks.is_busy(n, round_start))
             .collect();
         // Allocated dropout this round: mean rate over the dispatch set.
-        let mean_dropout = if cfg.scheme == "feddd" && t > 1 && !dispatch.is_empty() {
+        let mean_dropout = if self.scheme.reports_round_dropout(t) && !dispatch.is_empty() {
             dispatch.iter().map(|&n| dropout[n]).sum::<f64>() / dispatch.len() as f64
         } else {
             0.0
@@ -812,6 +821,7 @@ impl FedRun {
                 round: t,
                 subset: &dispatch,
                 dropout: &dropout,
+                masks: &masks,
                 full_broadcast,
                 notes: &notes,
                 cfg: &cfg,
@@ -908,6 +918,10 @@ impl FedRun {
         // The round's loss/byte metrics describe what was actually folded
         // (fresh or buffered), summed in the same ascending-client order
         // the aggregation runs in.
+        // Pre-fold parameters for schemes that score the global update
+        // (cloned only when something will actually fold).
+        let before = (self.scheme.needs_observation() && !arrivals.is_empty())
+            .then(|| self.global_params.clone());
         let mut uploaded = 0usize;
         let mut wire_bytes = 0usize;
         let mut encodings = EncodingMix::default();
@@ -961,7 +975,7 @@ impl FedRun {
         // clear their pending slot — they never read their virtualized
         // params (re-extracted from the live global at dispatch), so
         // rebasing them would pointlessly pin per-round snapshots.
-        if !arrivals.is_empty() && cfg.scheme == "feddd" {
+        if !arrivals.is_empty() && self.scheme.stateful() {
             let snap = self.snapshots.publish(t, &self.global_params);
             for ev in &arrivals {
                 let n = ev.client;
@@ -1002,6 +1016,17 @@ impl FedRun {
         let duration = self.clock.advance_to(t_close);
         let folded = arrivals.len();
         let mean_loss = loss_sum / folded.max(1) as f64;
+        if folded > 0 {
+            if let Some(before) = before {
+                self.scheme.observe_round(
+                    t,
+                    &self.global_spec,
+                    &before,
+                    &self.global_params,
+                    mean_loss,
+                );
+            }
+        }
         let mean_staleness = if folded == 0 {
             0.0
         } else {
@@ -1025,39 +1050,6 @@ impl FedRun {
             sim_state_bytes: self.sim_state_bytes(),
             data_state_bytes: self.data_state_bytes,
         })
-    }
-
-    /// Dropout rates for this round: the Eq. 16/17 optimum, or the
-    /// uniform ablation (D_n = 1 − A_server for everyone).
-    fn allocate_dropout(&self) -> anyhow::Result<Vec<f64>> {
-        if self.cfg.alloc == "uniform" {
-            let d = (1.0 - self.cfg.a_server).min(self.cfg.d_max);
-            return Ok(vec![d; self.clients.len()]);
-        }
-        let m_total: f64 = self.clients.iter().map(|c| c.m_n() as f64).sum();
-        let u_global = self.global_spec.size_bytes() as f64;
-        let inputs: Vec<AllocInput> = self
-            .clients
-            .iter()
-            .map(|c| AllocInput {
-                u_bytes: c.u_bytes() as f64,
-                t_cmp: c
-                    .profile
-                    .t_cmp(c.samples_per_round(self.cfg.local_steps, self.cfg.batch)),
-                sec_per_byte: c.profile.sec_per_byte(),
-                // re_n = (m_n/m)(Σ_c min(C·dis,1))(U_n/U)·loss_n  (Eq. 13)
-                re: (c.m_n() as f64 / m_total)
-                    * c.dis_score
-                    * (c.u_bytes() as f64 / u_global)
-                    * c.last_loss,
-            })
-            .collect();
-        let params = AllocParams {
-            d_max: self.cfg.d_max,
-            a_server: self.cfg.a_server,
-            delta: self.cfg.delta,
-        };
-        Ok(allocate_fast(&inputs, &params)?.d)
     }
 
     /// Agent side of serve mode, step 1 of a dispatch: install the
@@ -1098,7 +1090,7 @@ impl FedRun {
         if notes.is_empty() {
             return Ok(());
         }
-        let rebase = self.cfg.scheme == "feddd" && notes.iter().any(|n| !n.churned);
+        let rebase = self.scheme.stateful() && notes.iter().any(|n| !n.churned);
         let snap =
             rebase.then(|| self.snapshots.publish(round.saturating_sub(1), &self.global_params));
         for note in notes {
@@ -1139,14 +1131,31 @@ impl FedRun {
             dropout.len(),
             self.clients.len()
         );
-        if let Some(&last) = subset.last() {
-            anyhow::ensure!(last < self.clients.len(), "dispatched slot {last} out of range");
+        // Wire-supplied inputs fail the round, never the process (DESIGN
+        // §Serve): a corrupt rate would otherwise reach the mask
+        // machinery's debug asserts.
+        for &s in subset {
+            anyhow::ensure!(s < dropout.len(), "dispatched slot {s} out of range");
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&dropout[s]),
+                "dispatched dropout rate {} for slot {s} outside [0, 1]",
+                dropout[s]
+            );
         }
+        // Serve agents recompute dispatch masks from the shared config;
+        // a scheme whose masks live in server-side state cannot.
+        let masks = self.scheme.agent_masks(&self.cfg).ok_or_else(|| {
+            anyhow::anyhow!(
+                "scheme {:?} keeps server-resident dispatch-mask state and cannot stage remotely",
+                self.cfg.scheme
+            )
+        })?;
         let cfg = self.cfg.clone();
         let mut call = RoundCall {
             round,
             subset,
             dropout,
+            masks: &masks,
             full_broadcast,
             notes: &[],
             cfg: &cfg,

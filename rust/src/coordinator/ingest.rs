@@ -32,6 +32,7 @@
 use std::collections::BTreeMap;
 
 use crate::aggregation::{AggBackend, Aggregator};
+use crate::baselines::{dispatch_mask_rng, DispatchMasks};
 use crate::codec::{
     encode_upload_planes, recycle_wire_upload, CodecMode, EncodingMix, PlaneMix, PlaneMode,
     WireUpload,
@@ -40,7 +41,7 @@ use crate::config::ExpConfig;
 use crate::data::FedDataset;
 use crate::model::{extract_params_into, ModelSpec};
 use crate::runtime::Runtime;
-use crate::selection::{select_mask, ChannelMask, Policy};
+use crate::selection::{mask_from_scores, random_mask, select_mask, ChannelMask, Policy};
 use crate::simnet::{downlink_bytes, ArrivalEvent, ClientClocks, EventQueue, RoundTiming};
 use crate::tensor::{copy_tensors_into, Tensor};
 use crate::util::threadpool::ThreadPool;
@@ -103,6 +104,10 @@ pub struct RoundCall<'a> {
     pub subset: &'a [usize],
     /// Eq. 16/17 dropout rates indexed by **absolute** client id.
     pub dropout: &'a [f64],
+    /// The scheme's dispatch-mask policy for this round: who chooses
+    /// each client's channel mask (the client post-training, or the
+    /// server at dispatch) and from what (`baselines::DispatchMasks`).
+    pub masks: &'a DispatchMasks,
     /// Whether this round's download phase is a full-model broadcast.
     pub full_broadcast: bool,
     /// Close notifications from the previous round (ascending by slot).
@@ -196,9 +201,10 @@ pub(crate) fn drive_subset(
 ///
 /// Every listed client is an independent work item: it owns a disjoint
 /// `&mut ClientState` (its virtualized params, RNG stream, loss
-/// bookkeeping), materializes its dense model (FedDD: snapshot +
-/// residual; baselines: re-extracted from the current global), trains
-/// against the shared thread-safe runtime, selects its upload mask,
+/// bookkeeping), materializes its dense model (stateful schemes:
+/// snapshot + residual; stateless: re-extracted from the current
+/// global), trains against the shared thread-safe runtime, resolves its
+/// upload mask per the round's [`DispatchMasks`] policy,
 /// encodes the wire upload, gathers its post-round residual and
 /// computes its Eq. 7–12 timing. `scoped_try_map` returns outputs in
 /// input (= ascending client) order, so downstream f64 accumulations
@@ -208,7 +214,15 @@ pub(crate) fn stage_clients(
     subset: &[usize],
 ) -> anyhow::Result<Vec<UploadEnvelope>> {
     let cfg = call.cfg;
-    let is_feddd = cfg.scheme == "feddd";
+    let masks = call.masks;
+    // `Full`-masked schemes are stateless: clients re-extract from the
+    // live global every dispatch and never keep residuals. Everything
+    // else downloads mask-sparse between broadcasts and carries the
+    // complement residual — whoever chose the mask.
+    let stateful = !matches!(masks, DispatchMasks::Full);
+    // Only client-chosen Algorithm-2 masks score the local update, which
+    // needs the pre-training copy.
+    let client_selects = matches!(masks, DispatchMasks::ClientChoice);
     let hetero = cfg.is_hetero();
     let round_label = call.round as u64;
     let rt = call.runtime;
@@ -259,17 +273,19 @@ pub(crate) fn stage_clients(
                 let evicted = matches!(c.params, ClientParams::Evicted);
                 let full_bc = round_full_broadcast || c.participations == 0 || evicted;
                 // Materialize the dense model for this round only
-                // (the baselines re-sync to the current global at
-                // dispatch and never select, so they skip the
-                // pre-training copy; an evicted FedDD client re-syncs
-                // from the live global like a baseline would).
-                if is_feddd {
+                // (stateless schemes re-sync to the current global at
+                // dispatch; an evicted stateful client re-syncs from
+                // the live global the same way). Only client-chosen
+                // masks need the pre-training copy to score against.
+                if stateful {
                     if evicted {
                         extract_params_into(gp, &c.spec, &mut s.params);
                     } else {
                         c.params.materialize_into(&c.spec, &mut s.params);
                     }
-                    copy_tensors_into(&s.params, &mut s.params_before);
+                    if client_selects {
+                        copy_tensors_into(&s.params, &mut s.params_before);
+                    }
                 } else {
                     extract_params_into(gp, &c.spec, &mut s.params);
                 }
@@ -283,19 +299,35 @@ pub(crate) fn stage_clients(
                     &mut s.x,
                     &mut s.y,
                 )?;
-                let mask = if is_feddd {
-                    let mut sel_rng = c.rng.split(round_label);
-                    select_mask(
-                        policy,
+                let mask = match masks {
+                    // FedDD: the client scores its own update with its
+                    // own RNG stream after training (Algorithm 2).
+                    DispatchMasks::ClientChoice => {
+                        let mut sel_rng = c.rng.split(round_label);
+                        select_mask(
+                            policy,
+                            &c.spec,
+                            &s.params_before,
+                            &s.params,
+                            if hetero { Some(cr) } else { None },
+                            dropout[n],
+                            &mut sel_rng,
+                        )
+                    }
+                    DispatchMasks::Full => ChannelMask::full(&c.spec),
+                    // Server-chosen masks are fixed at dispatch time;
+                    // the mask RNG is a pure hash of (seed, round,
+                    // client) — no client RNG state is consumed, so a
+                    // serve agent recomputes the identical mask from
+                    // the shared config.
+                    DispatchMasks::Random => random_mask(
                         &c.spec,
-                        &s.params_before,
-                        &s.params,
-                        if hetero { Some(cr) } else { None },
                         dropout[n],
-                        &mut sel_rng,
-                    )
-                } else {
-                    ChannelMask::full(&c.spec)
+                        &mut dispatch_mask_rng(cfg.seed, round_label, n),
+                    ),
+                    DispatchMasks::Scored { scores } => {
+                        mask_from_scores(&c.spec, scores, dropout[n])?
+                    }
                 };
                 // Client-side encode: the bytes this upload really
                 // puts on the wire (debug-asserted <= the
@@ -310,7 +342,7 @@ pub(crate) fn stage_clients(
                 // broadcast; else the complement-of-mask residual
                 // (the channels the Eq. 5 download will not
                 // overwrite).
-                let residual = if !is_feddd || full_bc {
+                let residual = if !stateful || full_bc {
                     None
                 } else {
                     SparseResidual::complement_of(&mask, &s.params, &c.spec)

@@ -49,7 +49,16 @@ a_server delta h train_per_client test_n fleet eval_every agg_backend
 rare_classes rare_ratio artifacts_dir oort_alpha alloc workers
 round_mode quorum deadline_s staleness_beta codec value_plane
 plane_error data_mode snapshot_ring_cap trace trace_period_s
-churn_rate listen max_conns ingest_queue.
+churn_rate listen max_conns ingest_queue fd_rate afd_ema.
+
+`--scheme feddd|fedavg|fedcs|oort|fed_dropout|afd` picks the federated
+scheme. `fed_dropout` is Caldas-style random federated dropout: every
+client gets the same server-chosen rate `--fd_rate` (default 0.5; 0
+reproduces fedavg byte-for-byte) with masks drawn at dispatch. `afd` is
+Adaptive Federated Dropout: the server ranks units by an activation-score
+EMA (decay `--afd_ema`, default 0.9) and anneals the rate on loss
+plateaus; afd keeps server-resident mask state, so it cannot run in
+serve mode.
 
 `--value_plane f32|f16|i8|auto` picks the wire value plane for uploads
 (README §Codec): `auto` chooses the smallest plane per layer whose
@@ -285,6 +294,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
          close notes and must never evict"
     );
     cfg.validate()?;
+    anyhow::ensure!(
+        feddd::baselines::scheme_by_name(&cfg.scheme)?.agent_masks(&cfg).is_some(),
+        "scheme {:?} keeps server-resident dispatch-mask state and cannot run in serve mode",
+        cfg.scheme
+    );
     let opts = ServeOpts::from_config(&cfg);
     let bound = BoundServer::bind(&opts)?;
     // Publish the resolved address *before* accepting, so scripts that

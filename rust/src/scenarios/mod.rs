@@ -33,8 +33,10 @@ use crate::metrics::RunResult;
 use crate::util::json::{self, Json};
 
 /// The schemes every matrix cell row is crossed with by default: FedDD
-/// plus the selection baselines sharing its codec/simnet stack.
-pub const MATRIX_SCHEMES: &[&str] = &["feddd", "fedavg", "fedcs", "oort"];
+/// plus the selection baselines (fedavg/fedcs/oort) and the
+/// dropout-family baselines (fed_dropout/afd) sharing its
+/// codec/simnet stack — `baselines::SCHEME_NAMES`.
+pub const MATRIX_SCHEMES: &[&str] = crate::baselines::SCHEME_NAMES;
 
 /// Matrix scale tier. The tier sets the *scale* knobs (fleet size,
 /// rounds, per-client data); the scenario then sets the *shape* knobs on

@@ -118,6 +118,22 @@ impl ChannelMask {
     }
 }
 
+/// Per-unit scores for one layer of `spec` under `policy` — the public
+/// face of the per-layer scoring used by Algorithm 2. Server-side
+/// consumers (the AFD activation-score map in `baselines::afd`) call
+/// this on the *global* before/after parameters to score the round's
+/// update without re-deriving the group-norm conventions.
+pub fn unit_scores(
+    spec: &ModelSpec,
+    l: usize,
+    policy: Policy,
+    w_before: &[Tensor],
+    w_after: &[Tensor],
+    rng: &mut Rng,
+) -> Vec<f64> {
+    layer_unit_scores(spec, l, policy, w_before, w_after, rng)
+}
+
 /// Per-unit scores for one layer.
 fn layer_unit_scores(
     spec: &ModelSpec,
@@ -211,6 +227,82 @@ pub fn keep_count(n_units: usize, d: f64) -> usize {
     kept.min(n_units)
 }
 
+/// Keep the `keep` highest-scoring units: the one total order every mask
+/// in the repository selects by.
+///
+/// Score descending under [`f64::total_cmp`], ties broken by ascending
+/// unit index; non-finite scores (a diverged update) sort as lowest
+/// priority instead of panicking the coordinator. Explicit tie-breaking
+/// (rather than relying on sort stability) keeps masks reproducible
+/// across platforms, sort implementations and worker counts.
+pub fn rank_and_keep(scores: &[f64], keep: usize) -> Vec<bool> {
+    let sane = |x: f64| if x.is_finite() { x } else { f64::MIN };
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| sane(scores[b]).total_cmp(&sane(scores[a])).then(a.cmp(&b)));
+    let mut sel = vec![false; scores.len()];
+    for &k in order.iter().take(keep) {
+        sel[k] = true;
+    }
+    sel
+}
+
+/// Server-chosen uniform random mask at dropout rate `d` (Caldas-style
+/// federated dropout, `scheme = fed_dropout`): every layer keeps
+/// `keep_count` uniformly random units.
+///
+/// Draws exactly one `rng.f64()` per unit in layer order — the same
+/// stream [`select_mask`] consumes under [`Policy::Random`], so a
+/// same-seeded `Rng` produces the identical mask through either entry
+/// point (asserted by `random_mask_matches_select_mask` below).
+pub fn random_mask(spec: &ModelSpec, d: f64, rng: &mut Rng) -> ChannelMask {
+    assert!((0.0..=1.0).contains(&d), "dropout rate {d}");
+    let per_layer = spec
+        .layers
+        .iter()
+        .map(|layer| {
+            let scores: Vec<f64> = (0..layer.out_dim).map(|_| rng.f64()).collect();
+            rank_and_keep(&scores, keep_count(layer.out_dim, d))
+        })
+        .collect();
+    ChannelMask { per_layer }
+}
+
+/// Server-chosen mask from a per-(layer, unit) score map at dropout rate
+/// `d` (the AFD activation-score path, `scheme = afd`): every layer keeps
+/// its `keep_count` highest-scoring units under [`rank_and_keep`]'s total
+/// order.
+///
+/// `scores` is indexed by the *global* model's layers/units; a narrower
+/// hetero client scores its units through the leading-corner prefix
+/// (`scores[l][..out_dim]`), mirroring how coverage rates index client
+/// units. Errors (rather than panics) on a score map that does not cover
+/// the spec — the caller may sit downstream of external state.
+pub fn mask_from_scores(
+    spec: &ModelSpec,
+    scores: &[Vec<f64>],
+    d: f64,
+) -> anyhow::Result<ChannelMask> {
+    anyhow::ensure!((0.0..=1.0).contains(&d), "dropout rate {d} outside [0, 1]");
+    anyhow::ensure!(
+        scores.len() == spec.layers.len(),
+        "score map covers {} layers, model has {}",
+        scores.len(),
+        spec.layers.len()
+    );
+    let mut per_layer = Vec::with_capacity(spec.layers.len());
+    for (l, layer) in spec.layers.iter().enumerate() {
+        anyhow::ensure!(
+            scores[l].len() >= layer.out_dim,
+            "layer {l}: score map has {} units, spec needs {}",
+            scores[l].len(),
+            layer.out_dim
+        );
+        let keep = keep_count(layer.out_dim, d);
+        per_layer.push(rank_and_keep(&scores[l][..layer.out_dim], keep));
+    }
+    Ok(ChannelMask { per_layer })
+}
+
 /// Select the uploaded channel mask for one client (Algorithm 2).
 ///
 /// `cr` — coverage rates per (layer, global unit), indexed by the client's
@@ -238,26 +330,7 @@ pub fn select_mask(
             }
         }
         let keep = keep_count(layer.out_dim, d);
-        // NaN-safe: a diverged update (NaN/inf scores) must not panic the
-        // coordinator; treat non-finite scores as lowest priority.
-        for s in scores.iter_mut() {
-            if !s.is_finite() {
-                *s = f64::MIN;
-            }
-        }
-        // Total order: score descending (f64::total_cmp, so the
-        // comparator is total even for values the sanitization above
-        // might miss), ties broken by ascending unit index. Explicit
-        // tie-breaking (rather than relying on sort stability) keeps
-        // masks reproducible across platforms, sort implementations and
-        // worker counts.
-        let mut order: Vec<usize> = (0..layer.out_dim).collect();
-        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
-        let mut sel = vec![false; layer.out_dim];
-        for &k in order.iter().take(keep) {
-            sel[k] = true;
-        }
-        per_layer.push(sel);
+        per_layer.push(rank_and_keep(&scores, keep));
     }
     ChannelMask { per_layer }
 }
@@ -456,5 +529,76 @@ mod tests {
         let rare_kept = m.per_layer[0][n0 / 2..].iter().filter(|&&b| b).count();
         let common_kept = m.per_layer[0][..n0 / 2].iter().filter(|&&b| b).count();
         assert!(rare_kept > common_kept, "rare {rare_kept} vs common {common_kept}");
+    }
+
+    #[test]
+    fn rank_and_keep_orders_and_sanitizes() {
+        // Highest scores win; ties go to the lowest unit index.
+        assert_eq!(rank_and_keep(&[0.1, 0.9, 0.5, 0.9], 2), vec![false, true, false, true]);
+        assert_eq!(rank_and_keep(&[1.0, 1.0, 1.0], 2), vec![true, true, false]);
+        // Non-finite scores sort last instead of panicking.
+        assert_eq!(
+            rank_and_keep(&[f64::NAN, 0.5, f64::INFINITY, 0.7], 2),
+            vec![false, true, false, true]
+        );
+        assert_eq!(rank_and_keep(&[], 0), Vec::<bool>::new());
+    }
+
+    #[test]
+    fn random_mask_matches_select_mask() {
+        // Same-seeded RNGs: the server-chosen dispatch mask must equal
+        // the client-side Policy::Random selection draw for draw — the
+        // contract that lets fed_dropout ride the existing Random
+        // machinery without a second sampling convention.
+        let (spec, before, after) = mlp_params(3);
+        for d in [0.0, 0.3, 0.6, 0.9] {
+            let a = random_mask(&spec, d, &mut Rng::new(41));
+            let b = select_mask(Policy::Random, &spec, &before, &after, None, d, &mut Rng::new(41));
+            assert_eq!(a, b, "d={d}");
+        }
+    }
+
+    #[test]
+    fn mask_from_scores_keeps_top_units_per_layer() {
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        // Descending scores per layer => the kept set is the prefix.
+        let scores: Vec<Vec<f64>> = spec
+            .layers
+            .iter()
+            .map(|l| (0..l.out_dim).map(|k| (l.out_dim - k) as f64).collect())
+            .collect();
+        let m = mask_from_scores(&spec, &scores, 0.5).unwrap();
+        for (l, sel) in m.per_layer.iter().enumerate() {
+            let keep = keep_count(spec.layers[l].out_dim, 0.5);
+            assert!(sel[..keep].iter().all(|&b| b), "layer {l}");
+            assert!(sel[keep..].iter().all(|&b| !b), "layer {l}");
+        }
+        // Rate 0 keeps everything.
+        assert_eq!(mask_from_scores(&spec, &scores, 0.0).unwrap(), ChannelMask::full(&spec));
+    }
+
+    #[test]
+    fn mask_from_scores_takes_hetero_prefix_and_rejects_short_maps() {
+        // A wider score map (the global model's units) indexes a narrow
+        // client through the leading corner.
+        let spec = ModelSpec::get("mlp", 0.25).unwrap();
+        let wide: Vec<Vec<f64>> = spec
+            .layers
+            .iter()
+            .map(|l| (0..l.out_dim + 8).map(|k| k as f64).collect())
+            .collect();
+        let m = mask_from_scores(&spec, &wide, 0.5).unwrap();
+        for (l, sel) in m.per_layer.iter().enumerate() {
+            // ascending scores => the kept set is the *suffix* of the prefix
+            let keep = keep_count(spec.layers[l].out_dim, 0.5);
+            let kept: usize = sel.iter().filter(|&&b| b).count();
+            assert_eq!(kept, keep, "layer {l}");
+            assert!(sel[spec.layers[l].out_dim - keep..].iter().all(|&b| b), "layer {l}");
+        }
+        // A map that does not cover the spec is an error, not a panic.
+        let short = vec![vec![1.0f64; 4]; spec.layers.len()];
+        assert!(mask_from_scores(&spec, &short, 0.5).is_err());
+        assert!(mask_from_scores(&spec, &wide[..1], 0.5).is_err());
+        assert!(mask_from_scores(&spec, &wide, 1.5).is_err());
     }
 }

@@ -108,6 +108,11 @@ pub fn run_agent(opts: &AgentOpts) -> anyhow::Result<AgentReport> {
         cfg.snapshot_ring_cap
     );
     cfg.validate()?;
+    anyhow::ensure!(
+        crate::baselines::scheme_by_name(&cfg.scheme)?.agent_masks(&cfg).is_some(),
+        "scheme {:?} keeps server-resident dispatch-mask state and cannot run in serve mode",
+        cfg.scheme
+    );
     let n_clients = cfg.n_clients;
     let slot_start = cf.slot_start as usize;
     let slot_count = cf.slot_count as usize;

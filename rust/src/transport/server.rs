@@ -128,6 +128,11 @@ impl BoundServer {
             "serve mode requires snapshot_ring_cap = 0 (uncapped): remote replicas rebase \
              from close notes and must never run the eviction pass"
         );
+        anyhow::ensure!(
+            crate::baselines::scheme_by_name(&cfg.scheme)?.agent_masks(cfg).is_some(),
+            "scheme {:?} keeps server-resident dispatch-mask state and cannot run in serve mode",
+            cfg.scheme
+        );
         let n = cfg.n_clients;
         let cfg_json = cfg.to_json().to_string_compact();
         self.listener.set_nonblocking(true)?;

@@ -12,6 +12,7 @@ use feddd::coordinator::run_experiment;
 use feddd::runtime::write_native_manifest;
 use feddd::scenarios::{
     by_name, registry, run_matrix, write_report, Cell, MatrixReport, MatrixSpec, Tier,
+    MATRIX_SCHEMES,
 };
 
 fn native_dir(tag: &str) -> PathBuf {
@@ -116,6 +117,57 @@ fn catalogue_documents_every_registered_scenario() {
             sc.name
         );
     }
+    // The scheme axis moves in lockstep too: every scheme the matrix
+    // crosses scenarios with must be named (backticked) in the catalogue,
+    // so adding a baseline without documenting it fails here.
+    for scheme in MATRIX_SCHEMES {
+        let tag = format!("`{scheme}`");
+        assert!(
+            text.contains(&tag),
+            "scheme {scheme:?} is in MATRIX_SCHEMES but never mentioned in docs/SCENARIOS.md"
+        );
+    }
+}
+
+#[test]
+fn matrix_runs_every_scheme_end_to_end() {
+    // The full scheme axis — selection baselines and the dropout family
+    // alike — must survive the same harness: every cell trains, evaluates
+    // and accounts bytes. Also pins the headline communication story:
+    // `fed_dropout` at its default rate moves strictly fewer wire bytes
+    // than `fedavg` on the identical scenario and seed.
+    let dir = native_dir("zoo");
+    let spec = MatrixSpec {
+        tier: Tier::Smoke,
+        label: "zoo".into(),
+        scenarios: vec!["baseline_iid".into()],
+        schemes: MATRIX_SCHEMES.iter().map(|s| s.to_string()).collect(),
+        seeds: vec![17],
+        workers: 2,
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+    };
+    let rep = run_matrix(&spec).unwrap();
+    assert_eq!(rep.cells.len(), MATRIX_SCHEMES.len());
+    for cell in &rep.cells {
+        assert!(cell.rounds > 0, "{}: no rounds ran", cell.scheme);
+        assert!(
+            cell.accuracy.is_finite() && cell.accuracy > 0.0,
+            "{}: accuracy {} is not a trained model",
+            cell.scheme,
+            cell.accuracy
+        );
+        assert!(cell.wire_bytes > 0, "{}: no bytes crossed the wire", cell.scheme);
+    }
+    let wire = |name: &str| {
+        rep.cells.iter().find(|c| c.scheme == name).map(|c| c.wire_bytes).unwrap()
+    };
+    assert!(
+        wire("fed_dropout") < wire("fedavg"),
+        "fed_dropout ({}) must shave wire bytes vs fedavg ({}) at the default rate",
+        wire("fed_dropout"),
+        wire("fedavg")
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
